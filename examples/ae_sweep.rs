@@ -1,0 +1,66 @@
+//! Architectural-enhancement sweep: regenerates Tables 4–9 of the paper
+//! (DGEMM latency / CPF / Gflops-per-watt at every enhancement level for
+//! the paper's five matrix sizes) and prints measured-vs-paper side by side.
+//!
+//! Run: `cargo run --release --example ae_sweep`
+
+use redefine_blas::metrics::{gemm_sweep, PAPER_SIZES};
+use redefine_blas::pe::AeLevel;
+
+/// Paper latencies (Tables 4–9), rows = AE0..AE5, cols = 20..100.
+pub const PAPER_LATENCY: [[u64; 5]; 6] = [
+    [39_000, 310_075, 1_040_754, 2_457_600, 4_770_000],
+    [23_000, 178_471, 595_421, 1_410_662, 2_730_365],
+    [15_251, 113_114, 371_699, 877_124, 1_696_921],
+    [12_745, 97_136, 324_997, 784_838, 1_519_083],
+    [7_079, 52_624, 174_969, 422_924, 818_178],
+    [5_561, 38_376, 124_741, 298_161, 573_442],
+];
+
+/// Paper Gflops/W (Tables 4–9).
+pub const PAPER_GFLOPS_W: [[f64; 5]; 6] = [
+    [16.66, 16.87, 17.15, 17.25, 17.38],
+    [14.87, 15.53, 15.77, 15.81, 15.98],
+    [10.52, 11.49, 11.85, 11.93, 12.06],
+    [12.59, 13.38, 13.56, 13.33, 13.47],
+    [22.67, 24.71, 25.19, 24.95, 25.02],
+    [28.86, 33.88, 35.33, 35.11, 35.70],
+];
+
+fn main() {
+    println!("DGEMM enhancement sweep (paper Tables 4-9)\n");
+    let sweep = gemm_sweep(&PAPER_SIZES);
+
+    for (ai, row) in sweep.iter().enumerate() {
+        let ae = AeLevel::ALL[ai];
+        println!("=== {} — paper table {} ===", ae, 4 + ai);
+        println!(
+            "{:<10} {:>12} {:>12} {:>7} {:>8} {:>8} {:>9} {:>9}",
+            "n", "cycles", "paper", "ratio", "CPF", "paperCPF", "Gfl/W", "paper"
+        );
+        for (si, m) in row.iter().enumerate() {
+            let paper = PAPER_LATENCY[ai][si];
+            let paper_cpf = paper as f64 / (3 * PAPER_SIZES[si].pow(3)) as f64;
+            println!(
+                "{:<10} {:>12} {:>12} {:>7.3} {:>8.3} {:>8.3} {:>9.2} {:>9.2}",
+                format!("{0}x{0}", PAPER_SIZES[si]),
+                m.latency(),
+                paper,
+                m.latency() as f64 / paper as f64,
+                m.paper_cpf(),
+                paper_cpf,
+                m.gflops_per_watt(),
+                PAPER_GFLOPS_W[ai][si],
+            );
+        }
+        println!();
+    }
+
+    // Fig 11(a) headline: total speed-up AE0 → AE5.
+    println!("=== Fig 11(a): AE0->AE5 speed-up (paper: 7x / 8.13x / 8.34x at 20/40/60) ===");
+    for (si, &n) in PAPER_SIZES.iter().enumerate() {
+        let s = sweep[0][si].latency() as f64 / sweep[5][si].latency() as f64;
+        let p = PAPER_LATENCY[0][si] as f64 / PAPER_LATENCY[5][si] as f64;
+        println!("  n={n:<4} measured {s:>6.2}x   paper {p:>6.2}x");
+    }
+}

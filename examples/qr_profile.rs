@@ -1,0 +1,29 @@
+//! Fig 1: where the time goes in QR factorization.
+//!
+//! DGEQR2 (unblocked) is ~99% matrix-vector work (DGEMV + DGER); DGEQRF
+//! (blocked) is ~99% DGEMM — the observation that motivates accelerating
+//! BLAS in the first place. This example reproduces the profile with the
+//! flop-attribution profiler over our LAPACK-lite.
+//!
+//! Run: `cargo run --release --example qr_profile`
+
+use redefine_blas::lapack::{dgeqr2_profiled, dgeqrf_profiled, dgetrf, dpotrf};
+use redefine_blas::util::Mat;
+
+fn main() {
+    let n = 256; // the paper profiles 10k×10k; the shares stabilize long before
+    let a = Mat::random(n, n, 401);
+
+    let (_, p2) = dgeqr2_profiled(&a);
+    println!("{}", p2.report(&format!("DGEQR2 {n}x{n} (paper fig 1: ~99% DGEMV-class)")));
+
+    let (_, pf) = dgeqrf_profiled(&a, 32);
+    println!("{}", pf.report(&format!("DGEQRF {n}x{n}, nb=32 (paper fig 1: ~99% DGEMM)")));
+
+    let spd = Mat::random_spd(128, 402);
+    let (_, pl) = dgetrf(&spd);
+    println!("{}", pl.report("DGETRF 128x128 (XGETRF of §1)"));
+
+    let (_, pc) = dpotrf(&spd);
+    println!("{}", pc.report("DPOTRF 128x128 (XPBTRF-class of §1)"));
+}

@@ -1,0 +1,47 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! 1. Load an AOT-compiled XLA artifact (built once by `make artifacts`).
+//! 2. Run DGEMM through the coordinator: values from the artifact (PJRT),
+//!    timing/energy from the cycle-accurate PE + NoC simulators.
+//! 3. Cross-check against the host reference BLAS.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use redefine_blas::blas::level3::dgemm_ref;
+use redefine_blas::coordinator::{Coordinator, CoordinatorConfig};
+use redefine_blas::pe::{AeLevel, PeConfig};
+use redefine_blas::util::{rel_fro_error, Mat};
+
+fn main() {
+    let n = 8; // shipped artifact size — see python/compile/aot.py
+    let a = Mat::random(n, n, 11);
+    let b = Mat::random(n, n, 12);
+    let c = Mat::random(n, n, 13);
+
+    let mut co = Coordinator::new(CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 2,
+        artifact_dir: "artifacts".into(),
+        verify: true,
+    });
+    println!("XLA value path live: {}", co.has_xla());
+    if co.has_xla() {
+        println!("artifacts: {:?}", co.artifacts().len());
+    }
+
+    let r = co.dgemm(&a, &b, &c);
+    let want = dgemm_ref(&a, &b, &c);
+    let err = rel_fro_error(r.c.as_slice(), want.as_slice());
+
+    let cfg = PeConfig::paper(AeLevel::Ae5);
+    println!("dgemm n={n}: source={:?}, rel err vs host BLAS = {err:.3e}", r.source);
+    println!(
+        "simulated: {} cycles on a 2x2 REDEFINE array ({} PE tiles), {:.3} Gflops @0.2 GHz, {:.3e} J",
+        r.makespan,
+        r.tiles.len(),
+        r.gflops(n, &cfg),
+        r.energy_j
+    );
+    assert!(err < 1e-12);
+    println!("quickstart OK");
+}

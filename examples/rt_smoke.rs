@@ -1,0 +1,22 @@
+//! PJRT smoke test: load one AOT artifact (gemm_n8), execute it on the
+//! CPU PJRT client, and verify the numerics against host BLAS — the
+//! smallest possible proof that the L2→L3 bridge works.
+//!
+//! Run: `make artifacts && cargo run --release --example rt_smoke`
+
+use redefine_blas::runtime::Runtime;
+use redefine_blas::util::Mat;
+fn main() -> anyhow::Result<()> {
+    let mut rt = Runtime::new("artifacts")?;
+    println!("platform={} artifacts={:?}", rt.platform(), rt.available().len());
+    let a = Mat::random(8, 8, 1);
+    let b = Mat::random(8, 8, 2);
+    let c = Mat::random(8, 8, 3);
+    let got = rt.gemm(&a, &b, &c)?;
+    let want = redefine_blas::blas::level3::dgemm_ref(&a, &b, &c);
+    let err = redefine_blas::util::rel_fro_error(got.as_slice(), want.as_slice());
+    println!("gemm_n8 rel err = {err:e}");
+    assert!(err < 1e-12);
+    println!("XLA round trip OK");
+    Ok(())
+}

@@ -1,0 +1,119 @@
+"""L1 kernel structure analysis: VMEM footprint and MXU-utilization
+estimates from the BlockSpecs (DESIGN.md §Perf, L1).
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so the L1
+performance deliverable is *structural*: per kernel and shape, how many
+bytes each grid step keeps resident in VMEM (must fit the ~16 MiB/core
+budget with headroom for double buffering) and what fraction of an MXU-
+aligned tile the inner dot occupies. The pytest suite asserts the
+invariants; `python -m compile.analysis` prints the table recorded in
+EXPERIMENTS.md §Perf.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from dataclasses import dataclass  # noqa: E402
+
+from .kernels.gemm_block import _pick_tile  # noqa: E402
+
+#: Bytes per element (artifacts are f64).
+ELEM = 8
+#: TPU VMEM budget per core (v4-class), bytes.
+VMEM_BUDGET = 16 * 1024 * 1024
+#: MXU systolic tile edge.
+MXU = 128
+
+
+@dataclass
+class KernelEstimate:
+    """Structural estimate for one kernel instantiation."""
+
+    kernel: str
+    shape: str
+    grid: tuple
+    vmem_bytes: int  # resident blocks per grid step (single-buffered)
+    vmem_pipelined: int  # with Pallas double-buffering (2x inputs)
+    mxu_rows: float  # fraction of the MXU tile the inner dot fills
+    flops_per_byte: float  # arithmetic intensity of one grid step
+
+    def fits(self) -> bool:
+        return self.vmem_pipelined <= VMEM_BUDGET
+
+
+def gemm_estimate(m: int, p: int, k: int, tile: int | None = None) -> KernelEstimate:
+    tm = tile or _pick_tile(m)
+    tp = tile or _pick_tile(p)
+    tk = tile or _pick_tile(k)
+    grid = (m // tm, p // tp, k // tk)
+    # Per step: A (tm×tk), B (tk×tp), C seed (tm×tp), out accumulator.
+    inputs = (tm * tk + tk * tp + tm * tp) * ELEM
+    out = tm * tp * ELEM
+    flops = 2 * tm * tp * tk
+    return KernelEstimate(
+        kernel="block_gemm",
+        shape=f"{m}x{p}x{k}/t{tm}",
+        grid=grid,
+        vmem_bytes=inputs + out,
+        vmem_pipelined=2 * inputs + out,
+        mxu_rows=min(tm, MXU) * min(tp, MXU) / (MXU * MXU),
+        flops_per_byte=flops / (inputs + out),
+    )
+
+
+def gemv_estimate(m: int, n: int, strip: int = 16) -> KernelEstimate:
+    grid = (m // strip,)
+    inputs = (strip * n + n + strip) * ELEM
+    out = strip * ELEM
+    flops = 2 * strip * n
+    return KernelEstimate(
+        kernel="strip_gemv",
+        shape=f"{m}x{n}/s{strip}",
+        grid=grid,
+        vmem_bytes=inputs + out,
+        vmem_pipelined=2 * inputs + out,
+        mxu_rows=min(strip, MXU) / MXU,
+        flops_per_byte=flops / (inputs + out),
+    )
+
+
+def dot_estimate(n: int, chunk: int = 64) -> KernelEstimate:
+    grid = (n // chunk,)
+    inputs = 2 * chunk * ELEM
+    return KernelEstimate(
+        kernel="chunked_dot",
+        shape=f"n{n}/c{chunk}",
+        grid=grid,
+        vmem_bytes=inputs + ELEM,
+        vmem_pipelined=2 * inputs + ELEM,
+        mxu_rows=0.0,  # VPU reduction, not MXU
+        flops_per_byte=2 * chunk / (inputs + ELEM),
+    )
+
+
+def standard_table() -> list[KernelEstimate]:
+    """The estimates recorded in EXPERIMENTS.md §Perf."""
+    rows = []
+    for n in (20, 40, 60, 80, 100):
+        rows.append(gemm_estimate(n, n, n))
+    rows.append(gemm_estimate(1024, 1024, 1024, tile=128))  # production shape
+    for n in (100, 1024):
+        rows.append(gemv_estimate(n if n % 16 == 0 else 100, n, strip=4 if n == 100 else 16))
+    rows.append(dot_estimate(1024))
+    return rows
+
+
+def main() -> None:
+    print(f"{'kernel':<14} {'shape':<16} {'grid':<14} {'VMEM(dbuf)':>12} "
+          f"{'MXU fill':>9} {'flops/B':>8} {'fits':>5}")
+    for e in standard_table():
+        print(
+            f"{e.kernel:<14} {e.shape:<16} {str(e.grid):<14} "
+            f"{e.vmem_pipelined:>12} {e.mxu_rows:>9.3f} {e.flops_per_byte:>8.2f} "
+            f"{str(e.fits()):>5}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""AOT compile path: lower every L2 operator at every needed shape to HLO
+**text** in ``artifacts/`` for the Rust PJRT runtime.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids, which the runtime's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (from ``python/``):  python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+#: (op, sizes) lowered by default. GEMM/GEMV cover the paper's table sizes
+#: (§4.5.1) plus a quickstart size 8; Level-1 ops cover typical vector
+#: lengths; qr_panel serves the QR example.
+DEFAULT_PLAN = [
+    ("gemm", [8, 20, 40, 60, 80, 100]),
+    ("gemv", [8, 20, 40, 60, 80, 100]),
+    ("dot", [64, 256, 1024]),
+    ("axpy", [64, 256, 1024]),
+    ("nrm2", [64, 256, 1024]),
+    ("qr_panel", [32, 96]),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the text
+    parser on the Rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_op(op: str, n: int) -> str:
+    fn = model.OPS[op]
+    args = model.example_args(op, n)
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--ops", default="", help="comma list (default: all)")
+    ap.add_argument(
+        "--force", action="store_true", help="rebuild even if artifacts exist"
+    )
+    ns = ap.parse_args()
+    os.makedirs(ns.out, exist_ok=True)
+    wanted = set(filter(None, ns.ops.split(",")))
+
+    manifest = []
+    for op, sizes in DEFAULT_PLAN:
+        if wanted and op not in wanted:
+            continue
+        for n in sizes:
+            path = os.path.join(ns.out, f"{op}_n{n}.hlo.txt")
+            manifest.append(os.path.basename(path))
+            if os.path.exists(path) and not ns.force:
+                print(f"keep  {path}")
+                continue
+            text = lower_op(op, n)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(ns.out, "MANIFEST"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: register-blocked DGEMM — the PE's compute hot-spot
+re-thought for TPU-style tiling (DESIGN.md §Hardware-Adaptation).
+
+Paper → Pallas mapping:
+
+* the 4x4 register block held in the PE register file   → the kernel tile
+  computed per grid step (``tile`` × ``tile``, MXU-shaped on real TPU);
+* the Local Memory staging of A-strips / B-panels       → ``BlockSpec``
+  HBM→VMEM schedules (one A tile, one B tile, the C accumulator tile);
+* the DOT4 reconfigurable datapath                      → ``jnp.dot`` over
+  the tile (lowered to the MXU systolic array on TPU);
+* AE5's pre-fetch of the next iteration's block         → Pallas's
+  automatic double-buffering of grid-step blocks.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and the AOT artifact must run from the Rust runtime.
+"""
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax.experimental import pallas as pl  # noqa: E402
+
+
+def _pick_tile(n: int, preferred: int = 32) -> int:
+    """Largest tile ≤ preferred that divides n (mirrors the paper's rule of
+    blocking by the register file and falling back for residuals)."""
+    for t in range(min(preferred, n), 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+def _gemm_kernel(a_ref, b_ref, c_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] (+)= a[i,k] @ b[k,j], seeded with
+    c[i,j] at k == 0 — the accumulation pattern of the paper's algorithm 3
+    (BLOCK4ADD(BLOCK4MUL(A,B), C))."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = c_ref[...]
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def block_gemm(a, b, c, *, tile: int | None = None):
+    """C' = A @ B + C with an explicitly blocked Pallas kernel.
+
+    Works for rectangular (m×k)·(k×p) problems; every dimension must be
+    divisible by its chosen tile (the coordinator pads, exactly like the PE
+    path).
+    """
+    m, k = a.shape
+    k2, p = b.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    assert c.shape == (m, p), f"C shape {c.shape}"
+    tm = tile or _pick_tile(m)
+    tp = tile or _pick_tile(p)
+    tk = tile or _pick_tile(k)
+    assert m % tm == 0 and p % tp == 0 and k % tk == 0, "tile must divide dims"
+    grid = (m // tm, p // tp, k // tk)
+    return pl.pallas_call(
+        _gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tk), lambda i, j, kk: (i, kk)),  # A strip
+            pl.BlockSpec((tk, tp), lambda i, j, kk: (kk, j)),  # B panel
+            pl.BlockSpec((tm, tp), lambda i, j, kk: (i, j)),  # C seed
+        ],
+        out_specs=pl.BlockSpec((tm, tp), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, p), a.dtype),
+        interpret=True,
+    )(a, b, c)

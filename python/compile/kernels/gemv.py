@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: strip-mined DGEMV (y' = A @ x + y).
+
+The PE kernel reduces four A rows at a time with DOT4s while x sits in the
+Local Memory (codegen/gemv.rs); here a grid step owns a row strip in VMEM
+and the whole x block, reducing with one ``dot`` per strip — the same
+bandwidth-bound structure (A streamed exactly once).
+"""
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax.experimental import pallas as pl  # noqa: E402
+
+
+def _gemv_kernel(a_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], x_ref[...]) + y_ref[...]
+
+
+def _pick_strip(n: int, preferred: int = 16) -> int:
+    for t in range(min(preferred, n), 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("strip",))
+def strip_gemv(a, x, y, *, strip: int | None = None):
+    """y' = A @ x + y with one grid step per row strip."""
+    m, n = a.shape
+    assert x.shape == (n,) and y.shape == (m,)
+    s = strip or _pick_strip(m)
+    assert m % s == 0, "strip must divide rows"
+    return pl.pallas_call(
+        _gemv_kernel,
+        grid=(m // s,),
+        in_specs=[
+            pl.BlockSpec((s, n), lambda i: (i, 0)),  # A row strip
+            pl.BlockSpec((n,), lambda i: (0,)),  # x (resident)
+            pl.BlockSpec((s,), lambda i: (i,)),  # y strip
+        ],
+        out_specs=pl.BlockSpec((s,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=True,
+    )(a, x, y)

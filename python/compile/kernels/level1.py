@@ -1,0 +1,79 @@
+"""L1 Pallas kernels: the Level-1 BLAS trio (ddot, daxpy; dnrm2 composes
+ddot with a square root at L2).
+
+The PE versions stream x/y through the Local Memory in 16-word groups and
+reduce into four rotating DOT4 accumulators (codegen/level1.rs). Here a
+grid step owns one chunk in VMEM; the dot kernel accumulates a scalar
+across sequential grid steps — the same group-streamed reduction.
+"""
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax.experimental import pallas as pl  # noqa: E402
+
+
+def _pick_chunk(n: int, preferred: int = 64) -> int:
+    for t in range(min(preferred, n), 0, -1):
+        if n % t == 0:
+            return t
+    return 1
+
+
+def _dot_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...] * y_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def chunked_dot(x, y, *, chunk: int | None = None):
+    """x . y accumulated one VMEM chunk per grid step."""
+    (n,) = x.shape
+    assert y.shape == (n,)
+    c = chunk or _pick_chunk(n)
+    assert n % c == 0
+    out = pl.pallas_call(
+        _dot_kernel,
+        grid=(n // c,),
+        in_specs=[
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), x.dtype),
+        interpret=True,
+    )(x, y)
+    return out[0]
+
+
+def _axpy_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...] + y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def chunked_axpy(alpha, x, y, *, chunk: int | None = None):
+    """alpha * x + y, one VMEM chunk per grid step."""
+    (n,) = x.shape
+    assert y.shape == (n,)
+    c = chunk or _pick_chunk(n)
+    assert n % c == 0
+    alpha_arr = jnp.asarray(alpha, x.dtype).reshape((1,))
+    return pl.pallas_call(
+        _axpy_kernel,
+        grid=(n // c,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # alpha (resident scalar)
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((c,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        interpret=True,
+    )(alpha_arr, x, y)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel — the L1 correctness signal.
+
+Each ``ref_*`` function is the mathematical definition of its kernel with no
+Pallas involvement; pytest (and Hypothesis sweeps) assert the kernels match
+these to tight tolerances across shapes and dtypes.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+
+def ref_gemm(a, b, c):
+    """C' = A @ B + C (the paper's DGEMM semantics)."""
+    return a @ b + c
+
+
+def ref_gemv(a, x, y):
+    """y' = A @ x + y."""
+    return a @ x + y
+
+
+def ref_dot(x, y):
+    """x . y"""
+    return jnp.dot(x, y)
+
+
+def ref_axpy(alpha, x, y):
+    """alpha * x + y."""
+    return alpha * x + y
+
+
+def ref_nrm2(x):
+    """||x||_2 (unscaled textbook form; inputs in tests are O(1))."""
+    return jnp.sqrt(jnp.dot(x, x))
+
+
+def ref_qr_panel(a):
+    """One Householder panel step of DGEQR2 on column 0 (LAPACK
+    conventions): returns the updated matrix (beta on the diagonal, v tail
+    below it, trailing columns reflected) and tau.
+    """
+    m = a.shape[0]
+    x = a[:, 0]
+    alpha = x[0]
+    norm_tail = jnp.sqrt(jnp.sum(x[1:] ** 2))
+    sigma = jnp.sqrt(alpha**2 + norm_tail**2)
+    beta = jnp.where(alpha >= 0, -sigma, sigma)
+    safe = norm_tail > 0
+    tau = jnp.where(safe, (beta - alpha) / beta, 0.0)
+    scale = jnp.where(safe, 1.0 / (alpha - beta), 0.0)
+    v = jnp.concatenate([jnp.ones((1,), a.dtype), x[1:] * scale])
+    # Apply (I - tau v v^T) to the whole panel.
+    w = v @ a
+    out = a - tau * jnp.outer(v, w)
+    # Column 0: beta at the top, v tail stored below the diagonal.
+    col0 = jnp.concatenate([jnp.where(safe, beta, alpha)[None], v[1:]])
+    out = out.at[:, 0].set(col0)
+    return out, tau

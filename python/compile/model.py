@@ -1,0 +1,100 @@
+"""L2 — the JAX compute graph of the system's BLAS operators, built on the
+L1 Pallas kernels. These are the functions ``aot.py`` lowers once per shape
+into ``artifacts/*.hlo.txt`` for the Rust runtime; Python never runs on the
+request path.
+
+Every public function returns a tuple (lowered with ``return_tuple=True``),
+matching the Rust side's ``to_tuple1``/``to_tuple2`` unwrapping.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels.gemm_block import block_gemm  # noqa: E402
+from .kernels.gemv import strip_gemv  # noqa: E402
+from .kernels.level1 import chunked_axpy, chunked_dot  # noqa: E402
+
+
+def dgemm(a, b, c):
+    """C' = A @ B + C via the blocked Pallas kernel."""
+    return (block_gemm(a, b, c),)
+
+
+def dgemv(a, x, y):
+    """y' = A @ x + y via the strip Pallas kernel."""
+    return (strip_gemv(a, x, y),)
+
+
+def ddot(x, y):
+    """x . y via the chunked Pallas reduction."""
+    return (chunked_dot(x, y),)
+
+
+def daxpy(alpha, x, y):
+    """alpha x + y (alpha is a runtime scalar operand)."""
+    return (chunked_axpy(alpha, x, y),)
+
+
+def dnrm2(x):
+    """||x||_2 = sqrt(ddot(x, x)) — fig 3's 'ddot plus a square root'."""
+    return (jnp.sqrt(chunked_dot(x, x)),)
+
+
+def qr_panel(a):
+    """One DGEQR2 Householder panel step (the Fig-1 DGEMV-bound inner
+    operation): reflector from column 0, trailing update through the Pallas
+    GEMM kernel (rank-1 as (m×1)·(1×p)). Returns (updated A, tau)."""
+    m = a.shape[0]
+    x = a[:, 0]
+    alpha = x[0]
+    norm_tail = jnp.sqrt(jnp.sum(x[1:] ** 2))
+    sigma = jnp.sqrt(alpha**2 + norm_tail**2)
+    beta = jnp.where(alpha >= 0, -sigma, sigma)
+    safe = norm_tail > 0
+    tau = jnp.where(safe, (beta - alpha) / beta, 0.0)
+    scale = jnp.where(safe, 1.0 / (alpha - beta), 0.0)
+    v = jnp.concatenate([jnp.ones((1,), a.dtype), x[1:] * scale])
+    # w = v^T A via the strip-GEMV kernel (A^T @ v), then the rank-1 update
+    # via the blocked GEMM kernel: A - (tau v) @ w^T.
+    w = strip_gemv(a.T, v, jnp.zeros((a.shape[1],), a.dtype))
+    out = block_gemm((-tau * v)[:, None], w[None, :], a, tile=1)
+    col0 = jnp.concatenate([jnp.where(safe, beta, alpha)[None], v[1:]])
+    out = out.at[:, 0].set(col0)
+    return out, tau
+
+
+#: Operator registry: name → (builder of example args from n, function).
+def example_args(op: str, n: int):
+    """Example ShapeDtypeStructs for lowering `op` at size n."""
+    f64 = jnp.float64
+    mat = jax.ShapeDtypeStruct((n, n), f64)
+    vec = jax.ShapeDtypeStruct((n,), f64)
+    scalar = jax.ShapeDtypeStruct((), f64)
+    match op:
+        case "gemm":
+            return (mat, mat, mat)
+        case "gemv":
+            return (mat, vec, vec)
+        case "dot":
+            return (vec, vec)
+        case "axpy":
+            return (scalar, vec, vec)
+        case "nrm2":
+            return (vec,)
+        case "qr_panel":
+            return (mat,)
+        case _:
+            raise ValueError(f"unknown op {op}")
+
+
+OPS = {
+    "gemm": dgemm,
+    "gemv": dgemv,
+    "dot": ddot,
+    "axpy": daxpy,
+    "nrm2": dnrm2,
+    "qr_panel": qr_panel,
+}

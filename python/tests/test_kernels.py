@@ -1,0 +1,169 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, including
+Hypothesis sweeps over shapes, dtypes and data — the core correctness
+signal of the compile path."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.gemm_block import _pick_tile, block_gemm
+from compile.kernels.gemv import strip_gemv
+from compile.kernels.level1 import chunked_axpy, chunked_dot
+
+RNG = np.random.default_rng(1234)
+
+
+def randmat(m, n, dtype=np.float64):
+    return jnp.asarray(RNG.standard_normal((m, n)).astype(dtype))
+
+
+def randvec(n, dtype=np.float64):
+    return jnp.asarray(RNG.standard_normal(n).astype(dtype))
+
+
+def tol(dtype):
+    return 1e-12 if dtype == np.float64 else 1e-4
+
+
+# ---------------------------------------------------------------- GEMM
+
+
+@pytest.mark.parametrize("n", [4, 8, 20, 40, 60])
+@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+def test_gemm_square(n, dtype):
+    a, b, c = randmat(n, n, dtype), randmat(n, n, dtype), randmat(n, n, dtype)
+    got = block_gemm(a, b, c)
+    np.testing.assert_allclose(got, ref.ref_gemm(a, b, c), rtol=tol(dtype), atol=tol(dtype))
+
+
+@pytest.mark.parametrize("m,p,k", [(8, 12, 20), (4, 4, 40), (24, 8, 8), (12, 20, 4)])
+def test_gemm_rectangular(m, p, k):
+    a, b, c = randmat(m, k), randmat(k, p), randmat(m, p)
+    got = block_gemm(a, b, c)
+    np.testing.assert_allclose(got, ref.ref_gemm(a, b, c), rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("tile", [1, 2, 4, 5, 10, 20])
+def test_gemm_explicit_tiles(tile):
+    n = 20
+    a, b, c = randmat(n, n), randmat(n, n), randmat(n, n)
+    got = block_gemm(a, b, c, tile=tile)
+    np.testing.assert_allclose(got, ref.ref_gemm(a, b, c), rtol=1e-12, atol=1e-12)
+
+
+def test_gemm_identity():
+    n = 16
+    a = randmat(n, n)
+    got = block_gemm(a, jnp.eye(n, dtype=a.dtype), jnp.zeros((n, n), a.dtype))
+    np.testing.assert_allclose(got, a, rtol=0, atol=0)
+
+
+def test_gemm_accumulates_c():
+    n = 8
+    a = jnp.zeros((n, n), jnp.float64)
+    c = randmat(n, n)
+    got = block_gemm(a, a, c)
+    np.testing.assert_allclose(got, c, rtol=0, atol=0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.integers(1, 12),
+    p=st.integers(1, 12),
+    k=st.integers(1, 12),
+    seed=st.integers(0, 2**31),
+)
+def test_gemm_hypothesis_shapes(m, p, k, seed):
+    r = np.random.default_rng(seed)
+    a = jnp.asarray(r.standard_normal((m, k)))
+    b = jnp.asarray(r.standard_normal((k, p)))
+    c = jnp.asarray(r.standard_normal((m, p)))
+    got = block_gemm(a, b, c)
+    np.testing.assert_allclose(got, ref.ref_gemm(a, b, c), rtol=1e-11, atol=1e-11)
+
+
+def test_pick_tile_divides():
+    for n in range(1, 130):
+        t = _pick_tile(n)
+        assert n % t == 0 and 1 <= t <= 32
+
+
+# ---------------------------------------------------------------- GEMV
+
+
+@pytest.mark.parametrize("n", [4, 20, 60, 100])
+def test_gemv_square(n):
+    a, x, y = randmat(n, n), randvec(n), randvec(n)
+    np.testing.assert_allclose(
+        strip_gemv(a, x, y), ref.ref_gemv(a, x, y), rtol=1e-12, atol=1e-12
+    )
+
+
+@pytest.mark.parametrize("m,n", [(8, 20), (20, 8), (4, 100)])
+def test_gemv_rectangular(m, n):
+    a, x, y = randmat(m, n), randvec(n), randvec(m)
+    np.testing.assert_allclose(
+        strip_gemv(a, x, y), ref.ref_gemv(a, x, y), rtol=1e-12, atol=1e-12
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 32), n=st.integers(1, 32), seed=st.integers(0, 2**31))
+def test_gemv_hypothesis(m, n, seed):
+    r = np.random.default_rng(seed)
+    a = jnp.asarray(r.standard_normal((m, n)))
+    x = jnp.asarray(r.standard_normal(n))
+    y = jnp.asarray(r.standard_normal(m))
+    np.testing.assert_allclose(
+        strip_gemv(a, x, y), ref.ref_gemv(a, x, y), rtol=1e-11, atol=1e-11
+    )
+
+
+# ---------------------------------------------------------------- Level-1
+
+
+@pytest.mark.parametrize("n", [1, 4, 64, 257, 1024])
+def test_dot_sizes(n):
+    x, y = randvec(n), randvec(n)
+    np.testing.assert_allclose(chunked_dot(x, y), ref.ref_dot(x, y), rtol=1e-12)
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+def test_dot_dtypes(dtype):
+    x, y = randvec(128, dtype), randvec(128, dtype)
+    np.testing.assert_allclose(chunked_dot(x, y), ref.ref_dot(x, y), rtol=tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 300), seed=st.integers(0, 2**31))
+def test_dot_hypothesis(n, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal(n))
+    y = jnp.asarray(r.standard_normal(n))
+    np.testing.assert_allclose(chunked_dot(x, y), ref.ref_dot(x, y), rtol=1e-10, atol=1e-10)
+
+
+@pytest.mark.parametrize("n", [4, 64, 100])
+@pytest.mark.parametrize("alpha", [0.0, 1.0, -2.5])
+def test_axpy(n, alpha):
+    x, y = randvec(n), randvec(n)
+    np.testing.assert_allclose(
+        chunked_axpy(alpha, x, y), ref.ref_axpy(alpha, x, y), rtol=1e-12
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 200), alpha=st.floats(-10, 10), seed=st.integers(0, 2**31))
+def test_axpy_hypothesis(n, alpha, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal(n))
+    y = jnp.asarray(r.standard_normal(n))
+    np.testing.assert_allclose(
+        chunked_axpy(alpha, x, y), ref.ref_axpy(alpha, x, y), rtol=1e-10, atol=1e-10
+    )

@@ -1,0 +1,137 @@
+//! Ablation benches for the design choices DESIGN.md calls out.
+//!
+//! 1. `residual`   — DOT2/3 residual handling vs zero-padding (§5.2.1's
+//!                    reconfigurable RDP widths).
+//! 2. `gm_latency` — GM pipeline-depth sensitivity per AE level (how much
+//!                    the LS CFU + pre-fetch decouple the PE from memory).
+//! 3. `lm_port`    — LM port cost sensitivity (why AE4's wide path pays).
+//! 4. `lsq`        — LS queue depth at AE1 (decoupling head-room).
+//! 5. `optimizer`  — peephole wide-load fusion: AE3-shaped code on AE4.
+//! 6. `noc`        — router/link cycle sensitivity of the Fig-12 speed-up.
+//!
+//! Run: `cargo bench --bench ablations [-- <tag>]`
+
+use redefine_blas::codegen::{gen_gemm, gen_gemm_any, optimize, GemmLayout};
+use redefine_blas::noc::{parallel_dgemm_cfg, RouterConfig};
+use redefine_blas::pe::{AeLevel, Pe, PeConfig};
+use redefine_blas::util::Mat;
+
+fn run_with_cfg(n: usize, cfg: PeConfig) -> u64 {
+    let layout = GemmLayout::packed(n);
+    let prog = gen_gemm(n, cfg.ae, &layout);
+    let a = Mat::random(n, n, 1);
+    let b = Mat::random(n, n, 2);
+    let c = Mat::random(n, n, 3);
+    let mut pe = Pe::new(cfg, layout.gm_words());
+    pe.write_gm(0, &layout.pack(&a, &b, &c));
+    pe.run(&prog).cycles
+}
+
+fn main() {
+    let filter = std::env::args().nth(1).unwrap_or_default();
+    let run = |tag: &str| filter.is_empty() || tag.contains(&filter) || filter == "--bench";
+
+    if run("residual") {
+        println!("=== Ablation: DOT2/3 residual vs zero-padding (AE3 and AE5) ===");
+        println!("{:<6} {:>10} {:>10} {:>10} {:>10}", "n", "resid@AE3", "pad@AE3", "resid@AE5", "pad@AE5");
+        for n in [13usize, 17, 21, 29, 37] {
+            let pad_n = n.div_ceil(4) * 4;
+            let mut row = format!("{n:<6}");
+            for ae in [AeLevel::Ae3, AeLevel::Ae5] {
+                let l = GemmLayout { m: n, p: n, k: n, base_a: 0, base_b: n * n, base_c: 2 * n * n };
+                let prog = gen_gemm_any(n, ae, &l);
+                let a = Mat::random(n, n, 1);
+                let b = Mat::random(n, n, 2);
+                let c = Mat::random(n, n, 3);
+                let mut pe = Pe::new(PeConfig::paper(ae), 3 * n * n);
+                pe.write_gm(0, &l.pack(&a, &b, &c));
+                let resid = pe.run(&prog).cycles;
+                let padded = run_with_cfg(pad_n, PeConfig::paper(ae));
+                row.push_str(&format!(" {resid:>10} {padded:>10}"));
+            }
+            println!("{row}");
+        }
+        println!("(padding wins once AE5's software pipelining exists — the aligned kernel");
+        println!(" is better scheduled than mixed-width DOTs, despite up to 40% extra macs)\n");
+    }
+
+    if run("gm_latency") {
+        println!("=== Ablation: GM pipeline depth sensitivity (n=40) ===");
+        println!("{:<12} {:>10} {:>10} {:>10}", "gm_latency", "AE0", "AE2", "AE5");
+        for lat in [5u32, 10, 20, 40, 80] {
+            let mut row = format!("{lat:<12}");
+            for ae in [AeLevel::Ae0, AeLevel::Ae2, AeLevel::Ae5] {
+                let mut cfg = PeConfig::paper(ae);
+                cfg.gm_latency = lat;
+                row.push_str(&format!(" {:>10}", run_with_cfg(40, cfg)));
+            }
+            println!("{row}");
+        }
+        println!("(AE0 scales with latency; AE5 is nearly flat — the CFU + pre-fetch decouple)\n");
+    }
+
+    if run("lm_port") {
+        println!("=== Ablation: LM scalar-port cost (n=40, AE2) ===");
+        for cost in [1u32, 2, 3, 4] {
+            let mut cfg = PeConfig::paper(AeLevel::Ae2);
+            cfg.lm_word_cycles = cost;
+            println!("lm_word_cycles={cost}: {} cycles", run_with_cfg(40, cfg));
+        }
+        println!("(the scalar port is the AE2/AE3 bottleneck — motivation for AE4)\n");
+    }
+
+    if run("lsq") {
+        println!("=== Ablation: LS queue depth (n=40, AE1) ===");
+        for depth in [1usize, 2, 4, 8, 16, 32] {
+            let mut cfg = PeConfig::paper(AeLevel::Ae1);
+            cfg.lsq_depth = depth;
+            println!("lsq_depth={depth:<3}: {} cycles", run_with_cfg(40, cfg));
+        }
+        println!();
+    }
+
+    if run("optimizer") {
+        println!("=== Ablation: peephole wide-load fusion (AE3 stream on AE4 hardware) ===");
+        for n in [16usize, 40, 80] {
+            let layout = GemmLayout::packed(n);
+            let prog = gen_gemm(n, AeLevel::Ae3, &layout);
+            let (fused, rep) = optimize(&prog, AeLevel::Ae4);
+            let a = Mat::random(n, n, 1);
+            let b = Mat::random(n, n, 2);
+            let c = Mat::random(n, n, 3);
+            let gm = layout.pack(&a, &b, &c);
+            let mut pe1 = Pe::new(PeConfig::paper(AeLevel::Ae4), layout.gm_words());
+            pe1.write_gm(0, &gm);
+            let raw = pe1.run(&prog).cycles;
+            let mut pe2 = Pe::new(PeConfig::paper(AeLevel::Ae4), layout.gm_words());
+            pe2.write_gm(0, &gm);
+            let opt = pe2.run(&fused).cycles;
+            println!(
+                "n={n:<4} raw={raw:<9} fused={opt:<9} (-{:.1}%)  [{} loads fused, {} instrs -> {}]",
+                100.0 * (1.0 - opt as f64 / raw as f64),
+                rep.loads_combined,
+                rep.before,
+                rep.after
+            );
+        }
+        println!();
+    }
+
+    if run("noc") {
+        println!("=== Ablation: NoC link/router cycle cost (n=96, 3x3 array) ===");
+        let n = 96;
+        let a = Mat::random(n, n, 1);
+        let b = Mat::random(n, n, 2);
+        let c = Mat::random(n, n, 3);
+        for (rc, lc) in [(1u64, 1u64), (1, 2), (2, 2), (4, 4)] {
+            let rcfg = RouterConfig { router_cycle: rc, link_cycle: lc, mem_service_cycle: 1 };
+            let r = parallel_dgemm_cfg(n, 3, AeLevel::Ae5, &a, &b, &c, &rcfg);
+            println!(
+                "router={rc} link={lc}: speedup {:.2}x (makespan {})",
+                r.speedup(),
+                r.makespan
+            );
+        }
+        println!("(Fig-12 saturation point moves with link bandwidth, as §5.5 argues)");
+    }
+}

@@ -1,0 +1,90 @@
+//! Host-performance bench of the system's own hot paths (deliverable (e)):
+//! the PE cycle-loop throughput, codegen emission rate, coordinator
+//! serve throughput, and host BLAS. These are the numbers the §Perf pass in
+//! EXPERIMENTS.md optimizes — the simulator must be fast enough that a full
+//! enhancement sweep is interactive.
+//!
+//! Run: `cargo bench --bench hot_paths`
+
+use redefine_blas::codegen::{gen_gemm, GemmLayout};
+use redefine_blas::coordinator::{request::random_workload, Coordinator, CoordinatorConfig};
+use redefine_blas::metrics::measure_gemm;
+use redefine_blas::pe::{AeLevel, Pe, PeConfig};
+use redefine_blas::util::Mat;
+use std::time::Instant;
+
+fn timeit<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warm-up.
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{name:<44} {:>10.3} ms/iter", per * 1e3);
+    per
+}
+
+fn main() {
+    println!("host hot-path benchmarks (release)\n");
+
+    // 1) PE simulator throughput: simulated cycles per host second.
+    let n = 100;
+    let layout = GemmLayout::packed(n);
+    let prog = gen_gemm(n, AeLevel::Ae5, &layout);
+    let a = Mat::random(n, n, 1);
+    let b = Mat::random(n, n, 2);
+    let c = Mat::random(n, n, 3);
+    let gm = layout.pack(&a, &b, &c);
+    let mut cycles = 0u64;
+    let per = timeit("PE sim: DGEMM n=100 AE5 (full run)", 5, || {
+        let mut pe = Pe::new(PeConfig::paper(AeLevel::Ae5), layout.gm_words());
+        pe.write_gm(0, &gm);
+        cycles = pe.run(&prog).cycles;
+    });
+    println!(
+        "{:<44} {:>10.1} Msimcycles/s  ({} instrs -> {} cycles)",
+        "  throughput",
+        cycles as f64 / per / 1e6,
+        prog.len(),
+        cycles
+    );
+
+    // 2) Codegen emission rate.
+    timeit("codegen: gen_gemm n=100 AE5", 10, || {
+        let p = gen_gemm(n, AeLevel::Ae5, &layout);
+        assert!(!p.is_empty());
+    });
+
+    // 3) Full measurement (codegen + sim + numeric check).
+    timeit("measure_gemm n=60 AE5 (incl. host check)", 5, || {
+        let m = measure_gemm(60, AeLevel::Ae5);
+        assert!(m.latency() > 0);
+    });
+
+    // 4) Full AE0..AE5 sweep at n=40 (the table harness inner loop).
+    timeit("AE0..AE5 sweep n=40", 3, || {
+        for ae in AeLevel::ALL {
+            let _ = measure_gemm(40, ae);
+        }
+    });
+
+    // 5) Coordinator serve throughput (multi-threaded tiles).
+    timeit("coordinator: 8-request mixed workload", 3, || {
+        let mut co = Coordinator::new(CoordinatorConfig {
+            ae: AeLevel::Ae5,
+            b: 2,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+        });
+        let resps = co.serve(random_workload(8, 48, 7));
+        assert_eq!(resps.len(), 8);
+    });
+
+    // 6) Host reference BLAS (oracle cost).
+    let big = Mat::random(192, 192, 9);
+    timeit("host dgemm_ref 192x192", 5, || {
+        let r = redefine_blas::blas::level3::dgemm_ref(&big, &big, &big);
+        assert!(r.rows() == 192);
+    });
+}

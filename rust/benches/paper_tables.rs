@@ -1,0 +1,98 @@
+//! Bench harness for **Tables 4–9**: the DGEMM enhancement sweep.
+//!
+//! Prints, for every enhancement level and every paper size, the simulated
+//! latency / CPF / Gflops-per-watt next to the paper's published cell, the
+//! per-enhancement improvement percentages (the paper's actual claims), and
+//! host wall-time per simulation (the harness's own cost).
+//!
+//! Run: `cargo bench --bench paper_tables`
+//! Filter: `cargo bench --bench paper_tables -- table6`
+
+use redefine_blas::metrics::paper;
+use redefine_blas::metrics::{measure_gemm, measure_level1, measure_gemv, Routine};
+use redefine_blas::pe::AeLevel;
+use std::time::Instant;
+
+fn main() {
+    let filter = std::env::args().nth(1).unwrap_or_default();
+    let run = |tag: &str| filter.is_empty() || tag.contains(&filter) || filter == "--bench";
+
+    let mut measured = [[0u64; 5]; 6];
+    let mut gw = [[0f64; 5]; 6];
+
+    for (ai, &ae) in AeLevel::ALL.iter().enumerate() {
+        let tag = format!("table{}", 4 + ai);
+        if !run(&tag) && !run("fig11") && !run("improvements") {
+            continue;
+        }
+        println!("=== Table {} — {} ===", 4 + ai, ae);
+        println!(
+            "{:<10} {:>12} {:>12} {:>7} {:>8} {:>9} {:>9} {:>9} {:>9}",
+            "n", "cycles", "paper", "ratio", "CPF", "paperCPF", "Gfl/W", "paper", "host ms"
+        );
+        for (si, &n) in paper::SIZES.iter().enumerate() {
+            let t0 = Instant::now();
+            let m = measure_gemm(n, ae);
+            let host_ms = t0.elapsed().as_secs_f64() * 1e3;
+            measured[ai][si] = m.latency();
+            gw[ai][si] = m.gflops_per_watt();
+            println!(
+                "{:<10} {:>12} {:>12} {:>7.3} {:>8.3} {:>9.3} {:>9.2} {:>9.2} {:>9.1}",
+                format!("{n}x{n}"),
+                m.latency(),
+                paper::LATENCY[ai][si],
+                m.latency() as f64 / paper::LATENCY[ai][si] as f64,
+                m.paper_cpf(),
+                paper::paper_cpf(ai, si),
+                m.gflops_per_watt(),
+                paper::GFLOPS_W[ai][si],
+                host_ms
+            );
+        }
+        println!();
+    }
+
+    if run("improvements") {
+        println!("=== Per-enhancement improvement (the tables' 'Improvement' rows) ===");
+        println!("{:<14} {:>12} {:>12}", "transition", "measured", "paper");
+        for ai in 0..5 {
+            for (si, &n) in paper::SIZES.iter().enumerate() {
+                if measured[ai][si] == 0 || measured[ai + 1][si] == 0 {
+                    continue;
+                }
+                let meas = 1.0 - measured[ai + 1][si] as f64 / measured[ai][si] as f64;
+                println!(
+                    "AE{}->AE{} n={:<4} {:>11.1}% {:>11.1}%",
+                    ai,
+                    ai + 1,
+                    n,
+                    100.0 * meas,
+                    100.0 * paper::paper_improvement(ai, si)
+                );
+            }
+        }
+        println!();
+    }
+
+    if run("blas_levels") {
+        println!("=== Abstract headline: %peak-FPC at AE5 (paper-convention flops) ===");
+        let mm = measure_gemm(100, AeLevel::Ae5);
+        let mv = measure_gemv(100, AeLevel::Ae5);
+        let dd = measure_level1(Routine::Ddot, 1024, AeLevel::Ae5);
+        println!(
+            "DGEMM  measured {:>5.1}%   paper {:>5.1}%",
+            mm.pct_peak_fpc(),
+            100.0 * paper::PCT_PEAK_DGEMM
+        );
+        println!(
+            "DGEMV  measured {:>5.1}%   paper {:>5.1}%",
+            mv.pct_peak_fpc(),
+            100.0 * paper::PCT_PEAK_DGEMV
+        );
+        println!(
+            "DDOT   measured {:>5.1}%   paper {:>5.1}%",
+            dd.pct_peak_fpc(),
+            100.0 * paper::PCT_PEAK_DDOT
+        );
+    }
+}

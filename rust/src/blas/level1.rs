@@ -1,0 +1,173 @@
+//! Level-1 BLAS: O(n) vector operations (§4.1 of the paper).
+
+/// ddot: xᵀy.
+pub fn ddot(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "ddot length mismatch");
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// daxpy: y ← αx + y.
+pub fn daxpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len(), "daxpy length mismatch");
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// dnrm2: ‖x‖₂, with the scaled accumulation of the reference BLAS
+/// (avoids overflow/underflow, Netlib DNRM2 algorithm).
+pub fn dnrm2(x: &[f64]) -> f64 {
+    let mut scale = 0.0f64;
+    let mut ssq = 1.0f64;
+    for &v in x {
+        if v != 0.0 {
+            let a = v.abs();
+            if scale < a {
+                ssq = 1.0 + ssq * (scale / a).powi(2);
+                scale = a;
+            } else {
+                ssq += (a / scale).powi(2);
+            }
+        }
+    }
+    scale * ssq.sqrt()
+}
+
+/// dscal: x ← αx.
+pub fn dscal(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// dcopy: y ← x.
+pub fn dcopy(x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    y.copy_from_slice(x);
+}
+
+/// dswap: x ↔ y.
+pub fn dswap(x: &mut [f64], y: &mut [f64]) {
+    assert_eq!(x.len(), y.len());
+    for (a, b) in x.iter_mut().zip(y.iter_mut()) {
+        std::mem::swap(a, b);
+    }
+}
+
+/// dasum: Σ|xᵢ|.
+pub fn dasum(x: &[f64]) -> f64 {
+    x.iter().map(|v| v.abs()).sum()
+}
+
+/// idamax: index of the element with largest magnitude (0-based;
+/// first such index on ties, as in the reference BLAS). Panics on empty.
+pub fn idamax(x: &[f64]) -> usize {
+    assert!(!x.is_empty(), "idamax of empty vector");
+    let mut best = 0;
+    let mut bestv = x[0].abs();
+    for (i, &v) in x.iter().enumerate().skip(1) {
+        if v.abs() > bestv {
+            best = i;
+            bestv = v.abs();
+        }
+    }
+    best
+}
+
+/// drot: apply a plane (Givens) rotation: (x, y) ← (c·x + s·y, c·y − s·x).
+pub fn drot(x: &mut [f64], y: &mut [f64], c: f64, s: f64) {
+    assert_eq!(x.len(), y.len());
+    for (a, b) in x.iter_mut().zip(y.iter_mut()) {
+        let xa = *a;
+        *a = c * xa + s * *b;
+        *b = c * *b - s * xa;
+    }
+}
+
+/// drotg: construct a Givens rotation annihilating b: returns (c, s, r).
+pub fn drotg(a: f64, b: f64) -> (f64, f64, f64) {
+    if b == 0.0 {
+        return (1.0, 0.0, a);
+    }
+    let r = a.hypot(b);
+    let r = if a.abs() > b.abs() && a < 0.0 || a.abs() <= b.abs() && b < 0.0 { -r } else { r };
+    (a / r, b / r, r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64;
+
+    #[test]
+    fn ddot_basics() {
+        assert_eq!(ddot(&[1., 2., 3.], &[4., 5., 6.]), 32.0);
+        assert_eq!(ddot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn daxpy_basics() {
+        let mut y = vec![1., 1.];
+        daxpy(2.0, &[3., 4.], &mut y);
+        assert_eq!(y, vec![7., 9.]);
+    }
+
+    #[test]
+    fn dnrm2_matches_naive_in_normal_range() {
+        let mut rng = XorShift64::new(5);
+        let x = rng.vec(100);
+        let naive = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+        assert!((dnrm2(&x) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dnrm2_avoids_overflow() {
+        let x = vec![1e200, 1e200];
+        assert!((dnrm2(&x) - 1e200 * 2f64.sqrt()).abs() / 1e200 < 1e-12);
+        assert_eq!(dnrm2(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn dnrm2_avoids_underflow() {
+        let x = vec![1e-200, 1e-200];
+        assert!((dnrm2(&x) - 1e-200 * 2f64.sqrt()).abs() / 1e-200 < 1e-12);
+    }
+
+    #[test]
+    fn dscal_dcopy_dswap() {
+        let mut x = vec![1., 2.];
+        dscal(3.0, &mut x);
+        assert_eq!(x, vec![3., 6.]);
+        let mut y = vec![0., 0.];
+        dcopy(&x, &mut y);
+        assert_eq!(y, x);
+        let mut z = vec![9., 9.];
+        dswap(&mut y, &mut z);
+        assert_eq!(y, vec![9., 9.]);
+        assert_eq!(z, vec![3., 6.]);
+    }
+
+    #[test]
+    fn dasum_idamax() {
+        assert_eq!(dasum(&[-1., 2., -3.]), 6.0);
+        assert_eq!(idamax(&[-1., 2., -3.]), 2);
+        assert_eq!(idamax(&[5., 5.]), 0); // first on ties
+    }
+
+    #[test]
+    fn rotation_annihilates() {
+        let (c, s, r) = drotg(3.0, 4.0);
+        assert!((r.abs() - 5.0).abs() < 1e-12);
+        let mut x = vec![3.0];
+        let mut y = vec![4.0];
+        drot(&mut x, &mut y, c, s);
+        assert!((x[0] - r).abs() < 1e-12);
+        assert!(y[0].abs() < 1e-12);
+    }
+
+    #[test]
+    fn drotg_zero_b() {
+        let (c, s, r) = drotg(7.0, 0.0);
+        assert_eq!((c, s, r), (1.0, 0.0, 7.0));
+    }
+}

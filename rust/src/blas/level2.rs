@@ -1,0 +1,168 @@
+//! Level-2 BLAS: O(n²) matrix-vector operations (§4.2 of the paper).
+
+use crate::util::Mat;
+
+/// dgemv (reference): y' = A·x + y, returned as a new vector.
+pub fn dgemv_ref(a: &Mat, x: &[f64], y: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len(), "dgemv dims");
+    assert_eq!(a.rows(), y.len(), "dgemv dims");
+    let mut out = y.to_vec();
+    // Column-sweep (jki saxpy form — the reference BLAS access pattern,
+    // stride-1 over the column-major A).
+    for j in 0..a.cols() {
+        let xj = x[j];
+        let col = a.col(j);
+        for i in 0..a.rows() {
+            out[i] += col[i] * xj;
+        }
+    }
+    out
+}
+
+/// dgemv, transposed: y' = Aᵀ·x + y.
+pub fn dgemv_t(a: &Mat, x: &[f64], y: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len(), "dgemv^T dims");
+    assert_eq!(a.cols(), y.len(), "dgemv^T dims");
+    let mut out = y.to_vec();
+    for j in 0..a.cols() {
+        out[j] += crate::blas::level1::ddot(a.col(j), x);
+    }
+    out
+}
+
+/// dger: A ← A + α·x·yᵀ (rank-1 update).
+pub fn dger(a: &mut Mat, alpha: f64, x: &[f64], y: &[f64]) {
+    assert_eq!(a.rows(), x.len(), "dger dims");
+    assert_eq!(a.cols(), y.len(), "dger dims");
+    for j in 0..a.cols() {
+        let ayj = alpha * y[j];
+        let col = a.col_mut(j);
+        for i in 0..col.len() {
+            col[i] += x[i] * ayj;
+        }
+    }
+}
+
+/// dtrmv (lower, non-unit): x ← L·x.
+pub fn dtrmv_lower(l: &Mat, x: &mut [f64]) {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(x.len(), n);
+    // Walk bottom-up so untouched x entries are still the inputs.
+    for i in (0..n).rev() {
+        let mut s = 0.0;
+        for k in 0..=i {
+            s += l[(i, k)] * x[k];
+        }
+        x[i] = s;
+    }
+}
+
+/// dtrsv (lower, non-unit): solve L·z = b in place (x holds b on entry,
+/// z on exit). Forward substitution.
+pub fn dtrsv_lower(l: &Mat, x: &mut [f64]) {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(x.len(), n);
+    for i in 0..n {
+        let mut s = x[i];
+        for k in 0..i {
+            s -= l[(i, k)] * x[k];
+        }
+        assert!(l[(i, i)] != 0.0, "singular triangular matrix at {i}");
+        x[i] = s / l[(i, i)];
+    }
+}
+
+/// dsymv: y' = A·x + y for symmetric A (only the lower triangle is read).
+pub fn dsymv_lower(a: &Mat, x: &[f64], y: &[f64]) -> Vec<f64> {
+    let n = a.rows();
+    assert_eq!(a.cols(), n);
+    let mut out = y.to_vec();
+    for i in 0..n {
+        let mut s = 0.0;
+        for k in 0..n {
+            let v = if k <= i { a[(i, k)] } else { a[(k, i)] };
+            s += v * x[k];
+        }
+        out[i] += s;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{assert_allclose, Mat, XorShift64};
+
+    #[test]
+    fn dgemv_identity() {
+        let a = Mat::eye(3);
+        let y = dgemv_ref(&a, &[1., 2., 3.], &[10., 10., 10.]);
+        assert_allclose(&y, &[11., 12., 13.], 0.0);
+    }
+
+    #[test]
+    fn dgemv_matches_naive() {
+        let a = Mat::random(7, 5, 3);
+        let mut rng = XorShift64::new(4);
+        let x = rng.vec(5);
+        let y = rng.vec(7);
+        let got = dgemv_ref(&a, &x, &y);
+        let mut want = y.clone();
+        for i in 0..7 {
+            for k in 0..5 {
+                want[i] += a[(i, k)] * x[k];
+            }
+        }
+        assert_allclose(&got, &want, 1e-14);
+    }
+
+    #[test]
+    fn dgemv_t_matches_transpose() {
+        let a = Mat::random(6, 6, 9);
+        let mut rng = XorShift64::new(10);
+        let x = rng.vec(6);
+        let y = rng.vec(6);
+        let got = dgemv_t(&a, &x, &y);
+        let want = dgemv_ref(&a.transpose(), &x, &y);
+        assert_allclose(&got, &want, 1e-13);
+    }
+
+    #[test]
+    fn dger_rank1() {
+        let mut a = Mat::zeros(2, 3);
+        dger(&mut a, 2.0, &[1., 2.], &[3., 4., 5.]);
+        assert_eq!(a[(1, 2)], 2.0 * 2.0 * 5.0);
+        assert_eq!(a[(0, 0)], 6.0);
+    }
+
+    #[test]
+    fn trsv_inverts_trmv() {
+        let n = 8;
+        let mut l = Mat::random(n, n, 21);
+        for i in 0..n {
+            for j in i + 1..n {
+                l[(i, j)] = 0.0;
+            }
+            l[(i, i)] = 2.0 + l[(i, i)].abs(); // well-conditioned diagonal
+        }
+        let mut rng = XorShift64::new(22);
+        let x0 = rng.vec(n);
+        let mut x = x0.clone();
+        dtrmv_lower(&l, &mut x);
+        dtrsv_lower(&l, &mut x);
+        assert_allclose(&x, &x0, 1e-12);
+    }
+
+    #[test]
+    fn dsymv_uses_lower_triangle() {
+        let a = Mat::random_spd(5, 2);
+        let mut rng = XorShift64::new(23);
+        let x = rng.vec(5);
+        let y = vec![0.0; 5];
+        let got = dsymv_lower(&a, &x, &y);
+        let want = dgemv_ref(&a, &x, &y);
+        assert_allclose(&got, &want, 1e-12);
+    }
+}

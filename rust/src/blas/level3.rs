@@ -1,0 +1,291 @@
+//! Level-3 BLAS: O(n³) matrix-matrix operations.
+//!
+//! Includes all six loop orderings of Table 1 (ijk/jik dot forms, ikj/jki
+//! gaxpy forms, kij/kji outer-product forms), the 4×4-blocked DGEMM of the
+//! paper's algorithm 3, and dtrsm/dsyrk used by the LAPACK-lite layer.
+
+use crate::util::Mat;
+
+/// The six GEMM loop orderings of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopOrder {
+    Ijk,
+    Jik,
+    Ikj,
+    Jki,
+    Kij,
+    Kji,
+}
+
+impl LoopOrder {
+    pub const ALL: [LoopOrder; 6] =
+        [LoopOrder::Ijk, LoopOrder::Jik, LoopOrder::Ikj, LoopOrder::Jki, LoopOrder::Kij, LoopOrder::Kji];
+
+    /// Inner-loop operation per Table 1 (dot vs saxpy).
+    pub fn inner_kernel(self) -> &'static str {
+        match self {
+            LoopOrder::Ijk | LoopOrder::Jik => "dot",
+            _ => "saxpy",
+        }
+    }
+}
+
+/// Reference DGEMM: C' = A·B + C (jki order — the reference BLAS favourite:
+/// stride-1 over the column-major A and C).
+pub fn dgemm_ref(a: &Mat, b: &Mat, c: &Mat) -> Mat {
+    dgemm_order(a, b, c, LoopOrder::Jki)
+}
+
+/// DGEMM with an explicit loop ordering (Table 1). All orders produce the
+/// same C — their difference is the memory access pattern, which the
+/// platform models in [`crate::platforms`] consume.
+pub fn dgemm_order(a: &Mat, b: &Mat, c: &Mat, order: LoopOrder) -> Mat {
+    let (m, kk) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(b.rows(), kk, "inner dims");
+    assert_eq!((c.rows(), c.cols()), (m, n), "C dims");
+    let mut out = c.clone();
+    match order {
+        LoopOrder::Ijk => {
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = out[(i, j)];
+                    for k in 0..kk {
+                        s += a[(i, k)] * b[(k, j)];
+                    }
+                    out[(i, j)] = s;
+                }
+            }
+        }
+        LoopOrder::Jik => {
+            for j in 0..n {
+                for i in 0..m {
+                    let mut s = out[(i, j)];
+                    for k in 0..kk {
+                        s += a[(i, k)] * b[(k, j)];
+                    }
+                    out[(i, j)] = s;
+                }
+            }
+        }
+        LoopOrder::Ikj => {
+            for i in 0..m {
+                for k in 0..kk {
+                    let aik = a[(i, k)];
+                    for j in 0..n {
+                        out[(i, j)] += aik * b[(k, j)];
+                    }
+                }
+            }
+        }
+        LoopOrder::Jki => {
+            for j in 0..n {
+                for k in 0..kk {
+                    let bkj = b[(k, j)];
+                    for i in 0..m {
+                        out[(i, j)] += a[(i, k)] * bkj;
+                    }
+                }
+            }
+        }
+        LoopOrder::Kij => {
+            for k in 0..kk {
+                for i in 0..m {
+                    let aik = a[(i, k)];
+                    for j in 0..n {
+                        out[(i, j)] += aik * b[(k, j)];
+                    }
+                }
+            }
+        }
+        LoopOrder::Kji => {
+            for k in 0..kk {
+                for j in 0..n {
+                    let bkj = b[(k, j)];
+                    for i in 0..m {
+                        out[(i, j)] += a[(i, k)] * bkj;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Blocked DGEMM (algorithm 3 of the paper): 4×4 blocks with an unblocked
+/// clean-up for sizes that are not multiples of the block.
+pub fn dgemm_blocked(a: &Mat, b: &Mat, c: &Mat, block: usize) -> Mat {
+    assert!(block > 0);
+    let (m, kk) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(b.rows(), kk);
+    assert_eq!((c.rows(), c.cols()), (m, n));
+    let mut out = c.clone();
+    for i0 in (0..m).step_by(block) {
+        let ih = block.min(m - i0);
+        for j0 in (0..n).step_by(block) {
+            let jh = block.min(n - j0);
+            for k0 in (0..kk).step_by(block) {
+                let kh = block.min(kk - k0);
+                // BLOCK4MUL + BLOCK4ADD of algorithm 3.
+                for j in j0..j0 + jh {
+                    for k in k0..k0 + kh {
+                        let bkj = b[(k, j)];
+                        for i in i0..i0 + ih {
+                            out[(i, j)] += a[(i, k)] * bkj;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// dsyrk (lower): C ← α·A·Aᵀ + β·C, only the lower triangle updated.
+pub fn dsyrk_lower(alpha: f64, a: &Mat, beta: f64, c: &mut Mat) {
+    let n = a.rows();
+    assert_eq!(c.rows(), n);
+    assert_eq!(c.cols(), n);
+    for j in 0..n {
+        for i in j..n {
+            let mut s = 0.0;
+            for k in 0..a.cols() {
+                s += a[(i, k)] * a[(j, k)];
+            }
+            c[(i, j)] = alpha * s + beta * c[(i, j)];
+        }
+    }
+}
+
+/// dtrsm (left, lower, non-unit): solve L·X = B in place (B overwritten
+/// with X). Column-oriented forward substitution.
+pub fn dtrsm_left_lower(l: &Mat, b: &mut Mat) {
+    let n = l.rows();
+    assert_eq!(l.cols(), n);
+    assert_eq!(b.rows(), n);
+    for j in 0..b.cols() {
+        for i in 0..n {
+            let mut s = b[(i, j)];
+            for k in 0..i {
+                s -= l[(i, k)] * b[(k, j)];
+            }
+            assert!(l[(i, i)] != 0.0, "singular L at {i}");
+            b[(i, j)] = s / l[(i, i)];
+        }
+    }
+}
+
+/// dtrsm (right, upper, non-unit): solve X·U = B in place.
+pub fn dtrsm_right_upper(u: &Mat, b: &mut Mat) {
+    let n = u.rows();
+    assert_eq!(u.cols(), n);
+    assert_eq!(b.cols(), n);
+    for i in 0..b.rows() {
+        for j in 0..n {
+            let mut s = b[(i, j)];
+            for k in 0..j {
+                s -= b[(i, k)] * u[(k, j)];
+            }
+            assert!(u[(j, j)] != 0.0, "singular U at {j}");
+            b[(i, j)] = s / u[(j, j)];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{assert_allclose, Mat};
+
+    #[test]
+    fn all_loop_orders_agree() {
+        let a = Mat::random(9, 7, 1);
+        let b = Mat::random(7, 5, 2);
+        let c = Mat::random(9, 5, 3);
+        let want = dgemm_order(&a, &b, &c, LoopOrder::Ijk);
+        for order in LoopOrder::ALL {
+            let got = dgemm_order(&a, &b, &c, order);
+            assert_allclose(got.as_slice(), want.as_slice(), 1e-13);
+        }
+    }
+
+    #[test]
+    fn table1_inner_kernels() {
+        assert_eq!(LoopOrder::Ijk.inner_kernel(), "dot");
+        assert_eq!(LoopOrder::Jik.inner_kernel(), "dot");
+        for o in [LoopOrder::Ikj, LoopOrder::Jki, LoopOrder::Kij, LoopOrder::Kji] {
+            assert_eq!(o.inner_kernel(), "saxpy");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_reference_various_blocks() {
+        let a = Mat::random(13, 11, 4);
+        let b = Mat::random(11, 9, 5);
+        let c = Mat::random(13, 9, 6);
+        let want = dgemm_ref(&a, &b, &c);
+        for block in [1, 2, 4, 5, 16] {
+            let got = dgemm_blocked(&a, &b, &c, block);
+            assert_allclose(got.as_slice(), want.as_slice(), 1e-13);
+        }
+    }
+
+    #[test]
+    fn gemm_identity() {
+        let a = Mat::random(6, 6, 7);
+        let got = dgemm_ref(&a, &Mat::eye(6), &Mat::zeros(6, 6));
+        assert_allclose(got.as_slice(), a.as_slice(), 0.0);
+    }
+
+    #[test]
+    fn dsyrk_matches_explicit() {
+        let a = Mat::random(6, 4, 8);
+        let mut c = Mat::zeros(6, 6);
+        dsyrk_lower(1.0, &a, 0.0, &mut c);
+        for i in 0..6 {
+            for j in 0..=i {
+                let mut want = 0.0;
+                for k in 0..4 {
+                    want += a[(i, k)] * a[(j, k)];
+                }
+                assert!((c[(i, j)] - want).abs() < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    fn trsm_left_lower_solves() {
+        let n = 6;
+        let mut l = Mat::random(n, n, 9);
+        for i in 0..n {
+            for j in i + 1..n {
+                l[(i, j)] = 0.0;
+            }
+            l[(i, i)] = 3.0 + l[(i, i)].abs();
+        }
+        let x0 = Mat::random(n, 3, 10);
+        // B = L·X0
+        let b = dgemm_ref(&l, &x0, &Mat::zeros(n, 3));
+        let mut x = b.clone();
+        dtrsm_left_lower(&l, &mut x);
+        assert_allclose(x.as_slice(), x0.as_slice(), 1e-11);
+    }
+
+    #[test]
+    fn trsm_right_upper_solves() {
+        let n = 5;
+        let mut u = Mat::random(n, n, 11);
+        for i in 0..n {
+            for j in 0..i {
+                u[(i, j)] = 0.0;
+            }
+            u[(i, i)] = 3.0 + u[(i, i)].abs();
+        }
+        let x0 = Mat::random(4, n, 12);
+        let b = dgemm_ref(&x0, &u, &Mat::zeros(4, n));
+        let mut x = b.clone();
+        dtrsm_right_upper(&u, &mut x);
+        assert_allclose(x.as_slice(), x0.as_slice(), 1e-11);
+    }
+}

@@ -1,0 +1,24 @@
+//! Host reference BLAS — the numerical substrate and oracle.
+//!
+//! The paper builds on Netlib BLAS semantics; this module provides clean
+//! Rust implementations of the routines the paper analyses (§3–§4):
+//! Level-1 (ddot, daxpy, dnrm2, dscal, dcopy, dswap, dasum, idamax, drot),
+//! Level-2 (dgemv, dger, dtrmv, dtrsv), Level-3 (dgemm in all six loop
+//! orders of Table 1, blocked dgemm per algorithm 3, dtrsm, dsyrk), and the
+//! Strassen/Winograd baselines of §4.3 (Tables 2–3).
+//!
+//! These are correctness references for the PE codegen, the XLA artifacts,
+//! and the platform models — written for clarity, not host speed (the hot
+//! path of this project is the simulator, not host BLAS).
+
+pub mod level1;
+pub mod level2;
+pub mod level3;
+pub mod strassen;
+pub mod winograd;
+
+pub use level1::*;
+pub use level2::{dgemv_ref, dger, dtrmv_lower, dtrsv_lower};
+pub use level3::{dgemm_blocked, dgemm_ref, LoopOrder};
+pub use strassen::strassen_multiply;
+pub use winograd::winograd_multiply;

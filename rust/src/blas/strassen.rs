@@ -1,0 +1,137 @@
+//! Strassen's Matrix Multiplication (SMM) — the §4.3.2 baseline.
+//!
+//! Implements the recursion of Table 2 (T1–T9, M1–M7, K1–K4) with zero
+//! padding to the next power of two for odd sizes — exactly the scheme the
+//! paper discusses (and rejects for the PE) in §4.3.4: 7 block multiplies,
+//! 18 block additions per recursion level, O(n^2.81) asymptotically.
+
+use crate::util::Mat;
+
+/// Recursion cut-off: below this the multiplication falls back to GEMM.
+const CUTOFF: usize = 8;
+
+/// Multiply C = A·B with Strassen's algorithm (square matrices).
+pub fn strassen_multiply(a: &Mat, b: &Mat) -> Mat {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "SMM needs square A");
+    assert_eq!(b.rows(), n, "dims");
+    assert_eq!(b.cols(), n, "SMM needs square B");
+    if n == 0 {
+        return Mat::zeros(0, 0);
+    }
+    // Zero-pad to the next power of two (§4.3.4 discussion).
+    let p = n.next_power_of_two();
+    if p != n {
+        let c = strassen_rec(&a.padded(p, p), &b.padded(p, p));
+        return c.block(0, 0, n, n);
+    }
+    strassen_rec(a, b)
+}
+
+fn strassen_rec(a: &Mat, b: &Mat) -> Mat {
+    let n = a.rows();
+    if n <= CUTOFF {
+        return crate::blas::level3::dgemm_ref(a, b, &Mat::zeros(n, n));
+    }
+    let h = n / 2;
+    let (a11, a12, a21, a22) =
+        (a.block(0, 0, h, h), a.block(0, h, h, h), a.block(h, 0, h, h), a.block(h, h, h, h));
+    let (b11, b12, b21, b22) =
+        (b.block(0, 0, h, h), b.block(0, h, h, h), b.block(h, 0, h, h), b.block(h, h, h, h));
+
+    // Level 1 of Table 2: the T additions.
+    let t1 = add(&a11, &a22);
+    let t2 = add(&b11, &b22);
+    let t3 = sub(&b12, &b22);
+    let t4 = sub(&b21, &b11);
+    let t5 = add(&a11, &a12);
+    let t6 = sub(&a21, &a11);
+    let t7 = add(&b11, &b12);
+    let t8 = sub(&a12, &a22);
+    let t9 = add(&b21, &b22);
+
+    // Level 2: the seven recursive multiplies M1–M7 (Table 2).
+    let m1 = strassen_rec(&t1, &t2);
+    let m2 = strassen_rec(&add(&a21, &a22), &b11);
+    let m3 = strassen_rec(&a11, &t3);
+    let m4 = strassen_rec(&a22, &t4);
+    let m5 = strassen_rec(&t5, &b22);
+    let m6 = strassen_rec(&t6, &t7);
+    let m7 = strassen_rec(&t8, &t9);
+
+    // Levels 3–4: K combinations and the C blocks.
+    let k1 = add(&m1, &m4); // M1 + M4
+    let k2 = sub(&m5, &m7); // M5 - M7
+    let c11 = sub(&k1, &k2); // M1 + M4 - M5 + M7
+    let c12 = add(&m3, &m5);
+    let c21 = add(&m2, &m4);
+    let k3 = sub(&m1, &m2); // M1 - M2
+    let k4 = add(&m3, &m6); // M3 + M6
+    let c22 = add(&k3, &k4);
+
+    let mut c = Mat::zeros(n, n);
+    c.set_block(0, 0, &c11);
+    c.set_block(0, h, &c12);
+    c.set_block(h, 0, &c21);
+    c.set_block(h, h, &c22);
+    c
+}
+
+fn add(a: &Mat, b: &Mat) -> Mat {
+    let mut c = a.clone();
+    for (ci, bi) in c.as_mut_slice().iter_mut().zip(b.as_slice()) {
+        *ci += bi;
+    }
+    c
+}
+
+fn sub(a: &Mat, b: &Mat) -> Mat {
+    let mut c = a.clone();
+    for (ci, bi) in c.as_mut_slice().iter_mut().zip(b.as_slice()) {
+        *ci -= bi;
+    }
+    c
+}
+
+/// Operation counts of one Strassen recursion step on 2×2 blocks:
+/// (block multiplies, block additions) — Table 2: 7 and 18.
+pub fn smm_step_op_counts() -> (usize, usize) {
+    (7, 18)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::assert_allclose;
+
+    #[test]
+    fn matches_gemm_power_of_two() {
+        let a = Mat::random(32, 32, 1);
+        let b = Mat::random(32, 32, 2);
+        let want = crate::blas::level3::dgemm_ref(&a, &b, &Mat::zeros(32, 32));
+        let got = strassen_multiply(&a, &b);
+        assert_allclose(got.as_slice(), want.as_slice(), 1e-10);
+    }
+
+    #[test]
+    fn matches_gemm_odd_size_via_padding() {
+        let a = Mat::random(23, 23, 3);
+        let b = Mat::random(23, 23, 4);
+        let want = crate::blas::level3::dgemm_ref(&a, &b, &Mat::zeros(23, 23));
+        let got = strassen_multiply(&a, &b);
+        assert_allclose(got.as_slice(), want.as_slice(), 1e-10);
+    }
+
+    #[test]
+    fn small_sizes_fall_back() {
+        let a = Mat::random(4, 4, 5);
+        let b = Mat::random(4, 4, 6);
+        let want = crate::blas::level3::dgemm_ref(&a, &b, &Mat::zeros(4, 4));
+        assert_allclose(strassen_multiply(&a, &b).as_slice(), want.as_slice(), 1e-12);
+    }
+
+    #[test]
+    fn table2_op_counts() {
+        assert_eq!(smm_step_op_counts(), (7, 18));
+    }
+}

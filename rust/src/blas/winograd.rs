@@ -1,0 +1,138 @@
+//! Winograd's Matrix Multiplication (WMM) — the §4.3.3 baseline.
+//!
+//! The Strassen–Winograd variant of Table 3: same 7 block multiplies per
+//! recursion step but only **15** block additions (vs SMM's 18). Same
+//! O(n^2.81) asymptotic complexity; slightly lower constant — the paper's
+//! observation that "execution time of WMM is observed to be slightly less
+//! than SMM due to fewer additions".
+
+use crate::util::Mat;
+
+/// Recursion cut-off (below: plain GEMM).
+const CUTOFF: usize = 8;
+
+/// Multiply C = A·B with the Strassen–Winograd algorithm.
+pub fn winograd_multiply(a: &Mat, b: &Mat) -> Mat {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "WMM needs square A");
+    assert_eq!(b.rows(), n, "dims");
+    assert_eq!(b.cols(), n, "WMM needs square B");
+    if n == 0 {
+        return Mat::zeros(0, 0);
+    }
+    let p = n.next_power_of_two();
+    if p != n {
+        let c = winograd_rec(&a.padded(p, p), &b.padded(p, p));
+        return c.block(0, 0, n, n);
+    }
+    winograd_rec(a, b)
+}
+
+fn winograd_rec(a: &Mat, b: &Mat) -> Mat {
+    let n = a.rows();
+    if n <= CUTOFF {
+        return crate::blas::level3::dgemm_ref(a, b, &Mat::zeros(n, n));
+    }
+    let h = n / 2;
+    let (a11, a12, a21, a22) =
+        (a.block(0, 0, h, h), a.block(0, h, h, h), a.block(h, 0, h, h), a.block(h, h, h, h));
+    let (b11, b12, b21, b22) =
+        (b.block(0, 0, h, h), b.block(0, h, h, h), b.block(h, 0, h, h), b.block(h, h, h, h));
+
+    // The S/T pre-additions of Table 3 (8 of the 15 additions).
+    let s1 = add(&a21, &a22);
+    let s2 = sub(&s1, &a11);
+    let s3 = sub(&a11, &a21);
+    let s4 = sub(&a12, &s2);
+    let t1 = sub(&b12, &b11);
+    let t2 = sub(&b22, &t1);
+    let t3 = sub(&b22, &b12);
+    let t4 = sub(&t2, &b21);
+
+    // Seven recursive multiplies.
+    let m1 = winograd_rec(&a11, &b11);
+    let m2 = winograd_rec(&a12, &b21);
+    let m3 = winograd_rec(&s4, &b22);
+    let m4 = winograd_rec(&a22, &t4);
+    let m5 = winograd_rec(&s1, &t1);
+    let m6 = winograd_rec(&s2, &t2);
+    let m7 = winograd_rec(&s3, &t3);
+
+    // The U post-additions (7 more, 15 total).
+    let u1 = add(&m1, &m2); // C11
+    let u2 = add(&m1, &m6);
+    let u3 = add(&u2, &m7);
+    let u4 = add(&u2, &m5);
+    let u5 = add(&u4, &m3); // C12
+    let u6 = sub(&u3, &m4); // C21
+    let u7 = add(&u3, &m5); // C22
+
+    let mut c = Mat::zeros(n, n);
+    c.set_block(0, 0, &u1);
+    c.set_block(0, h, &u5);
+    c.set_block(h, 0, &u6);
+    c.set_block(h, h, &u7);
+    c
+}
+
+fn add(a: &Mat, b: &Mat) -> Mat {
+    let mut c = a.clone();
+    for (ci, bi) in c.as_mut_slice().iter_mut().zip(b.as_slice()) {
+        *ci += bi;
+    }
+    c
+}
+
+fn sub(a: &Mat, b: &Mat) -> Mat {
+    let mut c = a.clone();
+    for (ci, bi) in c.as_mut_slice().iter_mut().zip(b.as_slice()) {
+        *ci -= bi;
+    }
+    c
+}
+
+/// Per-recursion-step op counts (block multiplies, block additions):
+/// 7 and 15 (Table 3 / §4.3.3).
+pub fn wmm_step_op_counts() -> (usize, usize) {
+    (7, 15)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::assert_allclose;
+
+    #[test]
+    fn matches_gemm_power_of_two() {
+        let a = Mat::random(32, 32, 7);
+        let b = Mat::random(32, 32, 8);
+        let want = crate::blas::level3::dgemm_ref(&a, &b, &Mat::zeros(32, 32));
+        let got = winograd_multiply(&a, &b);
+        assert_allclose(got.as_slice(), want.as_slice(), 1e-10);
+    }
+
+    #[test]
+    fn matches_gemm_odd_size() {
+        let a = Mat::random(17, 17, 9);
+        let b = Mat::random(17, 17, 10);
+        let want = crate::blas::level3::dgemm_ref(&a, &b, &Mat::zeros(17, 17));
+        let got = winograd_multiply(&a, &b);
+        assert_allclose(got.as_slice(), want.as_slice(), 1e-10);
+    }
+
+    #[test]
+    fn fewer_additions_than_strassen() {
+        let (_, wmm_adds) = wmm_step_op_counts();
+        let (_, smm_adds) = crate::blas::strassen::smm_step_op_counts();
+        assert!(wmm_adds < smm_adds, "Table 3 vs Table 2: 15 < 18");
+    }
+
+    #[test]
+    fn agrees_with_strassen() {
+        let a = Mat::random(24, 24, 11);
+        let b = Mat::random(24, 24, 12);
+        let w = winograd_multiply(&a, &b);
+        let s = crate::blas::strassen::strassen_multiply(&a, &b);
+        assert_allclose(w.as_slice(), s.as_slice(), 1e-10);
+    }
+}

@@ -1,0 +1,441 @@
+//! DGEMM code generation for the PE, per enhancement level.
+//!
+//! One routine, six compilations — the co-design story of the paper:
+//!
+//! * **AE0** (§4.4, algorithm 3): 4×4 register-blocked GEMM, every operand
+//!   fetched from GM, scalar `Fmac` compute walking one output row at a time
+//!   (the natural translation of algorithm 1's loop nest).
+//! * **AE1** (§5.1): operands staged through the Local Memory — an A row
+//!   strip and a B column panel per block row/column — `LmLd` + `Fmac`.
+//! * **AE2** (§5.2.1): the 16 c(i,j) updates of a block step become 16
+//!   independent `DOT4` instructions with accumulate.
+//! * **AE3** (§5.2.2): GM↔LM staging uses single-handshake Block Data
+//!   Load/Store (timing change in the LS engine; same stream shape).
+//! * **AE4** (§5.3): RF↔LM moves become 256-bit `LmLd4`/`LmSt4`.
+//! * **AE5** (§5.4, algorithm 4 + fig 10): software pipelining — the k-loop
+//!   is restructured so the block loads for iteration k+1 issue behind the
+//!   DOT4s of iteration k, and the next B panel is pre-fetched into a
+//!   double-buffered LM region while the current one is consumed.
+//!
+//! Register map: C block r0–r15 (column-major, c(i,j) = r[4j+i]); A block
+//! r16–r31 (row-major, a(i,k) = r[16+4i+k]) so each row is a DOT4 `ra`
+//! window; B block r32–r47 (column-major, b(k,j) = r[32+4j+k]) so each
+//! column is a DOT4 `rb` window.
+
+use super::layout::GemmLayout;
+use crate::pe::{AeLevel, Instr, Program};
+
+/// Base register of the C block.
+const RC: u8 = 0;
+/// Base register of the A block (row-major).
+const RA: u8 = 16;
+/// Base register of the B block (column-major).
+const RB: u8 = 32;
+
+/// LM word offsets for the GEMM working set.
+#[derive(Debug, Clone, Copy)]
+struct LmMap {
+    /// A row strip: 4 rows × n, row r at `a + r*n`.
+    a: u32,
+    /// B column panels (double-buffered at AE5): col c at `b[buf] + c*n`.
+    b: [u32; 2],
+    /// C block scratch: column j at `c + 4j`.
+    c: u32,
+}
+
+impl LmMap {
+    fn new(n: usize) -> Self {
+        let n = n as u32;
+        let map = Self { a: 0, b: [4 * n, 8 * n], c: 12 * n };
+        assert!(
+            (map.c + 16) as usize <= crate::pe::LM_WORDS,
+            "GEMM working set exceeds the 256-kbit Local Memory for n={n}"
+        );
+        map
+    }
+}
+
+/// Generate the DGEMM program `C ← A·B + C` for an n×n problem (n % 4 == 0)
+/// at the given enhancement level.
+pub fn gen_gemm(n: usize, ae: AeLevel, layout: &GemmLayout) -> Program {
+    assert!(n % 4 == 0 && n >= 4, "n must be a positive multiple of 4, got {n}");
+    gen_gemm_rect(n, n, n, ae, layout)
+}
+
+/// Generate the rectangular DGEMM program C (m×p) ← A (m×k)·B (k×p) + C.
+/// All dimensions must be multiples of 4 (the coordinator pads). This is
+/// the kernel each REDEFINE tile runs in the parallel realization (§5.5):
+/// an output block of m×p with the full inner dimension k.
+pub fn gen_gemm_rect(m: usize, p: usize, k: usize, ae: AeLevel, layout: &GemmLayout) -> Program {
+    for (d, name) in [(m, "m"), (p, "p"), (k, "k")] {
+        assert!(d % 4 == 0 && d >= 4, "{name} must be a positive multiple of 4, got {d}");
+    }
+    assert_eq!((layout.m, layout.p, layout.k), (m, p, k), "layout/problem size mismatch");
+    let mut prog = Program::new();
+    if ae == AeLevel::Ae0 {
+        gen_ae0(m, p, k, layout, &mut prog);
+    } else {
+        gen_lm(m, p, k, ae, layout, &mut prog);
+    }
+    prog.push(Instr::Halt);
+    debug_assert!(prog.validate().is_ok());
+    prog
+}
+
+/// AE0: everything from GM, scalar loads, Fmac compute.
+fn gen_ae0(m: usize, pcols: usize, kdim: usize, l: &GemmLayout, p: &mut Program) {
+    for ib in 0..m / 4 {
+        for jb in 0..pcols / 4 {
+            // Load the 4×4 C block (column-major registers).
+            for j in 0..4 {
+                for i in 0..4 {
+                    p.push(Instr::Ld { rd: RC + (4 * j + i) as u8, gm: l.c(4 * ib + i, 4 * jb + j) as u32 });
+                }
+            }
+            for kb in 0..kdim / 4 {
+                emit_block_loads_gm(l, ib, jb, kb, p);
+                emit_fmacs(p);
+                // Simple loop sequencer: stall at the back-edge (fig 10).
+                p.push(Instr::Barrier);
+            }
+            for j in 0..4 {
+                for i in 0..4 {
+                    p.push(Instr::St { rs: RC + (4 * j + i) as u8, gm: l.c(4 * ib + i, 4 * jb + j) as u32 });
+                }
+            }
+        }
+    }
+}
+
+/// AE1–AE5: operands staged through LM.
+fn gen_lm(m: usize, pcols: usize, kdim: usize, ae: AeLevel, l: &GemmLayout, p: &mut Program) {
+    let kb_count = kdim / 4;
+    let lm = LmMap::new(kdim);
+    let prefetch = ae.has_prefetch();
+
+    for ib in 0..m / 4 {
+        // Stage the A row strip (4 rows × k) for this block row.
+        for r in 0..4 {
+            p.push(Instr::BlkLd {
+                lm: lm.a + (r * kdim) as u32,
+                gm: l.a(4 * ib + r, 0) as u32,
+                len: kdim as u32,
+            });
+        }
+        // Without pre-fetch, each B panel is staged at the top of its jb
+        // body; with AE5 the panel for jb+1 streams in behind the compute.
+        if prefetch {
+            emit_panel_load(kdim, l, 0, lm.b[0], p);
+        }
+        for jb in 0..pcols / 4 {
+            let buf = if prefetch { lm.b[jb % 2] } else { lm.b[0] };
+            if !prefetch {
+                emit_panel_load(kdim, l, jb, buf, p);
+            }
+            // C block GM→LM→RF (one 4-word column at a time; C columns are
+            // contiguous in GM).
+            for j in 0..4 {
+                p.push(Instr::BlkLd {
+                    lm: lm.c + 4 * j as u32,
+                    gm: l.c(4 * ib, 4 * jb + j) as u32,
+                    len: 4,
+                });
+            }
+            if prefetch && jb + 1 < pcols / 4 {
+                // AE5: pre-fetch the next B panel into the other buffer now;
+                // it streams on the GM engine under the whole k-loop below.
+                emit_panel_load(kdim, l, jb + 1, lm.b[(jb + 1) % 2], p);
+            }
+            emit_c_rf_loads(ae, &lm, p);
+
+            if prefetch {
+                // Software-pipelined k-loop (algorithm 4): loads for step
+                // kb+1 issue behind the DOT4s of step kb.
+                emit_block_loads_lm(kdim, ae, &lm, buf, 0, p);
+                for kb in 0..kb_count {
+                    emit_dots(p);
+                    if kb + 1 < kb_count {
+                        emit_block_loads_lm(kdim, ae, &lm, buf, kb + 1, p);
+                    }
+                }
+            } else {
+                for kb in 0..kb_count {
+                    emit_block_loads_lm(kdim, ae, &lm, buf, kb, p);
+                    if ae.has_dot() {
+                        emit_dots(p);
+                    } else {
+                        emit_fmacs(p);
+                    }
+                    // Simple loop sequencer: stall at the back-edge; the
+                    // AE5 restructured loop (other branch) removes this.
+                    p.push(Instr::Barrier);
+                }
+            }
+
+            // C block RF→LM→GM.
+            emit_c_rf_stores(ae, &lm, p);
+            for j in 0..4 {
+                p.push(Instr::BlkSt {
+                    lm: lm.c + 4 * j as u32,
+                    gm: l.c(4 * ib, 4 * jb + j) as u32,
+                    len: 4,
+                });
+            }
+        }
+    }
+}
+
+/// Stage B panel `jb` (4 columns × k) into an LM buffer.
+fn emit_panel_load(kdim: usize, l: &GemmLayout, jb: usize, buf: u32, p: &mut Program) {
+    for c in 0..4 {
+        p.push(Instr::BlkLd {
+            lm: buf + (c * kdim) as u32,
+            gm: l.b(0, 4 * jb + c) as u32,
+            len: kdim as u32,
+        });
+    }
+}
+
+/// Load the A and B 4×4 blocks of step `kb` from LM into the register file.
+fn emit_block_loads_lm(n: usize, ae: AeLevel, lm: &LmMap, buf: u32, kb: usize, p: &mut Program) {
+    if ae.has_wide_path() {
+        for i in 0..4u8 {
+            p.push(Instr::LmLd4 { rd: RA + 4 * i, lm: lm.a + (i as usize * n + 4 * kb) as u32 });
+        }
+        for j in 0..4u8 {
+            p.push(Instr::LmLd4 { rd: RB + 4 * j, lm: buf + (j as usize * n + 4 * kb) as u32 });
+        }
+    } else {
+        for i in 0..4u8 {
+            for k in 0..4u8 {
+                p.push(Instr::LmLd {
+                    rd: RA + 4 * i + k,
+                    lm: lm.a + (i as usize * n + 4 * kb + k as usize) as u32,
+                });
+            }
+        }
+        for j in 0..4u8 {
+            for k in 0..4u8 {
+                p.push(Instr::LmLd {
+                    rd: RB + 4 * j + k,
+                    lm: buf + (j as usize * n + 4 * kb + k as usize) as u32,
+                });
+            }
+        }
+    }
+}
+
+/// Load the A and B blocks of step (ib, jb, kb) straight from GM (AE0).
+fn emit_block_loads_gm(l: &GemmLayout, ib: usize, jb: usize, kb: usize, p: &mut Program) {
+    for i in 0..4 {
+        for k in 0..4 {
+            p.push(Instr::Ld {
+                rd: RA + (4 * i + k) as u8,
+                gm: l.a(4 * ib + i, 4 * kb + k) as u32,
+            });
+        }
+    }
+    for j in 0..4 {
+        for k in 0..4 {
+            p.push(Instr::Ld {
+                rd: RB + (4 * j + k) as u8,
+                gm: l.b(4 * kb + k, 4 * jb + j) as u32,
+            });
+        }
+    }
+}
+
+/// C block LM→RF.
+fn emit_c_rf_loads(ae: AeLevel, lm: &LmMap, p: &mut Program) {
+    if ae.has_wide_path() {
+        for j in 0..4u8 {
+            p.push(Instr::LmLd4 { rd: RC + 4 * j, lm: lm.c + 4 * j as u32 });
+        }
+    } else {
+        for j in 0..4u8 {
+            for i in 0..4u8 {
+                p.push(Instr::LmLd { rd: RC + 4 * j + i, lm: lm.c + (4 * j + i) as u32 });
+            }
+        }
+    }
+}
+
+/// C block RF→LM.
+fn emit_c_rf_stores(ae: AeLevel, lm: &LmMap, p: &mut Program) {
+    if ae.has_wide_path() {
+        for j in 0..4u8 {
+            p.push(Instr::LmSt4 { rs: RC + 4 * j, lm: lm.c + 4 * j as u32 });
+        }
+    } else {
+        for j in 0..4u8 {
+            for i in 0..4u8 {
+                p.push(Instr::LmSt { rs: RC + 4 * j + i, lm: lm.c + (4 * j + i) as u32 });
+            }
+        }
+    }
+}
+
+/// 64 scalar macs for one 4×4×4 block step, walking one output row at a
+/// time (i outer, k middle, j inner): consecutive instructions touch the
+/// four chains c(i, 0..4), the dependency pattern of the pre-DOT PE.
+fn emit_fmacs(p: &mut Program) {
+    for i in 0..4u8 {
+        for k in 0..4u8 {
+            for j in 0..4u8 {
+                p.push(Instr::Fmac { rd: RC + 4 * j + i, ra: RA + 4 * i + k, rb: RB + 4 * j + k });
+            }
+        }
+    }
+}
+
+/// 16 DOT4-with-accumulate for one block step (independent of each other).
+fn emit_dots(p: &mut Program) {
+    for i in 0..4u8 {
+        for j in 0..4u8 {
+            p.push(Instr::Dot { rd: RC + 4 * j + i, ra: RA + 4 * i, rb: RB + 4 * j, n: 4, acc: true });
+        }
+    }
+}
+
+/// Worst-case innermost-loop-body footprint in instructions for the DGEMM
+/// kernel at an enhancement level. The real PE executes loop bodies from
+/// its 16 KB instruction memory (§4.5); our generators unroll, so this
+/// accounting (checked by `imem_fits_16kb`) keeps them honest: the body
+/// that would live in imem must fit.
+pub fn loop_body_instrs(ae: AeLevel) -> usize {
+    let loads = if ae.has_wide_path() { 8 } else { 32 }; // A + B block
+    let compute = if ae.has_dot() { 16 } else { 64 }; // DOTs vs Fmacs
+    let barrier = usize::from(!ae.has_prefetch());
+    // AE5 pipelines two bodies (loads for kb+1 behind dots for kb).
+    let pipeline = if ae.has_prefetch() { loads } else { 0 };
+    loads + compute + barrier + pipeline
+}
+
+/// Encoded instruction width assumed for imem accounting (64-bit words,
+/// matching the 64-bit datapath).
+pub const INSTR_BYTES: usize = 8;
+
+/// Paper-convention flop count for an n×n DGEMM: the Tables 4–9 CPF column
+/// is consistent with 3n³ (multiply, reduction add and accumulate counted
+/// separately) — see DESIGN.md §Calibration.
+pub fn paper_flops(n: usize) -> u64 {
+    3 * (n as u64).pow(3)
+}
+
+/// Standard flop count (2n³).
+pub fn std_flops(n: usize) -> u64 {
+    2 * (n as u64).pow(3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::{Pe, PeConfig};
+    use crate::util::{assert_allclose, Mat};
+
+    fn run_gemm(n: usize, ae: AeLevel) -> (Mat, crate::pe::PeStats) {
+        let a = Mat::random(n, n, 100 + n as u64);
+        let b = Mat::random(n, n, 200 + n as u64);
+        let c0 = Mat::random(n, n, 300 + n as u64);
+        let layout = GemmLayout::packed(n);
+        let prog = gen_gemm(n, ae, &layout);
+        let mut pe = Pe::new(PeConfig::paper(ae), layout.gm_words());
+        pe.write_gm(0, &layout.pack(&a, &b, &c0));
+        let st = pe.run(&prog);
+        let got = layout.unpack_c(&pe.gm, n, n);
+        // Host reference.
+        let mut want = c0.clone();
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = want[(i, j)];
+                for k in 0..n {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                want[(i, j)] = s;
+            }
+        }
+        assert_allclose(got.as_slice(), want.as_slice(), 1e-12);
+        (got, st)
+    }
+
+    #[test]
+    fn gemm_numerics_all_levels_n8() {
+        for ae in AeLevel::ALL {
+            run_gemm(8, ae);
+        }
+    }
+
+    #[test]
+    fn gemm_numerics_n20_ae0_ae5() {
+        run_gemm(20, AeLevel::Ae0);
+        run_gemm(20, AeLevel::Ae5);
+    }
+
+    #[test]
+    fn each_enhancement_reduces_latency_n20() {
+        let mut prev = u64::MAX;
+        for ae in AeLevel::ALL {
+            let (_, st) = run_gemm(20, ae);
+            assert!(
+                st.cycles < prev,
+                "{ae}: {} cycles did not improve on previous {prev}",
+                st.cycles
+            );
+            prev = st.cycles;
+        }
+    }
+
+    #[test]
+    fn dot_count_matches_alpha_denominator() {
+        // α (eq. 7) denominator: n³/4 DOT4s for the multiply-accumulate work.
+        let layout = GemmLayout::packed(16);
+        let prog = gen_gemm(16, AeLevel::Ae5, &layout);
+        assert_eq!(prog.dot_count(), (16u64).pow(3) / 4);
+    }
+
+    #[test]
+    fn flop_conventions() {
+        assert_eq!(paper_flops(20), 24_000);
+        assert_eq!(std_flops(20), 16_000);
+    }
+
+    #[test]
+    fn executed_flops_match_convention() {
+        // Dot with acc does 8 flops per 4 macs = 2n³ total… plus C has no
+        // extra ops; Fmac path does 2 flops per mac likewise.
+        let (_, st) = run_gemm(8, AeLevel::Ae5);
+        assert_eq!(st.flops, 2 * 8u64.pow(3));
+        let (_, st0) = run_gemm(8, AeLevel::Ae0);
+        assert_eq!(st0.flops, 2 * 8u64.pow(3));
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 4")]
+    fn rejects_unpadded_n() {
+        let layout = GemmLayout::packed(8);
+        gen_gemm(6, AeLevel::Ae0, &layout);
+    }
+
+    #[test]
+    fn imem_fits_16kb() {
+        // §4.5: 16 KB instruction memory. Every level's innermost loop
+        // body (plus generous room for the loop control the real PE would
+        // carry) must fit.
+        let imem = crate::pe::PeConfig::paper(AeLevel::Ae0).imem_bytes;
+        for ae in AeLevel::ALL {
+            let body = loop_body_instrs(ae) * INSTR_BYTES;
+            assert!(
+                body * 4 < imem,
+                "{ae}: loop body {body} B leaves no imem headroom"
+            );
+        }
+    }
+
+    #[test]
+    fn prefetch_outperforms_no_prefetch() {
+        let (_, st4) = run_gemm(40, AeLevel::Ae4);
+        let (_, st5) = run_gemm(40, AeLevel::Ae5);
+        let gain = 1.0 - st5.cycles as f64 / st4.cycles as f64;
+        assert!(gain > 0.10, "AE5 prefetch gain too small: {gain:.3}");
+    }
+}

@@ -1,0 +1,223 @@
+//! DGEMM for arbitrary sizes via the RDP's DOT2/DOT3 configurations.
+//!
+//! §5.2.1: "we further make this hardware structure reconfigurable to
+//! support 2-element and 3-element vector inner products to support
+//! different matrix sizes." This generator tiles n into blocks of length
+//! {4, 3, 2} (n = 4q [+3][+2]), emits DOT4/DOT3/DOT2 per block shape, and
+//! needs no zero padding — the alternative the coordinator's padding path
+//! is ablated against (`cargo bench --bench ablations -- residual`).
+//!
+//! Register/LM layout matches [`super::gemm`] (strides stay 4 in the RF);
+//! edge blocks simply use fewer lanes.
+
+use super::layout::GemmLayout;
+use crate::pe::{AeLevel, Instr, Program};
+
+const RC: u8 = 0;
+const RA: u8 = 16;
+const RB: u8 = 32;
+
+/// Decompose a dimension into DOT-compatible block lengths (4…4, then 3
+/// and/or 2). Requires n ≥ 2 (a 1-length dimension has no RDP config; the
+/// coordinator pads that degenerate case).
+pub fn blocks(n: usize) -> Vec<(usize, usize)> {
+    assert!(n >= 2, "RDP supports 2/3/4-element dots; pad n=1");
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut rem = n;
+    while rem > 0 {
+        let len = match rem {
+            2 | 3 => rem,
+            5 => 3, // leave a 2-block, not a 1-block
+            _ => 4,
+        };
+        out.push((start, len));
+        start += len;
+        rem -= len;
+    }
+    out
+}
+
+/// LM map (strides follow the k dimension, as in the aligned generator).
+struct LmMap {
+    a: u32,
+    b: u32,
+    c: u32,
+}
+
+impl LmMap {
+    fn new(k: usize) -> Self {
+        let k32 = k as u32;
+        let m = Self { a: 0, b: 4 * k32, c: 8 * k32 };
+        assert!((m.c + 16) as usize <= crate::pe::LM_WORDS, "working set exceeds LM");
+        m
+    }
+}
+
+/// Generate DGEMM `C ← A·B + C` for any n ≥ 2 at AE2+ (the RDP levels —
+/// before AE2 there is no DOT hardware and the scalar-mac generator in
+/// [`super::gemm`] handles any padded size).
+pub fn gen_gemm_any(n: usize, ae: AeLevel, l: &GemmLayout) -> Program {
+    assert!(ae.has_dot(), "gen_gemm_any targets the RDP levels (AE2+)");
+    assert_eq!((l.m, l.p, l.k), (n, n, n), "layout mismatch");
+    let mut p = Program::new();
+    let blks = blocks(n);
+    let lm = LmMap::new(n);
+    let wide = ae.has_wide_path();
+    let prefetch = ae.has_prefetch();
+
+    for &(i0, ilen) in &blks {
+        // A row strip for this block row (ilen rows × n, row r at lm.a+r*n).
+        for r in 0..ilen {
+            p.push(Instr::BlkLd { lm: lm.a + (r * n) as u32, gm: l.a(i0 + r, 0) as u32, len: n as u32 });
+        }
+        for &(j0, jlen) in &blks {
+            // B panel: jlen columns × n.
+            for c in 0..jlen {
+                p.push(Instr::BlkLd { lm: lm.b + (c * n) as u32, gm: l.b(0, j0 + c) as u32, len: n as u32 });
+            }
+            // C block: one column segment at a time (contiguous in GM).
+            for j in 0..jlen {
+                p.push(Instr::BlkLd { lm: lm.c + (4 * j) as u32, gm: l.c(i0, j0 + j) as u32, len: ilen as u32 });
+            }
+            for j in 0..jlen as u8 {
+                for i in 0..ilen as u8 {
+                    p.push(Instr::LmLd { rd: RC + 4 * j + i, lm: lm.c + (4 * j + i) as u32 });
+                }
+            }
+            // k loop over mixed-width blocks.
+            for (kb, &(k0, klen)) in blks.iter().enumerate() {
+                // Load the A (ilen×klen) and B (klen×jlen) blocks.
+                for i in 0..ilen as u8 {
+                    if wide && klen == 4 {
+                        p.push(Instr::LmLd4 { rd: RA + 4 * i, lm: lm.a + (i as usize * n + k0) as u32 });
+                    } else {
+                        for k in 0..klen as u8 {
+                            p.push(Instr::LmLd { rd: RA + 4 * i + k, lm: lm.a + (i as usize * n + k0 + k as usize) as u32 });
+                        }
+                    }
+                }
+                for j in 0..jlen as u8 {
+                    if wide && klen == 4 {
+                        p.push(Instr::LmLd4 { rd: RB + 4 * j, lm: lm.b + (j as usize * n + k0) as u32 });
+                    } else {
+                        for k in 0..klen as u8 {
+                            p.push(Instr::LmLd { rd: RB + 4 * j + k, lm: lm.b + (j as usize * n + k0 + k as usize) as u32 });
+                        }
+                    }
+                }
+                // DOT{klen} with accumulate, one per output element.
+                for i in 0..ilen as u8 {
+                    for j in 0..jlen as u8 {
+                        p.push(Instr::Dot {
+                            rd: RC + 4 * j + i,
+                            ra: RA + 4 * i,
+                            rb: RB + 4 * j,
+                            n: klen as u8,
+                            acc: true,
+                        });
+                    }
+                }
+                if !prefetch && kb + 1 < blks.len() {
+                    p.push(Instr::Barrier);
+                }
+            }
+            // C back.
+            for j in 0..jlen as u8 {
+                for i in 0..ilen as u8 {
+                    p.push(Instr::LmSt { rs: RC + 4 * j + i, lm: lm.c + (4 * j + i) as u32 });
+                }
+            }
+            for j in 0..jlen {
+                p.push(Instr::BlkSt { lm: lm.c + (4 * j) as u32, gm: l.c(i0, j0 + j) as u32, len: ilen as u32 });
+            }
+        }
+    }
+    p.push(Instr::Halt);
+    debug_assert!(p.validate().is_ok());
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::{Pe, PeConfig};
+    use crate::util::{rel_fro_error, Mat};
+
+    #[test]
+    fn block_decomposition() {
+        assert_eq!(blocks(8), vec![(0, 4), (4, 4)]);
+        assert_eq!(blocks(6), vec![(0, 4), (4, 2)]);
+        assert_eq!(blocks(7), vec![(0, 4), (4, 3)]);
+        assert_eq!(blocks(9), vec![(0, 4), (4, 3), (7, 2)]);
+        assert_eq!(blocks(5), vec![(0, 3), (3, 2)]);
+        assert_eq!(blocks(2), vec![(0, 2)]);
+        assert_eq!(blocks(3), vec![(0, 3)]);
+        for n in 2..40 {
+            let b = blocks(n);
+            assert_eq!(b.iter().map(|x| x.1).sum::<usize>(), n);
+            assert!(b.iter().all(|x| (2..=4).contains(&x.1)), "n={n}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "pad n=1")]
+    fn rejects_one() {
+        blocks(1);
+    }
+
+    fn check(n: usize, ae: AeLevel) -> u64 {
+        let a = Mat::random(n, n, 900 + n as u64);
+        let b = Mat::random(n, n, 901 + n as u64);
+        let c = Mat::random(n, n, 902 + n as u64);
+        let l = GemmLayout { m: n, p: n, k: n, base_a: 0, base_b: n * n, base_c: 2 * n * n };
+        let prog = gen_gemm_any(n, ae, &l);
+        let mut pe = Pe::new(PeConfig::paper(ae), 3 * n * n);
+        pe.write_gm(0, &l.pack(&a, &b, &c));
+        let st = pe.run(&prog);
+        let got = l.unpack_c(&pe.gm, n, n);
+        let want = crate::blas::level3::dgemm_ref(&a, &b, &c);
+        let err = rel_fro_error(got.as_slice(), want.as_slice());
+        assert!(err < 1e-12, "n={n} {ae}: err {err}");
+        st.cycles
+    }
+
+    #[test]
+    fn odd_sizes_all_rdp_levels() {
+        for n in [2usize, 3, 5, 6, 7, 9, 10, 13, 17, 22] {
+            for ae in [AeLevel::Ae2, AeLevel::Ae4, AeLevel::Ae5] {
+                check(n, ae);
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_sizes_match_aligned_generator_numerics() {
+        // Same semantics as gen_gemm for multiples of 4.
+        check(8, AeLevel::Ae5);
+        check(20, AeLevel::Ae3);
+    }
+
+    #[test]
+    fn residual_vs_padding_tradeoff() {
+        // n = 17 padded to 20 wastes (20³−17³)/20³ ≈ 39% of the macs. At
+        // AE3 (no software pipelining on either side) the DOT2/3 residual
+        // path wins; at AE5 the aligned kernel's pipelined k-loop and panel
+        // double-buffering claw the padding waste back — the trade-off the
+        // `ablations` bench quantifies.
+        let n = 17;
+        let resid3 = check(n, AeLevel::Ae3);
+        let padded3 = crate::metrics::measure_gemm(20, AeLevel::Ae3).latency();
+        assert!(
+            resid3 < padded3,
+            "AE3: DOT2/3 residual ({resid3}) should beat padding to 20 ({padded3})"
+        );
+        let resid5 = check(n, AeLevel::Ae5);
+        let padded5 = crate::metrics::measure_gemm(20, AeLevel::Ae5).latency();
+        let ratio = resid5 as f64 / padded5 as f64;
+        assert!(
+            (0.7..1.35).contains(&ratio),
+            "AE5: residual/padded ratio {ratio:.2} outside expected band"
+        );
+    }
+}

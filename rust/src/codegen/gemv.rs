@@ -1,0 +1,284 @@
+//! DGEMV code generation: y ← A·x + y on the PE.
+//!
+//! Level-2 BLAS moves O(n²) data for O(n²) work — each element of A is used
+//! exactly once, so DGEMV is bandwidth-bound on every platform the paper
+//! measures (§3.2: 4–5% of peak on CPUs/GPUs). On the PE the co-designed
+//! kernel reaches ≈40% of peak (abstract): x is staged once in LM, A rows
+//! stream through LM in 4-row strips, and each strip is reduced with DOT4s
+//! into four independent accumulators.
+//!
+//! Register map: y accumulators r0–r3 (strip rows), A row segments r16–r31
+//! (row r at r16+4r), x segment r32–r35, scratch r48+.
+
+use super::layout::VecLayout;
+use crate::pe::{AeLevel, Instr, Program};
+
+const RY: u8 = 0;
+/// Secondary y partials (odd k-steps) — the DOT4 RDP is 15 stages deep, so
+/// each row keeps two alternating partial accumulators.
+const RY2: u8 = 4;
+const RA: u8 = 16;
+const RX: u8 = 32;
+
+/// LM offsets: x vector at 0..n; double-buffered A strips (4 rows × n
+/// each — the AE5 pre-fetch writes the next strip while the current one is
+/// consumed); y strip scratch after them.
+#[derive(Debug, Clone, Copy)]
+struct LmMap {
+    x: u32,
+    a: [u32; 2],
+    y: u32,
+}
+
+impl LmMap {
+    fn new(n: usize) -> Self {
+        let n32 = n as u32;
+        let m = Self { x: 0, a: [n32, 5 * n32], y: 9 * n32 };
+        assert!(
+            (m.y + 4) as usize <= crate::pe::LM_WORDS,
+            "GEMV working set exceeds LM for n={n}"
+        );
+        m
+    }
+}
+
+/// Generate DGEMV `y ← A·x + y` (A n×n row-major, n % 4 == 0).
+pub fn gen_gemv(n: usize, ae: AeLevel, l: &VecLayout) -> Program {
+    assert_eq!(l.n, n);
+    assert!(n % 4 == 0 && n >= 4, "n must be a positive multiple of 4, got {n}");
+    let mut p = Program::new();
+    if ae == AeLevel::Ae0 {
+        gen_ae0(n, l, &mut p);
+    } else {
+        gen_lm(n, ae, l, &mut p);
+    }
+    p.push(Instr::Halt);
+    debug_assert!(p.validate().is_ok());
+    p
+}
+
+/// AE0: stream everything from GM with scalar loads and Fmacs.
+fn gen_ae0(n: usize, l: &VecLayout, p: &mut Program) {
+    for ib in 0..n / 4 {
+        // y strip into the four accumulators.
+        for r in 0..4u8 {
+            p.push(Instr::Ld { rd: RY + r, gm: (l.base_y + 4 * ib + r as usize) as u32 });
+        }
+        for kb in 0..n / 4 {
+            if kb > 0 {
+                // Loop back-edge stall of the simple sequencer.
+                p.push(Instr::Barrier);
+            }
+            // x segment.
+            for k in 0..4u8 {
+                p.push(Instr::Ld { rd: RX + k, gm: (l.base_x + 4 * kb + k as usize) as u32 });
+            }
+            // A 4×4 block, row-major rows.
+            for r in 0..4u8 {
+                for k in 0..4u8 {
+                    p.push(Instr::Ld {
+                        rd: RA + 4 * r + k,
+                        gm: l.a(4 * ib + r as usize, 4 * kb + k as usize) as u32,
+                    });
+                }
+            }
+            // Interleave the four row chains (k middle, r inner).
+            for k in 0..4u8 {
+                for r in 0..4u8 {
+                    p.push(Instr::Fmac { rd: RY + r, ra: RA + 4 * r + k, rb: RX + k });
+                }
+            }
+        }
+        for r in 0..4u8 {
+            p.push(Instr::St { rs: RY + r, gm: (l.base_y + 4 * ib + r as usize) as u32 });
+        }
+    }
+}
+
+/// AE1+: x staged once in LM; A strips streamed GM→LM; DOT4 reduction.
+fn gen_lm(n: usize, ae: AeLevel, l: &VecLayout, p: &mut Program) {
+    let lm = LmMap::new(n);
+    // Stage x once — the data-locality win of the Local Memory.
+    p.push(Instr::BlkLd { lm: lm.x, gm: l.base_x as u32, len: n as u32 });
+
+    let prefetch = ae.has_prefetch();
+    // Pre-fetch pattern (fig 10): strip ib+1 (and its y segment) stream
+    // into the other LM buffers while strip ib is reduced; nothing in the
+    // body then waits on the GM port.
+    if prefetch {
+        p.push(Instr::BlkLd { lm: lm.y, gm: l.base_y as u32, len: 4 });
+        emit_strip_load(n, l, 0, lm.a[0], p);
+    }
+    for ib in 0..n / 4 {
+        let buf = if prefetch { lm.a[ib % 2] } else { lm.a[0] };
+        let ybuf = if prefetch { lm.y + 4 * (ib % 2) as u32 } else { lm.y };
+        if !prefetch {
+            emit_strip_load(n, l, ib, buf, p);
+            p.push(Instr::BlkLd { lm: ybuf, gm: (l.base_y + 4 * ib) as u32, len: 4 });
+        } else if ib + 1 < n / 4 {
+            // Fig-10 overlap: the next strip + y segment stream on the GM
+            // engine underneath this strip's whole reduction loop.
+            let ynext = lm.y + 4 * ((ib + 1) % 2) as u32;
+            p.push(Instr::BlkLd { lm: ynext, gm: (l.base_y + 4 * (ib + 1)) as u32, len: 4 });
+            emit_strip_load(n, l, ib + 1, lm.a[(ib + 1) % 2], p);
+        }
+        if ae.has_wide_path() {
+            p.push(Instr::LmLd4 { rd: RY, lm: ybuf });
+        } else {
+            for r in 0..4u8 {
+                p.push(Instr::LmLd { rd: RY + r, lm: ybuf + r as u32 });
+            }
+        }
+        if ae.has_dot() {
+            for r in 0..4u8 {
+                p.push(Instr::Li { rd: RY2 + r, val: 0.0 });
+            }
+        }
+
+        for kb in 0..n / 4 {
+            // x segment and the four A row segments.
+            if ae.has_wide_path() {
+                p.push(Instr::LmLd4 { rd: RX, lm: lm.x + 4 * kb as u32 });
+                for r in 0..4u8 {
+                    p.push(Instr::LmLd4 { rd: RA + 4 * r, lm: buf + (r as usize * n + 4 * kb) as u32 });
+                }
+            } else {
+                for k in 0..4u8 {
+                    p.push(Instr::LmLd { rd: RX + k, lm: lm.x + (4 * kb + k as usize) as u32 });
+                }
+                for r in 0..4u8 {
+                    for k in 0..4u8 {
+                        p.push(Instr::LmLd {
+                            rd: RA + 4 * r + k,
+                            lm: buf + (r as usize * n + 4 * kb + k as usize) as u32,
+                        });
+                    }
+                }
+            }
+            if ae.has_dot() {
+                // Alternate partials by k-step parity to clear the RDP
+                // pipeline latency between accumulations on one register.
+                let base = if kb % 2 == 0 { RY } else { RY2 };
+                for r in 0..4u8 {
+                    p.push(Instr::Dot { rd: base + r, ra: RA + 4 * r, rb: RX, n: 4, acc: true });
+                }
+            } else {
+                for k in 0..4u8 {
+                    for r in 0..4u8 {
+                        p.push(Instr::Fmac { rd: RY + r, ra: RA + 4 * r + k, rb: RX + k });
+                    }
+                }
+            }
+            if !prefetch {
+                // Loop back-edge stall of the simple sequencer (fig 10).
+                p.push(Instr::Barrier);
+            }
+        }
+
+        // Fold the secondary partials, then the y strip back to GM.
+        if ae.has_dot() {
+            for r in 0..4u8 {
+                p.push(Instr::Fadd { rd: RY + r, ra: RY + r, rb: RY2 + r });
+            }
+        }
+        if ae.has_wide_path() {
+            p.push(Instr::LmSt4 { rs: RY, lm: ybuf });
+        } else {
+            for r in 0..4u8 {
+                p.push(Instr::LmSt { rs: RY + r, lm: ybuf + r as u32 });
+            }
+        }
+        p.push(Instr::BlkSt { lm: ybuf, gm: (l.base_y + 4 * ib) as u32, len: 4 });
+    }
+}
+
+/// Stream the 4-row A strip `ib` into LM (rows are contiguous, row-major A).
+fn emit_strip_load(n: usize, l: &VecLayout, ib: usize, buf: u32, p: &mut Program) {
+    for r in 0..4 {
+        p.push(Instr::BlkLd {
+            lm: buf + (r * n) as u32,
+            gm: l.a(4 * ib + r, 0) as u32,
+            len: n as u32,
+        });
+    }
+}
+
+/// Standard DGEMV flop count (2n²).
+pub fn std_flops(n: usize) -> u64 {
+    2 * (n as u64).pow(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::{Pe, PeConfig, PeStats};
+    use crate::util::{assert_allclose, Mat, XorShift64};
+
+    fn run_gemv(n: usize, ae: AeLevel) -> PeStats {
+        let a = Mat::random(n, n, 7);
+        let mut rng = XorShift64::new(13);
+        let x = rng.vec(n);
+        let y0 = rng.vec(n);
+        let l = VecLayout::gemv(n);
+        let prog = gen_gemv(n, ae, &l);
+        let mut pe = Pe::new(PeConfig::paper(ae), l.gm_words());
+        // A row-major.
+        let mut gm = vec![0.0; l.gm_words()];
+        for i in 0..n {
+            for k in 0..n {
+                gm[l.a(i, k)] = a[(i, k)];
+            }
+        }
+        gm[l.base_x..l.base_x + n].copy_from_slice(&x);
+        gm[l.base_y..l.base_y + n].copy_from_slice(&y0);
+        pe.write_gm(0, &gm);
+        let st = pe.run(&prog);
+        let got = pe.read_gm(l.base_y, n).to_vec();
+        let mut want = y0.clone();
+        for i in 0..n {
+            for k in 0..n {
+                want[i] += a[(i, k)] * x[k];
+            }
+        }
+        assert_allclose(&got, &want, 1e-12);
+        st
+    }
+
+    #[test]
+    fn gemv_numerics_all_levels() {
+        for ae in AeLevel::ALL {
+            run_gemv(8, ae);
+        }
+    }
+
+    #[test]
+    fn gemv_numerics_larger() {
+        run_gemv(40, AeLevel::Ae5);
+        run_gemv(20, AeLevel::Ae2);
+    }
+
+    #[test]
+    fn gemv_improves_with_enhancements() {
+        let c0 = run_gemv(40, AeLevel::Ae0).cycles;
+        let c2 = run_gemv(40, AeLevel::Ae2).cycles;
+        let c5 = run_gemv(40, AeLevel::Ae5).cycles;
+        assert!(c2 < c0, "AE2 {c2} !< AE0 {c0}");
+        assert!(c5 < c2, "AE5 {c5} !< AE2 {c2}");
+    }
+
+    #[test]
+    fn gemv_is_bandwidth_bound() {
+        // At AE5, %peak must sit well below GEMM's (the paper's Level-2
+        // story): bounded by the GM stream of A.
+        let st = run_gemv(80, AeLevel::Ae5);
+        let fpc = st.fpc();
+        let pct = fpc / AeLevel::Ae5.peak_fpc();
+        assert!(pct < 0.6, "GEMV unrealistically compute-efficient: {pct:.2}");
+        assert!(pct > 0.1, "GEMV too slow: {pct:.3} of peak");
+    }
+
+    #[test]
+    fn flops_convention() {
+        assert_eq!(std_flops(10), 200);
+    }
+}

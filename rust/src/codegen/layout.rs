@@ -1,0 +1,200 @@
+//! GM data layout for PE kernels and marshalling helpers.
+//!
+//! The PE's Block Data Load/Store and DOT4 instructions want contiguous
+//! operand windows, so the coordinator stores **A row-major** (rows feed the
+//! DOT4 `ra` window), **B column-major** (columns feed `rb`), and **C
+//! column-major** (C columns are stored back with wide moves). Vectors are
+//! contiguous. This marshalling is part of the co-design: the paper likewise
+//! stages operands in the Local Memory so that accesses are streams.
+
+use crate::util::Mat;
+
+/// Word offsets of the GEMM operands in PE global memory, for the general
+/// rectangular problem C (m×p) ← A (m×k) · B (k×p) + C.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmLayout {
+    /// Output rows (multiple of 4). For the square case m = p = k = n.
+    pub m: usize,
+    /// Output columns (multiple of 4).
+    pub p: usize,
+    /// Inner dimension (multiple of 4).
+    pub k: usize,
+    /// A (row-major) base word address.
+    pub base_a: usize,
+    /// B (column-major) base word address.
+    pub base_b: usize,
+    /// C (column-major) base word address.
+    pub base_c: usize,
+}
+
+impl GemmLayout {
+    /// Square packing: A | B | C contiguous from word 0.
+    pub fn packed(n: usize) -> Self {
+        Self::rect(n, n, n)
+    }
+
+    /// Rectangular packing: A (m×k) | B (k×p) | C (m×p).
+    pub fn rect(m: usize, p: usize, k: usize) -> Self {
+        assert!(
+            m % 4 == 0 && p % 4 == 0 && k % 4 == 0,
+            "PE kernels need dims % 4 == 0 (pad first), got {m}x{p}x{k}"
+        );
+        Self { m, p, k, base_a: 0, base_b: m * k, base_c: m * k + k * p }
+    }
+
+    /// Back-compat accessor for the square case.
+    pub fn n(&self) -> usize {
+        assert!(self.m == self.p && self.p == self.k, "not square");
+        self.m
+    }
+
+    /// Total GM words required.
+    pub fn gm_words(&self) -> usize {
+        self.base_c + self.m * self.p
+    }
+
+    /// GM word address of A(i, kk) — row-major, stride k.
+    pub fn a(&self, i: usize, kk: usize) -> usize {
+        self.base_a + i * self.k + kk
+    }
+
+    /// GM word address of B(kk, j) — column-major, stride k.
+    pub fn b(&self, kk: usize, j: usize) -> usize {
+        self.base_b + j * self.k + kk
+    }
+
+    /// GM word address of C(i, j) — column-major, stride m.
+    pub fn c(&self, i: usize, j: usize) -> usize {
+        self.base_c + j * self.m + i
+    }
+
+    /// Marshal host matrices into a GM image (zero-padding up to the layout
+    /// dimensions if the inputs are smaller).
+    pub fn pack(&self, a: &Mat, b: &Mat, c: &Mat) -> Vec<f64> {
+        assert!(a.rows() <= self.m && a.cols() <= self.k, "A larger than layout");
+        assert!(b.rows() <= self.k && b.cols() <= self.p, "B larger than layout");
+        assert!(c.rows() <= self.m && c.cols() <= self.p, "C larger than layout");
+        let mut gm = vec![0.0; self.gm_words()];
+        for i in 0..a.rows() {
+            for k in 0..a.cols() {
+                gm[self.a(i, k)] = a[(i, k)];
+            }
+        }
+        for k in 0..b.rows() {
+            for j in 0..b.cols() {
+                gm[self.b(k, j)] = b[(k, j)];
+            }
+        }
+        for i in 0..c.rows() {
+            for j in 0..c.cols() {
+                gm[self.c(i, j)] = c[(i, j)];
+            }
+        }
+        gm
+    }
+
+    /// Extract the (possibly padded) C result back into an (r × s) matrix.
+    pub fn unpack_c(&self, gm: &[f64], r: usize, s: usize) -> Mat {
+        let mut c = Mat::zeros(r, s);
+        for i in 0..r {
+            for j in 0..s {
+                c[(i, j)] = gm[self.c(i, j)];
+            }
+        }
+        c
+    }
+}
+
+/// Layout for GEMV / Level-1 kernels: A row-major, x, y contiguous.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VecLayout {
+    pub n: usize,
+    pub base_a: usize,
+    pub base_x: usize,
+    pub base_y: usize,
+}
+
+impl VecLayout {
+    /// Packing for GEMV: A (n×n row-major) | x | y.
+    pub fn gemv(n: usize) -> Self {
+        assert!(n % 4 == 0, "PE kernels need n % 4 == 0, got {n}");
+        Self { n, base_a: 0, base_x: n * n, base_y: n * n + n }
+    }
+
+    /// Packing for Level-1 (no matrix): x | y.
+    pub fn level1(n: usize) -> Self {
+        assert!(n % 4 == 0, "PE kernels need n % 4 == 0, got {n}");
+        Self { n, base_a: 0, base_x: 0, base_y: n }
+    }
+
+    pub fn gm_words(&self) -> usize {
+        self.base_y + self.n + 4 // +4 scratch words for scalar results
+    }
+
+    /// GM address of A(i, k), row-major.
+    pub fn a(&self, i: usize, k: usize) -> usize {
+        self.base_a + i * self.n + k
+    }
+
+    /// Scratch word for scalar outputs (ddot/dnrm2 results).
+    pub fn scratch(&self) -> usize {
+        self.base_y + self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packed_layout_addresses() {
+        let l = GemmLayout::packed(8);
+        assert_eq!(l.a(0, 0), 0);
+        assert_eq!(l.a(1, 0), 8); // row-major: next row jumps n
+        assert_eq!(l.b(0, 1), 64 + 8); // col-major: next col jumps n
+        assert_eq!(l.c(3, 2), 128 + 2 * 8 + 3);
+        assert_eq!(l.gm_words(), 3 * 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "% 4 == 0")]
+    fn rejects_unpadded() {
+        GemmLayout::packed(10);
+    }
+
+    #[test]
+    fn pack_unpack_round_trip() {
+        let a = Mat::random(8, 8, 1);
+        let b = Mat::random(8, 8, 2);
+        let c = Mat::random(8, 8, 3);
+        let l = GemmLayout::packed(8);
+        let gm = l.pack(&a, &b, &c);
+        assert_eq!(gm[l.a(3, 5)], a[(3, 5)]);
+        assert_eq!(gm[l.b(6, 1)], b[(6, 1)]);
+        let c2 = l.unpack_c(&gm, 8, 8);
+        assert_eq!(c2, c);
+    }
+
+    #[test]
+    fn pack_pads_smaller_inputs() {
+        let a = Mat::random(6, 6, 1);
+        let b = Mat::random(6, 6, 2);
+        let c = Mat::zeros(6, 6);
+        let l = GemmLayout::packed(8);
+        let gm = l.pack(&a, &b, &c);
+        assert_eq!(gm[l.a(7, 7)], 0.0); // padded region
+        assert_eq!(gm[l.a(5, 5)], a[(5, 5)]);
+    }
+
+    #[test]
+    fn vec_layouts() {
+        let l = VecLayout::gemv(12);
+        assert_eq!(l.base_x, 144);
+        assert_eq!(l.base_y, 156);
+        assert_eq!(l.a(2, 3), 2 * 12 + 3);
+        let l1 = VecLayout::level1(16);
+        assert_eq!(l1.base_x, 0);
+        assert_eq!(l1.base_y, 16);
+        assert!(l1.scratch() >= 32);
+    }
+}

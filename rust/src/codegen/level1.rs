@@ -1,0 +1,310 @@
+//! Level-1 BLAS code generation: ddot, daxpy, dnrm2 (§4.1, Fig 3 DAGs).
+//!
+//! Level-1 routines move O(n) data for O(n) work, so they are GM-port bound
+//! on the PE exactly as they are memory bound on CPUs/GPUs. The co-designed
+//! kernels stream x/y through LM in 16-word groups (one group ahead at AE5,
+//! the fig-10 overlap), reduce with DOT4 into four rotating partial
+//! accumulators (the DAG of fig 3: parallel multiplies, then an addition
+//! tree), and pay one final reduction tree + (for dnrm2) a square root.
+//!
+//! Register map: partial accumulators r0–r3, α r4, x segment r16–r19,
+//! y segment r20–r23, scratch r48+.
+
+use super::layout::VecLayout;
+use crate::pe::{AeLevel, Instr, Program};
+
+const RACC: u8 = 0;
+const RALPHA: u8 = 4;
+const RX: u8 = 16;
+const RY: u8 = 20;
+
+/// Elements streamed per LM group (32 amortizes the per-block handshake
+/// over the GM stream while two groups still fit comfortably in LM).
+const GROUP: usize = 32;
+
+/// ddot: scratch ← xᵀy.
+pub fn gen_ddot(n: usize, ae: AeLevel, l: &VecLayout) -> Program {
+    gen_reduction(n, ae, l, false)
+}
+
+/// dnrm2: scratch ← √(xᵀx).
+pub fn gen_dnrm2(n: usize, ae: AeLevel, l: &VecLayout) -> Program {
+    gen_reduction(n, ae, l, true)
+}
+
+/// Shared generator for the two reduction routines (the paper notes their
+/// DAGs are identical up to the final square root, §4.1).
+fn gen_reduction(n: usize, ae: AeLevel, l: &VecLayout, nrm2: bool) -> Program {
+    assert_eq!(l.n, n);
+    assert!(n % 4 == 0 && n >= 4, "n must be a positive multiple of 4, got {n}");
+    let mut p = Program::new();
+    // Partial accumulators: the DOT4 RDP is 15 stages deep, so the dot path
+    // rotates 8 partials to keep consecutive DOTs on one accumulator more
+    // than a pipeline depth apart; the mac path needs only 4.
+    let naccs: u8 = if ae.has_dot() { 8 } else { 4 };
+    for r in 0..naccs {
+        p.push(Instr::Li { rd: RACC + r, val: 0.0 });
+    }
+
+    if ae == AeLevel::Ae0 {
+        // Direct GM streaming, scalar mac chains rotating over r0–r3;
+        // the loop body covers 4 elements, with a sequencer stall at the
+        // back-edge.
+        for k in 0..n {
+            p.push(Instr::Ld { rd: RX, gm: (l.base_x + k) as u32 });
+            if nrm2 {
+                p.push(Instr::Fmac { rd: RACC + (k % 4) as u8, ra: RX, rb: RX });
+            } else {
+                p.push(Instr::Ld { rd: RY, gm: (l.base_y + k) as u32 });
+                p.push(Instr::Fmac { rd: RACC + (k % 4) as u8, ra: RX, rb: RY });
+            }
+            if k % 4 == 3 {
+                p.push(Instr::Barrier);
+            }
+        }
+    } else {
+        // LM streaming in GROUP-element chunks; at AE5 the fill for group
+        // g+1 is issued before the compute of group g (fig 10).
+        let lm_x = 0u32;
+        let lm_y = n as u32;
+        let groups = n.div_ceil(GROUP);
+        let fill = |g: usize, p: &mut Program| {
+            if g >= groups {
+                return;
+            }
+            let off = g * GROUP;
+            let len = GROUP.min(n - off) as u32;
+            p.push(Instr::BlkLd { lm: lm_x + off as u32, gm: (l.base_x + off) as u32, len });
+            if !nrm2 {
+                p.push(Instr::BlkLd { lm: lm_y + off as u32, gm: (l.base_y + off) as u32, len });
+            }
+        };
+        let prefetch = ae.has_prefetch();
+        fill(0, &mut p);
+        for g in 0..groups {
+            if prefetch {
+                fill(g + 1, &mut p);
+            }
+            let off = g * GROUP;
+            let len = GROUP.min(n - off);
+            for c in 0..len / 4 {
+                let lmo = (off + 4 * c) as u32;
+                if ae.has_wide_path() {
+                    p.push(Instr::LmLd4 { rd: RX, lm: lm_x + lmo });
+                    if !nrm2 {
+                        p.push(Instr::LmLd4 { rd: RY, lm: lm_y + lmo });
+                    }
+                } else {
+                    for k in 0..4u8 {
+                        p.push(Instr::LmLd { rd: RX + k, lm: lm_x + lmo + k as u32 });
+                    }
+                    if !nrm2 {
+                        for k in 0..4u8 {
+                            p.push(Instr::LmLd { rd: RY + k, lm: lm_y + lmo + k as u32 });
+                        }
+                    }
+                }
+                let rb = if nrm2 { RX } else { RY };
+                if ae.has_dot() {
+                    // Rotate accumulators so consecutive DOTs are independent.
+                    let rd = RACC + ((off / 4 + c) % naccs as usize) as u8;
+                    p.push(Instr::Dot { rd, ra: RX, rb, n: 4, acc: true });
+                } else {
+                    for k in 0..4u8 {
+                        p.push(Instr::Fmac { rd: RACC + k, ra: RX + k, rb: rb + k });
+                    }
+                }
+            }
+            if !prefetch {
+                fill(g + 1, &mut p);
+                p.push(Instr::Barrier);
+            }
+        }
+    }
+
+    // Reduction tree over the partials (fig 3's addition levels).
+    let mut stride = 1u8;
+    while stride < naccs {
+        let mut r = 0u8;
+        while r + stride < naccs {
+            p.push(Instr::Fadd { rd: RACC + r, ra: RACC + r, rb: RACC + r + stride });
+            r += 2 * stride;
+        }
+        stride *= 2;
+    }
+    if nrm2 {
+        p.push(Instr::Fsqrt { rd: RACC, ra: RACC });
+    }
+    p.push(Instr::St { rs: RACC, gm: l.scratch() as u32 });
+    p.push(Instr::Halt);
+    debug_assert!(p.validate().is_ok());
+    p
+}
+
+/// daxpy: y ← αx + y.
+pub fn gen_daxpy(n: usize, alpha: f64, ae: AeLevel, l: &VecLayout) -> Program {
+    assert_eq!(l.n, n);
+    assert!(n % 4 == 0 && n >= 4, "n must be a positive multiple of 4, got {n}");
+    let mut p = Program::new();
+    p.push(Instr::Li { rd: RALPHA, val: alpha });
+
+    if ae == AeLevel::Ae0 {
+        for k in 0..n {
+            p.push(Instr::Ld { rd: RX, gm: (l.base_x + k) as u32 });
+            p.push(Instr::Ld { rd: RY + (k % 4) as u8, gm: (l.base_y + k) as u32 });
+            p.push(Instr::Fmac { rd: RY + (k % 4) as u8, ra: RX, rb: RALPHA });
+            p.push(Instr::St { rs: RY + (k % 4) as u8, gm: (l.base_y + k) as u32 });
+            if k % 4 == 3 {
+                p.push(Instr::Barrier);
+            }
+        }
+    } else {
+        let lm_x = 0u32;
+        let lm_y = n as u32;
+        let groups = n.div_ceil(GROUP);
+        let fill = |g: usize, p: &mut Program| {
+            if g >= groups {
+                return;
+            }
+            let off = g * GROUP;
+            let len = GROUP.min(n - off) as u32;
+            p.push(Instr::BlkLd { lm: lm_x + off as u32, gm: (l.base_x + off) as u32, len });
+            p.push(Instr::BlkLd { lm: lm_y + off as u32, gm: (l.base_y + off) as u32, len });
+        };
+        let prefetch = ae.has_prefetch();
+        fill(0, &mut p);
+        for g in 0..groups {
+            if prefetch {
+                fill(g + 1, &mut p);
+            }
+            let off = g * GROUP;
+            let len = GROUP.min(n - off);
+            for c in 0..len / 4 {
+                let lmo = (off + 4 * c) as u32;
+                if ae.has_wide_path() {
+                    p.push(Instr::LmLd4 { rd: RX, lm: lm_x + lmo });
+                    p.push(Instr::LmLd4 { rd: RY, lm: lm_y + lmo });
+                } else {
+                    for k in 0..4u8 {
+                        p.push(Instr::LmLd { rd: RX + k, lm: lm_x + lmo + k as u32 });
+                        p.push(Instr::LmLd { rd: RY + k, lm: lm_y + lmo + k as u32 });
+                    }
+                }
+                for k in 0..4u8 {
+                    p.push(Instr::Fmac { rd: RY + k, ra: RX + k, rb: RALPHA });
+                }
+                if ae.has_wide_path() {
+                    p.push(Instr::LmSt4 { rs: RY, lm: lm_y + lmo });
+                } else {
+                    for k in 0..4u8 {
+                        p.push(Instr::LmSt { rs: RY + k, lm: lm_y + lmo + k as u32 });
+                    }
+                }
+            }
+            // Write the updated group back to GM.
+            let blen = len as u32;
+            p.push(Instr::BlkSt { lm: lm_y + off as u32, gm: (l.base_y + off) as u32, len: blen });
+            if !prefetch {
+                fill(g + 1, &mut p);
+                p.push(Instr::Barrier);
+            }
+        }
+    }
+    p.push(Instr::Halt);
+    debug_assert!(p.validate().is_ok());
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::{Pe, PeConfig, PeStats};
+    use crate::util::XorShift64;
+
+    fn setup(n: usize, ae: AeLevel) -> (Pe, VecLayout, Vec<f64>, Vec<f64>) {
+        let l = VecLayout::level1(n);
+        let mut rng = XorShift64::new(n as u64 + 1);
+        let x = rng.vec(n);
+        let y = rng.vec(n);
+        let mut pe = Pe::new(PeConfig::paper(ae), l.gm_words());
+        pe.write_gm(l.base_x, &x);
+        pe.write_gm(l.base_y, &y);
+        (pe, l, x, y)
+    }
+
+    fn check_ddot(n: usize, ae: AeLevel) -> PeStats {
+        let (mut pe, l, x, y) = setup(n, ae);
+        let st = pe.run(&gen_ddot(n, ae, &l));
+        let want: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let got = pe.read_gm(l.scratch(), 1)[0];
+        assert!((got - want).abs() < 1e-12 * want.abs().max(1.0), "{got} vs {want}");
+        st
+    }
+
+    #[test]
+    fn ddot_all_levels() {
+        for ae in AeLevel::ALL {
+            check_ddot(32, ae);
+        }
+    }
+
+    #[test]
+    fn ddot_odd_group_sizes() {
+        // n not a multiple of GROUP exercises the tail-group path.
+        check_ddot(20, AeLevel::Ae5);
+        check_ddot(36, AeLevel::Ae3);
+        check_ddot(4, AeLevel::Ae5);
+    }
+
+    #[test]
+    fn dnrm2_matches_host() {
+        for ae in [AeLevel::Ae0, AeLevel::Ae2, AeLevel::Ae5] {
+            let n = 40;
+            let (mut pe, l, x, _) = setup(n, ae);
+            pe.run(&gen_dnrm2(n, ae, &l));
+            let want = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+            let got = pe.read_gm(l.scratch(), 1)[0];
+            assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn daxpy_matches_host() {
+        for ae in AeLevel::ALL {
+            let n = 32;
+            let alpha = 1.75;
+            let (mut pe, l, x, y) = setup(n, ae);
+            pe.run(&gen_daxpy(n, alpha, ae, &l));
+            let got = pe.read_gm(l.base_y, n).to_vec();
+            for k in 0..n {
+                let want = alpha * x[k] + y[k];
+                assert!((got[k] - want).abs() < 1e-12, "k={k}: {} vs {want}", got[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn ddot_improves_with_enhancements() {
+        let c0 = check_ddot(64, AeLevel::Ae0).cycles;
+        let c5 = check_ddot(64, AeLevel::Ae5).cycles;
+        assert!(c5 < c0, "AE5 ddot {c5} !< AE0 {c0}");
+    }
+
+    #[test]
+    fn ddot_is_memory_bound() {
+        // The paper's abstract: DDOT reaches ~20% of PE peak — it must stay
+        // far below GEMM's efficiency even at AE5.
+        let st = check_ddot(512, AeLevel::Ae5);
+        let pct = st.fpc() / AeLevel::Ae5.peak_fpc();
+        assert!(pct < 0.45, "ddot unrealistically efficient: {pct:.2}");
+    }
+
+    #[test]
+    fn dnrm2_uses_sqrt_unit() {
+        let n = 16;
+        let (mut pe, l, _, _) = setup(n, AeLevel::Ae5);
+        let st_n = pe.run(&gen_dnrm2(n, AeLevel::Ae5, &l));
+        // 2n mac flops + 7 reduction adds over 8 partials + the sqrt.
+        assert_eq!(st_n.flops, 2 * n as u64 + 7 + 1);
+    }
+}

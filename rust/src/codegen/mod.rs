@@ -1,0 +1,26 @@
+//! Code generators: BLAS routines compiled to PE instruction streams.
+//!
+//! This layer is the *algorithm* half of the paper's algorithm-architecture
+//! co-design: the same routine is emitted differently per enhancement level
+//! (scalar macs vs DOT4, scalar vs block loads, with/without pre-fetch —
+//! algorithms 1, 3 and 4 of the paper), and the PE simulator measures the
+//! resulting latency.
+//!
+//! Data layout convention (marshalled by the coordinator, see
+//! [`layout`]): **A row-major, B column-major, C/vectors column-major**
+//! in PE global memory, so that DOT4 operand windows and Block Data
+//! Load/Store transfers are contiguous.
+
+pub mod gemm;
+pub mod gemm_any;
+pub mod gemv;
+pub mod layout;
+pub mod level1;
+pub mod optimizer;
+
+pub use gemm::{gen_gemm, gen_gemm_rect};
+pub use gemm_any::gen_gemm_any;
+pub use optimizer::{optimize, OptReport};
+pub use gemv::gen_gemv;
+pub use layout::GemmLayout;
+pub use level1::{gen_daxpy, gen_ddot, gen_dnrm2};

@@ -1,0 +1,354 @@
+//! L3 coordinator — the REDEFINE leader.
+//!
+//! Owns the request loop of the system: it partitions BLAS calls into
+//! 4×4-register-blocked tile jobs, dispatches them across the simulated
+//! tile array (one host thread per tile — the PEs are independent, so the
+//! cycle-accurate simulations parallelize perfectly), schedules the operand
+//! streams over the NoC model, and merges results.
+//!
+//! Co-simulation split:
+//! * **timing/energy** — always from the PE + NoC simulators;
+//! * **values** — from the AOT-compiled XLA artifacts via [`crate::runtime`]
+//!   when they exist for the request shape (the production path: Python
+//!   never runs here, only HLO text compiled at build time), with the PE
+//!   simulator's own functional execution as the fallback and as a
+//!   cross-check (`verify`).
+
+pub mod request;
+
+pub use request::{Request, Response};
+
+use crate::codegen::{gen_gemm_rect, GemmLayout};
+use crate::energy::PowerModel;
+use crate::metrics::{measure_level1, Measurement, Routine};
+use crate::noc::{Coord, LinkTraffic, RouterConfig, Topology};
+use crate::pe::{AeLevel, Pe, PeConfig, PeStats};
+use crate::runtime::Runtime;
+use crate::util::{round_up, Mat};
+use std::sync::mpsc;
+use std::thread;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// PE enhancement level for every tile.
+    pub ae: AeLevel,
+    /// Tile-array order b (b×b compute tiles + memory column).
+    pub b: usize,
+    /// Artifact directory for the XLA value path.
+    pub artifact_dir: String,
+    /// Cross-check XLA values against the PE simulator's functional output.
+    pub verify: bool,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self { ae: AeLevel::Ae5, b: 2, artifact_dir: "artifacts".into(), verify: true }
+    }
+}
+
+/// Where the returned values came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ValueSource {
+    /// AOT-compiled XLA executable (PJRT).
+    Xla,
+    /// PE simulator functional execution.
+    PeSim,
+}
+
+/// Result of a coordinated DGEMM.
+#[derive(Debug)]
+pub struct DgemmResult {
+    pub c: Mat,
+    pub source: ValueSource,
+    /// Parallel makespan over the tile array, in PE cycles.
+    pub makespan: u64,
+    /// Aggregate PE statistics (summed over tiles).
+    pub pe_stats: PeStats,
+    /// Per-tile (coord, ready, compute, finish).
+    pub tiles: Vec<(Coord, u64, u64, u64)>,
+    /// Energy estimate over all tiles, joules.
+    pub energy_j: f64,
+}
+
+impl DgemmResult {
+    /// Achieved Gflops at the PE clock (standard 2n³ convention).
+    pub fn gflops(&self, n: usize, cfg: &PeConfig) -> f64 {
+        2.0 * (n as f64).powi(3) / (self.makespan as f64 * cfg.cycle_ns() * 1e-9) / 1e9
+    }
+}
+
+/// The coordinator.
+pub struct Coordinator {
+    pub cfg: CoordinatorConfig,
+    runtime: Option<Runtime>,
+}
+
+impl Coordinator {
+    /// Build a coordinator; the XLA runtime is attached if the artifact
+    /// directory exists and PJRT initializes (otherwise values fall back to
+    /// the PE simulator and a warning is recorded).
+    pub fn new(cfg: CoordinatorConfig) -> Self {
+        let runtime = if std::path::Path::new(&cfg.artifact_dir).is_dir() {
+            Runtime::new(&cfg.artifact_dir).ok()
+        } else {
+            None
+        };
+        Self { cfg, runtime }
+    }
+
+    /// True if the XLA value path is live.
+    pub fn has_xla(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Artifacts visible to the runtime.
+    pub fn artifacts(&self) -> Vec<String> {
+        self.runtime
+            .as_ref()
+            .map(|r| r.available().iter().map(|k| k.file_name()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Coordinated DGEMM: C ← A·B + C across the tile array.
+    ///
+    /// The problem is zero-padded to a multiple of 4b so each tile gets a
+    /// 4-aligned block; padding cost is simulated (as it would be burned on
+    /// the real fabric).
+    pub fn dgemm(&mut self, a: &Mat, b: &Mat, c: &Mat) -> DgemmResult {
+        let n = a.rows();
+        assert!(a.cols() == n && b.rows() == n && b.cols() == n, "square DGEMM only");
+        assert!(c.rows() == n && c.cols() == n);
+        let bb = self.cfg.b;
+        let ae = self.cfg.ae;
+        let np = round_up(n, 4 * bb);
+        let (ap, bp, cp) = (a.padded(np, np), b.padded(np, np), c.padded(np, np));
+        let m = np / bb;
+
+        // 1) NoC schedule: operand streams from the memory column
+        //    (deterministic, sequential — cheap).
+        let topo = Topology::new(bb);
+        let rcfg = RouterConfig::default();
+        let mut links = LinkTraffic::new();
+        let mut ready = vec![0u64; bb * bb];
+        for bi in 0..bb {
+            for bj in 0..bb {
+                let coord = Coord::new(bi, bj);
+                let mem_a = topo.memory_for_row(bi);
+                let mem_b = topo.memory_for_row(bj);
+                let (_, ta) = links.transfer(&topo, &rcfg, mem_a, coord, (m * np) as u64, 0);
+                let (_, tb) = links.transfer(&topo, &rcfg, mem_b, coord, (np * m) as u64, 0);
+                let (_, tc) = links.transfer(&topo, &rcfg, mem_a, coord, (m * m) as u64, 0);
+                ready[bi * bb + bj] = ta.max(tb).max(tc);
+            }
+        }
+
+        // 2) Tile kernels in parallel: one host thread per tile (the
+        //    leader/worker split — PE simulations are independent).
+        let (tx, rx) = mpssc_chan();
+        thread::scope(|s| {
+            for bi in 0..bb {
+                for bj in 0..bb {
+                    let tx = tx.clone();
+                    let a_blk = ap.block(bi * m, 0, m, np);
+                    let b_blk = bp.block(0, bj * m, np, m);
+                    let c_blk = cp.block(bi * m, bj * m, m, m);
+                    s.spawn(move || {
+                        let layout = GemmLayout::rect(m, m, np);
+                        let prog = gen_gemm_rect(m, m, np, ae, &layout);
+                        let mut pe = Pe::new(PeConfig::paper(ae), layout.gm_words());
+                        pe.write_gm(0, &layout.pack(&a_blk, &b_blk, &c_blk));
+                        let stats = pe.run(&prog);
+                        let out = layout.unpack_c(&pe.gm, m, m);
+                        tx.send((bi, bj, out, stats)).expect("leader hung up");
+                    });
+                }
+            }
+            drop(tx);
+        });
+
+        // 3) Merge: assemble C, fold stats, schedule write-backs.
+        let mut cpad = cp.clone();
+        let mut agg = PeStats::default();
+        let mut tiles = Vec::with_capacity(bb * bb);
+        let mut makespan = 0u64;
+        let mut energy = 0.0;
+        let power = PowerModel::paper();
+        let pe_cfg = PeConfig::paper(ae);
+        for (bi, bj, out, stats) in rx {
+            cpad.set_block(bi * m, bj * m, &out);
+            let coord = Coord::new(bi, bj);
+            let r = ready[bi * bb + bj];
+            let (_, fin) = links.transfer(
+                &topo,
+                &rcfg,
+                coord,
+                topo.memory_for_row(bi),
+                (m * m) as u64,
+                r + stats.cycles,
+            );
+            makespan = makespan.max(fin);
+            energy += power.energy_joules(ae, &pe_cfg, &stats);
+            tiles.push((coord, r, stats.cycles, fin));
+            fold_stats(&mut agg, &stats);
+        }
+        tiles.sort_by_key(|t| t.0);
+        agg.cycles = makespan;
+        let sim_c = cpad.block(0, 0, n, n);
+
+        // 4) Values: prefer the XLA artifact for this shape.
+        let (c_out, source) = match self.runtime.as_mut() {
+            Some(rt) if rt.has("gemm", n) => match rt.gemm(a, b, c) {
+                Ok(xc) => {
+                    if self.cfg.verify {
+                        let err = crate::util::rel_fro_error(xc.as_slice(), sim_c.as_slice());
+                        assert!(
+                            err < 1e-10,
+                            "XLA and PE-sim DGEMM disagree: rel err {err}"
+                        );
+                    }
+                    (xc, ValueSource::Xla)
+                }
+                Err(_) => (sim_c, ValueSource::PeSim),
+            },
+            _ => (sim_c, ValueSource::PeSim),
+        };
+
+        DgemmResult { c: c_out, source, makespan, pe_stats: agg, tiles, energy_j: energy }
+    }
+
+    /// Coordinated DGEMV on a single PE (Level-2 is not tiled in the paper;
+    /// the PE realization is the §5 result). Values via XLA when available.
+    pub fn dgemv(&mut self, a: &Mat, x: &[f64], y: &[f64]) -> (Vec<f64>, Measurement, ValueSource) {
+        let n = a.rows();
+        let np = round_up(n, 4);
+        let meas = crate::metrics::measure_gemv(np, self.cfg.ae);
+        match self.runtime.as_mut() {
+            Some(rt) if rt.has("gemv", n) => {
+                if let Ok(v) = rt.gemv(a, x, y) {
+                    return (v, meas, ValueSource::Xla);
+                }
+                (crate::blas::level2::dgemv_ref(a, x, y), meas, ValueSource::PeSim)
+            }
+            _ => (crate::blas::level2::dgemv_ref(a, x, y), meas, ValueSource::PeSim),
+        }
+    }
+
+    /// Coordinated DDOT (single PE).
+    pub fn ddot(&mut self, x: &[f64], y: &[f64]) -> (f64, Measurement, ValueSource) {
+        let n = x.len();
+        let np = round_up(n.max(4), 4);
+        let meas = measure_level1(Routine::Ddot, np, self.cfg.ae);
+        match self.runtime.as_mut() {
+            Some(rt) if rt.has("dot", n) => {
+                if let Ok(v) = rt.dot(x, y) {
+                    return (v, meas, ValueSource::Xla);
+                }
+                (crate::blas::level1::ddot(x, y), meas, ValueSource::PeSim)
+            }
+            _ => (crate::blas::level1::ddot(x, y), meas, ValueSource::PeSim),
+        }
+    }
+}
+
+/// Sum PE statistics across tiles (cycles handled separately as makespan).
+fn fold_stats(agg: &mut PeStats, s: &PeStats) {
+    agg.instructions += s.instructions;
+    agg.flops += s.flops;
+    agg.dot_ops += s.dot_ops;
+    agg.scalar_fu_ops += s.scalar_fu_ops;
+    agg.gm_words += s.gm_words;
+    agg.gm_requests += s.gm_requests;
+    agg.lm_words += s.lm_words;
+    agg.rf_accesses += s.rf_accesses;
+    agg.stall_raw += s.stall_raw;
+    agg.stall_waw += s.stall_waw;
+    agg.stall_fu += s.stall_fu;
+    agg.stall_lsq += s.stall_lsq;
+    agg.stall_mem_window += s.stall_mem_window;
+    agg.gm_busy_cycles += s.gm_busy_cycles;
+    agg.lm_busy_cycles += s.lm_busy_cycles;
+}
+
+/// std::sync::mpsc channel with a short alias (threads send tile results).
+#[allow(clippy::type_complexity)]
+fn mpssc_chan() -> (
+    mpsc::Sender<(usize, usize, Mat, PeStats)>,
+    mpsc::Receiver<(usize, usize, Mat, PeStats)>,
+) {
+    mpsc::channel()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn coord(b: usize) -> Coordinator {
+        Coordinator::new(CoordinatorConfig {
+            ae: AeLevel::Ae5,
+            b,
+            artifact_dir: "/nonexistent".into(),
+            verify: true,
+        })
+    }
+
+    #[test]
+    fn dgemm_values_match_host_reference() {
+        let n = 24;
+        let a = Mat::random(n, n, 71);
+        let b = Mat::random(n, n, 72);
+        let c = Mat::random(n, n, 73);
+        let mut co = coord(2);
+        let r = co.dgemm(&a, &b, &c);
+        assert_eq!(r.source, ValueSource::PeSim);
+        let want = crate::blas::level3::dgemm_ref(&a, &b, &c);
+        let err = crate::util::rel_fro_error(r.c.as_slice(), want.as_slice());
+        assert!(err < 1e-12, "coordinator DGEMM wrong: {err}");
+        assert_eq!(r.tiles.len(), 4);
+        assert!(r.makespan > 0);
+        assert!(r.energy_j > 0.0);
+    }
+
+    #[test]
+    fn dgemm_pads_odd_sizes() {
+        let n = 10; // not a multiple of 4b = 8 → padded to 16
+        let a = Mat::random(n, n, 74);
+        let b = Mat::random(n, n, 75);
+        let c = Mat::zeros(n, n);
+        let mut co = coord(2);
+        let r = co.dgemm(&a, &b, &c);
+        let want = crate::blas::level3::dgemm_ref(&a, &b, &c);
+        let err = crate::util::rel_fro_error(r.c.as_slice(), want.as_slice());
+        assert!(err < 1e-12, "padded DGEMM wrong: {err}");
+    }
+
+    #[test]
+    fn bigger_array_is_faster() {
+        let n = 48;
+        let a = Mat::random(n, n, 76);
+        let b = Mat::random(n, n, 77);
+        let c = Mat::zeros(n, n);
+        let m1 = coord(1).dgemm(&a, &b, &c).makespan;
+        let m2 = coord(2).dgemm(&a, &b, &c).makespan;
+        let m3 = coord(3).dgemm(&a, &b, &c).makespan;
+        assert!(m2 < m1, "2x2 ({m2}) not faster than 1x1 ({m1})");
+        assert!(m3 < m2, "3x3 ({m3}) not faster than 2x2 ({m2})");
+    }
+
+    #[test]
+    fn dgemv_and_ddot_paths() {
+        let n = 16;
+        let a = Mat::random(n, n, 78);
+        let mut rng = crate::util::XorShift64::new(79);
+        let x = rng.vec(n);
+        let y = rng.vec(n);
+        let mut co = coord(2);
+        let (v, meas, src) = co.dgemv(&a, &x, &y);
+        assert_eq!(src, ValueSource::PeSim);
+        assert!(meas.latency() > 0);
+        crate::util::assert_allclose(&v, &crate::blas::level2::dgemv_ref(&a, &x, &y), 1e-12);
+        let (d, m2, _) = co.ddot(&x, &y);
+        assert!((d - crate::blas::level1::ddot(&x, &y)).abs() < 1e-12);
+        assert!(m2.latency() > 0);
+    }
+}

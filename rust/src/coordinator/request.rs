@@ -1,0 +1,188 @@
+//! Request/response types and the coordinator's serve loop — the
+//! "request path" of the system. Requests are BLAS calls; responses carry
+//! values plus the simulated cost report. Everything here is pure Rust over
+//! AOT artifacts: Python is never on this path.
+
+use super::{Coordinator, ValueSource};
+use crate::util::{Mat, XorShift64};
+
+/// A BLAS request to the coordinator.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// C ← A·B + C.
+    Dgemm { a: Mat, b: Mat, c: Mat },
+    /// y ← A·x + y.
+    Dgemv { a: Mat, x: Vec<f64>, y: Vec<f64> },
+    /// xᵀ·y.
+    Ddot { x: Vec<f64>, y: Vec<f64> },
+    /// Synthetic request by shape only (workload generators).
+    RandomDgemm { n: usize, seed: u64 },
+}
+
+impl Request {
+    /// Human-readable request tag.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Request::Dgemm { .. } | Request::RandomDgemm { .. } => "dgemm",
+            Request::Dgemv { .. } => "dgemv",
+            Request::Ddot { .. } => "ddot",
+        }
+    }
+
+    /// Problem size n.
+    pub fn n(&self) -> usize {
+        match self {
+            Request::Dgemm { a, .. } => a.rows(),
+            Request::Dgemv { a, .. } => a.rows(),
+            Request::Ddot { x, .. } => x.len(),
+            Request::RandomDgemm { n, .. } => *n,
+        }
+    }
+}
+
+/// Response: scalar/vector/matrix value + cost accounting.
+#[derive(Debug)]
+pub struct Response {
+    pub op: &'static str,
+    pub n: usize,
+    pub source: ValueSource,
+    /// Simulated latency in PE cycles (makespan for tiled ops).
+    pub cycles: u64,
+    /// Simulated energy (joules) where modelled (tiled DGEMM).
+    pub energy_j: Option<f64>,
+    /// Result payloads (exactly one is set).
+    pub matrix: Option<Mat>,
+    pub vector: Option<Vec<f64>>,
+    pub scalar: Option<f64>,
+}
+
+impl Coordinator {
+    /// Serve one request.
+    pub fn serve_one(&mut self, req: Request) -> Response {
+        match req {
+            Request::Dgemm { a, b, c } => {
+                let n = a.rows();
+                let r = self.dgemm(&a, &b, &c);
+                Response {
+                    op: "dgemm",
+                    n,
+                    source: r.source,
+                    cycles: r.makespan,
+                    energy_j: Some(r.energy_j),
+                    matrix: Some(r.c),
+                    vector: None,
+                    scalar: None,
+                }
+            }
+            Request::RandomDgemm { n, seed } => {
+                let a = Mat::random(n, n, seed);
+                let b = Mat::random(n, n, seed ^ 0xBEEF);
+                let c = Mat::zeros(n, n);
+                self.serve_one(Request::Dgemm { a, b, c })
+            }
+            Request::Dgemv { a, x, y } => {
+                let n = a.rows();
+                let (v, meas, source) = self.dgemv(&a, &x, &y);
+                Response {
+                    op: "dgemv",
+                    n,
+                    source,
+                    cycles: meas.latency(),
+                    energy_j: None,
+                    matrix: None,
+                    vector: Some(v),
+                    scalar: None,
+                }
+            }
+            Request::Ddot { x, y } => {
+                let n = x.len();
+                let (d, meas, source) = self.ddot(&x, &y);
+                Response {
+                    op: "ddot",
+                    n,
+                    source,
+                    cycles: meas.latency(),
+                    energy_j: None,
+                    matrix: None,
+                    vector: None,
+                    scalar: Some(d),
+                }
+            }
+        }
+    }
+
+    /// Serve a batch of requests in order, returning all responses.
+    pub fn serve(&mut self, reqs: Vec<Request>) -> Vec<Response> {
+        reqs.into_iter().map(|r| self.serve_one(r)).collect()
+    }
+}
+
+/// Workload generator: a random mix of BLAS requests, the driver used by
+/// the end-to-end example and the throughput bench.
+pub fn random_workload(count: usize, max_n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = XorShift64::new(seed);
+    let mut reqs = Vec::with_capacity(count);
+    for i in 0..count {
+        let n = 8 + rng.below(max_n.saturating_sub(8).max(1));
+        match rng.below(3) {
+            0 => reqs.push(Request::RandomDgemm { n, seed: seed + i as u64 }),
+            1 => {
+                let a = Mat::random(n, n, seed + i as u64);
+                let x = rng.vec(n);
+                let y = rng.vec(n);
+                reqs.push(Request::Dgemv { a, x, y });
+            }
+            _ => {
+                let x = rng.vec(n);
+                let y = rng.vec(n);
+                reqs.push(Request::Ddot { x, y });
+            }
+        }
+    }
+    reqs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::pe::AeLevel;
+
+    fn coord() -> Coordinator {
+        Coordinator::new(CoordinatorConfig {
+            ae: AeLevel::Ae5,
+            b: 2,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+        })
+    }
+
+    #[test]
+    fn serves_mixed_workload() {
+        let reqs = random_workload(6, 24, 99);
+        assert_eq!(reqs.len(), 6);
+        let mut co = coord();
+        let resps = co.serve(reqs);
+        assert_eq!(resps.len(), 6);
+        for r in &resps {
+            assert!(r.cycles > 0, "{} has zero cycles", r.op);
+            let payloads =
+                r.matrix.is_some() as u8 + r.vector.is_some() as u8 + r.scalar.is_some() as u8;
+            assert_eq!(payloads, 1, "{} must carry exactly one payload", r.op);
+        }
+    }
+
+    #[test]
+    fn request_metadata() {
+        let r = Request::RandomDgemm { n: 32, seed: 1 };
+        assert_eq!(r.name(), "dgemm");
+        assert_eq!(r.n(), 32);
+    }
+
+    #[test]
+    fn ddot_request_value() {
+        let mut co = coord();
+        let resp = co.serve_one(Request::Ddot { x: vec![1.0, 2.0, 0.0, 0.0], y: vec![3.0, 4.0, 0.0, 0.0] });
+        assert_eq!(resp.scalar, Some(11.0));
+    }
+}

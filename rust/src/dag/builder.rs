@@ -1,0 +1,193 @@
+//! Generic DAG builder with the analyses of §4: level structure (what can
+//! execute in parallel), critical path, and op-kind counts.
+
+use std::collections::HashMap;
+
+/// Node identifier within a [`Dag`].
+pub type NodeId = usize;
+
+/// Operation kinds distinguished by the paper's DAG figures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Input value (matrix/vector element) — depth 0, not an operation.
+    Input,
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Sqrt,
+}
+
+impl OpKind {
+    /// Is this a floating-point operation (vs an input)?
+    pub fn is_op(self) -> bool {
+        !matches!(self, OpKind::Input)
+    }
+}
+
+/// A dependency DAG of scalar operations.
+#[derive(Debug, Clone, Default)]
+pub struct Dag {
+    kinds: Vec<OpKind>,
+    preds: Vec<Vec<NodeId>>,
+    labels: Vec<String>,
+}
+
+impl Dag {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an input node.
+    pub fn input(&mut self, label: impl Into<String>) -> NodeId {
+        self.push(OpKind::Input, &[], label.into())
+    }
+
+    /// Add an operation node depending on `preds`.
+    pub fn op(&mut self, kind: OpKind, preds: &[NodeId], label: impl Into<String>) -> NodeId {
+        assert!(kind.is_op(), "use input() for inputs");
+        assert!(!preds.is_empty(), "operation with no operands");
+        self.push(kind, preds, label.into())
+    }
+
+    fn push(&mut self, kind: OpKind, preds: &[NodeId], label: String) -> NodeId {
+        for &p in preds {
+            assert!(p < self.kinds.len(), "forward reference in DAG");
+        }
+        self.kinds.push(kind);
+        self.preds.push(preds.to_vec());
+        self.labels.push(label);
+        self.kinds.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.kinds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kinds.is_empty()
+    }
+
+    pub fn kind(&self, id: NodeId) -> OpKind {
+        self.kinds[id]
+    }
+
+    pub fn label(&self, id: NodeId) -> &str {
+        &self.labels[id]
+    }
+
+    /// Count of operation nodes of a kind.
+    pub fn count(&self, kind: OpKind) -> usize {
+        self.kinds.iter().filter(|&&k| k == kind).count()
+    }
+
+    /// Total operation nodes (excludes inputs).
+    pub fn total_ops(&self) -> usize {
+        self.kinds.iter().filter(|k| k.is_op()).count()
+    }
+
+    /// ASAP level of every node: inputs at level 0, an op at
+    /// 1 + max(level of operands). (Nodes are topologically ordered by
+    /// construction.)
+    pub fn levels(&self) -> Vec<usize> {
+        let mut lv = vec![0usize; self.len()];
+        for i in 0..self.len() {
+            if self.kinds[i].is_op() {
+                lv[i] = 1 + self.preds[i].iter().map(|&p| lv[p]).max().unwrap_or(0);
+            }
+        }
+        lv
+    }
+
+    /// Width of each operation level (level 1 upwards): `widths[0]` is the
+    /// number of ops that can start immediately — the paper's "all
+    /// multiplications can potentially be executed in parallel".
+    pub fn level_widths(&self) -> Vec<usize> {
+        let lv = self.levels();
+        let mut hist: HashMap<usize, usize> = HashMap::new();
+        for i in 0..self.len() {
+            if self.kinds[i].is_op() {
+                *hist.entry(lv[i]).or_insert(0) += 1;
+            }
+        }
+        let max = hist.keys().copied().max().unwrap_or(0);
+        (1..=max).map(|l| hist.get(&l).copied().unwrap_or(0)).collect()
+    }
+
+    /// Critical path length in operation levels.
+    pub fn critical_path(&self) -> usize {
+        self.levels().into_iter().max().unwrap_or(0)
+    }
+
+    /// Average parallelism: total ops / critical path.
+    pub fn avg_parallelism(&self) -> f64 {
+        self.total_ops() as f64 / self.critical_path().max(1) as f64
+    }
+
+    /// The §4 summary: (ops, critical path, max width, average parallelism).
+    pub fn profile(&self) -> DagProfile {
+        let widths = self.level_widths();
+        DagProfile {
+            ops: self.total_ops(),
+            critical_path: self.critical_path(),
+            max_width: widths.iter().copied().max().unwrap_or(0),
+            avg_parallelism: self.avg_parallelism(),
+        }
+    }
+}
+
+/// Summary statistics of a DAG (the numbers behind Figs 3–6).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DagProfile {
+    pub ops: usize,
+    pub critical_path: usize,
+    pub max_width: usize,
+    pub avg_parallelism: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diamond_levels() {
+        let mut d = Dag::new();
+        let a = d.input("a");
+        let b = d.input("b");
+        let m1 = d.op(OpKind::Mul, &[a, b], "m1");
+        let m2 = d.op(OpKind::Mul, &[a, b], "m2");
+        let s = d.op(OpKind::Add, &[m1, m2], "s");
+        assert_eq!(d.levels(), vec![0, 0, 1, 1, 2]);
+        assert_eq!(d.level_widths(), vec![2, 1]);
+        assert_eq!(d.critical_path(), 2);
+        assert_eq!(d.kind(s), OpKind::Add);
+        assert_eq!(d.total_ops(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "no operands")]
+    fn op_needs_operands() {
+        let mut d = Dag::new();
+        d.op(OpKind::Add, &[], "bad");
+    }
+
+    #[test]
+    fn profile_summary() {
+        let mut d = Dag::new();
+        let a = d.input("a");
+        let m = d.op(OpKind::Mul, &[a, a], "m");
+        d.op(OpKind::Sqrt, &[m], "r");
+        let p = d.profile();
+        assert_eq!(p.ops, 2);
+        assert_eq!(p.critical_path, 2);
+        assert_eq!(p.max_width, 1);
+        assert!((p.avg_parallelism - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_dag_is_safe() {
+        let d = Dag::new();
+        assert_eq!(d.critical_path(), 0);
+        assert_eq!(d.level_widths(), Vec::<usize>::new());
+    }
+}

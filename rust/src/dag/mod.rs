@@ -1,0 +1,94 @@
+//! DAG analysis of BLAS routines (§4, Figs 3–6, Tables 2–3).
+//!
+//! The paper derives its PE design from directed-acyclic-graph structure:
+//! which operations can run in parallel (level width), how deep the
+//! dependency chains are (critical path), and what macro-operations repeat
+//! (the DOT4 pattern). This module builds those DAGs programmatically for
+//! ddot, dnrm2, daxpy, matrix-vector and the three matrix-multiplication
+//! algorithms, and computes the §4 statistics.
+
+pub mod builder;
+pub mod routines;
+
+pub use builder::{Dag, NodeId, OpKind};
+pub use routines::{
+    daxpy_dag, ddot_dag, dgemv_dag, dnrm2_dag, gemm_block_dag, smm_block_dag, wmm_block_dag,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_ddot_structure() {
+        // n = 8 (the paper's fig 3): 8 parallel multiplies, then a binary
+        // addition tree of depth 3.
+        let d = ddot_dag(8);
+        let widths = d.level_widths();
+        assert_eq!(widths[0], 8, "first level: all multiplies in parallel");
+        assert_eq!(widths[1..], [4, 2, 1], "addition tree levels");
+        assert_eq!(d.critical_path(), 4);
+        assert_eq!(d.count(OpKind::Mul), 8);
+        assert_eq!(d.count(OpKind::Add), 7);
+    }
+
+    #[test]
+    fn fig3_dnrm2_is_ddot_plus_sqrt() {
+        let d = dnrm2_dag(8);
+        let dd = ddot_dag(8);
+        assert_eq!(d.critical_path(), dd.critical_path() + 1);
+        assert_eq!(d.count(OpKind::Sqrt), 1);
+        assert_eq!(d.count(OpKind::Mul), dd.count(OpKind::Mul));
+    }
+
+    #[test]
+    fn fig3_daxpy_is_two_levels() {
+        // All multiplies parallel, then all adds parallel: depth 2, width n.
+        let d = daxpy_dag(8);
+        assert_eq!(d.level_widths(), vec![8, 8]);
+        assert_eq!(d.critical_path(), 2);
+    }
+
+    #[test]
+    fn fig4_gemv_is_parallel_dots() {
+        // n×n matrix-vector = n independent n-element inner products: all
+        // n² multiplies are level 0 (the paper's observation).
+        let d = dgemv_dag(4);
+        assert_eq!(d.level_widths()[0], 16);
+        assert_eq!(d.critical_path(), ddot_dag(4).critical_path());
+    }
+
+    #[test]
+    fn fig5_gemm_2x2_counts() {
+        // §4.3.4: 2×2 GEMM takes 8 multiplies and 4 additions.
+        let d = gemm_block_dag(2);
+        assert_eq!(d.count(OpKind::Mul), 8);
+        assert_eq!(d.count(OpKind::Add), 4);
+        assert_eq!(d.critical_path(), 2);
+    }
+
+    #[test]
+    fn fig5_smm_vs_wmm_vs_gemm() {
+        // Table 2: SMM = 7 multiplies, 18 add/subs; Table 3: WMM = 7 and 15;
+        // GEMM = 8 and 4. SMM/WMM trade one multiply for many additions and
+        // a deeper DAG — the §4.3.4 argument for choosing GEMM.
+        let smm = smm_block_dag();
+        let wmm = wmm_block_dag();
+        let gemm = gemm_block_dag(2);
+        assert_eq!(smm.count(OpKind::Mul), 7);
+        assert_eq!(smm.count(OpKind::Add) + smm.count(OpKind::Sub), 18);
+        assert_eq!(wmm.count(OpKind::Mul), 7);
+        assert_eq!(wmm.count(OpKind::Add) + wmm.count(OpKind::Sub), 15);
+        assert!(smm.critical_path() > gemm.critical_path());
+        assert!(wmm.critical_path() > gemm.critical_path());
+    }
+
+    #[test]
+    fn fig6_gemm_4x4_all_multiplies_parallel() {
+        // §4.3.5: all n³ = 64 multiplies of the 4×4 GEMM can start at once.
+        let d = gemm_block_dag(4);
+        assert_eq!(d.level_widths()[0], 64);
+        // Accumulation enforces ⌈log2(4)⌉ = 2 further levels of adds.
+        assert_eq!(d.critical_path(), 3);
+    }
+}

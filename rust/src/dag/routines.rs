@@ -1,0 +1,224 @@
+//! DAG constructions for the routines analysed in §4 (Figs 3–6) and the
+//! 2×2-block SMM/WMM/GEMM comparison (Tables 2–3, Fig 5).
+
+use super::builder::{Dag, NodeId, OpKind};
+
+/// Binary addition tree over `vals`, returning the root.
+fn add_tree(d: &mut Dag, mut vals: Vec<NodeId>, tag: &str) -> NodeId {
+    assert!(!vals.is_empty());
+    let mut level = 0;
+    while vals.len() > 1 {
+        level += 1;
+        let mut next = Vec::with_capacity(vals.len().div_ceil(2));
+        for pair in vals.chunks(2) {
+            if pair.len() == 2 {
+                next.push(d.op(OpKind::Add, pair, format!("{tag}_l{level}")));
+            } else {
+                next.push(pair[0]);
+            }
+        }
+        vals = next;
+    }
+    vals[0]
+}
+
+/// ddot DAG (fig 3): n parallel multiplies, then an addition tree.
+pub fn ddot_dag(n: usize) -> Dag {
+    let mut d = Dag::new();
+    let xs: Vec<_> = (0..n).map(|i| d.input(format!("x{i}"))).collect();
+    let ys: Vec<_> = (0..n).map(|i| d.input(format!("y{i}"))).collect();
+    let prods: Vec<_> =
+        (0..n).map(|i| d.op(OpKind::Mul, &[xs[i], ys[i]], format!("p{i}"))).collect();
+    add_tree(&mut d, prods, "sum");
+    d
+}
+
+/// dnrm2 DAG (fig 3): like ddot with x = y plus a final square root.
+pub fn dnrm2_dag(n: usize) -> Dag {
+    let mut d = Dag::new();
+    let xs: Vec<_> = (0..n).map(|i| d.input(format!("x{i}"))).collect();
+    let prods: Vec<_> =
+        (0..n).map(|i| d.op(OpKind::Mul, &[xs[i], xs[i]], format!("p{i}"))).collect();
+    let s = add_tree(&mut d, prods, "sum");
+    d.op(OpKind::Sqrt, &[s], "sqrt");
+    d
+}
+
+/// daxpy DAG (fig 3): n independent (multiply, add) pairs — depth 2.
+pub fn daxpy_dag(n: usize) -> Dag {
+    let mut d = Dag::new();
+    let alpha = d.input("alpha");
+    for i in 0..n {
+        let x = d.input(format!("x{i}"));
+        let y = d.input(format!("y{i}"));
+        let p = d.op(OpKind::Mul, &[alpha, x], format!("p{i}"));
+        d.op(OpKind::Add, &[p, y], format!("s{i}"));
+    }
+    d
+}
+
+/// Matrix-vector DAG (fig 4): n independent ddot DAGs sharing x.
+pub fn dgemv_dag(n: usize) -> Dag {
+    let mut d = Dag::new();
+    let xs: Vec<_> = (0..n).map(|j| d.input(format!("x{j}"))).collect();
+    for i in 0..n {
+        let mut prods = Vec::with_capacity(n);
+        for (j, &xj) in xs.iter().enumerate() {
+            let a = d.input(format!("a{i}{j}"));
+            prods.push(d.op(OpKind::Mul, &[a, xj], format!("p{i}{j}")));
+        }
+        add_tree(&mut d, prods, &format!("row{i}"));
+    }
+    d
+}
+
+/// GEMM DAG for an n×n block (figs 5 and 6): n³ parallel multiplies, then
+/// an addition tree per output element.
+pub fn gemm_block_dag(n: usize) -> Dag {
+    let mut d = Dag::new();
+    let a: Vec<Vec<_>> = (0..n)
+        .map(|i| (0..n).map(|k| d.input(format!("a{i}{k}"))).collect())
+        .collect();
+    let b: Vec<Vec<_>> = (0..n)
+        .map(|k| (0..n).map(|j| d.input(format!("b{k}{j}"))).collect())
+        .collect();
+    for i in 0..n {
+        for j in 0..n {
+            let prods: Vec<_> = (0..n)
+                .map(|k| d.op(OpKind::Mul, &[a[i][k], b[k][j]], format!("m{i}{j}{k}")))
+                .collect();
+            add_tree(&mut d, prods, &format!("c{i}{j}"));
+        }
+    }
+    d
+}
+
+/// Strassen 2×2 block DAG (Table 2 / fig 5): block operations as nodes.
+/// 7 multiplies, 18 additions/subtractions over four dependency levels.
+pub fn smm_block_dag() -> Dag {
+    let mut d = Dag::new();
+    let a11 = d.input("A11");
+    let a12 = d.input("A12");
+    let a21 = d.input("A21");
+    let a22 = d.input("A22");
+    let b11 = d.input("B11");
+    let b12 = d.input("B12");
+    let b21 = d.input("B21");
+    let b22 = d.input("B22");
+    // Level 1 (T additions).
+    let t1 = d.op(OpKind::Add, &[a11, a22], "T1");
+    let t2 = d.op(OpKind::Add, &[b11, b22], "T2");
+    let t3 = d.op(OpKind::Sub, &[b12, b22], "T3");
+    let t4 = d.op(OpKind::Sub, &[b21, b11], "T4");
+    let t5 = d.op(OpKind::Add, &[a11, a12], "T5");
+    let t6 = d.op(OpKind::Sub, &[a21, a11], "T6");
+    let t7 = d.op(OpKind::Add, &[b11, b12], "T7");
+    let t8 = d.op(OpKind::Sub, &[a12, a22], "T8");
+    let t9 = d.op(OpKind::Add, &[b21, b22], "T9");
+    // Level 2 (M multiplies).
+    let m1 = d.op(OpKind::Mul, &[t1, t2], "M1");
+    let s1 = d.op(OpKind::Add, &[a21, a22], "A21+A22");
+    let m2 = d.op(OpKind::Mul, &[s1, b11], "M2");
+    let m3 = d.op(OpKind::Mul, &[a11, t3], "M3");
+    let m4 = d.op(OpKind::Mul, &[a22, t4], "M4");
+    let m5 = d.op(OpKind::Mul, &[t5, b22], "M5");
+    let m6 = d.op(OpKind::Mul, &[t6, t7], "M6");
+    let m7 = d.op(OpKind::Mul, &[t8, t9], "M7");
+    // Level 3 (K combinations).
+    let k1 = d.op(OpKind::Add, &[m1, m4], "K1");
+    let k2 = d.op(OpKind::Sub, &[m5, m7], "K2");
+    let k3 = d.op(OpKind::Sub, &[m1, m2], "K3");
+    let k4 = d.op(OpKind::Add, &[m3, m6], "K4");
+    d.op(OpKind::Add, &[m3, m5], "C12");
+    d.op(OpKind::Add, &[m2, m4], "C21");
+    // Level 4 (C blocks).
+    d.op(OpKind::Sub, &[k1, k2], "C11");
+    d.op(OpKind::Add, &[k3, k4], "C22");
+    d
+}
+
+/// Winograd 2×2 block DAG (Table 3): 7 multiplies, 15 additions over six
+/// dependency levels — deeper than SMM despite fewer additions.
+pub fn wmm_block_dag() -> Dag {
+    let mut d = Dag::new();
+    let a11 = d.input("A11");
+    let a12 = d.input("A12");
+    let a21 = d.input("A21");
+    let a22 = d.input("A22");
+    let b11 = d.input("B11");
+    let b12 = d.input("B12");
+    let b21 = d.input("B21");
+    let b22 = d.input("B22");
+    let s1 = d.op(OpKind::Add, &[a21, a22], "S1");
+    let s2 = d.op(OpKind::Sub, &[s1, a11], "S2");
+    let s3 = d.op(OpKind::Sub, &[a11, a21], "S3");
+    let s4 = d.op(OpKind::Sub, &[a12, s2], "S4");
+    let t1 = d.op(OpKind::Sub, &[b12, b11], "T1");
+    let t2 = d.op(OpKind::Sub, &[b22, t1], "T2");
+    let t3 = d.op(OpKind::Sub, &[b22, b12], "T3");
+    let t4 = d.op(OpKind::Sub, &[t2, b21], "T4");
+    let m1 = d.op(OpKind::Mul, &[a11, b11], "M1");
+    let m2 = d.op(OpKind::Mul, &[a12, b21], "M2");
+    let m3 = d.op(OpKind::Mul, &[s4, b22], "M3");
+    let m4 = d.op(OpKind::Mul, &[a22, t4], "M4");
+    let m5 = d.op(OpKind::Mul, &[s1, t1], "M5");
+    let m6 = d.op(OpKind::Mul, &[s2, t2], "M6");
+    let m7 = d.op(OpKind::Mul, &[s3, t3], "M7");
+    d.op(OpKind::Add, &[m1, m2], "C11");
+    let u2 = d.op(OpKind::Add, &[m1, m6], "U2");
+    let u3 = d.op(OpKind::Add, &[u2, m7], "U3");
+    let u4 = d.op(OpKind::Add, &[u2, m5], "U4");
+    d.op(OpKind::Add, &[u4, m3], "C12");
+    d.op(OpKind::Sub, &[u3, m4], "C21");
+    d.op(OpKind::Add, &[u3, m5], "C22");
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ddot_scales() {
+        for n in [2, 4, 16, 32] {
+            let d = ddot_dag(n);
+            assert_eq!(d.count(OpKind::Mul), n);
+            assert_eq!(d.count(OpKind::Add), n - 1);
+            assert_eq!(d.critical_path(), 1 + (n as f64).log2().ceil() as usize);
+        }
+    }
+
+    #[test]
+    fn gemv_op_counts() {
+        let n = 6;
+        let d = dgemv_dag(n);
+        assert_eq!(d.count(OpKind::Mul), n * n);
+        assert_eq!(d.count(OpKind::Add), n * (n - 1));
+    }
+
+    #[test]
+    fn gemm_op_counts_match_paper() {
+        // n³ multiplies, n³ − n² additions (§3.1).
+        for n in [2, 3, 4] {
+            let d = gemm_block_dag(n);
+            assert_eq!(d.count(OpKind::Mul), n * n * n);
+            assert_eq!(d.count(OpKind::Add), n * n * n - n * n);
+        }
+    }
+
+    #[test]
+    fn smm_deeper_than_wmm_shallower_counts() {
+        let smm = smm_block_dag();
+        let wmm = wmm_block_dag();
+        assert_eq!(smm.critical_path(), 4, "Table 2 has four levels");
+        assert_eq!(wmm.critical_path(), 6, "Table 3 has six levels");
+        assert!(wmm.total_ops() < smm.total_ops());
+    }
+
+    #[test]
+    fn daxpy_parallelism() {
+        let d = daxpy_dag(16);
+        assert_eq!(d.profile().max_width, 16);
+        assert_eq!(d.profile().critical_path, 2);
+    }
+}

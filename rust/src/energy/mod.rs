@@ -1,0 +1,159 @@
+//! Power/energy model of the PE — the source of every Gflops/W column in
+//! Tables 4–9 and of the Fig 11(j) comparison.
+//!
+//! The paper reports energy efficiency per enhancement level at a 0.2 GHz
+//! operating point. Working backwards from its own tables (see DESIGN.md
+//! §Calibration), the five Gflops/W columns are mutually consistent with a
+//! *fixed per-configuration power*:
+//!
+//! * AE0 (FPS + FPU + RF):                ≈ 7.2 mW
+//! * AE1 (+ Load-Store CFU + 256-kbit LM): ≈ 13.7 mW
+//! * AE2..AE5 (+ DOT4 RDP):               ≈ 29.3 mW
+//!
+//! i.e. the paper's numbers embed a component-level static power budget and
+//! no measurable activity dependence (as expected from a synthesis-tool
+//! power report at constant utilization). We model exactly that: a
+//! component breakdown whose sums hit those budgets, plus an optional
+//! activity-proportional term (default small) for sensitivity studies.
+
+use crate::pe::{AeLevel, PeConfig, PeStats};
+
+/// Per-component power breakdown in milliwatts at the 0.2 GHz design point.
+#[derive(Debug, Clone)]
+pub struct PowerModel {
+    /// FPS front end: fetch/decode/sequencing + register file.
+    pub fps_mw: f64,
+    /// Pipelined FPU (adder + multiplier + div/sqrt).
+    pub fpu_mw: f64,
+    /// Load-Store CFU control (AE1+).
+    pub ls_cfu_mw: f64,
+    /// 256-kbit Local Memory SRAM (AE1+).
+    pub lm_mw: f64,
+    /// DOT4 reconfigurable datapath (AE2+): 4 multipliers + adder tree.
+    pub rdp_mw: f64,
+    /// Wide 256-bit FPS↔CFU datapath (AE4+).
+    pub wide_path_mw: f64,
+    /// Dynamic energy per flop (pJ) — activity-proportional term.
+    pub pj_per_flop: f64,
+    /// Dynamic energy per GM word moved (pJ).
+    pub pj_per_gm_word: f64,
+    /// Dynamic energy per LM word moved (pJ).
+    pub pj_per_lm_word: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        Self::paper()
+    }
+}
+
+impl PowerModel {
+    /// The calibrated model (budgets above, small activity terms).
+    pub fn paper() -> Self {
+        Self {
+            fps_mw: 3.4,
+            fpu_mw: 3.8,
+            ls_cfu_mw: 2.1,
+            lm_mw: 4.4,
+            rdp_mw: 14.2,
+            wide_path_mw: 1.4,
+            pj_per_flop: 1.0,
+            pj_per_gm_word: 12.0,
+            pj_per_lm_word: 2.0,
+        }
+    }
+
+    /// Static power of a PE configuration in watts.
+    pub fn static_watts(&self, ae: AeLevel) -> f64 {
+        let mut mw = self.fps_mw + self.fpu_mw;
+        if ae.has_lm() {
+            mw += self.ls_cfu_mw + self.lm_mw;
+        }
+        if ae.has_dot() {
+            mw += self.rdp_mw;
+        }
+        if ae.has_wide_path() {
+            mw += self.wide_path_mw;
+        }
+        mw * 1e-3
+    }
+
+    /// Total energy of a run in joules (static · time + activity).
+    pub fn energy_joules(&self, ae: AeLevel, cfg: &PeConfig, st: &PeStats) -> f64 {
+        let time_s = st.seconds(cfg);
+        let static_j = self.static_watts(ae) * time_s;
+        let dyn_j = 1e-12
+            * (self.pj_per_flop * st.flops as f64
+                + self.pj_per_gm_word * st.gm_words as f64
+                + self.pj_per_lm_word * st.lm_words as f64);
+        static_j + dyn_j
+    }
+
+    /// Average power of a run in watts.
+    pub fn avg_watts(&self, ae: AeLevel, cfg: &PeConfig, st: &PeStats) -> f64 {
+        self.energy_joules(ae, cfg, st) / st.seconds(cfg)
+    }
+
+    /// Gflops/W with a caller-supplied flop count (the paper uses the 3n³
+    /// convention for DGEMM — pass [`crate::codegen::gemm::paper_flops`]).
+    pub fn gflops_per_watt(
+        &self,
+        ae: AeLevel,
+        cfg: &PeConfig,
+        st: &PeStats,
+        flops: u64,
+    ) -> f64 {
+        let gflops = flops as f64 / st.seconds(cfg) / 1e9;
+        gflops / self.avg_watts(ae, cfg, st)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_power_ladder() {
+        let m = PowerModel::paper();
+        let p0 = m.static_watts(AeLevel::Ae0);
+        let p1 = m.static_watts(AeLevel::Ae1);
+        let p2 = m.static_watts(AeLevel::Ae2);
+        let p3 = m.static_watts(AeLevel::Ae3);
+        let p5 = m.static_watts(AeLevel::Ae5);
+        assert!(p0 < p1 && p1 < p2, "power must grow with hardware: {p0} {p1} {p2}");
+        assert_eq!(p2, p3, "AE3 adds no datapath hardware");
+        assert!(p5 > p2, "wide path adds power");
+        // Calibration anchors (DESIGN.md): ~7.2 / ~13.7 / ~28-29 mW.
+        assert!((p0 * 1e3 - 7.2).abs() < 0.5, "AE0 power {p0}");
+        assert!((p1 * 1e3 - 13.7).abs() < 0.5, "AE1 power {p1}");
+        assert!((p2 * 1e3 - 27.9).abs() < 1.0, "AE2 power {p2}");
+    }
+
+    #[test]
+    fn energy_scales_with_time() {
+        let m = PowerModel::paper();
+        let cfg = PeConfig::paper(AeLevel::Ae0);
+        let mut st = PeStats { cycles: 1000, flops: 100, ..Default::default() };
+        let e1 = m.energy_joules(AeLevel::Ae0, &cfg, &st);
+        st.cycles = 2000;
+        let e2 = m.energy_joules(AeLevel::Ae0, &cfg, &st);
+        assert!(e2 > 1.9 * e1 && e2 < 2.1 * e1);
+    }
+
+    #[test]
+    fn gflops_per_watt_sane_range() {
+        // A fully-utilized AE5 PE: 3n³-convention flops at ~0.19 CPF should
+        // land in the tens of Gflops/W (paper: 35.7).
+        let m = PowerModel::paper();
+        let cfg = PeConfig::paper(AeLevel::Ae5);
+        let st = PeStats {
+            cycles: 573_442,
+            flops: 2_000_000,
+            gm_words: 30_000,
+            lm_words: 1_500_000,
+            ..Default::default()
+        };
+        let gw = m.gflops_per_watt(AeLevel::Ae5, &cfg, &st, 3_000_000);
+        assert!(gw > 20.0 && gw < 50.0, "AE5 Gflops/W out of range: {gw}");
+    }
+}

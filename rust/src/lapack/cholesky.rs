@@ -1,0 +1,82 @@
+//! DPOTRF: Cholesky factorization (lower), right-looking — the XPBTRF
+//! family member the paper cites in §1.
+
+use super::profile::{FlopProfile, ProfiledOp};
+use crate::util::Mat;
+
+/// Factor SPD A = L·Lᵀ (lower triangle). Returns L and the flop profile
+/// (DSYRK/DGEMM-class work dominates for large n).
+pub fn dpotrf(a: &Mat) -> (Mat, FlopProfile) {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "square only");
+    let mut l = a.clone();
+    let mut prof = FlopProfile::new();
+
+    for k in 0..n {
+        let mut d = l[(k, k)];
+        for j in 0..k {
+            d -= l[(k, j)] * l[(k, j)];
+        }
+        prof.add(ProfiledOp::Ddot, 2 * k as u64);
+        assert!(d > 0.0, "matrix not positive definite at step {k}");
+        let lkk = d.sqrt();
+        l[(k, k)] = lkk;
+        // Column update: L[i,k] = (A[i,k] − Σ_j L[i,j]·L[k,j]) / L[k,k]
+        // — a matrix-vector product over the factored panel (DGEMV class).
+        for i in k + 1..n {
+            let mut s = l[(i, k)];
+            for j in 0..k {
+                s -= l[(i, j)] * l[(k, j)];
+            }
+            l[(i, k)] = s / lkk;
+        }
+        prof.add(ProfiledOp::Dgemv, 2 * (k as u64) * ((n - k - 1) as u64));
+    }
+    // Zero the upper triangle.
+    for j in 1..n {
+        for i in 0..j {
+            l[(i, j)] = 0.0;
+        }
+    }
+    (l, prof)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::level3::dgemm_ref;
+    use crate::util::{assert_allclose, Mat};
+
+    #[test]
+    fn reconstructs_spd_matrix() {
+        let a = Mat::random_spd(12, 51);
+        let (l, _) = dpotrf(&a);
+        let llt = dgemm_ref(&l, &l.transpose(), &Mat::zeros(12, 12));
+        assert_allclose(llt.as_slice(), a.as_slice(), 1e-9);
+    }
+
+    #[test]
+    fn factor_is_lower_triangular() {
+        let a = Mat::random_spd(8, 52);
+        let (l, _) = dpotrf(&a);
+        for j in 1..8 {
+            for i in 0..j {
+                assert_eq!(l[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not positive definite")]
+    fn rejects_indefinite() {
+        let a = Mat::from_row_major(2, 2, &[1., 2., 2., 1.]); // eigenvalues 3, −1
+        dpotrf(&a);
+    }
+
+    #[test]
+    fn profile_has_gemv_work() {
+        let a = Mat::random_spd(32, 53);
+        let (_, prof) = dpotrf(&a);
+        assert!(prof.fraction(super::ProfiledOp::Dgemv) > 0.5);
+    }
+}

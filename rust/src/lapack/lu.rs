@@ -1,0 +1,134 @@
+//! DGETRF: LU factorization with partial pivoting (right-looking,
+//! rank-1-update form — the XGETRF the paper cites alongside QR in §1).
+
+use super::profile::{FlopProfile, ProfiledOp};
+use crate::util::Mat;
+
+/// LU factors: `lu` holds L (unit lower, below diagonal) and U (upper),
+/// `piv[k]` is the row swapped with row k at step k.
+#[derive(Debug, Clone)]
+pub struct LuFactors {
+    pub lu: Mat,
+    pub piv: Vec<usize>,
+}
+
+impl LuFactors {
+    /// Apply the recorded permutation to a copy of `b` (P·b).
+    pub fn permute(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        for (k, &p) in self.piv.iter().enumerate() {
+            x.swap(k, p);
+        }
+        x
+    }
+
+    /// Solve A·x = b via the factors.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows();
+        assert_eq!(b.len(), n);
+        let mut x = self.permute(b);
+        // Forward: L·y = P·b (unit diagonal).
+        for i in 0..n {
+            for k in 0..i {
+                x[i] -= self.lu[(i, k)] * x[k];
+            }
+        }
+        // Backward: U·x = y.
+        for i in (0..n).rev() {
+            for k in i + 1..n {
+                x[i] -= self.lu[(i, k)] * x[k];
+            }
+            x[i] /= self.lu[(i, i)];
+        }
+        x
+    }
+}
+
+/// Factor A = P·L·U with partial pivoting. Returns factors and the flop
+/// profile (DGER-dominated — the Level-2 analogue of Fig 1 for LU).
+pub fn dgetrf(a: &Mat) -> (LuFactors, FlopProfile) {
+    let n = a.rows();
+    assert_eq!(a.cols(), n, "square only");
+    let mut lu = a.clone();
+    let mut piv = vec![0usize; n];
+    let mut prof = FlopProfile::new();
+
+    for k in 0..n {
+        // Pivot search (IDAMAX).
+        let col = lu.col(k);
+        let mut p = k;
+        let mut best = col[k].abs();
+        for i in k + 1..n {
+            if col[i].abs() > best {
+                best = col[i].abs();
+                p = i;
+            }
+        }
+        piv[k] = p;
+        assert!(best > 0.0, "singular matrix at step {k}");
+        if p != k {
+            for j in 0..n {
+                let t = lu[(k, j)];
+                lu[(k, j)] = lu[(p, j)];
+                lu[(p, j)] = t;
+            }
+        }
+        // Scale the pivot column (DSCAL).
+        let pivval = lu[(k, k)];
+        for i in k + 1..n {
+            lu[(i, k)] /= pivval;
+        }
+        prof.add(ProfiledOp::Dscal, (n - k - 1) as u64);
+        // Rank-1 update of the trailing matrix (DGER).
+        for j in k + 1..n {
+            let ukj = lu[(k, j)];
+            for i in k + 1..n {
+                let lik = lu[(i, k)];
+                lu[(i, j)] -= lik * ukj;
+            }
+        }
+        prof.add(ProfiledOp::Dger, 2 * ((n - k - 1) as u64).pow(2));
+    }
+    (LuFactors { lu, piv }, prof)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{Mat, XorShift64};
+
+    #[test]
+    fn solves_random_system() {
+        let n = 16;
+        let a = Mat::random_spd(n, 41); // well-conditioned
+        let mut rng = XorShift64::new(42);
+        let x0 = rng.vec(n);
+        // b = A·x0
+        let b = crate::blas::level2::dgemv_ref(&a, &x0, &vec![0.0; n]);
+        let (f, _) = dgetrf(&a);
+        let x = f.solve(&b);
+        crate::util::assert_allclose(&x, &x0, 1e-9);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_leading_entry() {
+        let a = Mat::from_row_major(2, 2, &[0., 1., 1., 0.]);
+        let (f, _) = dgetrf(&a);
+        let x = f.solve(&[2.0, 3.0]);
+        crate::util::assert_allclose(&x, &[3.0, 2.0], 1e-12);
+    }
+
+    #[test]
+    fn profile_is_dger_dominated() {
+        let a = Mat::random_spd(48, 43);
+        let (_, prof) = dgetrf(&a);
+        assert!(prof.fraction(super::ProfiledOp::Dger) > 0.95);
+    }
+
+    #[test]
+    #[should_panic(expected = "singular")]
+    fn singular_matrix_detected() {
+        let a = Mat::zeros(3, 3);
+        dgetrf(&a);
+    }
+}

@@ -1,0 +1,16 @@
+//! LAPACK-lite: the factorizations the paper motivates BLAS with (§1, Fig 1)
+//! built on this crate's BLAS — DGEQR2/DGEQRF (Householder QR), DGETRF
+//! (partial-pivot LU), DPOTRF (Cholesky) — plus an operation profiler that
+//! reproduces the Fig-1 observation: DGEQR2 spends ~99% of its work in
+//! DGEMV, DGEQRF ~99% in DGEMM.
+
+pub mod profile;
+pub mod qr;
+
+mod lu;
+mod cholesky;
+
+pub use cholesky::dpotrf;
+pub use lu::dgetrf;
+pub use profile::{FlopProfile, ProfiledOp};
+pub use qr::{dgeqr2, dgeqr2_profiled, dgeqrf, dgeqrf_profiled, form_q, QrFactors};

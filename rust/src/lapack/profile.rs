@@ -1,0 +1,116 @@
+//! Flop profiler for the Fig-1 experiment: attributes every floating-point
+//! operation of a factorization to the BLAS routine that performed it,
+//! mirroring the paper's Intel VTune™ time attribution.
+
+use std::collections::BTreeMap;
+
+/// BLAS routine classes the profiler attributes work to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum ProfiledOp {
+    Ddot,
+    Dnrm2,
+    Daxpy,
+    Dscal,
+    Dgemv,
+    Dger,
+    Dgemm,
+    Dtrsm,
+    Other,
+}
+
+impl ProfiledOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            ProfiledOp::Ddot => "DDOT",
+            ProfiledOp::Dnrm2 => "DNRM2",
+            ProfiledOp::Daxpy => "DAXPY",
+            ProfiledOp::Dscal => "DSCAL",
+            ProfiledOp::Dgemv => "DGEMV",
+            ProfiledOp::Dger => "DGER",
+            ProfiledOp::Dgemm => "DGEMM",
+            ProfiledOp::Dtrsm => "DTRSM",
+            ProfiledOp::Other => "other",
+        }
+    }
+}
+
+/// Accumulated flops per BLAS routine.
+#[derive(Debug, Clone, Default)]
+pub struct FlopProfile {
+    counts: BTreeMap<ProfiledOp, u64>,
+}
+
+impl FlopProfile {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `flops` operations attributed to `op`.
+    pub fn add(&mut self, op: ProfiledOp, flops: u64) {
+        *self.counts.entry(op).or_insert(0) += flops;
+    }
+
+    /// Total flops recorded.
+    pub fn total(&self) -> u64 {
+        self.counts.values().sum()
+    }
+
+    /// Flops attributed to one routine.
+    pub fn flops(&self, op: ProfiledOp) -> u64 {
+        self.counts.get(&op).copied().unwrap_or(0)
+    }
+
+    /// Fraction of total work in one routine (0..1).
+    pub fn fraction(&self, op: ProfiledOp) -> f64 {
+        self.flops(op) as f64 / self.total().max(1) as f64
+    }
+
+    /// Routines sorted by descending share.
+    pub fn breakdown(&self) -> Vec<(ProfiledOp, u64, f64)> {
+        let total = self.total().max(1) as f64;
+        let mut v: Vec<_> =
+            self.counts.iter().map(|(&op, &f)| (op, f, f as f64 / total)).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1));
+        v
+    }
+
+    /// Render as a Fig-1-style report.
+    pub fn report(&self, title: &str) -> String {
+        let mut s = format!("{title}: {} flops total\n", self.total());
+        for (op, flops, frac) in self.breakdown() {
+            s.push_str(&format!("  {:<6} {:>14} flops  {:>6.2}%\n", op.name(), flops, 100.0 * frac));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_fractions() {
+        let mut p = FlopProfile::new();
+        p.add(ProfiledOp::Dgemv, 99);
+        p.add(ProfiledOp::Ddot, 1);
+        assert_eq!(p.total(), 100);
+        assert!((p.fraction(ProfiledOp::Dgemv) - 0.99).abs() < 1e-12);
+        assert_eq!(p.breakdown()[0].0, ProfiledOp::Dgemv);
+    }
+
+    #[test]
+    fn report_contains_rows() {
+        let mut p = FlopProfile::new();
+        p.add(ProfiledOp::Dgemm, 10);
+        let r = p.report("DGEQRF");
+        assert!(r.contains("DGEMM"));
+        assert!(r.contains("10"));
+    }
+
+    #[test]
+    fn empty_profile_is_safe() {
+        let p = FlopProfile::new();
+        assert_eq!(p.total(), 0);
+        assert_eq!(p.fraction(ProfiledOp::Dgemm), 0.0);
+    }
+}

@@ -1,0 +1,319 @@
+//! Householder QR: DGEQR2 (unblocked, Level-2-rich) and DGEQRF (blocked,
+//! Level-3-rich) — the Fig-1 routines.
+//!
+//! DGEQR2 applies each reflector with a matrix-vector product (DGEMV) and a
+//! rank-1 update (DGER); DGEQRF factors nb-column panels with DGEQR2 and
+//! applies the compact-WY block reflector to the trailing matrix with
+//! matrix-matrix products (DGEMM) — which is why the paper's profile shows
+//! DGEQR2 ≈ 99% matrix-vector work and DGEQRF ≈ 99% DGEMM.
+
+use super::profile::{FlopProfile, ProfiledOp};
+use crate::util::Mat;
+
+/// QR factorization result: R in the upper triangle of `a`, Householder
+/// vectors below the diagonal (unit leading 1 implicit), scalar factors τ.
+#[derive(Debug, Clone)]
+pub struct QrFactors {
+    pub a: Mat,
+    pub tau: Vec<f64>,
+}
+
+impl QrFactors {
+    /// Extract the upper-triangular/trapezoidal R.
+    pub fn r(&self) -> Mat {
+        let (m, n) = (self.a.rows(), self.a.cols());
+        let mut r = Mat::zeros(m.min(n), n);
+        for j in 0..n {
+            for i in 0..=j.min(m.min(n) - 1) {
+                r[(i, j)] = self.a[(i, j)];
+            }
+        }
+        r
+    }
+}
+
+/// Generate a Householder reflector for `x`: returns (τ, β) and rewrites
+/// `x[1..]` with the vector tail (v₀ = 1 implicit), `x[0]` with β.
+fn house(x: &mut [f64], prof: &mut FlopProfile) -> f64 {
+    let alpha = x[0];
+    let norm_tail = crate::blas::level1::dnrm2(&x[1..]);
+    prof.add(ProfiledOp::Dnrm2, 2 * (x.len() as u64 - 1));
+    if norm_tail == 0.0 {
+        // Already upper-triangular in this column.
+        return 0.0;
+    }
+    let sigma = alpha.hypot(norm_tail);
+    let beta = if alpha >= 0.0 { -sigma } else { sigma };
+    let tau = (beta - alpha) / beta;
+    let scale = 1.0 / (alpha - beta);
+    for v in x[1..].iter_mut() {
+        *v *= scale;
+    }
+    prof.add(ProfiledOp::Dscal, x.len() as u64 - 1);
+    x[0] = beta;
+    tau
+}
+
+/// Unblocked Householder QR (LAPACK DGEQR2), with flop attribution.
+pub fn dgeqr2_profiled(a: &Mat) -> (QrFactors, FlopProfile) {
+    let mut prof = FlopProfile::new();
+    let fac = dgeqr2_into(a.clone(), &mut prof);
+    (fac, prof)
+}
+
+/// Unblocked Householder QR (LAPACK DGEQR2).
+pub fn dgeqr2(a: &Mat) -> QrFactors {
+    let mut prof = FlopProfile::new();
+    dgeqr2_into(a.clone(), &mut prof)
+}
+
+fn dgeqr2_into(mut a: Mat, prof: &mut FlopProfile) -> QrFactors {
+    let (m, n) = (a.rows(), a.cols());
+    let k = m.min(n);
+    let mut tau = vec![0.0; k];
+    for j in 0..k {
+        // Reflector for column j.
+        let mut col = a.col(j)[j..].to_vec();
+        let t = house(&mut col, prof);
+        tau[j] = t;
+        for (i, &v) in col.iter().enumerate() {
+            a[(j + i, j)] = v;
+        }
+        if t == 0.0 || j + 1 == n {
+            continue;
+        }
+        // Apply (I − τ v vᵀ) to the trailing matrix A[j.., j+1..]:
+        //   w = A₂ᵀ v   (DGEMV)
+        //   A₂ ← A₂ − τ v wᵀ  (DGER)
+        let rows = m - j;
+        let cols = n - j - 1;
+        let mut v = vec![1.0];
+        v.extend_from_slice(&a.col(j)[j + 1..]);
+        let mut w = vec![0.0; cols];
+        for (jj, wv) in w.iter_mut().enumerate() {
+            let colv = &a.col(j + 1 + jj)[j..];
+            let mut s = 0.0;
+            for i in 0..rows {
+                s += colv[i] * v[i];
+            }
+            *wv = s;
+        }
+        prof.add(ProfiledOp::Dgemv, 2 * (rows as u64) * (cols as u64));
+        for jj in 0..cols {
+            let twj = t * w[jj];
+            let colv = &mut a.col_mut(j + 1 + jj)[j..];
+            for i in 0..rows {
+                colv[i] -= v[i] * twj;
+            }
+        }
+        prof.add(ProfiledOp::Dger, 2 * (rows as u64) * (cols as u64));
+    }
+    QrFactors { a, tau }
+}
+
+/// Blocked Householder QR (LAPACK DGEQRF) with panel width `nb`,
+/// compact-WY trailing update, and flop attribution.
+pub fn dgeqrf_profiled(a: &Mat, nb: usize) -> (QrFactors, FlopProfile) {
+    assert!(nb > 0);
+    let mut prof = FlopProfile::new();
+    let (m, n) = (a.rows(), a.cols());
+    let k = m.min(n);
+    let mut a = a.clone();
+    let mut tau = vec![0.0; k];
+
+    let mut j0 = 0;
+    while j0 < k {
+        let jb = nb.min(k - j0);
+        // Factor the panel A[j0.., j0..j0+jb] with DGEQR2.
+        let panel = a.block(j0, j0, m - j0, jb);
+        let panel_fac = dgeqr2_into(panel, &mut prof);
+        a.set_block(j0, j0, &panel_fac.a);
+        tau[j0..j0 + jb].copy_from_slice(&panel_fac.tau);
+
+        if j0 + jb < n {
+            // Form T (jb×jb upper triangular) for the block reflector
+            // I − V·T·Vᵀ, then update the trailing matrix with DGEMMs.
+            let rows = m - j0;
+            let cols = n - j0 - jb;
+            // V: rows×jb unit lower trapezoidal.
+            let mut v = Mat::zeros(rows, jb);
+            for jj in 0..jb {
+                v[(jj, jj)] = 1.0;
+                for i in jj + 1..rows {
+                    v[(i, jj)] = a[(j0 + i, j0 + jj)];
+                }
+            }
+            let t = form_t(&v, &tau[j0..j0 + jb], &mut prof);
+            // W = Vᵀ · A₂  (jb × cols)
+            let a2 = a.block(j0, j0 + jb, rows, cols);
+            let w = matmul_prof(&v.transpose(), &a2, ProfiledOp::Dgemm, &mut prof);
+            // W ← Tᵀ · W
+            let w = matmul_prof(&t.transpose(), &w, ProfiledOp::Dgemm, &mut prof);
+            // A₂ ← A₂ − V·W
+            let vw = matmul_prof(&v, &w, ProfiledOp::Dgemm, &mut prof);
+            let mut a2new = a2;
+            for jj in 0..cols {
+                for i in 0..rows {
+                    a2new[(i, jj)] -= vw[(i, jj)];
+                }
+            }
+            a.set_block(j0, j0 + jb, &a2new);
+        }
+        j0 += jb;
+    }
+    (QrFactors { a, tau }, prof)
+}
+
+/// Blocked Householder QR (LAPACK DGEQRF), default panel width 8.
+pub fn dgeqrf(a: &Mat) -> QrFactors {
+    dgeqrf_profiled(a, 8).0
+}
+
+/// T factor of the compact-WY representation (LAPACK DLARFT, forward
+/// columnwise): H₀·H₁⋯ = I − V·T·Vᵀ.
+fn form_t(v: &Mat, tau: &[f64], prof: &mut FlopProfile) -> Mat {
+    let jb = v.cols();
+    let rows = v.rows();
+    let mut t = Mat::zeros(jb, jb);
+    for i in 0..jb {
+        t[(i, i)] = tau[i];
+        if i > 0 {
+            // t_col = −τᵢ · T[0..i,0..i] · (V[:,0..i]ᵀ · V[:,i])
+            let mut vtv = vec![0.0; i];
+            for (jj, out) in vtv.iter_mut().enumerate() {
+                let mut s = 0.0;
+                for r in 0..rows {
+                    s += v[(r, jj)] * v[(r, i)];
+                }
+                *out = s;
+            }
+            prof.add(ProfiledOp::Dgemv, 2 * (rows as u64) * (i as u64));
+            for r in 0..i {
+                let mut s = 0.0;
+                for c in r..i {
+                    s += t[(r, c)] * vtv[c];
+                }
+                t[(r, i)] = -tau[i] * s;
+            }
+        }
+    }
+    t
+}
+
+/// Dense matmul with flop attribution.
+fn matmul_prof(a: &Mat, b: &Mat, op: ProfiledOp, prof: &mut FlopProfile) -> Mat {
+    let c = crate::blas::level3::dgemm_ref(a, b, &Mat::zeros(a.rows(), b.cols()));
+    prof.add(op, 2 * (a.rows() * a.cols() * b.cols()) as u64);
+    c
+}
+
+/// Materialize Q (m×m) from the factors — test/diagnostic helper
+/// (LAPACK DORGQR semantics, full Q).
+pub fn form_q(f: &QrFactors) -> Mat {
+    let m = f.a.rows();
+    let k = f.tau.len();
+    let mut q = Mat::eye(m);
+    // Q = H₀·H₁⋯H_{k−1}; apply in reverse to I.
+    for j in (0..k).rev() {
+        let t = f.tau[j];
+        if t == 0.0 {
+            continue;
+        }
+        let rows = m - j;
+        let mut v = vec![1.0];
+        v.extend_from_slice(&f.a.col(j)[j + 1..]);
+        // Q[j.., :] ← Q[j.., :] − τ·v·(vᵀ·Q[j.., :])
+        for c in 0..m {
+            let mut s = 0.0;
+            for i in 0..rows {
+                s += v[i] * q[(j + i, c)];
+            }
+            let ts = t * s;
+            for i in 0..rows {
+                q[(j + i, c)] -= v[i] * ts;
+            }
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::level3::dgemm_ref;
+    use crate::util::{assert_allclose, Mat};
+
+    fn check_qr(a: &Mat, f: &QrFactors, tol: f64) {
+        let q = form_q(f);
+        // QᵀQ = I
+        let qtq = dgemm_ref(&q.transpose(), &q, &Mat::zeros(q.rows(), q.rows()));
+        assert_allclose(qtq.as_slice(), Mat::eye(q.rows()).as_slice(), tol);
+        // Q·R = A
+        let mut r_full = Mat::zeros(a.rows(), a.cols());
+        let r = f.r();
+        r_full.set_block(0, 0, &r);
+        let qr = dgemm_ref(&q, &r_full, &Mat::zeros(a.rows(), a.cols()));
+        assert_allclose(qr.as_slice(), a.as_slice(), tol);
+    }
+
+    #[test]
+    fn dgeqr2_reconstructs_square() {
+        let a = Mat::random(12, 12, 31);
+        let f = dgeqr2(&a);
+        check_qr(&a, &f, 1e-10);
+    }
+
+    #[test]
+    fn dgeqr2_reconstructs_tall() {
+        let a = Mat::random(16, 9, 32);
+        let f = dgeqr2(&a);
+        check_qr(&a, &f, 1e-10);
+    }
+
+    #[test]
+    fn dgeqrf_matches_dgeqr2_r() {
+        let a = Mat::random(20, 20, 33);
+        let f2 = dgeqr2(&a);
+        let ff = dgeqrf_profiled(&a, 6).0;
+        // R is unique up to sign of rows; the Householder convention fixes
+        // signs identically, so they must match exactly.
+        assert_allclose(ff.r().as_slice(), f2.r().as_slice(), 1e-9);
+        check_qr(&a, &ff, 1e-10);
+    }
+
+    #[test]
+    fn dgeqrf_various_panel_widths() {
+        let a = Mat::random(17, 13, 34);
+        for nb in [1, 3, 8, 32] {
+            let f = dgeqrf_profiled(&a, nb).0;
+            check_qr(&a, &f, 1e-10);
+        }
+    }
+
+    #[test]
+    fn fig1_dgeqr2_is_gemv_dominated() {
+        let a = Mat::random(96, 96, 35);
+        let (_, prof) = dgeqr2_profiled(&a);
+        let l2 = prof.fraction(ProfiledOp::Dgemv) + prof.fraction(ProfiledOp::Dger);
+        assert!(l2 > 0.95, "DGEQR2 Level-2 share too small: {l2:.3}");
+    }
+
+    #[test]
+    fn fig1_dgeqrf_is_gemm_dominated() {
+        let a = Mat::random(128, 128, 36);
+        let (_, prof) = dgeqrf_profiled(&a, 16);
+        let gemm = prof.fraction(ProfiledOp::Dgemm);
+        assert!(gemm > 0.80, "DGEQRF DGEMM share too small: {gemm:.3}");
+    }
+
+    #[test]
+    fn rank_deficient_column_is_safe() {
+        // A zero column below the diagonal → τ = 0 path.
+        let mut a = Mat::random(8, 8, 37);
+        for i in 1..8 {
+            a[(i, 0)] = 0.0;
+        }
+        let f = dgeqr2(&a);
+        check_qr(&a, &f, 1e-10);
+    }
+}

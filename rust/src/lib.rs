@@ -1,0 +1,38 @@
+//! # redefine-blas
+//!
+//! Reproduction of *"Accelerating BLAS on Custom Architecture through
+//! Algorithm-Architecture Co-design"* (Merchant et al., 2016).
+//!
+//! The crate provides, as a library:
+//!
+//! * [`pe`] — a cycle-accurate, functional+timing simulator of the paper's
+//!   Processing Element at every enhancement level AE0–AE5 (§4.4–§5.4);
+//! * [`codegen`] — BLAS kernels compiled to PE instruction streams, one
+//!   emission strategy per enhancement (algorithms 1/3/4 of the paper);
+//! * [`blas`] / [`lapack`] — a host reference BLAS (Levels 1–3, plus
+//!   Strassen and Winograd baselines) and LAPACK-lite factorizations used
+//!   as oracles and for the Fig-1 profiling experiment;
+//! * [`dag`] — the DAG analysis of §4 (levels, widths, critical paths);
+//! * [`noc`] — the REDEFINE tile-array/NoC simulator for parallel DGEMM
+//!   (§5.5, Fig 12);
+//! * [`energy`] — the power/energy model behind every Gflops/W column;
+//! * [`platforms`] — analytical models of the comparison platforms
+//!   (multicore + cache simulation, GPU roofline, platform database) for
+//!   Fig 2 and Fig 11(j);
+//! * [`runtime`] / [`coordinator`] — the L3 co-simulation stack: values
+//!   from AOT-compiled XLA artifacts (PJRT), timing from the PE/NoC
+//!   simulators, Python never on the request path;
+//! * [`metrics`] — CPF/FPC/Gflops-per-watt accounting and table printers.
+
+pub mod blas;
+pub mod codegen;
+pub mod coordinator;
+pub mod dag;
+pub mod energy;
+pub mod lapack;
+pub mod metrics;
+pub mod noc;
+pub mod pe;
+pub mod platforms;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,179 @@
+//! `redefine` — CLI of the coordinator (the L3 leader entrypoint).
+//!
+//! Hand-rolled argument parsing (this environment vendors only the `xla`
+//! crate closure — no clap). Subcommands:
+//!
+//! ```text
+//! redefine gemm  --n 64 [--b 2] [--ae 5] [--artifacts DIR]
+//! redefine gemv  --n 64 [--ae 5]
+//! redefine ddot  --n 1024 [--ae 5]
+//! redefine serve --requests 16 --max-n 64 [--b 2] [--ae 5]
+//! redefine sweep                       # Tables 4-9 summary
+//! redefine artifacts [--artifacts DIR] # list loadable artifacts
+//! ```
+
+use redefine_blas::coordinator::{request::random_workload, Coordinator, CoordinatorConfig};
+use redefine_blas::metrics::{gemm_sweep, PAPER_SIZES};
+use redefine_blas::pe::{AeLevel, PeConfig};
+use redefine_blas::util::{Mat, XorShift64};
+use std::process::exit;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: redefine <gemm|gemv|ddot|serve|sweep|artifacts> [--n N] [--b B] \
+         [--ae 0..5] [--requests K] [--max-n N] [--artifacts DIR]"
+    );
+    exit(2)
+}
+
+#[derive(Debug)]
+struct Args {
+    cmd: String,
+    n: usize,
+    b: usize,
+    ae: AeLevel,
+    requests: usize,
+    max_n: usize,
+    artifacts: String,
+}
+
+fn parse_args() -> Args {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| usage());
+    let mut a = Args {
+        cmd,
+        n: 64,
+        b: 2,
+        ae: AeLevel::Ae5,
+        requests: 16,
+        max_n: 64,
+        artifacts: "artifacts".into(),
+    };
+    while let Some(flag) = it.next() {
+        let mut val = || it.next().unwrap_or_else(|| usage());
+        match flag.as_str() {
+            "--n" => a.n = val().parse().unwrap_or_else(|_| usage()),
+            "--b" => a.b = val().parse().unwrap_or_else(|_| usage()),
+            "--requests" => a.requests = val().parse().unwrap_or_else(|_| usage()),
+            "--max-n" => a.max_n = val().parse().unwrap_or_else(|_| usage()),
+            "--artifacts" => a.artifacts = val(),
+            "--ae" => {
+                let i: usize = val().parse().unwrap_or_else(|_| usage());
+                a.ae = *AeLevel::ALL.get(i).unwrap_or_else(|| usage());
+            }
+            _ => usage(),
+        }
+    }
+    a
+}
+
+fn main() {
+    let args = parse_args();
+    let cfg = CoordinatorConfig {
+        ae: args.ae,
+        b: args.b,
+        artifact_dir: args.artifacts.clone(),
+        verify: true,
+    };
+
+    match args.cmd.as_str() {
+        "gemm" => {
+            let n = args.n;
+            let a = Mat::random(n, n, 1);
+            let b = Mat::random(n, n, 2);
+            let c = Mat::zeros(n, n);
+            let mut co = Coordinator::new(cfg);
+            let r = co.dgemm(&a, &b, &c);
+            let pe_cfg = PeConfig::paper(args.ae);
+            println!(
+                "dgemm n={n} tiles={}x{} ae={} source={:?}",
+                args.b, args.b, args.ae, r.source
+            );
+            println!(
+                "  makespan={} cycles ({:.3} ms @{} GHz)  {:.3} Gflops  energy={:.3e} J",
+                r.makespan,
+                r.makespan as f64 * pe_cfg.cycle_ns() / 1e6,
+                pe_cfg.clock_ghz,
+                r.gflops(n, &pe_cfg),
+                r.energy_j
+            );
+            for (c, ready, compute, fin) in &r.tiles {
+                println!(
+                    "  tile ({},{})  ready={ready}  compute={compute}  finish={fin}",
+                    c.row, c.col
+                );
+            }
+        }
+        "gemv" => {
+            let n = args.n;
+            let a = Mat::random(n, n, 3);
+            let mut rng = XorShift64::new(4);
+            let x = rng.vec(n);
+            let y = rng.vec(n);
+            let mut co = Coordinator::new(cfg);
+            let (_, meas, source) = co.dgemv(&a, &x, &y);
+            println!(
+                "dgemv n={n} ae={} source={source:?}: {} cycles, {:.2}% of peak FPC, {:.2} Gflops/W",
+                args.ae,
+                meas.latency(),
+                meas.pct_peak_fpc(),
+                meas.gflops_per_watt()
+            );
+        }
+        "ddot" => {
+            let n = args.n;
+            let mut rng = XorShift64::new(5);
+            let x = rng.vec(n);
+            let y = rng.vec(n);
+            let mut co = Coordinator::new(cfg);
+            let (v, meas, source) = co.ddot(&x, &y);
+            println!(
+                "ddot n={n} ae={} source={source:?}: value={v:.6}, {} cycles, {:.2}% of peak FPC",
+                args.ae,
+                meas.latency(),
+                meas.pct_peak_fpc()
+            );
+        }
+        "serve" => {
+            let mut co = Coordinator::new(cfg);
+            let reqs = random_workload(args.requests, args.max_n, 42);
+            let t0 = std::time::Instant::now();
+            let resps = co.serve(reqs);
+            let wall = t0.elapsed();
+            let total_cycles: u64 = resps.iter().map(|r| r.cycles).sum();
+            println!(
+                "served {} requests in {:.1} ms wall; {} simulated cycles total",
+                resps.len(),
+                wall.as_secs_f64() * 1e3,
+                total_cycles
+            );
+            for r in &resps {
+                println!("  {:<6} n={:<4} cycles={:<9} source={:?}", r.op, r.n, r.cycles, r.source);
+            }
+        }
+        "sweep" => {
+            println!("DGEMM enhancement sweep (Tables 4-9):");
+            let sweep = gemm_sweep(&PAPER_SIZES);
+            for (ai, row) in sweep.iter().enumerate() {
+                print!("{:<22}", format!("{}", AeLevel::ALL[ai]));
+                for m in row {
+                    print!("{:>10}", m.latency());
+                }
+                println!();
+            }
+        }
+        "artifacts" => match redefine_blas::runtime::Runtime::new(&args.artifacts) {
+            Ok(rt) => {
+                println!("platform: {}", rt.platform());
+                for k in rt.available() {
+                    println!("  {}", k.file_name());
+                }
+            }
+            Err(e) => {
+                eprintln!("runtime unavailable: {e}");
+                exit(1);
+            }
+        },
+        _ => usage(),
+    }
+}

@@ -1,0 +1,293 @@
+//! Experiment metrics and harness: one-stop functions that run a BLAS
+//! routine on the simulated PE at a given enhancement level and return the
+//! paper's reported quantities (latency, CPF, FPC, %peak, Gflops/W, α).
+//!
+//! The bench binaries (`paper_tables`, `paper_figures`) and the examples
+//! are thin printers over this module, so every number in EXPERIMENTS.md is
+//! regenerated from one code path.
+
+pub mod paper;
+
+use crate::codegen::{self, layout::VecLayout, GemmLayout};
+use crate::energy::PowerModel;
+use crate::pe::{AeLevel, Pe, PeConfig, PeStats};
+use crate::util::{Mat, XorShift64};
+
+/// Which BLAS routine a measurement ran.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Routine {
+    Dgemm,
+    Dgemv,
+    Ddot,
+    Daxpy,
+    Dnrm2,
+}
+
+impl Routine {
+    pub fn name(self) -> &'static str {
+        match self {
+            Routine::Dgemm => "DGEMM",
+            Routine::Dgemv => "DGEMV",
+            Routine::Ddot => "DDOT",
+            Routine::Daxpy => "DAXPY",
+            Routine::Dnrm2 => "DNRM2",
+        }
+    }
+
+    /// Paper-convention flop count (mul + add + accumulate counted
+    /// separately — the convention under Tables 4–9; see DESIGN.md).
+    pub fn paper_flops(self, n: usize) -> u64 {
+        let n = n as u64;
+        match self {
+            Routine::Dgemm => 3 * n.pow(3),
+            Routine::Dgemv => 3 * n.pow(2),
+            Routine::Ddot => 3 * n,
+            Routine::Daxpy => 2 * n,
+            Routine::Dnrm2 => 3 * n + 1,
+        }
+    }
+
+    /// Standard flop count (one flop per add/mul).
+    pub fn std_flops(self, n: usize) -> u64 {
+        let n = n as u64;
+        match self {
+            Routine::Dgemm => 2 * n.pow(3),
+            Routine::Dgemv => 2 * n.pow(2),
+            Routine::Ddot => 2 * n,
+            Routine::Daxpy => 2 * n,
+            Routine::Dnrm2 => 2 * n + 1,
+        }
+    }
+}
+
+/// One measurement: a routine, a size, an enhancement level, and the
+/// resulting simulator statistics.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub routine: Routine,
+    pub n: usize,
+    pub ae: AeLevel,
+    pub stats: PeStats,
+    pub cfg: PeConfig,
+}
+
+impl Measurement {
+    /// Latency in clock cycles (the paper's tables).
+    pub fn latency(&self) -> u64 {
+        self.stats.cycles
+    }
+
+    /// CPF in the paper's 3n³ convention (Tables 4–9).
+    pub fn paper_cpf(&self) -> f64 {
+        self.stats.cycles as f64 / self.routine.paper_flops(self.n) as f64
+    }
+
+    /// FPC in the paper's convention (fig 11(d)).
+    pub fn paper_fpc(&self) -> f64 {
+        1.0 / self.paper_cpf()
+    }
+
+    /// Percentage of the configuration's peak FPC attained (fig 11(e)).
+    pub fn pct_peak_fpc(&self) -> f64 {
+        100.0 * self.paper_fpc() / self.ae.peak_fpc()
+    }
+
+    /// CPF with standard flop counting.
+    pub fn std_cpf(&self) -> f64 {
+        self.stats.cycles as f64 / self.routine.std_flops(self.n) as f64
+    }
+
+    /// α = latency / total computations in DOT4 terms (eq. 7, fig 11(b)).
+    /// The DOT4-work denominator is n³/4 for DGEMM regardless of level.
+    pub fn alpha(&self) -> f64 {
+        let dot4_work = match self.routine {
+            Routine::Dgemm => (self.n as u64).pow(3) / 4,
+            Routine::Dgemv => (self.n as u64).pow(2) / 4,
+            Routine::Ddot | Routine::Daxpy | Routine::Dnrm2 => self.n as u64 / 4,
+        };
+        self.stats.cycles as f64 / dot4_work.max(1) as f64
+    }
+
+    /// Gflops/W in the paper's convention (Tables 4–9 columns).
+    pub fn gflops_per_watt(&self) -> f64 {
+        PowerModel::paper().gflops_per_watt(
+            self.ae,
+            &self.cfg,
+            &self.stats,
+            self.routine.paper_flops(self.n),
+        )
+    }
+
+    /// Achieved Gflops (standard convention) at the PE clock.
+    pub fn gflops(&self) -> f64 {
+        self.routine.std_flops(self.n) as f64 / self.stats.seconds(&self.cfg) / 1e9
+    }
+}
+
+/// Run DGEMM on the PE simulator and verify the result against host BLAS.
+pub fn measure_gemm(n: usize, ae: AeLevel) -> Measurement {
+    let a = Mat::random(n, n, 0xA0 + n as u64);
+    let b = Mat::random(n, n, 0xB0 + n as u64);
+    let c = Mat::random(n, n, 0xC0 + n as u64);
+    measure_gemm_with(n, ae, &a, &b, &c)
+}
+
+/// Run DGEMM with caller-provided operands (numerics checked).
+pub fn measure_gemm_with(n: usize, ae: AeLevel, a: &Mat, b: &Mat, c: &Mat) -> Measurement {
+    assert!(n % 4 == 0, "pad to a multiple of 4 first");
+    let layout = GemmLayout::packed(n);
+    let prog = codegen::gen_gemm(n, ae, &layout);
+    let cfg = PeConfig::paper(ae);
+    let mut pe = Pe::new(cfg.clone(), layout.gm_words());
+    pe.write_gm(0, &layout.pack(a, b, c));
+    let stats = pe.run(&prog);
+    // Numerical check against the host reference.
+    let got = layout.unpack_c(&pe.gm, n, n);
+    let want = crate::blas::level3::dgemm_ref(a, b, c);
+    let err = crate::util::rel_fro_error(got.as_slice(), want.as_slice());
+    assert!(err < 1e-12, "PE DGEMM numerics off: rel err {err}");
+    Measurement { routine: Routine::Dgemm, n, ae, stats, cfg }
+}
+
+/// Run DGEMV on the PE simulator (numerics checked).
+pub fn measure_gemv(n: usize, ae: AeLevel) -> Measurement {
+    let a = Mat::random(n, n, 0xD0 + n as u64);
+    let mut rng = XorShift64::new(0xE0 + n as u64);
+    let x = rng.vec(n);
+    let y = rng.vec(n);
+    let l = VecLayout::gemv(n);
+    let prog = codegen::gen_gemv(n, ae, &l);
+    let cfg = PeConfig::paper(ae);
+    let mut pe = Pe::new(cfg.clone(), l.gm_words());
+    let mut gm = vec![0.0; l.gm_words()];
+    for i in 0..n {
+        for k in 0..n {
+            gm[l.a(i, k)] = a[(i, k)];
+        }
+    }
+    gm[l.base_x..l.base_x + n].copy_from_slice(&x);
+    gm[l.base_y..l.base_y + n].copy_from_slice(&y);
+    pe.write_gm(0, &gm);
+    let stats = pe.run(&prog);
+    let got = pe.read_gm(l.base_y, n).to_vec();
+    let want = crate::blas::level2::dgemv_ref(&a, &x, &y);
+    crate::util::assert_allclose(&got, &want, 1e-12);
+    Measurement { routine: Routine::Dgemv, n, ae, stats, cfg }
+}
+
+/// Run a Level-1 routine on the PE simulator (numerics checked).
+pub fn measure_level1(routine: Routine, n: usize, ae: AeLevel) -> Measurement {
+    let l = VecLayout::level1(n);
+    let mut rng = XorShift64::new(0xF0 + n as u64);
+    let x = rng.vec(n);
+    let y = rng.vec(n);
+    let alpha = 1.5;
+    let prog = match routine {
+        Routine::Ddot => codegen::gen_ddot(n, ae, &l),
+        Routine::Dnrm2 => codegen::gen_dnrm2(n, ae, &l),
+        Routine::Daxpy => codegen::gen_daxpy(n, alpha, ae, &l),
+        _ => panic!("not a level-1 routine: {routine:?}"),
+    };
+    let cfg = PeConfig::paper(ae);
+    let mut pe = Pe::new(cfg.clone(), l.gm_words());
+    pe.write_gm(l.base_x, &x);
+    pe.write_gm(l.base_y, &y);
+    let stats = pe.run(&prog);
+    match routine {
+        Routine::Ddot => {
+            let want: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            let got = pe.read_gm(l.scratch(), 1)[0];
+            assert!((got - want).abs() < 1e-10, "ddot numerics: {got} vs {want}");
+        }
+        Routine::Dnrm2 => {
+            let want = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+            let got = pe.read_gm(l.scratch(), 1)[0];
+            assert!((got - want).abs() < 1e-10, "dnrm2 numerics: {got} vs {want}");
+        }
+        Routine::Daxpy => {
+            let got = pe.read_gm(l.base_y, n).to_vec();
+            for k in 0..n {
+                let want = alpha * x[k] + y[k];
+                assert!((got[k] - want).abs() < 1e-10, "daxpy numerics at {k}");
+            }
+        }
+        _ => unreachable!(),
+    }
+    Measurement { routine, n, ae, stats, cfg }
+}
+
+/// The paper's representative matrix sizes (§4.5.1).
+pub const PAPER_SIZES: [usize; 5] = [20, 40, 60, 80, 100];
+
+/// Full enhancement sweep for DGEMM over the paper's sizes.
+/// Returns `[ae][size]` measurements.
+pub fn gemm_sweep(sizes: &[usize]) -> Vec<Vec<Measurement>> {
+    AeLevel::ALL
+        .iter()
+        .map(|&ae| sizes.iter().map(|&n| measure_gemm(n, ae)).collect())
+        .collect()
+}
+
+/// Render a paper-style table (one row per metric, one column per size).
+pub fn format_table(title: &str, sizes: &[usize], rows: &[(&str, Vec<String>)]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("### {title}\n"));
+    s.push_str(&format!("{:<38}", "Matrix Size"));
+    for n in sizes {
+        s.push_str(&format!("{:>12}", format!("{n}x{n}")));
+    }
+    s.push('\n');
+    for (label, cells) in rows {
+        s.push_str(&format!("{label:<38}"));
+        for c in cells {
+            s.push_str(&format!("{c:>12}"));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_flop_conventions() {
+        assert_eq!(Routine::Dgemm.paper_flops(20), 24_000);
+        assert_eq!(Routine::Dgemm.std_flops(20), 16_000);
+        assert_eq!(Routine::Dgemv.paper_flops(10), 300);
+        assert_eq!(Routine::Ddot.paper_flops(8), 24);
+    }
+
+    #[test]
+    fn measurement_metrics_consistent() {
+        let m = measure_gemm(8, AeLevel::Ae5);
+        assert!(m.paper_cpf() > 0.0);
+        assert!((m.paper_fpc() * m.paper_cpf() - 1.0).abs() < 1e-12);
+        assert!(m.pct_peak_fpc() > 0.0 && m.pct_peak_fpc() < 100.0);
+        assert!(m.alpha() >= 1.0, "α < 1 impossible: {}", m.alpha());
+        assert!(m.gflops_per_watt() > 0.0);
+    }
+
+    #[test]
+    fn gemv_and_level1_measurements_run() {
+        let m = measure_gemv(8, AeLevel::Ae3);
+        assert!(m.latency() > 0);
+        for r in [Routine::Ddot, Routine::Daxpy, Routine::Dnrm2] {
+            let m = measure_level1(r, 16, AeLevel::Ae4);
+            assert!(m.latency() > 0, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn table_formatter_shapes_output() {
+        let t = format_table(
+            "Demo",
+            &[20, 40],
+            &[("Latency", vec!["1".into(), "2".into()])],
+        );
+        assert!(t.contains("Demo"));
+        assert!(t.contains("20x20"));
+        assert!(t.lines().count() == 3);
+    }
+}

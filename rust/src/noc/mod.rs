@@ -1,0 +1,17 @@
+//! REDEFINE CGRA simulator: a b×b compute-tile array plus a memory column,
+//! connected by single-cycle routers on a 2-D mesh (§5.5, Fig 11(k)).
+//!
+//! Each compute tile hosts one PE as its Custom Function Unit; the last
+//! column of tiles stores the input/output matrices (the paper's "last
+//! column is used for storing input and output matrices"). Parallel DGEMM
+//! decomposes the output into (n/b)×(n/b) blocks, one per tile; each tile
+//! streams its A row-panel and B column-panel from the memory column,
+//! computes on its PE, and writes its C block back (Fig 12).
+
+pub mod router;
+pub mod sim;
+pub mod topology;
+
+pub use router::{LinkTraffic, RouterConfig};
+pub use sim::{parallel_dgemm, parallel_dgemm_cfg, NocRunReport, TileReport};
+pub use topology::{Coord, Topology};

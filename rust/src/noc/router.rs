@@ -1,0 +1,159 @@
+//! Router/link timing model of the REDEFINE NoC.
+//!
+//! ReconNoC [13] is a single-cycle router: one cycle per hop per flit, with
+//! wormhole flow through 64-bit links. A transfer of `words` f64 words from
+//! tile S to tile D under XY routing costs
+//!
+//! ```text
+//! latency = hops · router_cycle + (words · flits_per_word − 1) · link_cycle
+//! ```
+//!
+//! (head latency + serialization), and occupies every traversed link for
+//! the serialization time — the contention the Fig-12 small-matrix regime
+//! is dominated by. Link occupancy is tracked per directed link.
+
+use super::topology::{Coord, Topology};
+use std::collections::HashMap;
+
+/// Router/link timing parameters.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Cycles per hop for the head flit (ReconNoC: 1).
+    pub router_cycle: u64,
+    /// Cycles per flit on a link (64-bit link, one f64 word per flit).
+    pub link_cycle: u64,
+    /// Memory-tile service cycles per word (SRAM bank read/write).
+    pub mem_service_cycle: u64,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self { router_cycle: 1, link_cycle: 1, mem_service_cycle: 1 }
+    }
+}
+
+/// Per-directed-link busy-time bookkeeping.
+#[derive(Debug, Clone, Default)]
+pub struct LinkTraffic {
+    /// (from, to) → cycle at which the link becomes free.
+    free_at: HashMap<(Coord, Coord), u64>,
+    /// (from, to) → total busy cycles (utilization reporting).
+    busy: HashMap<(Coord, Coord), u64>,
+}
+
+impl LinkTraffic {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule a `words`-long transfer from `src` to `dst` starting no
+    /// earlier than `start`; returns (departure, arrival) cycles.
+    ///
+    /// The transfer claims each link of the XY path in sequence; contention
+    /// delays departure until every link is free (a conservative circuit-
+    /// style reservation — wormhole with backpressure behaves likewise
+    /// under saturation).
+    pub fn transfer(
+        &mut self,
+        topo: &Topology,
+        cfg: &RouterConfig,
+        src: Coord,
+        dst: Coord,
+        words: u64,
+        start: u64,
+    ) -> (u64, u64) {
+        if src == dst || words == 0 {
+            return (start, start + words * cfg.mem_service_cycle);
+        }
+        let path = topo.xy_path(src, dst);
+        let ser = words * cfg.link_cycle;
+        // Find the earliest departure at which all links are free.
+        let mut depart = start;
+        loop {
+            let mut pushed = depart;
+            for w in path.windows(2) {
+                let key = (w[0], w[1]);
+                let free = self.free_at.get(&key).copied().unwrap_or(0);
+                if free > pushed {
+                    pushed = free;
+                }
+            }
+            if pushed == depart {
+                break;
+            }
+            depart = pushed;
+        }
+        // Claim the links.
+        for w in path.windows(2) {
+            let key = (w[0], w[1]);
+            self.free_at.insert(key, depart + ser);
+            *self.busy.entry(key).or_insert(0) += ser;
+        }
+        let hops = (path.len() - 1) as u64;
+        let arrival = depart + hops * cfg.router_cycle + ser.saturating_sub(1)
+            + words * cfg.mem_service_cycle;
+        (depart, arrival)
+    }
+
+    /// Total busy cycles of the most-loaded link.
+    pub fn max_link_busy(&self) -> u64 {
+        self.busy.values().copied().max().unwrap_or(0)
+    }
+
+    /// Sum of busy cycles over all links.
+    pub fn total_busy(&self) -> u64 {
+        self.busy.values().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_latency_scales_with_hops_and_words() {
+        let topo = Topology::new(2);
+        let cfg = RouterConfig::default();
+        let mut t = LinkTraffic::new();
+        let (d1, a1) =
+            t.transfer(&topo, &cfg, Coord::new(0, 2), Coord::new(0, 0), 16, 0);
+        assert_eq!(d1, 0);
+        // 2 hops + 16 flits + service.
+        assert!(a1 >= 2 + 15 + 16, "arrival too early: {a1}");
+        let mut t2 = LinkTraffic::new();
+        let (_, a2) =
+            t2.transfer(&topo, &cfg, Coord::new(0, 2), Coord::new(1, 0), 16, 0);
+        assert!(a2 > a1, "more hops must take longer");
+    }
+
+    #[test]
+    fn contention_serializes_shared_link() {
+        let topo = Topology::new(2);
+        let cfg = RouterConfig::default();
+        let mut t = LinkTraffic::new();
+        // Two transfers sharing the memory-column link (0,2)→(0,1).
+        let (_, _) = t.transfer(&topo, &cfg, Coord::new(0, 2), Coord::new(0, 0), 100, 0);
+        let (d2, _) = t.transfer(&topo, &cfg, Coord::new(0, 2), Coord::new(0, 1), 100, 0);
+        assert!(d2 >= 100, "second transfer must wait for the shared link: {d2}");
+    }
+
+    #[test]
+    fn disjoint_paths_do_not_contend() {
+        let topo = Topology::new(2);
+        let cfg = RouterConfig::default();
+        let mut t = LinkTraffic::new();
+        let (_, _) = t.transfer(&topo, &cfg, Coord::new(0, 2), Coord::new(0, 0), 100, 0);
+        let (d2, _) = t.transfer(&topo, &cfg, Coord::new(1, 2), Coord::new(1, 0), 100, 0);
+        assert_eq!(d2, 0, "row-1 path is disjoint from row-0 path");
+    }
+
+    #[test]
+    fn same_tile_transfer_is_service_only() {
+        let topo = Topology::new(2);
+        let cfg = RouterConfig::default();
+        let mut t = LinkTraffic::new();
+        let (d, a) = t.transfer(&topo, &cfg, Coord::new(0, 0), Coord::new(0, 0), 10, 5);
+        assert_eq!(d, 5);
+        assert_eq!(a, 15);
+    }
+}

@@ -1,0 +1,222 @@
+//! Parallel DGEMM on the REDEFINE tile array (§5.5, Fig 12).
+//!
+//! Decomposition: the n×n output is cut into a b×b grid of (n/b)×(n/b)
+//! blocks, one per compute tile. A's row-panel `bi` and C's block-row live
+//! in the memory tile of row `bi`; B's column-panel `bj` lives in the
+//! memory tile of row `bj`. Each tile:
+//!
+//! 1. streams its A panel (m×n), B panel (n×m) and C block (m×m) from the
+//!    memory column over the NoC (contending on shared links),
+//! 2. runs the rectangular PE DGEMM kernel (values + cycles from the
+//!    cycle-accurate PE simulator at the chosen enhancement level),
+//! 3. streams its C block back.
+//!
+//! The makespan over tiles versus the single-PE latency gives the Fig-12
+//! speed-up; for small matrices the memory-column traffic dominates and the
+//! speed-up collapses — the paper's computation-to-communication argument.
+
+use super::router::{LinkTraffic, RouterConfig};
+use super::topology::{Coord, Topology};
+use crate::codegen::{gen_gemm_rect, GemmLayout};
+use crate::pe::{AeLevel, Pe, PeConfig};
+use crate::util::{round_up, Mat};
+
+/// Per-tile execution record.
+#[derive(Debug, Clone)]
+pub struct TileReport {
+    pub coord: Coord,
+    /// Output block indices (bi, bj).
+    pub block: (usize, usize),
+    /// Cycle at which all operands had arrived.
+    pub operands_ready: u64,
+    /// PE compute cycles for the block kernel.
+    pub compute_cycles: u64,
+    /// Cycle at which the C block write-back completed.
+    pub finish: u64,
+}
+
+/// Result of a parallel DGEMM run.
+#[derive(Debug, Clone)]
+pub struct NocRunReport {
+    pub n: usize,
+    pub b: usize,
+    pub ae: AeLevel,
+    pub tiles: Vec<TileReport>,
+    /// Makespan of the parallel run in cycles.
+    pub makespan: u64,
+    /// Single-PE latency for the same problem (same AE level).
+    pub single_pe_cycles: u64,
+    /// Busiest-link cycles (NoC hot-spot diagnostic).
+    pub max_link_busy: u64,
+}
+
+impl NocRunReport {
+    /// Fig-12 speed-up over the single-PE realization.
+    pub fn speedup(&self) -> f64 {
+        self.single_pe_cycles as f64 / self.makespan as f64
+    }
+
+    /// Mean computation-to-communication ratio across tiles.
+    pub fn compute_comm_ratio(&self) -> f64 {
+        let mut r = 0.0;
+        for t in &self.tiles {
+            let comm = (t.operands_ready + (t.finish - t.operands_ready - t.compute_cycles)) as f64;
+            r += t.compute_cycles as f64 / comm.max(1.0);
+        }
+        r / self.tiles.len() as f64
+    }
+}
+
+/// Run C ← A·B + C on a b×b REDEFINE tile array at enhancement level `ae`,
+/// verifying the assembled result against the host reference.
+///
+/// Requires n % b == 0; tile blocks are zero-padded up to multiples of 4
+/// for the PE kernel (the padding flops are part of the simulated cost, as
+/// they would be on the real fabric).
+pub fn parallel_dgemm(n: usize, b: usize, ae: AeLevel, a: &Mat, bm: &Mat, c: &Mat) -> NocRunReport {
+    parallel_dgemm_cfg(n, b, ae, a, bm, c, &RouterConfig::default())
+}
+
+/// [`parallel_dgemm`] with an explicit router configuration (ablations).
+#[allow(clippy::too_many_arguments)]
+pub fn parallel_dgemm_cfg(
+    n: usize,
+    b: usize,
+    ae: AeLevel,
+    a: &Mat,
+    bm: &Mat,
+    c: &Mat,
+    rcfg: &RouterConfig,
+) -> NocRunReport {
+    assert!(n % b == 0, "n ({n}) must divide by the tile-array order b ({b})");
+    assert_eq!((a.rows(), a.cols()), (n, n));
+    assert_eq!((bm.rows(), bm.cols()), (n, n));
+    assert_eq!((c.rows(), c.cols()), (n, n));
+    let topo = Topology::new(b);
+    let rcfg = rcfg.clone();
+    let mut links = LinkTraffic::new();
+    let m = n / b; // block edge
+    let mp = round_up(m, 4); // padded block edge for the PE kernel
+    let kp = round_up(n, 4); // padded inner dimension
+
+    let mut tiles = Vec::with_capacity(b * b);
+    let mut result = c.clone();
+    let mut makespan = 0u64;
+
+    for bi in 0..b {
+        for bj in 0..b {
+            let coord = Coord::new(bi, bj);
+            let mem_a = topo.memory_for_row(bi); // A panel + C block home
+            let mem_b = topo.memory_for_row(bj); // B panel home
+
+            // Operand streams (words) over the NoC, in issue order.
+            let (_, t_a) = links.transfer(&topo, &rcfg, mem_a, coord, (m * n) as u64, 0);
+            let (_, t_b) = links.transfer(&topo, &rcfg, mem_b, coord, (n * m) as u64, 0);
+            let (_, t_c) = links.transfer(&topo, &rcfg, mem_a, coord, (m * m) as u64, 0);
+            let ready = t_a.max(t_b).max(t_c);
+
+            // Block kernel on the tile's PE (values + cycles).
+            let a_blk = a.block(bi * m, 0, m, n);
+            let b_blk = bm.block(0, bj * m, n, m);
+            let c_blk = c.block(bi * m, bj * m, m, m);
+            let layout = GemmLayout::rect(mp, mp, kp);
+            let prog = gen_gemm_rect(mp, mp, kp, ae, &layout);
+            let mut pe = Pe::new(PeConfig::paper(ae), layout.gm_words());
+            pe.write_gm(0, &layout.pack(&a_blk, &b_blk, &c_blk));
+            let stats = pe.run(&prog);
+            let out = layout.unpack_c(&pe.gm, m, m);
+            result.set_block(bi * m, bj * m, &out);
+
+            // C write-back.
+            let (_, finish) =
+                links.transfer(&topo, &rcfg, coord, mem_a, (m * m) as u64, ready + stats.cycles);
+            makespan = makespan.max(finish);
+            tiles.push(TileReport {
+                coord,
+                block: (bi, bj),
+                operands_ready: ready,
+                compute_cycles: stats.cycles,
+                finish,
+            });
+        }
+    }
+
+    // Verify the assembled result against the host reference.
+    let want = crate::blas::level3::dgemm_ref(a, bm, c);
+    let err = crate::util::rel_fro_error(result.as_slice(), want.as_slice());
+    assert!(err < 1e-12, "NoC DGEMM numerics off: rel err {err}");
+
+    // Single-PE baseline at the same level (padded the same way).
+    let np = round_up(n, 4);
+    let layout = GemmLayout::rect(np, np, np);
+    let prog = gen_gemm_rect(np, np, np, ae, &layout);
+    let mut pe = Pe::new(PeConfig::paper(ae), layout.gm_words());
+    pe.write_gm(0, &layout.pack(a, bm, c));
+    let single = pe.run(&prog).cycles;
+
+    NocRunReport {
+        n,
+        b,
+        ae,
+        tiles,
+        makespan,
+        single_pe_cycles: single,
+        max_link_busy: links.max_link_busy(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Mat;
+
+    fn run(n: usize, b: usize) -> NocRunReport {
+        let a = Mat::random(n, n, 61);
+        let bm = Mat::random(n, n, 62);
+        let c = Mat::random(n, n, 63);
+        parallel_dgemm(n, b, AeLevel::Ae5, &a, &bm, &c)
+    }
+
+    #[test]
+    fn numerics_and_speedup_2x2() {
+        let r = run(24, 2);
+        assert!(r.speedup() > 1.5, "2x2 speed-up too low: {}", r.speedup());
+        assert!(r.speedup() <= 4.0 + 1e-9, "2x2 speed-up above b²: {}", r.speedup());
+    }
+
+    #[test]
+    fn numerics_3x3() {
+        let r = run(24, 3);
+        assert!(r.speedup() > 2.0, "3x3 speed-up too low: {}", r.speedup());
+        assert!(r.speedup() <= 9.0 + 1e-9);
+    }
+
+    #[test]
+    fn speedup_grows_with_matrix_size() {
+        // The Fig-12 trend: speed-up approaches b² as n grows.
+        let small = run(16, 2).speedup();
+        let large = run(64, 2).speedup();
+        assert!(
+            large > small,
+            "speed-up must grow with n: {small:.2} → {large:.2}"
+        );
+        assert!(large > 2.7, "2x2 speed-up at n=64 should approach 4: {large:.2}");
+    }
+
+    #[test]
+    fn tiles_all_report() {
+        let r = run(24, 2);
+        assert_eq!(r.tiles.len(), 4);
+        for t in &r.tiles {
+            assert!(t.finish >= t.operands_ready + t.compute_cycles);
+            assert!(t.compute_cycles > 0);
+        }
+        assert!(r.max_link_busy > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn rejects_indivisible() {
+        run(25, 2);
+    }
+}

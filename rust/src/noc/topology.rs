@@ -1,0 +1,124 @@
+//! Mesh topology of the REDEFINE tile array.
+//!
+//! The fabric is a (rows × cols) mesh of tiles; the **last column** holds
+//! memory tiles (matrix storage), the rest are compute tiles with one PE
+//! each. Routing is dimension-ordered XY (the ReconNoC router of [13] is a
+//! low-overhead single-cycle router; XY is its deadlock-free baseline).
+
+/// Tile coordinate (row, col).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Coord {
+    pub row: usize,
+    pub col: usize,
+}
+
+impl Coord {
+    pub fn new(row: usize, col: usize) -> Self {
+        Self { row, col }
+    }
+}
+
+/// The tile-array topology.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// Compute array is `b × b`; one extra column of memory tiles.
+    pub b: usize,
+}
+
+impl Topology {
+    /// A b×b compute array with its memory column (paper: b ∈ {2, 3, 4}).
+    pub fn new(b: usize) -> Self {
+        assert!(b >= 1, "need at least one compute tile");
+        Self { b }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.b
+    }
+
+    /// Total columns including the memory column.
+    pub fn cols(&self) -> usize {
+        self.b + 1
+    }
+
+    /// Number of compute tiles.
+    pub fn compute_tiles(&self) -> usize {
+        self.b * self.b
+    }
+
+    /// Coordinates of every compute tile (row-major).
+    pub fn compute_coords(&self) -> Vec<Coord> {
+        (0..self.b)
+            .flat_map(|r| (0..self.b).map(move |c| Coord::new(r, c)))
+            .collect()
+    }
+
+    /// Memory tile serving a given row (same-row memory column tile).
+    pub fn memory_for_row(&self, row: usize) -> Coord {
+        assert!(row < self.b);
+        Coord::new(row, self.b)
+    }
+
+    /// XY-routed path from `from` to `to` (inclusive of endpoints):
+    /// X (column) first, then Y (row) — matching ReconNoC's dimension order.
+    pub fn xy_path(&self, from: Coord, to: Coord) -> Vec<Coord> {
+        assert!(from.row < self.rows() && to.row < self.rows());
+        assert!(from.col < self.cols() && to.col < self.cols());
+        let mut path = vec![from];
+        let mut cur = from;
+        while cur.col != to.col {
+            cur.col = if to.col > cur.col { cur.col + 1 } else { cur.col - 1 };
+            path.push(cur);
+        }
+        while cur.row != to.row {
+            cur.row = if to.row > cur.row { cur.row + 1 } else { cur.row - 1 };
+            path.push(cur);
+        }
+        path
+    }
+
+    /// Hop count (links traversed) between two tiles under XY routing.
+    pub fn hops(&self, from: Coord, to: Coord) -> usize {
+        self.xy_path(from, to).len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry() {
+        let t = Topology::new(3);
+        assert_eq!(t.compute_tiles(), 9);
+        assert_eq!(t.cols(), 4);
+        assert_eq!(t.compute_coords().len(), 9);
+        assert_eq!(t.memory_for_row(2), Coord::new(2, 3));
+    }
+
+    #[test]
+    fn xy_path_is_x_then_y() {
+        let t = Topology::new(4);
+        let p = t.xy_path(Coord::new(3, 0), Coord::new(0, 4));
+        assert_eq!(p.first(), Some(&Coord::new(3, 0)));
+        assert_eq!(p.last(), Some(&Coord::new(0, 4)));
+        // X leg first: the second node moves in column.
+        assert_eq!(p[1], Coord::new(3, 1));
+        assert_eq!(t.hops(Coord::new(3, 0), Coord::new(0, 4)), 7);
+    }
+
+    #[test]
+    fn zero_hop_path() {
+        let t = Topology::new(2);
+        let c = Coord::new(1, 1);
+        assert_eq!(t.hops(c, c), 0);
+        assert_eq!(t.xy_path(c, c), vec![c]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_coord() {
+        let t = Topology::new(2);
+        t.xy_path(Coord::new(0, 0), Coord::new(5, 0));
+    }
+}

@@ -1,0 +1,248 @@
+//! PE configurations: the initial PE (AE0, §4.4) and the five architectural
+//! enhancements AE1–AE5 (§5.1–§5.4), plus the timing parameters of the model.
+//!
+//! Timing constants marked "calibrated" were fitted once so the simulated
+//! latency tables land near Tables 4–9 of the paper; they are not free knobs
+//! per experiment — a single parameter set produces every table.
+
+use std::fmt;
+
+/// The architectural-enhancement level of the PE (paper §5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum AeLevel {
+    /// Initial PE (§4.4): RF + pipelined FPU, loads direct from GM,
+    /// shallow outstanding-request window (no computation/communication
+    /// overlap to speak of).
+    Ae0,
+    /// + Load-Store CFU and 256-kbit Local Memory (§5.1).
+    Ae1,
+    /// + DOT reconfigurable datapath (§5.2.1).
+    Ae2,
+    /// + Block Data Load/Store instructions (§5.2.2).
+    Ae3,
+    /// + 4× FPS↔LS-CFU bandwidth, 256-bit wide moves (§5.3).
+    Ae4,
+    /// + software pre-fetching via loop restructuring (§5.4, algorithm 4).
+    Ae5,
+}
+
+impl AeLevel {
+    pub const ALL: [AeLevel; 6] =
+        [AeLevel::Ae0, AeLevel::Ae1, AeLevel::Ae2, AeLevel::Ae3, AeLevel::Ae4, AeLevel::Ae5];
+
+    /// Local Memory + decoupled Load-Store CFU present?
+    pub fn has_lm(self) -> bool {
+        self >= AeLevel::Ae1
+    }
+
+    /// DOT2/3/4 reconfigurable datapath present?
+    pub fn has_dot(self) -> bool {
+        self >= AeLevel::Ae2
+    }
+
+    /// Single-handshake block GM transfers?
+    pub fn has_block_ldst(self) -> bool {
+        self >= AeLevel::Ae3
+    }
+
+    /// 256-bit FPS↔LS-CFU path (LmLd4/LmSt4)?
+    pub fn has_wide_path(self) -> bool {
+        self >= AeLevel::Ae4
+    }
+
+    /// Pre-fetching codegen (algorithm 4 loop structure)?
+    pub fn has_prefetch(self) -> bool {
+        self >= AeLevel::Ae5
+    }
+
+    /// Peak flops-per-cycle of the configuration (paper footnotes 6 and 7):
+    /// 2 for the mul+add pair, 7 once the DOT4 RDP is present (4 mul + 3 add
+    /// issued every cycle at full pipeline occupancy).
+    pub fn peak_fpc(self) -> f64 {
+        if self.has_dot() { 7.0 } else { 2.0 }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AeLevel::Ae0 => "AE0 (initial PE)",
+            AeLevel::Ae1 => "AE1 (+LM, LS-CFU)",
+            AeLevel::Ae2 => "AE2 (+DOT4 RDP)",
+            AeLevel::Ae3 => "AE3 (+block ld/st)",
+            AeLevel::Ae4 => "AE4 (+4x bandwidth)",
+            AeLevel::Ae5 => "AE5 (+pre-fetch)",
+        }
+    }
+}
+
+impl fmt::Display for AeLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// Full timing/structure configuration of a PE instance.
+#[derive(Debug, Clone)]
+pub struct PeConfig {
+    pub ae: AeLevel,
+    /// PE clock in GHz (paper operates the PE at 0.2 GHz).
+    pub clock_ghz: f64,
+    /// Adder pipeline depth (cycles).
+    pub lat_add: u32,
+    /// Multiplier pipeline depth.
+    pub lat_mul: u32,
+    /// Divider latency (non-pipelined).
+    pub lat_div: u32,
+    /// Square-root latency (non-pipelined).
+    pub lat_sqrt: u32,
+    /// Chained mul→add mac latency.
+    pub lat_mac: u32,
+    /// DOT RDP pipeline depth (paper: 15).
+    pub lat_dot: u32,
+    /// GM access latency — the paper models GM as a 20-stage pipelined delay.
+    pub gm_latency: u32,
+    /// GM port occupancy per scalar word: handshake + data (calibrated: the
+    /// AE0 table is consistent with ≈2 port-cycles/word plus window stalls).
+    pub gm_word_cycles: u32,
+    /// Extra GM handshake cycles per request (amortized away by AE3 blocks).
+    pub gm_req_overhead: u32,
+    /// Outstanding-GM-request window at AE0 (shallow: the initial PE has no
+    /// decoupled LS CFU, so latency is poorly hidden — calibrated depth 2).
+    pub ae0_mem_window: u32,
+    /// LM access latency (scratchpad SRAM).
+    pub lm_latency: u32,
+    /// LM port occupancy per scalar access (single-ported SRAM: calibrated 2).
+    pub lm_word_cycles: u32,
+    /// LM port occupancy of one 256-bit wide access at AE4.
+    pub lm_wide_cycles: u32,
+    /// Load-store queue depth of the decoupled LS CFU (AE1+).
+    pub lsq_depth: usize,
+    /// Instruction memory size in bytes (16 KB in the paper §4.5). The
+    /// codegen streams programs, but we track the high-water mark of live
+    /// loop bodies against this.
+    pub imem_bytes: usize,
+}
+
+impl PeConfig {
+    /// The paper's PE at a given enhancement level, with calibrated timing.
+    pub fn paper(ae: AeLevel) -> Self {
+        Self {
+            ae,
+            clock_ghz: 0.2,
+            lat_add: 3,
+            lat_mul: 4,
+            lat_div: 18,
+            lat_sqrt: 21,
+            lat_mac: 6,
+            lat_dot: 15,
+            gm_latency: 20,
+            gm_word_cycles: 1,
+            gm_req_overhead: 1,
+            ae0_mem_window: 3,
+            lm_latency: 2,
+            lm_word_cycles: 2,
+            lm_wide_cycles: 1,
+            lsq_depth: 16,
+            imem_bytes: 16 * 1024,
+        }
+    }
+
+    /// All six paper configurations in enhancement order.
+    pub fn paper_sweep() -> Vec<Self> {
+        AeLevel::ALL.iter().map(|&ae| Self::paper(ae)).collect()
+    }
+
+    /// Cycle time in nanoseconds.
+    pub fn cycle_ns(&self) -> f64 {
+        1.0 / self.clock_ghz
+    }
+
+    /// Latency of an arithmetic instruction class in cycles.
+    pub fn arith_latency(&self, kind: ArithKind) -> u32 {
+        match kind {
+            ArithKind::Add => self.lat_add,
+            ArithKind::Mul => self.lat_mul,
+            ArithKind::Div => self.lat_div,
+            ArithKind::Sqrt => self.lat_sqrt,
+            ArithKind::Mac => self.lat_mac,
+            ArithKind::Dot => self.lat_dot,
+        }
+    }
+}
+
+/// Arithmetic instruction classes (each maps to a functional unit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArithKind {
+    Add,
+    Mul,
+    Div,
+    Sqrt,
+    Mac,
+    Dot,
+}
+
+impl ArithKind {
+    /// Initiation interval: pipelined units accept one op/cycle, the divider
+    /// and square-root are iterative (non-pipelined).
+    pub fn initiation_interval(self, cfg: &PeConfig) -> u32 {
+        match self {
+            ArithKind::Div => cfg.lat_div,
+            ArithKind::Sqrt => cfg.lat_sqrt,
+            _ => 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn feature_ladder_is_monotone() {
+        let mut prev = (false, false, false, false, false);
+        for ae in AeLevel::ALL {
+            let cur = (
+                ae.has_lm(),
+                ae.has_dot(),
+                ae.has_block_ldst(),
+                ae.has_wide_path(),
+                ae.has_prefetch(),
+            );
+            // Features only ever turn on as the level rises.
+            assert!(!prev.0 || cur.0);
+            assert!(!prev.1 || cur.1);
+            assert!(!prev.2 || cur.2);
+            assert!(!prev.3 || cur.3);
+            assert!(!prev.4 || cur.4);
+            prev = cur;
+        }
+        assert!(AeLevel::Ae5.has_lm() && AeLevel::Ae5.has_prefetch());
+        assert!(!AeLevel::Ae0.has_lm());
+    }
+
+    #[test]
+    fn peak_fpc_matches_paper_footnotes() {
+        assert_eq!(AeLevel::Ae0.peak_fpc(), 2.0);
+        assert_eq!(AeLevel::Ae1.peak_fpc(), 2.0);
+        assert_eq!(AeLevel::Ae2.peak_fpc(), 7.0);
+        assert_eq!(AeLevel::Ae5.peak_fpc(), 7.0);
+    }
+
+    #[test]
+    fn paper_config_constants() {
+        let c = PeConfig::paper(AeLevel::Ae5);
+        assert_eq!(c.gm_latency, 20); // §4.5: 20-stage pipelined delay
+        assert_eq!(c.lat_dot, 15); // §5.2.1: 15-stage RDP
+        assert_eq!(c.clock_ghz, 0.2); // §4.5.1
+        assert_eq!(c.imem_bytes, 16 * 1024);
+        assert_eq!(c.cycle_ns(), 5.0);
+    }
+
+    #[test]
+    fn div_sqrt_not_pipelined() {
+        let c = PeConfig::paper(AeLevel::Ae0);
+        assert_eq!(ArithKind::Div.initiation_interval(&c), c.lat_div);
+        assert_eq!(ArithKind::Sqrt.initiation_interval(&c), c.lat_sqrt);
+        assert_eq!(ArithKind::Dot.initiation_interval(&c), 1);
+        assert_eq!(ArithKind::Mac.initiation_interval(&c), 1);
+    }
+}

@@ -1,0 +1,767 @@
+//! Cycle-accurate PE simulator core.
+//!
+//! The PE is an in-order, single-issue sequencer (FPS) with a register
+//! scoreboard, pipelined arithmetic units, a DOT RDP, and a decoupled
+//! Load-Store CFU owning the LM scratchpad and the GM port (§4.4–§5.3).
+//!
+//! Timing model: for an in-order machine, the issue time of instruction i is
+//!
+//! ```text
+//! t(i) = max( t(i-1) + 1,                  -- single issue
+//!             ready(srcs), ready(dst),     -- RAW + WAW scoreboard
+//!             fu_free(kind),               -- structural (div/sqrt iterative)
+//!             queue_space(LS engine) )     -- LSQ back-pressure
+//! ```
+//!
+//! computed in one pass over the program (O(1) per instruction). Registers
+//! are read at issue, so WAR hazards cannot occur in order. Memory ops are
+//! granted their port in program order; completion times respect port
+//! occupancy, GM pipeline latency (20 stages, §4.5) and block-transfer
+//! ordering. This is exactly the fixed-point of a cycle-by-cycle simulation
+//! of the same machine, evaluated directly.
+//!
+//! The simulator is *functional + timing*: it executes real f64 values, so
+//! every codegen kernel is numerically checked against the host BLAS while
+//! its latency is measured.
+
+use super::config::{AeLevel, ArithKind, PeConfig};
+use super::isa::{Instr, Program, NUM_REGS};
+use std::collections::VecDeque;
+
+/// Why an issue slot was lost (for the stall breakdown profile).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StallCause {
+    RawDep,
+    WawDep,
+    FuBusy,
+    LsqFull,
+    MemWindow,
+}
+
+/// Cycle/energy/traffic statistics of one program execution.
+#[derive(Debug, Clone, Default)]
+pub struct PeStats {
+    /// Total latency in clock cycles (issue of first instruction to last
+    /// completion — what Tables 4–9 report).
+    pub cycles: u64,
+    /// Instructions issued (excluding Halt).
+    pub instructions: u64,
+    /// Floating-point operations executed (standard 1-flop convention).
+    pub flops: u64,
+    /// DOT instructions executed (denominator of the paper's α, eq. 7).
+    pub dot_ops: u64,
+    /// Scalar mul/add/mac/div/sqrt operations.
+    pub scalar_fu_ops: u64,
+    /// Words moved over the GM port.
+    pub gm_words: u64,
+    /// GM requests (handshakes) — blocks count once at AE3+.
+    pub gm_requests: u64,
+    /// Words moved over the LM port.
+    pub lm_words: u64,
+    /// Register-file accesses (reads + writes).
+    pub rf_accesses: u64,
+    /// Issue-stall cycles by cause.
+    pub stall_raw: u64,
+    pub stall_waw: u64,
+    pub stall_fu: u64,
+    pub stall_lsq: u64,
+    pub stall_mem_window: u64,
+    /// Cycles the GM port was busy (for overlap accounting, fig 11(b)).
+    pub gm_busy_cycles: u64,
+    /// Cycles the LM port was busy.
+    pub lm_busy_cycles: u64,
+}
+
+impl PeStats {
+    /// Cycles-per-flop with the standard 2n³-style flop count (eq. 1).
+    pub fn cpf(&self) -> f64 {
+        self.cycles as f64 / self.flops.max(1) as f64
+    }
+
+    /// Flops-per-cycle (eq. 2).
+    pub fn fpc(&self) -> f64 {
+        1.0 / self.cpf()
+    }
+
+    /// Total issue stalls.
+    pub fn stalls(&self) -> u64 {
+        self.stall_raw + self.stall_waw + self.stall_fu + self.stall_lsq + self.stall_mem_window
+    }
+
+    /// Wall-clock seconds at the configured PE frequency.
+    pub fn seconds(&self, cfg: &PeConfig) -> f64 {
+        self.cycles as f64 * cfg.cycle_ns() * 1e-9
+    }
+
+    /// Achieved Gflops at the configured PE frequency.
+    pub fn gflops(&self, cfg: &PeConfig) -> f64 {
+        self.flops as f64 / self.seconds(cfg) / 1e9
+    }
+}
+
+/// Recent-writes ring used for coarse memory ordering between block engines
+/// and scalar accesses (a block fill must complete before a dependent read).
+#[derive(Debug, Clone)]
+struct RecentWrites {
+    ring: VecDeque<(u64, u64, u64)>, // (start, end, ready_cycle)
+    cap: usize,
+    /// Conservative floor: completion of the oldest evicted entry.
+    evicted_ready: u64,
+}
+
+impl RecentWrites {
+    fn new(cap: usize) -> Self {
+        Self { ring: VecDeque::with_capacity(cap), cap, evicted_ready: 0 }
+    }
+
+    fn record(&mut self, start: u64, len: u64, ready: u64) {
+        if self.ring.len() == self.cap {
+            if let Some((_, _, r)) = self.ring.pop_front() {
+                self.evicted_ready = self.evicted_ready.max(r);
+            }
+        }
+        self.ring.push_back((start, start + len, ready));
+    }
+
+    /// Earliest cycle a read of [start, start+len) may be serviced.
+    fn ready_for(&self, start: u64, len: u64) -> u64 {
+        let end = start + len;
+        let mut t = self.evicted_ready;
+        for &(s, e, r) in &self.ring {
+            if start < e && s < end {
+                t = t.max(r);
+            }
+        }
+        t
+    }
+}
+
+/// The PE machine: global memory, local memory, register file, and the
+/// timing state of one execution.
+pub struct Pe {
+    pub cfg: PeConfig,
+    pub gm: Vec<f64>,
+    lm: Vec<f64>,
+    regs: [f64; NUM_REGS],
+}
+
+impl Pe {
+    /// Build a PE over a global memory of `gm_words` f64 words.
+    pub fn new(cfg: PeConfig, gm_words: usize) -> Self {
+        Self {
+            cfg,
+            gm: vec![0.0; gm_words],
+            lm: vec![0.0; super::isa::LM_WORDS],
+            regs: [0.0; NUM_REGS],
+        }
+    }
+
+    /// Load data into GM at a word offset.
+    pub fn write_gm(&mut self, offset: usize, data: &[f64]) {
+        self.gm[offset..offset + data.len()].copy_from_slice(data);
+    }
+
+    /// Read back a GM region.
+    pub fn read_gm(&self, offset: usize, len: usize) -> &[f64] {
+        &self.gm[offset..offset + len]
+    }
+
+    /// Execute a program to completion, returning its statistics.
+    ///
+    /// Panics if the program fails static validation or uses features the
+    /// configured AE level does not provide (e.g. DOT before AE2) — codegen
+    /// bugs should be loud.
+    pub fn run(&mut self, prog: &Program) -> PeStats {
+        // Full static validation is a whole extra pass over multi-million-
+        // instruction programs; every generator validates at emission time
+        // (debug builds re-check here).
+        debug_assert!(prog.validate().is_ok());
+        let cfg = self.cfg.clone();
+        let ae = cfg.ae;
+
+        let mut st = PeStats::default();
+        // Scoreboard: cycle at which each register's pending write lands.
+        let mut reg_ready = [0u64; NUM_REGS];
+        // Per-FU next-free cycle (structural hazards).
+        let mut fu_free = [0u64; 6];
+        // Port timelines.
+        let mut gm_port_free: u64 = 0;
+        let mut lm_port_free: u64 = 0;
+        // LS queues: completion times of in-flight ops per engine.
+        let mut gm_q: VecDeque<u64> = VecDeque::new();
+        let mut lm_q: VecDeque<u64> = VecDeque::new();
+        // Memory-ordering state.
+        let mut lm_writes = RecentWrites::new(16);
+        let mut gm_writes = RecentWrites::new(16);
+
+        let mut t: u64 = 0; // issue cycle of the current instruction
+        let mut finish: u64 = 0; // completion high-water mark
+        let mut srcs = [0u8; 12];
+        let mut dsts = [0u8; 4];
+
+        for ins in &prog.instrs {
+            if matches!(ins, Instr::Halt) {
+                break;
+            }
+            self.check_features(ins, ae);
+
+            let ns = ins.srcs_into(&mut srcs);
+            let nd = ins.dsts_into(&mut dsts);
+            let srcs = &srcs[..ns];
+            let dsts = &dsts[..nd];
+
+            // Earliest legal issue cycle and the binding constraint.
+            let base = t; // t is already (prev issue + 1) from the update below
+            let mut ready = base;
+            let mut cause: Option<StallCause> = None;
+            for &r in srcs {
+                if reg_ready[r as usize] > ready {
+                    ready = reg_ready[r as usize];
+                    cause = Some(StallCause::RawDep);
+                }
+            }
+            for &r in dsts {
+                if reg_ready[r as usize] > ready {
+                    ready = reg_ready[r as usize];
+                    cause = Some(StallCause::WawDep);
+                }
+            }
+            if let Some(kind) = arith_kind(ins) {
+                let f = fu_free[kind as usize];
+                if f > ready {
+                    ready = f;
+                    cause = Some(StallCause::FuBusy);
+                }
+            }
+            if ins.is_mem() {
+                let (q, depth) = if is_gm_op(ins) {
+                    (&mut gm_q, if ae == AeLevel::Ae0 { cfg.ae0_mem_window as usize } else { cfg.lsq_depth })
+                } else {
+                    (&mut lm_q, cfg.lsq_depth)
+                };
+                while let Some(&c) = q.front() {
+                    if c <= ready {
+                        q.pop_front();
+                    } else {
+                        break;
+                    }
+                }
+                if q.len() >= depth {
+                    // Wait for the oldest in-flight op to drain.
+                    let c = *q.front().unwrap();
+                    if c > ready {
+                        ready = c;
+                        cause = Some(if ae == AeLevel::Ae0 && is_gm_op(ins) {
+                            StallCause::MemWindow
+                        } else {
+                            StallCause::LsqFull
+                        });
+                    }
+                    while let Some(&c2) = q.front() {
+                        if c2 <= ready {
+                            q.pop_front();
+                        } else {
+                            break;
+                        }
+                    }
+                }
+            }
+
+            let issue = ready;
+            if issue > base {
+                let stall = issue - base;
+                match cause {
+                    Some(StallCause::RawDep) => st.stall_raw += stall,
+                    Some(StallCause::WawDep) => st.stall_waw += stall,
+                    Some(StallCause::FuBusy) => st.stall_fu += stall,
+                    Some(StallCause::LsqFull) => st.stall_lsq += stall,
+                    Some(StallCause::MemWindow) => st.stall_mem_window += stall,
+                    None => {}
+                }
+            }
+
+            st.instructions += 1;
+            st.flops += ins.flops();
+            st.rf_accesses += (srcs.len() + dsts.len()) as u64;
+
+            // Execute (values) + schedule (timing).
+            let done = match *ins {
+                Instr::Li { rd, val } => {
+                    self.regs[rd as usize] = val;
+                    let done = issue + 1;
+                    reg_ready[rd as usize] = done;
+                    done
+                }
+                Instr::Nop => issue + 1,
+                Instr::Barrier => {
+                    // Loop-edge stall: the simple sequencer waits for every
+                    // FPS-visible operation (register writebacks, scalar
+                    // loads/stores) before fetching the next iteration. The
+                    // LS CFU's autonomous block engine is NOT drained — it
+                    // keeps streaming across iterations (§5.1 overlap).
+                    let mut drain = issue;
+                    for &r in reg_ready.iter() {
+                        drain = drain.max(r);
+                    }
+                    for &c in gm_q.iter().chain(lm_q.iter()) {
+                        drain = drain.max(c);
+                    }
+                    gm_q.clear();
+                    lm_q.clear();
+                    t = drain; // next instruction issues after the drain
+                    drain
+                }
+                Instr::Fadd { rd, ra, rb } => self.arith2(
+                    rd, self.regs[ra as usize] + self.regs[rb as usize],
+                    ArithKind::Add, issue, &cfg, &mut reg_ready, &mut fu_free, &mut st,
+                ),
+                Instr::Fsub { rd, ra, rb } => self.arith2(
+                    rd, self.regs[ra as usize] - self.regs[rb as usize],
+                    ArithKind::Add, issue, &cfg, &mut reg_ready, &mut fu_free, &mut st,
+                ),
+                Instr::Fmul { rd, ra, rb } => self.arith2(
+                    rd, self.regs[ra as usize] * self.regs[rb as usize],
+                    ArithKind::Mul, issue, &cfg, &mut reg_ready, &mut fu_free, &mut st,
+                ),
+                Instr::Fdiv { rd, ra, rb } => self.arith2(
+                    rd, self.regs[ra as usize] / self.regs[rb as usize],
+                    ArithKind::Div, issue, &cfg, &mut reg_ready, &mut fu_free, &mut st,
+                ),
+                Instr::Fsqrt { rd, ra } => self.arith2(
+                    rd, self.regs[ra as usize].sqrt(),
+                    ArithKind::Sqrt, issue, &cfg, &mut reg_ready, &mut fu_free, &mut st,
+                ),
+                Instr::Fmac { rd, ra, rb } => self.arith2(
+                    rd,
+                    self.regs[rd as usize] + self.regs[ra as usize] * self.regs[rb as usize],
+                    ArithKind::Mac, issue, &cfg, &mut reg_ready, &mut fu_free, &mut st,
+                ),
+                Instr::Dot { rd, ra, rb, n, acc } => {
+                    let mut s = if acc { self.regs[rd as usize] } else { 0.0 };
+                    for i in 0..n as usize {
+                        s += self.regs[ra as usize + i] * self.regs[rb as usize + i];
+                    }
+                    st.dot_ops += 1;
+                    self.arith2(rd, s, ArithKind::Dot, issue, &cfg, &mut reg_ready, &mut fu_free, &mut st)
+                }
+                Instr::Ld { rd, gm } => {
+                    let after = gm_writes.ready_for(gm as u64, 1);
+                    let grant = (issue + 1).max(gm_port_free).max(after);
+                    let busy = (cfg.gm_req_overhead + cfg.gm_word_cycles) as u64;
+                    gm_port_free = grant + busy;
+                    st.gm_busy_cycles += busy;
+                    st.gm_words += 1;
+                    st.gm_requests += 1;
+                    let done = grant + cfg.gm_latency as u64;
+                    self.regs[rd as usize] = self.gm[gm as usize];
+                    reg_ready[rd as usize] = done;
+                    gm_q.push_back(done);
+                    done
+                }
+                Instr::St { rs, gm } => {
+                    let grant = (issue + 1).max(gm_port_free);
+                    let busy = (cfg.gm_req_overhead + cfg.gm_word_cycles) as u64;
+                    gm_port_free = grant + busy;
+                    st.gm_busy_cycles += busy;
+                    st.gm_words += 1;
+                    st.gm_requests += 1;
+                    let done = grant + cfg.gm_latency as u64;
+                    self.gm[gm as usize] = self.regs[rs as usize];
+                    gm_writes.record(gm as u64, 1, done);
+                    gm_q.push_back(done);
+                    done
+                }
+                Instr::LmLd { rd, lm } => {
+                    let after = lm_writes.ready_for(lm as u64, 1);
+                    let grant = (issue + 1).max(lm_port_free).max(after);
+                    lm_port_free = grant + cfg.lm_word_cycles as u64;
+                    st.lm_busy_cycles += cfg.lm_word_cycles as u64;
+                    st.lm_words += 1;
+                    let done = grant + cfg.lm_latency as u64;
+                    self.regs[rd as usize] = self.lm[lm as usize];
+                    reg_ready[rd as usize] = done;
+                    lm_q.push_back(done);
+                    done
+                }
+                Instr::LmSt { rs, lm } => {
+                    let grant = (issue + 1).max(lm_port_free);
+                    lm_port_free = grant + cfg.lm_word_cycles as u64;
+                    st.lm_busy_cycles += cfg.lm_word_cycles as u64;
+                    st.lm_words += 1;
+                    let done = grant + cfg.lm_latency as u64;
+                    self.lm[lm as usize] = self.regs[rs as usize];
+                    lm_writes.record(lm as u64, 1, done);
+                    lm_q.push_back(done);
+                    done
+                }
+                Instr::LmLd4 { rd, lm } => {
+                    let after = lm_writes.ready_for(lm as u64, 4);
+                    let grant = (issue + 1).max(lm_port_free).max(after);
+                    lm_port_free = grant + cfg.lm_wide_cycles as u64;
+                    st.lm_busy_cycles += cfg.lm_wide_cycles as u64;
+                    st.lm_words += 4;
+                    let done = grant + cfg.lm_latency as u64;
+                    for i in 0..4 {
+                        self.regs[rd as usize + i] = self.lm[lm as usize + i];
+                        reg_ready[rd as usize + i] = done;
+                    }
+                    lm_q.push_back(done);
+                    done
+                }
+                Instr::LmSt4 { rs, lm } => {
+                    let grant = (issue + 1).max(lm_port_free);
+                    lm_port_free = grant + cfg.lm_wide_cycles as u64;
+                    st.lm_busy_cycles += cfg.lm_wide_cycles as u64;
+                    st.lm_words += 4;
+                    let done = grant + cfg.lm_latency as u64;
+                    for i in 0..4 {
+                        self.lm[lm as usize + i] = self.regs[rs as usize + i];
+                    }
+                    lm_writes.record(lm as u64, 4, done);
+                    lm_q.push_back(done);
+                    done
+                }
+                Instr::BlkLd { lm, gm, len } => {
+                    // GM -> LM block move by the LS CFU's autonomous block
+                    // engine: it runs across loop barriers (the CFU
+                    // "operates simultaneously with FPS", §5.1). At AE3+ a
+                    // single handshake covers the block; before AE3 the
+                    // engine pays a per-word GM handshake (§5.2.2). LM
+                    // writes stream at one word/cycle and are charged to the
+                    // LM port as *debt* behind which scalar accesses queue
+                    // (single-ported SRAM), without blocking the GM stream.
+                    let len64 = len as u64;
+                    let after = gm_writes.ready_for(gm as u64, len64);
+                    let grant = (issue + 1).max(gm_port_free).max(after);
+                    let (gm_busy, reqs) = if ae.has_block_ldst() {
+                        (cfg.gm_req_overhead as u64 + len64 * cfg.gm_word_cycles as u64, 1)
+                    } else {
+                        (len64 * (cfg.gm_req_overhead + cfg.gm_word_cycles) as u64, len64)
+                    };
+                    // With the AE4 wide path the SRAM port takes whole
+                    // 256-bit lines from the block engine (len/4 cycles).
+                    let lm_busy = if ae.has_wide_path() { len64.div_ceil(4) } else { len64 };
+                    gm_port_free = grant + gm_busy;
+                    lm_port_free = lm_port_free.max(grant) + lm_busy;
+                    st.gm_busy_cycles += gm_busy;
+                    st.lm_busy_cycles += lm_busy;
+                    st.gm_words += len64;
+                    st.gm_requests += reqs;
+                    st.lm_words += len64;
+                    let done = grant + cfg.gm_latency as u64 + gm_busy;
+                    for i in 0..len as usize {
+                        self.lm[lm as usize + i] = self.gm[gm as usize + i];
+                    }
+                    lm_writes.record(lm as u64, len64, done);
+                    done
+                }
+                Instr::BlkSt { lm, gm, len } => {
+                    let len64 = len as u64;
+                    let after = lm_writes.ready_for(lm as u64, len64);
+                    let grant = (issue + 1).max(gm_port_free).max(after);
+                    let (gm_busy, reqs) = if ae.has_block_ldst() {
+                        (cfg.gm_req_overhead as u64 + len64 * cfg.gm_word_cycles as u64, 1)
+                    } else {
+                        (len64 * (cfg.gm_req_overhead + cfg.gm_word_cycles) as u64, len64)
+                    };
+                    let lm_busy = if ae.has_wide_path() { len64.div_ceil(4) } else { len64 };
+                    gm_port_free = grant + gm_busy;
+                    lm_port_free = lm_port_free.max(grant) + lm_busy;
+                    st.gm_busy_cycles += gm_busy;
+                    st.lm_busy_cycles += lm_busy;
+                    st.gm_words += len64;
+                    st.gm_requests += reqs;
+                    st.lm_words += len64;
+                    let done = grant + cfg.gm_latency as u64 + gm_busy;
+                    for i in 0..len as usize {
+                        self.gm[gm as usize + i] = self.lm[lm as usize + i];
+                    }
+                    gm_writes.record(gm as u64, len64, done);
+                    done
+                }
+                Instr::Halt => unreachable!(),
+            };
+
+            finish = finish.max(done);
+            t = t.max(issue + 1);
+        }
+
+        st.cycles = finish.max(t);
+        st
+    }
+
+    /// Common scheduling for scalar arithmetic: write value, set scoreboard,
+    /// advance the unit's structural timeline.
+    #[allow(clippy::too_many_arguments)]
+    #[inline(always)]
+    fn arith2(
+        &mut self,
+        rd: u8,
+        value: f64,
+        kind: ArithKind,
+        issue: u64,
+        cfg: &PeConfig,
+        reg_ready: &mut [u64; NUM_REGS],
+        fu_free: &mut [u64; 6],
+        st: &mut PeStats,
+    ) -> u64 {
+        self.regs[rd as usize] = value;
+        let done = issue + cfg.arith_latency(kind) as u64;
+        reg_ready[rd as usize] = done;
+        fu_free[kind as usize] = issue + kind.initiation_interval(cfg) as u64;
+        if kind != ArithKind::Dot {
+            st.scalar_fu_ops += 1;
+        }
+        done
+    }
+
+    /// Panic if the instruction needs a feature the AE level lacks.
+    fn check_features(&self, ins: &Instr, ae: AeLevel) {
+        match ins {
+            Instr::LmLd { .. } | Instr::LmSt { .. } | Instr::BlkLd { .. } | Instr::BlkSt { .. } => {
+                assert!(ae.has_lm(), "{ins:?} requires AE1 Local Memory (config is {ae})");
+            }
+            Instr::LmLd4 { .. } | Instr::LmSt4 { .. } => {
+                assert!(ae.has_wide_path(), "{ins:?} requires AE4 wide path (config is {ae})");
+            }
+            Instr::Dot { .. } => {
+                assert!(ae.has_dot(), "{ins:?} requires AE2 DOT RDP (config is {ae})");
+            }
+            _ => {}
+        }
+    }
+}
+
+fn is_gm_op(ins: &Instr) -> bool {
+    matches!(ins, Instr::Ld { .. } | Instr::St { .. } | Instr::BlkLd { .. } | Instr::BlkSt { .. })
+}
+
+fn arith_kind(ins: &Instr) -> Option<ArithKind> {
+    match ins {
+        Instr::Fadd { .. } | Instr::Fsub { .. } => Some(ArithKind::Add),
+        Instr::Fmul { .. } => Some(ArithKind::Mul),
+        Instr::Fdiv { .. } => Some(ArithKind::Div),
+        Instr::Fsqrt { .. } => Some(ArithKind::Sqrt),
+        Instr::Fmac { .. } => Some(ArithKind::Mac),
+        Instr::Dot { .. } => Some(ArithKind::Dot),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::config::{AeLevel, PeConfig};
+    use crate::pe::isa::Instr as I;
+
+    fn pe(ae: AeLevel) -> Pe {
+        Pe::new(PeConfig::paper(ae), 1024)
+    }
+
+    #[test]
+    fn computes_values_through_gm() {
+        let mut pe = pe(AeLevel::Ae0);
+        pe.write_gm(0, &[3.0, 4.0]);
+        let mut p = Program::new();
+        p.push(I::Ld { rd: 0, gm: 0 });
+        p.push(I::Ld { rd: 1, gm: 1 });
+        p.push(I::Fmul { rd: 2, ra: 0, rb: 1 });
+        p.push(I::St { rs: 2, gm: 2 });
+        p.push(I::Halt);
+        let st = pe.run(&p);
+        assert_eq!(pe.read_gm(2, 1)[0], 12.0);
+        assert_eq!(st.flops, 1);
+        assert!(st.cycles >= 20, "must see GM latency, got {}", st.cycles);
+    }
+
+    #[test]
+    fn raw_dependency_stalls() {
+        let mut pe = pe(AeLevel::Ae0);
+        let mut p = Program::new();
+        p.push(I::Li { rd: 0, val: 1.0 });
+        p.push(I::Li { rd: 1, val: 2.0 });
+        // Dependent adds: each must wait lat_add cycles for the previous.
+        for _ in 0..10 {
+            p.push(I::Fadd { rd: 0, ra: 0, rb: 1 });
+        }
+        p.push(I::Halt);
+        let st = pe.run(&p);
+        assert_eq!(pe.regs[0], 21.0);
+        // 10 chained adds at latency lat_add: ≥ 9·lat_add cycles of chain.
+        let lat = PeConfig::paper(AeLevel::Ae0).lat_add as u64;
+        assert!(st.cycles >= 9 * lat, "chained adds too fast: {}", st.cycles);
+        assert!(st.stall_raw > 0);
+    }
+
+    #[test]
+    fn independent_adds_pipeline() {
+        let mut pe = pe(AeLevel::Ae0);
+        let mut p = Program::new();
+        p.push(I::Li { rd: 62, val: 1.0 });
+        p.push(I::Li { rd: 63, val: 2.0 });
+        for r in 0..32u8 {
+            p.push(I::Fadd { rd: r, ra: 62, rb: 63 });
+        }
+        p.push(I::Halt);
+        let st = pe.run(&p);
+        // 32 independent adds issue back-to-back: ~34 issue + 4 drain.
+        assert!(st.cycles < 45, "independent adds did not pipeline: {}", st.cycles);
+        assert_eq!(st.stall_raw, 0);
+    }
+
+    #[test]
+    fn div_is_not_pipelined() {
+        let mut pe = pe(AeLevel::Ae0);
+        let mut p = Program::new();
+        p.push(I::Li { rd: 60, val: 1.0 });
+        p.push(I::Li { rd: 61, val: 3.0 });
+        for r in 0..4u8 {
+            p.push(I::Fdiv { rd: r, ra: 60, rb: 61 });
+        }
+        p.push(I::Halt);
+        let st = pe.run(&p);
+        let cfg = PeConfig::paper(AeLevel::Ae0);
+        assert!(st.cycles as u32 >= 3 * cfg.lat_div, "divs pipelined?: {}", st.cycles);
+        assert!(st.stall_fu > 0);
+    }
+
+    #[test]
+    fn dot_requires_ae2() {
+        let mut pe = pe(AeLevel::Ae2);
+        pe.write_gm(0, &[1., 2., 3., 4., 10., 20., 30., 40.]);
+        let mut p = Program::new();
+        p.push(I::BlkLd { lm: 0, gm: 0, len: 8 });
+        for i in 0..8u8 {
+            p.push(I::LmLd { rd: i, lm: i as u32 });
+        }
+        p.push(I::Dot { rd: 8, ra: 0, rb: 4, n: 4, acc: false });
+        p.push(I::St { rs: 8, gm: 16 });
+        p.push(I::Halt);
+        let st = pe.run(&p);
+        assert_eq!(pe.read_gm(16, 1)[0], 1.0 * 10.0 + 2.0 * 20.0 + 3.0 * 30.0 + 4.0 * 40.0);
+        assert_eq!(st.dot_ops, 1);
+        assert_eq!(st.flops, 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "requires AE2")]
+    fn dot_panics_before_ae2() {
+        let mut pe = pe(AeLevel::Ae1);
+        let mut p = Program::new();
+        p.push(I::Dot { rd: 8, ra: 0, rb: 4, n: 4, acc: false });
+        p.push(I::Halt);
+        pe.run(&p);
+    }
+
+    #[test]
+    #[should_panic(expected = "requires AE1")]
+    fn lm_panics_on_ae0() {
+        let mut pe = pe(AeLevel::Ae0);
+        let mut p = Program::new();
+        p.push(I::LmLd { rd: 0, lm: 0 });
+        p.push(I::Halt);
+        pe.run(&p);
+    }
+
+    #[test]
+    fn block_load_then_read_orders_correctly() {
+        let mut pe = pe(AeLevel::Ae3);
+        pe.write_gm(0, &[7.0; 16]);
+        let mut p = Program::new();
+        p.push(I::BlkLd { lm: 0, gm: 0, len: 16 });
+        p.push(I::LmLd { rd: 0, lm: 15 });
+        p.push(I::St { rs: 0, gm: 100 });
+        p.push(I::Halt);
+        let st = pe.run(&p);
+        assert_eq!(pe.read_gm(100, 1)[0], 7.0);
+        // The scalar read must wait for the block fill (latency + 16 words).
+        assert!(st.cycles > 20 + 16, "read overtook block fill: {}", st.cycles);
+    }
+
+    #[test]
+    fn wide_load_moves_four_words() {
+        let mut pe = pe(AeLevel::Ae4);
+        pe.write_gm(0, &[1., 2., 3., 4.]);
+        let mut p = Program::new();
+        p.push(I::BlkLd { lm: 0, gm: 0, len: 4 });
+        p.push(I::LmLd4 { rd: 0, lm: 0 });
+        p.push(I::Dot { rd: 4, ra: 0, rb: 0, n: 4, acc: false });
+        p.push(I::St { rs: 4, gm: 10 });
+        p.push(I::Halt);
+        pe.run(&p);
+        assert_eq!(pe.read_gm(10, 1)[0], 1.0 + 4.0 + 9.0 + 16.0);
+    }
+
+    #[test]
+    fn ae0_window_throttles_gm_loads() {
+        // 64 independent GM loads: with the shallow AE0 window the total
+        // must be far above the port-only bound, approaching latency-bound.
+        let mut pe0 = pe(AeLevel::Ae0);
+        let mut p = Program::new();
+        for i in 0..64u8 {
+            let r = i % 32;
+            p.push(I::Ld { rd: r, gm: i as u32 });
+        }
+        p.push(I::Halt);
+        let st = pe0.run(&p);
+        let cfg = PeConfig::paper(AeLevel::Ae0);
+        let per_load = st.cycles as f64 / 64.0;
+        assert!(
+            per_load > 3.0 && per_load < cfg.gm_latency as f64,
+            "AE0 per-load cost {per_load} outside plausible window"
+        );
+        assert!(st.stall_mem_window > 0);
+    }
+
+    #[test]
+    fn lm_faster_than_gm_roundtrip() {
+        // Same data flow via LM (AE1) vs via GM (AE0): LM must win.
+        let mk = |via_lm: bool| {
+            let mut p = Program::new();
+            if via_lm {
+                p.push(I::BlkLd { lm: 0, gm: 0, len: 32 });
+                for i in 0..32u8 {
+                    p.push(I::LmLd { rd: i % 32, lm: i as u32 });
+                }
+            } else {
+                for i in 0..32u8 {
+                    p.push(I::Ld { rd: i % 32, gm: i as u32 });
+                }
+            }
+            p.push(I::Halt);
+            p
+        };
+        let mut a = pe(AeLevel::Ae1);
+        a.write_gm(0, &[1.0; 64]);
+        let with_lm = a.run(&mk(true)).cycles;
+        let mut b = pe(AeLevel::Ae0);
+        b.write_gm(0, &[1.0; 64]);
+        let without = b.run(&mk(false)).cycles;
+        assert!(
+            with_lm < without,
+            "LM path ({with_lm}) not faster than AE0 GM path ({without})"
+        );
+    }
+
+    #[test]
+    fn stats_accounting_consistent() {
+        let mut pe = pe(AeLevel::Ae2);
+        pe.write_gm(0, &[1.0; 32]);
+        let mut p = Program::new();
+        p.push(I::BlkLd { lm: 0, gm: 0, len: 8 });
+        for i in 0..8u8 {
+            p.push(I::LmLd { rd: i, lm: i as u32 });
+        }
+        p.push(I::Dot { rd: 10, ra: 0, rb: 4, n: 4, acc: false });
+        p.push(I::Fadd { rd: 11, ra: 10, rb: 10 });
+        p.push(I::Halt);
+        let st = pe.run(&p);
+        assert_eq!(st.instructions, 11);
+        assert_eq!(st.gm_words, 8);
+        assert_eq!(st.lm_words, 16); // 8 fill + 8 reads
+        assert_eq!(st.flops, 8);
+        assert_eq!(st.dot_ops, 1);
+        assert_eq!(st.scalar_fu_ops, 1);
+        assert!(st.cpf() > 0.0 && st.fpc() > 0.0);
+    }
+}

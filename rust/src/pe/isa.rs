@@ -1,0 +1,395 @@
+//! Instruction set of the Processing Element (paper §4.4–§5.4).
+//!
+//! The PE is an in-order, single-issue sequencer (the "Floating Point
+//! Sequencer", FPS) in front of pipelined double-precision units, plus a
+//! Load-Store CFU that owns the Local Memory (LM) and the Global Memory (GM)
+//! port. The enhancements AE1–AE5 progressively enable instructions:
+//!
+//! * AE0 (initial PE, §4.4): `Ld`/`St` (GM↔RF), scalar FPU ops, `Fmac`.
+//! * AE1 (§5.1): Local Memory + Load-Store CFU → `LmLd`/`LmSt` and
+//!   background `BlkLd`/`BlkSt` issued by the LS engine (scalar GM handshake).
+//! * AE2 (§5.2.1): the DOT reconfigurable datapath → `Dot { n: 2..4 }`.
+//! * AE3 (§5.2.2): Block Data Load/Store — `BlkLd`/`BlkSt` become single
+//!   instructions with one GM handshake per block instead of per word.
+//! * AE4 (§5.3): 4× FPS↔LS-CFU bandwidth → `LmLd4`/`LmSt4` (256-bit moves).
+//! * AE5 (§5.4): pre-fetching — a codegen change (algorithm 4), no new opcode.
+
+/// Register index into the 64-entry, 64-bit register file.
+pub type Reg = u8;
+
+/// Word address (f64-granular) into GM or LM.
+pub type Addr = u32;
+
+/// Number of architectural registers in the FPS register file (paper §4.4).
+pub const NUM_REGS: usize = 64;
+
+/// Local Memory capacity in f64 words: 256 kbit = 32 KiB = 4096 words (§5.1).
+pub const LM_WORDS: usize = 4096;
+
+/// Depth of the DOT4 reconfigurable datapath pipeline (paper §5.2.1).
+pub const DOT_PIPELINE_DEPTH: u32 = 15;
+
+/// A single PE instruction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Instr {
+    /// GM → RF scalar load (AE0 data path).
+    Ld { rd: Reg, gm: Addr },
+    /// RF → GM scalar store.
+    St { rs: Reg, gm: Addr },
+    /// LM → RF scalar load (requires AE1 Local Memory).
+    LmLd { rd: Reg, lm: Addr },
+    /// RF → LM scalar store (requires AE1).
+    LmSt { rs: Reg, lm: Addr },
+    /// LM → RF[rd..rd+4] 256-bit load (requires AE4 wide path).
+    LmLd4 { rd: Reg, lm: Addr },
+    /// RF[rs..rs+4] → LM 256-bit store (requires AE4).
+    LmSt4 { rs: Reg, lm: Addr },
+    /// GM → LM block transfer executed by the LS CFU (single handshake at
+    /// AE3+, per-word handshake before that).
+    BlkLd { lm: Addr, gm: Addr, len: u32 },
+    /// LM → GM block transfer.
+    BlkSt { lm: Addr, gm: Addr, len: u32 },
+    /// rd ← ra + rb.
+    Fadd { rd: Reg, ra: Reg, rb: Reg },
+    /// rd ← ra − rb.
+    Fsub { rd: Reg, ra: Reg, rb: Reg },
+    /// rd ← ra × rb.
+    Fmul { rd: Reg, ra: Reg, rb: Reg },
+    /// rd ← ra ÷ rb.
+    Fdiv { rd: Reg, ra: Reg, rb: Reg },
+    /// rd ← √ra.
+    Fsqrt { rd: Reg, ra: Reg },
+    /// rd ← rd + ra × rb (chained multiplier→adder, the AE0/AE1 mac path).
+    Fmac { rd: Reg, ra: Reg, rb: Reg },
+    /// rd ← (acc ? rd : 0) + Σ_{i<n} R[ra+i]·R[rb+i] on the RDP (AE2+).
+    /// `n` ∈ {2, 3, 4} selects the DOT2/DOT3/DOT4 configuration (§5.2.1).
+    Dot { rd: Reg, ra: Reg, rb: Reg, n: u8, acc: bool },
+    /// Load immediate constant into rd (assembler convenience; the real PE
+    /// reads constants from memory — costs one issue slot, no FU).
+    Li { rd: Reg, val: f64 },
+    /// No-operation (pipeline padding).
+    Nop,
+    /// Loop-boundary barrier: the simple FPS loop sequencer stalls at a
+    /// backward branch until every in-flight operation has completed
+    /// (fig 10 "before pre-fetching"). The AE5 restructured code (algorithm
+    /// 4) software-pipelines across iterations and emits none of these.
+    Barrier,
+    /// Stop the sequencer.
+    Halt,
+}
+
+impl Instr {
+    /// Floating-point operations performed by this instruction (standard
+    /// convention: one flop per add/sub/mul/div/sqrt; a mac is two).
+    pub fn flops(&self) -> u64 {
+        match *self {
+            Instr::Fadd { .. } | Instr::Fsub { .. } | Instr::Fmul { .. } => 1,
+            Instr::Fdiv { .. } | Instr::Fsqrt { .. } => 1,
+            Instr::Fmac { .. } => 2,
+            Instr::Dot { n, acc, .. } => {
+                // n multiplies, n-1 reduction adds, +1 accumulate add.
+                n as u64 + (n as u64 - 1) + if acc { 1 } else { 0 }
+            }
+            _ => 0,
+        }
+    }
+
+    /// True if the instruction is executed by the Load-Store CFU.
+    pub fn is_mem(&self) -> bool {
+        matches!(
+            self,
+            Instr::Ld { .. }
+                | Instr::St { .. }
+                | Instr::LmLd { .. }
+                | Instr::LmSt { .. }
+                | Instr::LmLd4 { .. }
+                | Instr::LmSt4 { .. }
+                | Instr::BlkLd { .. }
+                | Instr::BlkSt { .. }
+        )
+    }
+
+    /// True if the instruction is executed by the FPS arithmetic pipelines.
+    pub fn is_arith(&self) -> bool {
+        matches!(
+            self,
+            Instr::Fadd { .. }
+                | Instr::Fsub { .. }
+                | Instr::Fmul { .. }
+                | Instr::Fdiv { .. }
+                | Instr::Fsqrt { .. }
+                | Instr::Fmac { .. }
+                | Instr::Dot { .. }
+        )
+    }
+
+    /// Registers read by this instruction, written into a fixed buffer
+    /// (hot path — the simulator calls this once per instruction).
+    #[inline]
+    pub fn srcs_into(&self, out: &mut [Reg; 12]) -> usize {
+        let mut n = 0;
+        let mut push = |r: Reg| {
+            out[n] = r;
+            n += 1;
+        };
+        match *self {
+            Instr::St { rs, .. } | Instr::LmSt { rs, .. } => push(rs),
+            Instr::LmSt4 { rs, .. } => {
+                for k in 0..4 {
+                    push(rs + k);
+                }
+            }
+            Instr::Fadd { ra, rb, .. }
+            | Instr::Fsub { ra, rb, .. }
+            | Instr::Fmul { ra, rb, .. }
+            | Instr::Fdiv { ra, rb, .. } => {
+                push(ra);
+                push(rb);
+            }
+            Instr::Fsqrt { ra, .. } => push(ra),
+            Instr::Fmac { rd, ra, rb } => {
+                push(rd);
+                push(ra);
+                push(rb);
+            }
+            Instr::Dot { rd, ra, rb, n: w, acc } => {
+                for i in 0..w {
+                    push(ra + i);
+                    push(rb + i);
+                }
+                if acc {
+                    push(rd);
+                }
+            }
+            _ => {}
+        }
+        n
+    }
+
+    /// Registers written, into a fixed buffer (hot path).
+    #[inline]
+    pub fn dsts_into(&self, out: &mut [Reg; 4]) -> usize {
+        let mut n = 0;
+        let mut push = |r: Reg| {
+            out[n] = r;
+            n += 1;
+        };
+        match *self {
+            Instr::Ld { rd, .. } | Instr::LmLd { rd, .. } | Instr::Li { rd, .. } => push(rd),
+            Instr::LmLd4 { rd, .. } => {
+                for k in 0..4 {
+                    push(rd + k);
+                }
+            }
+            Instr::Fadd { rd, .. }
+            | Instr::Fsub { rd, .. }
+            | Instr::Fmul { rd, .. }
+            | Instr::Fdiv { rd, .. }
+            | Instr::Fsqrt { rd, .. }
+            | Instr::Fmac { rd, .. }
+            | Instr::Dot { rd, .. } => push(rd),
+            _ => {}
+        }
+        n
+    }
+
+    /// Registers read by this instruction, appended to `out`.
+    pub fn srcs(&self, out: &mut Vec<Reg>) {
+        match *self {
+            Instr::St { rs, .. } | Instr::LmSt { rs, .. } => out.push(rs),
+            Instr::LmSt4 { rs, .. } => out.extend((rs..rs + 4).collect::<Vec<_>>()),
+            Instr::Fadd { ra, rb, .. }
+            | Instr::Fsub { ra, rb, .. }
+            | Instr::Fmul { ra, rb, .. }
+            | Instr::Fdiv { ra, rb, .. } => {
+                out.push(ra);
+                out.push(rb);
+            }
+            Instr::Fsqrt { ra, .. } => out.push(ra),
+            Instr::Fmac { rd, ra, rb } => {
+                out.push(rd);
+                out.push(ra);
+                out.push(rb);
+            }
+            Instr::Dot { rd, ra, rb, n, acc } => {
+                for i in 0..n {
+                    out.push(ra + i);
+                    out.push(rb + i);
+                }
+                if acc {
+                    out.push(rd);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Registers written by this instruction, appended to `out`.
+    pub fn dsts(&self, out: &mut Vec<Reg>) {
+        match *self {
+            Instr::Ld { rd, .. } | Instr::LmLd { rd, .. } | Instr::Li { rd, .. } => out.push(rd),
+            Instr::LmLd4 { rd, .. } => out.extend((rd..rd + 4).collect::<Vec<_>>()),
+            Instr::Fadd { rd, .. }
+            | Instr::Fsub { rd, .. }
+            | Instr::Fmul { rd, .. }
+            | Instr::Fdiv { rd, .. }
+            | Instr::Fsqrt { rd, .. }
+            | Instr::Fmac { rd, .. }
+            | Instr::Dot { rd, .. } => out.push(rd),
+            _ => {}
+        }
+    }
+}
+
+/// A straight-line PE program (the codegen layer emits these; loops are
+/// unrolled by the generator, mirroring the paper's unrolled 4×4 blocks).
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub instrs: Vec<Instr>,
+}
+
+impl Program {
+    pub fn new() -> Self {
+        Self { instrs: Vec::new() }
+    }
+
+    pub fn push(&mut self, i: Instr) {
+        self.instrs.push(i);
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Total flop count of the program.
+    pub fn flops(&self) -> u64 {
+        self.instrs.iter().map(Instr::flops).sum()
+    }
+
+    /// Count of DOT instructions (denominator of the paper's α metric,
+    /// eq. 7: latency / total computations in terms of DOT4).
+    pub fn dot_count(&self) -> u64 {
+        self.instrs.iter().filter(|i| matches!(i, Instr::Dot { .. })).count() as u64
+    }
+
+    /// Validate static constraints: register indices in range, LM addresses
+    /// in range, wide ops 4-aligned in the register file.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut srcs = Vec::new();
+        let mut dsts = Vec::new();
+        for (pc, ins) in self.instrs.iter().enumerate() {
+            srcs.clear();
+            dsts.clear();
+            ins.srcs(&mut srcs);
+            ins.dsts(&mut dsts);
+            for &r in srcs.iter().chain(dsts.iter()) {
+                if (r as usize) >= NUM_REGS {
+                    return Err(format!("pc {pc}: register r{r} out of range"));
+                }
+            }
+            match *ins {
+                Instr::LmLd { lm, .. } | Instr::LmSt { lm, .. } => {
+                    if lm as usize >= LM_WORDS {
+                        return Err(format!("pc {pc}: LM address {lm} out of range"));
+                    }
+                }
+                Instr::LmLd4 { rd, lm } => {
+                    if rd as usize + 4 > NUM_REGS || lm as usize + 4 > LM_WORDS {
+                        return Err(format!("pc {pc}: wide load out of range"));
+                    }
+                }
+                Instr::LmSt4 { rs, lm } => {
+                    if rs as usize + 4 > NUM_REGS || lm as usize + 4 > LM_WORDS {
+                        return Err(format!("pc {pc}: wide store out of range"));
+                    }
+                }
+                Instr::BlkLd { lm, len, .. } | Instr::BlkSt { lm, len, .. } => {
+                    if lm as usize + len as usize > LM_WORDS {
+                        return Err(format!("pc {pc}: block transfer overruns LM"));
+                    }
+                }
+                Instr::Dot { n, ra, rb, .. } => {
+                    if !(2..=4).contains(&n) {
+                        return Err(format!("pc {pc}: DOT width {n} unsupported"));
+                    }
+                    if ra as usize + n as usize > NUM_REGS || rb as usize + n as usize > NUM_REGS {
+                        return Err(format!("pc {pc}: DOT operand window out of range"));
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flop_counts() {
+        assert_eq!(Instr::Fadd { rd: 0, ra: 1, rb: 2 }.flops(), 1);
+        assert_eq!(Instr::Fmac { rd: 0, ra: 1, rb: 2 }.flops(), 2);
+        assert_eq!(Instr::Dot { rd: 0, ra: 4, rb: 8, n: 4, acc: true }.flops(), 8);
+        assert_eq!(Instr::Dot { rd: 0, ra: 4, rb: 8, n: 4, acc: false }.flops(), 7);
+        assert_eq!(Instr::Ld { rd: 0, gm: 0 }.flops(), 0);
+    }
+
+    #[test]
+    fn src_dst_sets() {
+        let mut s = Vec::new();
+        let mut d = Vec::new();
+        let i = Instr::Dot { rd: 0, ra: 4, rb: 8, n: 3, acc: true };
+        i.srcs(&mut s);
+        i.dsts(&mut d);
+        assert_eq!(s, vec![4, 8, 5, 9, 6, 10, 0]);
+        assert_eq!(d, vec![0]);
+    }
+
+    #[test]
+    fn validate_catches_bad_reg() {
+        let mut p = Program::new();
+        p.push(Instr::Fadd { rd: 63, ra: 64, rb: 0 });
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_dot_width() {
+        let mut p = Program::new();
+        p.push(Instr::Dot { rd: 0, ra: 0, rb: 4, n: 5, acc: false });
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_lm_overrun() {
+        let mut p = Program::new();
+        p.push(Instr::BlkLd { lm: (LM_WORDS - 2) as Addr, gm: 0, len: 16 });
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_ok_program() {
+        let mut p = Program::new();
+        p.push(Instr::Ld { rd: 0, gm: 0 });
+        p.push(Instr::Ld { rd: 1, gm: 1 });
+        p.push(Instr::Fmul { rd: 2, ra: 0, rb: 1 });
+        p.push(Instr::St { rs: 2, gm: 2 });
+        p.push(Instr::Halt);
+        assert!(p.validate().is_ok());
+        assert_eq!(p.flops(), 1);
+    }
+
+    #[test]
+    fn mem_arith_classification() {
+        assert!(Instr::Ld { rd: 0, gm: 0 }.is_mem());
+        assert!(Instr::BlkLd { lm: 0, gm: 0, len: 4 }.is_mem());
+        assert!(Instr::Dot { rd: 0, ra: 0, rb: 4, n: 4, acc: false }.is_arith());
+        assert!(!Instr::Nop.is_mem());
+        assert!(!Instr::Halt.is_arith());
+    }
+}

@@ -1,0 +1,16 @@
+//! The Processing Element (PE): ISA, configuration, and cycle-accurate
+//! simulator — the custom-hardware substrate of the paper (§4.4–§5.4).
+//!
+//! The paper evaluated an RTL-level PE model; we substitute a cycle-accurate
+//! software model (see DESIGN.md substitution ledger). The simulator is both
+//! *functional* (executes real f64 values, so kernels are numerically
+//! validated) and *timing* (reproduces the latency/CPF/Gflops-per-watt
+//! tables through pipeline, scoreboard, port and queue modelling).
+
+pub mod config;
+pub mod core;
+pub mod isa;
+
+pub use config::{AeLevel, ArithKind, PeConfig};
+pub use core::{Pe, PeStats};
+pub use isa::{Addr, Instr, Program, Reg, DOT_PIPELINE_DEPTH, LM_WORDS, NUM_REGS};

@@ -1,0 +1,220 @@
+//! Set-associative cache simulator (LRU), used trace-driven over the
+//! reference-BLAS loop nests to reproduce the Fig-2 cache knees exactly for
+//! small n, and to cross-validate the analytical miss model in
+//! [`super::cpu`] that extends the curves to the paper's large sizes.
+
+/// One cache level's geometry.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    pub size_bytes: usize,
+    pub line_bytes: usize,
+    pub ways: usize,
+}
+
+impl CacheConfig {
+    /// Intel Haswell L1D: 32 KiB, 8-way, 64-byte lines.
+    pub fn haswell_l1d() -> Self {
+        Self { size_bytes: 32 * 1024, line_bytes: 64, ways: 8 }
+    }
+
+    /// Intel Haswell L2: 256 KiB, 8-way.
+    pub fn haswell_l2() -> Self {
+        Self { size_bytes: 256 * 1024, line_bytes: 64, ways: 8 }
+    }
+
+    /// Intel Haswell shared L3: 8 MiB, 16-way.
+    pub fn haswell_l3() -> Self {
+        Self { size_bytes: 8 * 1024 * 1024, line_bytes: 64, ways: 16 }
+    }
+
+    pub fn sets(&self) -> usize {
+        self.size_bytes / (self.line_bytes * self.ways)
+    }
+}
+
+/// A set-associative LRU cache.
+#[derive(Debug, Clone)]
+pub struct Cache {
+    cfg: CacheConfig,
+    /// Per-set tag stacks, most-recently-used first.
+    sets: Vec<Vec<u64>>,
+    pub accesses: u64,
+    pub misses: u64,
+}
+
+impl Cache {
+    pub fn new(cfg: CacheConfig) -> Self {
+        let sets = vec![Vec::with_capacity(cfg.ways); cfg.sets()];
+        Self { cfg, sets, accesses: 0, misses: 0 }
+    }
+
+    /// Access one byte address; returns true on hit.
+    pub fn access(&mut self, addr: u64) -> bool {
+        self.accesses += 1;
+        let line = addr / self.cfg.line_bytes as u64;
+        let set = (line % self.sets.len() as u64) as usize;
+        let stack = &mut self.sets[set];
+        if let Some(pos) = stack.iter().position(|&t| t == line) {
+            let t = stack.remove(pos);
+            stack.insert(0, t);
+            true
+        } else {
+            self.misses += 1;
+            if stack.len() == self.cfg.ways {
+                stack.pop();
+            }
+            stack.insert(0, line);
+            false
+        }
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        self.misses as f64 / self.accesses.max(1) as f64
+    }
+}
+
+/// A two-level hierarchy (L1 + L2) with a flat memory behind it; enough to
+/// produce the Fig-2 knees (L3 effects are folded into the analytical model
+/// in `cpu.rs`).
+#[derive(Debug)]
+pub struct CacheHierarchy {
+    pub l1: Cache,
+    pub l2: Cache,
+}
+
+impl CacheHierarchy {
+    pub fn haswell() -> Self {
+        Self {
+            l1: Cache::new(CacheConfig::haswell_l1d()),
+            l2: Cache::new(CacheConfig::haswell_l2()),
+        }
+    }
+
+    /// Access an address through the hierarchy; returns the level that hit
+    /// (1, 2) or 3 for memory.
+    pub fn access(&mut self, addr: u64) -> u8 {
+        if self.l1.access(addr) {
+            1
+        } else if self.l2.access(addr) {
+            2
+        } else {
+            3
+        }
+    }
+}
+
+/// Trace-driven cache statistics of the reference DGEMM (jki / column-gaxpy
+/// order — the Netlib inner loop) on an n×n problem: returns (accesses,
+/// l1_misses, l2_misses). Addresses are byte addresses of f64 elements with
+/// A at 0, B after A, C after B (column-major).
+pub fn trace_dgemm_jki(n: usize, h: &mut CacheHierarchy) -> (u64, u64, u64) {
+    let esz = 8u64;
+    let a0 = 0u64;
+    let b0 = (n * n) as u64 * esz;
+    let c0 = 2 * (n * n) as u64 * esz;
+    let idx = |base: u64, i: usize, j: usize| base + ((j * n + i) as u64) * esz;
+    let (a_l1_0, a_l2_0) = (h.l1.misses, h.l2.misses);
+    let acc0 = h.l1.accesses;
+    for j in 0..n {
+        for k in 0..n {
+            h.access(idx(b0, k, j)); // B(k,j) scalar
+            for i in 0..n {
+                h.access(idx(a0, i, k)); // A(i,k) stride-1
+                h.access(idx(c0, i, j)); // C(i,j) stride-1 (read-modify-write)
+            }
+        }
+    }
+    (h.l1.accesses - acc0, h.l1.misses - a_l1_0, h.l2.misses - a_l2_0)
+}
+
+/// Trace-driven cache statistics of the reference DGEMV (column sweep).
+pub fn trace_dgemv(n: usize, h: &mut CacheHierarchy) -> (u64, u64, u64) {
+    let esz = 8u64;
+    let a0 = 0u64;
+    let x0 = (n * n) as u64 * esz;
+    let y0 = x0 + n as u64 * esz;
+    let (m1, m2) = (h.l1.misses, h.l2.misses);
+    let acc0 = h.l1.accesses;
+    for j in 0..n {
+        h.access(x0 + (j as u64) * esz);
+        for i in 0..n {
+            h.access(a0 + ((j * n + i) as u64) * esz);
+            h.access(y0 + (i as u64) * esz);
+        }
+    }
+    (h.l1.accesses - acc0, h.l1.misses - m1, h.l2.misses - m2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry() {
+        let c = CacheConfig::haswell_l1d();
+        assert_eq!(c.sets(), 64);
+    }
+
+    #[test]
+    fn lru_within_set() {
+        // Direct-mapped-ish tiny cache: 2 ways, 1 set.
+        let cfg = CacheConfig { size_bytes: 128, line_bytes: 64, ways: 2 };
+        let mut c = Cache::new(cfg);
+        assert!(!c.access(0)); // miss
+        assert!(!c.access(64)); // miss
+        assert!(c.access(0)); // hit (LRU keeps both lines)
+        assert!(!c.access(128)); // miss, evicts 64
+        assert!(c.access(0)); // still resident
+        assert!(!c.access(64)); // was evicted
+    }
+
+    #[test]
+    fn repeated_access_hits() {
+        let mut c = Cache::new(CacheConfig::haswell_l1d());
+        c.access(1000);
+        for _ in 0..100 {
+            assert!(c.access(1000));
+        }
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn small_gemm_fits_l1() {
+        // 3 matrices of 16x16 f64 = 6 KiB < 32 KiB: only compulsory misses.
+        let mut h = CacheHierarchy::haswell();
+        let (acc, m1, _) = trace_dgemm_jki(16, &mut h);
+        assert!(acc > 0);
+        let lines = (3 * 16 * 16 * 8) / 64;
+        assert!(
+            m1 <= lines as u64 + 16,
+            "in-L1 GEMM should see only compulsory misses: {m1} vs {lines}"
+        );
+    }
+
+    #[test]
+    fn large_gemm_misses_grow() {
+        let mut h1 = CacheHierarchy::haswell();
+        let (acc1, m1s, _) = trace_dgemm_jki(16, &mut h1);
+        let mut h2 = CacheHierarchy::haswell();
+        let (acc2, m1l, _) = trace_dgemm_jki(96, &mut h2);
+        let rate_small = m1s as f64 / acc1 as f64;
+        let rate_large = m1l as f64 / acc2 as f64;
+        assert!(
+            rate_large > 3.0 * rate_small,
+            "out-of-L1 miss rate must jump: {rate_small:.5} → {rate_large:.5}"
+        );
+    }
+
+    #[test]
+    fn gemv_streams_a_once() {
+        let mut h = CacheHierarchy::haswell();
+        let (acc, m1, _) = trace_dgemv(64, &mut h);
+        // A is n² = 32 KiB: streamed once, ~1 miss per 8 elements.
+        let expected = (64 * 64) / 8;
+        assert!(acc > 0);
+        assert!(
+            (m1 as i64 - expected as i64).unsigned_abs() < expected as u64 / 2,
+            "GEMV misses {m1} far from streaming estimate {expected}"
+        );
+    }
+}

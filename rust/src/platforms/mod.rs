@@ -1,0 +1,27 @@
+//! Analytical models of the comparison platforms (§3, Fig 2, Fig 11(j)).
+//!
+//! The paper measured legacy BLAS on Intel Haswell / AMD Bulldozer with
+//! gcc, icc and icc+AVX, MAGMA on a Tesla C2050, and compared the PE's
+//! energy efficiency against published numbers for CPUs, GPUs, ClearSpeed
+//! CSX700 and an Altera FPGA. None of that hardware is available here, so
+//! we substitute models that capture the mechanisms behind the curves (see
+//! DESIGN.md substitution ledger):
+//!
+//! * [`cache`] — a set-associative cache simulator, trace-driven over the
+//!   actual reference-BLAS loop nests for small n and cross-validated
+//!   against the analytical miss model used for large n;
+//! * [`cpu`] — an issue-width/CPI multicore model (Fig 2(a)–(f), (h));
+//! * [`gpu`] — a roofline/occupancy model of the Tesla C2050
+//!   (Fig 2(g)–(i));
+//! * [`db`] — the platform database with published peak/TDP numbers
+//!   (Fig 11(j), the 3–140× Gflops/W comparison).
+
+pub mod cache;
+pub mod cpu;
+pub mod db;
+pub mod gpu;
+
+pub use cache::{Cache, CacheConfig, CacheHierarchy};
+pub use cpu::{CompilerSetup, CpuModel, CpuRun};
+pub use db::{platform_db, Platform};
+pub use gpu::GpuModel;

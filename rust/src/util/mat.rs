@@ -1,0 +1,258 @@
+//! Dense column-major f64 matrix, the container shared by the host BLAS,
+//! the codegen address generators, and the co-simulation coordinator.
+//!
+//! Column-major matches Fortran/Netlib BLAS conventions used by the paper.
+
+use crate::util::rng::XorShift64;
+
+/// Dense column-major matrix of f64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix of shape (rows, cols).
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix of order n.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Matrix from a column-major slice.
+    pub fn from_col_major(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols, "data length != rows*cols");
+        Self { rows, cols, data: data.to_vec() }
+    }
+
+    /// Matrix from a row-major slice (transposes into column-major storage).
+    pub fn from_row_major(rows: usize, cols: usize, data: &[f64]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = data[i * cols + j];
+            }
+        }
+        m
+    }
+
+    /// Random matrix with entries in [-1, 1), deterministic in `seed`.
+    pub fn random(rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = XorShift64::new(seed);
+        let mut m = Self::zeros(rows, cols);
+        rng.fill(&mut m.data);
+        m
+    }
+
+    /// Random symmetric positive-definite matrix (A = B·Bᵀ + n·I).
+    pub fn random_spd(n: usize, seed: u64) -> Self {
+        let b = Self::random(n, n, seed);
+        let mut a = Self::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[(i, k)] * b[(j, k)];
+                }
+                a[(i, j)] = s;
+            }
+            a[(i, i)] += n as f64;
+        }
+        a
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Leading dimension of the column-major storage (== rows).
+    pub fn ld(&self) -> usize {
+        self.rows
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Column-major linear index of (i, j).
+    #[inline]
+    pub fn idx(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < self.rows && j < self.cols, "({i},{j}) out of {}x{}", self.rows, self.cols);
+        j * self.rows + i
+    }
+
+    /// Borrow column j as a slice.
+    pub fn col(&self, j: usize) -> &[f64] {
+        let s = j * self.rows;
+        &self.data[s..s + self.rows]
+    }
+
+    /// Mutably borrow column j.
+    pub fn col_mut(&mut self, j: usize) -> &mut [f64] {
+        let s = j * self.rows;
+        &mut self.data[s..s + self.rows]
+    }
+
+    /// Copy row i out (strided gather).
+    pub fn row(&self, i: usize) -> Vec<f64> {
+        (0..self.cols).map(|j| self[(i, j)]).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Copy of the (br, bc) sub-block of shape (h, w) starting at (r0, c0).
+    pub fn block(&self, r0: usize, c0: usize, h: usize, w: usize) -> Mat {
+        assert!(r0 + h <= self.rows && c0 + w <= self.cols, "block out of range");
+        let mut b = Mat::zeros(h, w);
+        for j in 0..w {
+            for i in 0..h {
+                b[(i, j)] = self[(r0 + i, c0 + j)];
+            }
+        }
+        b
+    }
+
+    /// Write a block back at (r0, c0).
+    pub fn set_block(&mut self, r0: usize, c0: usize, b: &Mat) {
+        assert!(r0 + b.rows <= self.rows && c0 + b.cols <= self.cols);
+        for j in 0..b.cols {
+            for i in 0..b.rows {
+                self[(r0 + i, c0 + j)] = b[(i, j)];
+            }
+        }
+    }
+
+    /// Zero-pad (or keep) to shape (r, c) — used for 4×4-block alignment.
+    pub fn padded(&self, r: usize, c: usize) -> Mat {
+        assert!(r >= self.rows && c >= self.cols);
+        let mut p = Mat::zeros(r, c);
+        p.set_block(0, 0, self);
+        p
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Row-major copy of the data (for XLA literals, which default row-major).
+    pub fn to_row_major(&self) -> Vec<f64> {
+        let mut v = Vec::with_capacity(self.data.len());
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                v.push(self[(i, j)]);
+            }
+        }
+        v
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[j * self.rows + i]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[j * self.rows + i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::assert_allclose;
+
+    #[test]
+    fn eye_diag() {
+        let m = Mat::eye(3);
+        assert_eq!(m[(1, 1)], 1.0);
+        assert_eq!(m[(0, 1)], 0.0);
+    }
+
+    #[test]
+    fn row_major_round_trip() {
+        let m = Mat::from_row_major(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(0, 2)], 3.0);
+        assert_eq!(m[(1, 0)], 4.0);
+        assert_eq!(m.to_row_major(), vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn col_major_layout() {
+        let m = Mat::from_col_major(2, 2, &[1., 2., 3., 4.]);
+        assert_eq!(m[(0, 0)], 1.0);
+        assert_eq!(m[(1, 0)], 2.0);
+        assert_eq!(m[(0, 1)], 3.0);
+        assert_eq!(m.col(1), &[3., 4.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Mat::random(5, 3, 11);
+        let t = m.transpose().transpose();
+        assert_allclose(m.as_slice(), t.as_slice(), 0.0);
+    }
+
+    #[test]
+    fn block_round_trip() {
+        let m = Mat::random(8, 8, 3);
+        let b = m.block(4, 0, 4, 4);
+        let mut m2 = Mat::zeros(8, 8);
+        m2.set_block(4, 0, &b);
+        assert_eq!(m2[(4, 0)], m[(4, 0)]);
+        assert_eq!(m2[(7, 3)], m[(7, 3)]);
+        assert_eq!(m2[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn padding_preserves_content() {
+        let m = Mat::random(3, 3, 5);
+        let p = m.padded(4, 4);
+        assert_eq!(p.rows(), 4);
+        assert_eq!(p[(2, 2)], m[(2, 2)]);
+        assert_eq!(p[(3, 3)], 0.0);
+    }
+
+    #[test]
+    fn spd_is_symmetric() {
+        let a = Mat::random_spd(6, 2);
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!((a[(i, j)] - a[(j, i)]).abs() < 1e-12);
+            }
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Shared utilities: deterministic PRNG, dense matrix container, assertions.
+//!
+//! The paper uses Octave-generated random input matrices (§5.5). The PE's
+//! latency is data-independent, so any deterministic generator preserves the
+//! experiments; we use xorshift for reproducibility without external deps.
+
+pub mod mat;
+pub mod rng;
+
+pub use mat::Mat;
+pub use rng::XorShift64;
+
+/// Maximum absolute elementwise difference between two slices.
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+/// Relative Frobenius-norm error ||a - b||_F / max(||b||_F, eps).
+pub fn rel_fro_error(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in a.iter().zip(b.iter()) {
+        num += (x - y) * (x - y);
+        den += y * y;
+    }
+    (num.sqrt()) / den.sqrt().max(1e-300)
+}
+
+/// Assert two f64 slices are close within `tol` (absolute + relative blend).
+#[track_caller]
+pub fn assert_allclose(a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = 1.0f64.max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "element {i}: {x} vs {y} (tol {tol}, scaled {})",
+            tol * scale
+        );
+    }
+}
+
+/// Round `n` up to the next multiple of `m`.
+pub const fn round_up(n: usize, m: usize) -> usize {
+    n.div_ceil(m) * m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(20, 4), 20);
+        assert_eq!(round_up(21, 4), 24);
+        assert_eq!(round_up(1, 4), 4);
+        assert_eq!(round_up(0, 4), 0);
+    }
+
+    #[test]
+    fn max_abs_diff_basics() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.0, 2.5]), 0.5);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn rel_fro_error_zero_for_equal() {
+        let v = [1.0, -2.0, 3.0];
+        assert_eq!(rel_fro_error(&v, &v), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn allclose_detects_mismatch() {
+        assert_allclose(&[1.0], &[1.1], 1e-6);
+    }
+}

@@ -1,0 +1,174 @@
+//! Integration tests: the three layers composed.
+//!
+//! These tests require `make artifacts` to have run (they are skipped with
+//! a message when the artifact directory is absent, so `cargo test` works
+//! in a fresh checkout too).
+
+use redefine_blas::blas;
+use redefine_blas::coordinator::{request::Request, Coordinator, CoordinatorConfig, ValueSource};
+use redefine_blas::pe::AeLevel;
+use redefine_blas::runtime::Runtime;
+use redefine_blas::util::{assert_allclose, rel_fro_error, Mat, XorShift64};
+
+fn artifact_dir() -> Option<String> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("gemm_n8.hlo.txt").exists() {
+        Some(dir.to_string_lossy().into_owned())
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn xla_gemm_matches_host_all_sizes() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::new(&dir).expect("PJRT client");
+    for n in [8usize, 20, 40, 60, 80, 100] {
+        let a = Mat::random(n, n, n as u64);
+        let b = Mat::random(n, n, n as u64 + 1);
+        let c = Mat::random(n, n, n as u64 + 2);
+        let got = rt.gemm(&a, &b, &c).expect("gemm");
+        let want = blas::level3::dgemm_ref(&a, &b, &c);
+        let err = rel_fro_error(got.as_slice(), want.as_slice());
+        assert!(err < 1e-13, "n={n}: XLA gemm err {err}");
+    }
+}
+
+#[test]
+fn xla_gemv_and_level1_match_host() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::new(&dir).expect("PJRT client");
+    let mut rng = XorShift64::new(5150);
+
+    let n = 40;
+    let a = Mat::random(n, n, 1);
+    let x = rng.vec(n);
+    let y = rng.vec(n);
+    let got = rt.gemv(&a, &x, &y).expect("gemv");
+    assert_allclose(&got, &blas::level2::dgemv_ref(&a, &x, &y), 1e-13);
+
+    let m = 256;
+    let xv = rng.vec(m);
+    let yv = rng.vec(m);
+    let d = rt.dot(&xv, &yv).expect("dot");
+    assert!((d - blas::level1::ddot(&xv, &yv)).abs() < 1e-10);
+
+    let ax = rt.axpy(2.5, &xv, &yv).expect("axpy");
+    let mut want = yv.clone();
+    blas::level1::daxpy(2.5, &xv, &mut want);
+    assert_allclose(&ax, &want, 1e-13);
+
+    let nr = rt.nrm2(&xv).expect("nrm2");
+    assert!((nr - blas::level1::dnrm2(&xv)).abs() < 1e-10);
+}
+
+#[test]
+fn xla_qr_panel_matches_lapack_lite() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut rt = Runtime::new(&dir).expect("PJRT client");
+    let n = 32;
+    let a = Mat::random(n, n, 77);
+    let (out, tau) = rt.qr_panel(&a).expect("qr_panel");
+    // Compare against the host DGEQR2's first panel step.
+    let f = redefine_blas::lapack::dgeqr2(&a);
+    assert!((tau - f.tau[0]).abs() < 1e-12, "tau {tau} vs {}", f.tau[0]);
+    // Column 0 (beta + v tail) must match.
+    for i in 0..n {
+        assert!(
+            (out[(i, 0)] - f.a[(i, 0)]).abs() < 1e-10,
+            "col0[{i}]: {} vs {}",
+            out[(i, 0)],
+            f.a[(i, 0)]
+        );
+    }
+}
+
+#[test]
+fn coordinator_prefers_xla_and_verifies() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut co = Coordinator::new(CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 2,
+        artifact_dir: dir,
+        verify: true, // cross-checks XLA vs PE-sim internally
+    });
+    assert!(co.has_xla());
+    let n = 20;
+    let a = Mat::random(n, n, 8);
+    let b = Mat::random(n, n, 9);
+    let c = Mat::random(n, n, 10);
+    let r = co.dgemm(&a, &b, &c);
+    assert_eq!(r.source, ValueSource::Xla);
+    let want = blas::level3::dgemm_ref(&a, &b, &c);
+    assert!(rel_fro_error(r.c.as_slice(), want.as_slice()) < 1e-13);
+}
+
+#[test]
+fn coordinator_off_shape_falls_back_to_pe_sim() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut co = Coordinator::new(CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 2,
+        artifact_dir: dir,
+        verify: true,
+    });
+    let n = 36; // no artifact for 36
+    let a = Mat::random(n, n, 11);
+    let b = Mat::random(n, n, 12);
+    let c = Mat::zeros(n, n);
+    let r = co.dgemm(&a, &b, &c);
+    assert_eq!(r.source, ValueSource::PeSim);
+    let want = blas::level3::dgemm_ref(&a, &b, &c);
+    assert!(rel_fro_error(r.c.as_slice(), want.as_slice()) < 1e-12);
+}
+
+#[test]
+fn serve_loop_mixed_sources() {
+    let Some(dir) = artifact_dir() else { return };
+    let mut co = Coordinator::new(CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 2,
+        artifact_dir: dir,
+        verify: true,
+    });
+    let reqs = vec![
+        Request::RandomDgemm { n: 20, seed: 1 }, // artifact hit
+        Request::RandomDgemm { n: 24, seed: 2 }, // miss → PE sim
+        Request::Ddot { x: vec![1.0; 256], y: vec![2.0; 256] }, // artifact hit
+    ];
+    let resps = co.serve(reqs);
+    assert_eq!(resps[0].source, ValueSource::Xla);
+    assert_eq!(resps[1].source, ValueSource::PeSim);
+    assert_eq!(resps[2].source, ValueSource::Xla);
+    assert_eq!(resps[2].scalar, Some(512.0));
+}
+
+#[test]
+fn timing_is_independent_of_value_source() {
+    // Co-simulation invariant: swapping the value source must not change
+    // the simulated latency (timing comes from the PE/NoC models only).
+    let Some(dir) = artifact_dir() else { return };
+    let n = 20;
+    let a = Mat::random(n, n, 21);
+    let b = Mat::random(n, n, 22);
+    let c = Mat::zeros(n, n);
+    let mut with_xla = Coordinator::new(CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 2,
+        artifact_dir: dir,
+        verify: true,
+    });
+    let mut without = Coordinator::new(CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 2,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+    });
+    let r1 = with_xla.dgemm(&a, &b, &c);
+    let r2 = without.dgemm(&a, &b, &c);
+    assert_eq!(r1.source, ValueSource::Xla);
+    assert_eq!(r2.source, ValueSource::PeSim);
+    assert_eq!(r1.makespan, r2.makespan, "timing must not depend on value source");
+    assert_allclose(r1.c.as_slice(), r2.c.as_slice(), 1e-12);
+}

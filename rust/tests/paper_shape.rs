@@ -1,0 +1,185 @@
+//! Paper-shape regression tests: the simulated system must keep
+//! reproducing the *shape* of every table and figure — who wins, by what
+//! factor, where the knees fall. These are the acceptance criteria of the
+//! reproduction (see DESIGN.md §Calibration and EXPERIMENTS.md).
+
+use redefine_blas::metrics::paper;
+use redefine_blas::metrics::{gemm_sweep, measure_gemm, measure_gemv, measure_level1, Routine};
+use redefine_blas::noc::parallel_dgemm;
+use redefine_blas::pe::AeLevel;
+use redefine_blas::platforms::{
+    cpu::{model_dgemm, model_dgemv, CompilerSetup},
+    db, CpuModel, GpuModel,
+};
+use redefine_blas::util::Mat;
+
+/// One shared sweep for the table tests (n = 20..100 × AE0..AE5).
+fn sweep() -> Vec<Vec<redefine_blas::metrics::Measurement>> {
+    gemm_sweep(&paper::SIZES)
+}
+
+#[test]
+fn tables_4_to_9_within_tolerance() {
+    // Absolute latencies within 50% of the paper per cell (the model is a
+    // substitute substrate, not the authors' RTL), trends exact.
+    let s = sweep();
+    for ai in 0..6 {
+        for si in 0..5 {
+            let got = s[ai][si].latency() as f64;
+            let want = paper::LATENCY[ai][si] as f64;
+            let ratio = got / want;
+            assert!(
+                (0.67..1.5).contains(&ratio),
+                "table {} n={}: ratio {ratio:.2} ({got} vs {want})",
+                4 + ai,
+                paper::SIZES[si]
+            );
+        }
+    }
+}
+
+#[test]
+fn per_enhancement_improvements_match_paper_bands() {
+    // The tables' actual claims: AE1 ≈ 41-43%, AE2 ≈ 34-38%, AE3 ≈ 10-17%,
+    // AE4 ≈ 44-47%, AE5 ≈ 21-30%. Allow ±8 points of slack per transition.
+    let s = sweep();
+    for ai in 0..5 {
+        for si in 0..5 {
+            let meas = 1.0 - s[ai + 1][si].latency() as f64 / s[ai][si].latency() as f64;
+            let want = paper::paper_improvement(ai, si);
+            assert!(
+                (meas - want).abs() < 0.08,
+                "AE{}→AE{} n={}: improvement {meas:.3} vs paper {want:.3}",
+                ai,
+                ai + 1,
+                paper::SIZES[si]
+            );
+        }
+    }
+}
+
+#[test]
+fn fig11a_overall_speedup_band() {
+    let s = sweep();
+    for si in 0..5 {
+        let sp = s[0][si].latency() as f64 / s[5][si].latency() as f64;
+        assert!(
+            (5.5..10.5).contains(&sp),
+            "n={}: AE0→AE5 speed-up {sp:.2} outside the paper band (~7-8.3)",
+            paper::SIZES[si]
+        );
+    }
+}
+
+#[test]
+fn fig11b_alpha_trends_to_one() {
+    let mut alphas = Vec::new();
+    for &n in &paper::SIZES {
+        alphas.push(measure_gemm(n, AeLevel::Ae5).alpha());
+    }
+    for w in alphas.windows(2) {
+        assert!(w[1] <= w[0] + 0.02, "α must fall with n: {alphas:?}");
+    }
+    assert!(alphas[4] < 2.6, "α at n=100 should approach 1: {alphas:?}");
+    assert!(alphas[4] >= 1.0);
+}
+
+#[test]
+fn fig11e_pct_peak_dips_at_ae2_then_recovers() {
+    // The paper's most distinctive curve: %peak-FPC saturates ~54-62% at
+    // AE1 (peak 2), *drops* when the DOT4 RDP raises the peak to 7, then
+    // climbs back to ~74% at AE5.
+    let n = 100;
+    let pct: Vec<f64> =
+        AeLevel::ALL.iter().map(|&ae| measure_gemm(n, ae).pct_peak_fpc()).collect();
+    assert!(pct[1] > pct[2], "AE2 must dip below AE1 ({pct:?})");
+    assert!(pct[5] > pct[2] && pct[5] > pct[3], "must recover by AE5 ({pct:?})");
+    assert!(
+        (55.0..80.0).contains(&pct[5]),
+        "AE5 %peak {:.1} vs paper 74%",
+        pct[5]
+    );
+    assert!((45.0..70.0).contains(&pct[1]), "AE1 %peak {:.1} vs paper ~54-62%", pct[1]);
+}
+
+#[test]
+fn abstract_dgemv_and_ddot_efficiencies() {
+    let mv = measure_gemv(100, AeLevel::Ae5).pct_peak_fpc();
+    assert!(
+        (25.0..55.0).contains(&mv),
+        "DGEMV %peak {mv:.1} vs paper 40%"
+    );
+    let dd = measure_level1(Routine::Ddot, 1024, AeLevel::Ae5).pct_peak_fpc();
+    assert!((12.0..30.0).contains(&dd), "DDOT %peak {dd:.1} vs paper 20%");
+}
+
+#[test]
+fn gflops_per_watt_shape() {
+    // Tables' energy column: AE1 < AE0 (more hardware), AE2 is the minimum
+    // (RDP added, underused), AE5 is the maximum.
+    let s = sweep();
+    let gw: Vec<f64> = (0..6).map(|ai| s[ai][4].gflops_per_watt()).collect();
+    assert!(gw[1] < gw[0], "AE1 must cost efficiency: {gw:?}");
+    let min = gw.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!((gw[2] - min).abs() < 1e-9, "AE2 must be the minimum: {gw:?}");
+    let max = gw.iter().cloned().fold(0.0, f64::max);
+    assert!((gw[5] - max).abs() < 1e-9, "AE5 must be the maximum: {gw:?}");
+    assert!((20.0..45.0).contains(&gw[5]), "AE5 Gflops/W {:.1} vs paper 35.7", gw[5]);
+}
+
+#[test]
+fn fig2_cpu_story() {
+    let hw = CpuModel::haswell();
+    // gcc → icc → avx ladder at a large size.
+    let g = model_dgemm(&hw, 2000, CompilerSetup::Gcc).pct_peak(&hw);
+    let v = model_dgemm(&hw, 2000, CompilerSetup::IccAvx).pct_peak(&hw);
+    assert!(g < v, "compiler ladder inverted");
+    assert!((5.0..13.0).contains(&g), "gcc %peak {g:.1} (paper 10-11%)");
+    assert!((13.0..20.0).contains(&v), "avx %peak {v:.1} (paper 15-17%)");
+    // DGEMV far below.
+    let mv = model_dgemv(&hw, 4000, CompilerSetup::IccAvx).pct_peak(&hw);
+    assert!(mv < 9.0, "DGEMV %peak {mv:.1} (paper ~5%)");
+}
+
+#[test]
+fn fig2_gpu_story() {
+    let g = GpuModel::c2050();
+    assert!((53.0..59.0).contains(&g.dgemm_pct_peak(4096)));
+    assert!((3.0..7.0).contains(&g.dgemv_pct_peak(4096)));
+}
+
+#[test]
+fn fig11j_pe_wins_by_paper_factors() {
+    let pe_gw = measure_gemm(100, AeLevel::Ae5).gflops_per_watt();
+    let ratios: std::collections::HashMap<_, _> =
+        db::fig11j_ratios(pe_gw).into_iter().collect();
+    // Paper: ~3x CSX700, ~10x FPGA, 7-139x GPUs, 40-140x CPUs. Our PE runs
+    // ~20% slower than the paper's, so allow proportional slack.
+    assert!((1.5..8.0).contains(&ratios["ClearSpeed CSX700"]));
+    assert!((4.0..20.0).contains(&ratios["Altera Stratix-IV FPGA (LAPACKrc-class)"]));
+    assert!((7.0..139.0).contains(&ratios["Nvidia Tesla C2050 (MAGMA)"]));
+    assert!((25.0..400.0).contains(&ratios["Intel Core i7-4770 (Haswell)"]));
+    for (name, r) in &ratios {
+        assert!(*r > 1.0, "{name} must lose to the PE ({r:.2})");
+    }
+}
+
+#[test]
+fn fig12_scaling_shape() {
+    // Speed-up grows with n and with the tile array, staying under b².
+    let mk = |n: usize, b: usize| {
+        let a = Mat::random(n, n, 601);
+        let bm = Mat::random(n, n, 602);
+        let c = Mat::random(n, n, 603);
+        parallel_dgemm(n, b, AeLevel::Ae5, &a, &bm, &c).speedup()
+    };
+    let s2_small = mk(24, 2);
+    let s2_big = mk(96, 2);
+    let s3_big = mk(96, 3);
+    let s4_big = mk(96, 4);
+    assert!(s2_big > s2_small, "2x2 must improve with n: {s2_small:.2} → {s2_big:.2}");
+    assert!(s2_big > 2.5 && s2_big <= 4.0 + 1e-9, "2x2 at n=96: {s2_big:.2}");
+    assert!(s3_big > s2_big, "3x3 must beat 2x2: {s3_big:.2}");
+    assert!(s4_big > s3_big, "4x4 must beat 3x3: {s4_big:.2}");
+    assert!(s4_big <= 16.0 + 1e-9);
+}

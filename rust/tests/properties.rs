@@ -1,0 +1,210 @@
+//! Property-based tests over randomized inputs (dependency-free harness:
+//! a deterministic xorshift case generator plays the role proptest would —
+//! each property runs across dozens of generated cases and shrink-free
+//! failures print the offending seed).
+
+use redefine_blas::blas;
+use redefine_blas::codegen::{gen_gemm_rect, GemmLayout};
+use redefine_blas::coordinator::{Coordinator, CoordinatorConfig};
+use redefine_blas::metrics::{measure_gemm, measure_level1, Routine};
+use redefine_blas::noc::parallel_dgemm;
+use redefine_blas::pe::{AeLevel, Pe, PeConfig};
+use redefine_blas::util::{rel_fro_error, Mat, XorShift64};
+
+/// Run a property across `cases` generated seeds.
+fn forall(cases: u64, mut prop: impl FnMut(&mut XorShift64, u64)) {
+    for seed in 0..cases {
+        let mut rng = XorShift64::new(0xC0FFEE + seed * 7919);
+        prop(&mut rng, seed);
+    }
+}
+
+#[test]
+fn prop_rect_gemm_matches_host_any_shape_any_level() {
+    forall(24, |rng, seed| {
+        let m = 4 * (1 + rng.below(5));
+        let p = 4 * (1 + rng.below(5));
+        let k = 4 * (1 + rng.below(5));
+        let ae = AeLevel::ALL[rng.below(6)];
+        let a = Mat::random(m, k, seed * 3 + 1);
+        let b = Mat::random(k, p, seed * 3 + 2);
+        let c = Mat::random(m, p, seed * 3 + 3);
+        let layout = GemmLayout::rect(m, p, k);
+        let prog = gen_gemm_rect(m, p, k, ae, &layout);
+        let mut pe = Pe::new(PeConfig::paper(ae), layout.gm_words());
+        pe.write_gm(0, &layout.pack(&a, &b, &c));
+        let st = pe.run(&prog);
+        let got = layout.unpack_c(&pe.gm, m, p);
+        let want = blas::level3::dgemm_ref(&a, &b, &c);
+        let err = rel_fro_error(got.as_slice(), want.as_slice());
+        assert!(err < 1e-12, "seed {seed}: {m}x{p}x{k}@{ae}: err {err}");
+        // Timing invariants.
+        assert!(st.cycles >= st.instructions, "seed {seed}: issue width is 1");
+        assert!(st.flops == 2 * (m * p * k) as u64, "seed {seed}: flop count");
+    });
+}
+
+#[test]
+fn prop_enhancements_never_slow_down() {
+    forall(8, |rng, _| {
+        let n = 4 * (2 + rng.below(6));
+        let mut prev = u64::MAX;
+        for ae in AeLevel::ALL {
+            let cyc = measure_gemm(n, ae).latency();
+            assert!(cyc <= prev, "n={n}: {ae} regressed ({cyc} > {prev})");
+            prev = cyc;
+        }
+    });
+}
+
+#[test]
+fn prop_alpha_at_least_one_and_decreasing_in_n() {
+    // α = latency / DOT4-work ≥ 1 always (eq. 7 denominator is ideal work),
+    // and approaches 1 monotonically-ish as n grows (fig 11(b)).
+    for ae in [AeLevel::Ae2, AeLevel::Ae4, AeLevel::Ae5] {
+        let mut prev = f64::INFINITY;
+        for n in [20usize, 40, 60, 80, 100] {
+            let m = measure_gemm(n, ae);
+            let alpha = m.alpha();
+            assert!(alpha >= 1.0, "{ae} n={n}: α {alpha} < 1");
+            assert!(alpha <= prev + 0.05, "{ae} n={n}: α rising ({alpha} > {prev})");
+            prev = alpha;
+        }
+    }
+}
+
+#[test]
+fn prop_noc_speedup_bounded_by_tiles() {
+    forall(6, |rng, seed| {
+        let b = 2 + rng.below(3); // 2..4
+        let n = b * 4 * (1 + rng.below(3));
+        let a = Mat::random(n, n, seed + 100);
+        let bm = Mat::random(n, n, seed + 200);
+        let c = Mat::random(n, n, seed + 300);
+        let r = parallel_dgemm(n, b, AeLevel::Ae5, &a, &bm, &c);
+        let s = r.speedup();
+        assert!(s > 0.5, "b={b} n={n}: speedup {s} collapsed");
+        assert!(
+            s <= (b * b) as f64 + 1e-9,
+            "b={b} n={n}: superlinear speedup {s} impossible"
+        );
+    });
+}
+
+#[test]
+fn prop_coordinator_values_equal_host_blas() {
+    forall(10, |rng, seed| {
+        let n = 5 + rng.below(40); // arbitrary, unaligned sizes
+        let b = 1 + rng.below(3);
+        let a = Mat::random(n, n, seed + 1);
+        let bm = Mat::random(n, n, seed + 2);
+        let c = Mat::random(n, n, seed + 3);
+        let mut co = Coordinator::new(CoordinatorConfig {
+            ae: AeLevel::ALL[1 + rng.below(5)], // AE1..AE5
+            b,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+        });
+        let r = co.dgemm(&a, &bm, &c);
+        let want = blas::level3::dgemm_ref(&a, &bm, &c);
+        let err = rel_fro_error(r.c.as_slice(), want.as_slice());
+        assert!(err < 1e-12, "seed {seed} n={n} b={b}: err {err}");
+    });
+}
+
+#[test]
+fn prop_level1_numerics_and_memory_bound() {
+    forall(12, |rng, seed| {
+        let n = 4 * (1 + rng.below(64));
+        let ae = AeLevel::ALL[rng.below(6)];
+        for r in [Routine::Ddot, Routine::Daxpy, Routine::Dnrm2] {
+            // measure_level1 asserts numerics internally.
+            let m = measure_level1(r, n, ae);
+            assert!(m.latency() > 0, "seed {seed} {r:?}");
+            // Level-1 can never exceed the GM-bound: 2 words per element
+            // through a 1-word/cycle port ⇒ FPC ≤ ~2 paper-flops/cycle.
+            if n >= 64 {
+                assert!(
+                    m.paper_fpc() <= 3.5,
+                    "seed {seed} {r:?} n={n}: implausible FPC {}",
+                    m.paper_fpc()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_strassen_winograd_gemm_agree() {
+    forall(10, |rng, seed| {
+        let n = 3 + rng.below(40);
+        let a = Mat::random(n, n, seed + 11);
+        let b = Mat::random(n, n, seed + 12);
+        let g = blas::level3::dgemm_ref(&a, &b, &Mat::zeros(n, n));
+        let s = blas::strassen_multiply(&a, &b);
+        let w = blas::winograd_multiply(&a, &b);
+        assert!(rel_fro_error(s.as_slice(), g.as_slice()) < 1e-9, "seed {seed} SMM n={n}");
+        assert!(rel_fro_error(w.as_slice(), g.as_slice()) < 1e-9, "seed {seed} WMM n={n}");
+    });
+}
+
+#[test]
+fn prop_qr_factors_reconstruct() {
+    forall(8, |rng, seed| {
+        let m = 6 + rng.below(20);
+        let n = 3 + rng.below(m.min(16));
+        let a = Mat::random(m, n, seed + 21);
+        let f = redefine_blas::lapack::dgeqrf_profiled(&a, 1 + rng.below(8)).0;
+        let q = redefine_blas::lapack::form_q(&f);
+        let r = f.r();
+        let mut r_full = Mat::zeros(m, n);
+        r_full.set_block(0, 0, &r);
+        let qr = blas::level3::dgemm_ref(&q, &r_full, &Mat::zeros(m, n));
+        assert!(
+            rel_fro_error(qr.as_slice(), a.as_slice()) < 1e-10,
+            "seed {seed}: QR reconstruct {m}x{n}"
+        );
+    });
+}
+
+#[test]
+fn prop_lu_solve_random_systems() {
+    forall(10, |rng, seed| {
+        let n = 4 + rng.below(24);
+        let a = Mat::random_spd(n, seed + 31);
+        let x0 = XorShift64::new(seed + 32).vec(n);
+        let b = blas::level2::dgemv_ref(&a, &x0, &vec![0.0; n]);
+        let (f, _) = redefine_blas::lapack::dgetrf(&a);
+        let x = f.solve(&b);
+        for i in 0..n {
+            assert!((x[i] - x0[i]).abs() < 1e-7, "seed {seed} n={n} i={i}");
+        }
+        let _ = rng.next_u64();
+    });
+}
+
+#[test]
+fn prop_sim_determinism() {
+    // Identical runs must produce identical cycle counts and values — the
+    // whole experimental methodology rests on this.
+    let layout = GemmLayout::packed(24);
+    let prog = gen_gemm_rect(24, 24, 24, AeLevel::Ae5, &layout);
+    let a = Mat::random(24, 24, 41);
+    let b = Mat::random(24, 24, 42);
+    let c = Mat::random(24, 24, 43);
+    let gm = layout.pack(&a, &b, &c);
+    let mut first: Option<(u64, Vec<f64>)> = None;
+    for _ in 0..3 {
+        let mut pe = Pe::new(PeConfig::paper(AeLevel::Ae5), layout.gm_words());
+        pe.write_gm(0, &gm);
+        let st = pe.run(&prog);
+        let out = layout.unpack_c(&pe.gm, 24, 24).as_slice().to_vec();
+        match &first {
+            None => first = Some((st.cycles, out)),
+            Some((cyc, vals)) => {
+                assert_eq!(*cyc, st.cycles, "nondeterministic timing");
+                assert_eq!(vals, &out, "nondeterministic values");
+            }
+        }
+    }
+}
