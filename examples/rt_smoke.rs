@@ -2,11 +2,12 @@
 //! CPU PJRT client, and verify the numerics against host BLAS — the
 //! smallest possible proof that the L2→L3 bridge works.
 //!
-//! Run: `make artifacts && cargo run --release --example rt_smoke`
+//! Run: `make artifacts && cargo run --release --features pjrt --example rt_smoke`
+//! (requires the `pjrt` feature — see rust/Cargo.toml.)
 
 use redefine_blas::runtime::Runtime;
 use redefine_blas::util::Mat;
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut rt = Runtime::new("artifacts")?;
     println!("platform={} artifacts={:?}", rt.platform(), rt.available().len());
     let a = Mat::random(8, 8, 1);

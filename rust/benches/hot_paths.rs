@@ -6,11 +6,14 @@
 //!
 //! Run: `cargo bench --bench hot_paths`
 
-use redefine_blas::codegen::{gen_gemm, GemmLayout};
-use redefine_blas::coordinator::{request::random_workload, Coordinator, CoordinatorConfig};
+use redefine_blas::codegen::{gen_gemm, gen_gemm_rect, GemmLayout};
+use redefine_blas::coordinator::{
+    request::{random_workload, repeated_gemm_workload, Request},
+    Coordinator, CoordinatorConfig,
+};
 use redefine_blas::metrics::measure_gemm;
 use redefine_blas::pe::{AeLevel, Pe, PeConfig};
-use redefine_blas::util::Mat;
+use redefine_blas::util::{round_up, Mat};
 use std::time::Instant;
 
 fn timeit<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
@@ -87,4 +90,115 @@ fn main() {
         let r = redefine_blas::blas::level3::dgemm_ref(&big, &big, &big);
         assert!(r.rows() == 192);
     });
+
+    // 7) Serving engine: 64-request repeated-shape DGEMM workload —
+    //    warm program cache + persistent pool (serve_batch) vs the
+    //    seed-style per-request codegen + thread-spawn path. Values must be
+    //    identical; wall-clock is the cached-vs-uncached headline recorded
+    //    in CHANGES.md.
+    serving_engine_bench(64, 32, 2, AeLevel::Ae5);
+}
+
+/// The pre-serving-engine DGEMM path, kept verbatim as the bench baseline:
+/// every request re-emits the tile program inside freshly spawned tile
+/// threads and allocates a fresh PE per tile. Returns the assembled C.
+fn seed_style_dgemm(a: &Mat, b: &Mat, c: &Mat, ae: AeLevel, bb: usize) -> Mat {
+    let n = a.rows();
+    let np = round_up(n, 4 * bb);
+    let (ap, bp, cp) = (a.padded(np, np), b.padded(np, np), c.padded(np, np));
+    let m = np / bb;
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::scope(|s| {
+        for bi in 0..bb {
+            for bj in 0..bb {
+                let tx = tx.clone();
+                let a_blk = ap.block(bi * m, 0, m, np);
+                let b_blk = bp.block(0, bj * m, np, m);
+                let c_blk = cp.block(bi * m, bj * m, m, m);
+                s.spawn(move || {
+                    let layout = GemmLayout::rect(m, m, np);
+                    let prog = gen_gemm_rect(m, m, np, ae, &layout);
+                    let mut pe = Pe::new(PeConfig::paper(ae), layout.gm_words());
+                    pe.write_gm(0, &layout.pack(&a_blk, &b_blk, &c_blk));
+                    pe.run(&prog);
+                    let out = layout.unpack_c(&pe.gm, m, m);
+                    tx.send((bi, bj, out)).expect("leader hung up");
+                });
+            }
+        }
+        drop(tx);
+    });
+    let mut cpad = cp.clone();
+    for (bi, bj, out) in rx {
+        cpad.set_block(bi * m, bj * m, &out);
+    }
+    cpad.block(0, 0, n, n)
+}
+
+fn serving_engine_bench(requests: usize, n: usize, b: usize, ae: AeLevel) {
+    println!("\nserving engine: {requests} DGEMM requests, n={n}, {b}x{b} tiles, {ae}");
+    let mk_coord = || {
+        Coordinator::new(CoordinatorConfig {
+            ae,
+            b,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+        })
+    };
+
+    // Operands are materialized once, outside both timed regions, and both
+    // paths consume the same concrete Dgemm requests — the comparison times
+    // only codegen + simulation + dispatch.
+    let materialized: Vec<(Mat, Mat, Mat)> = repeated_gemm_workload(requests, n, 4242)
+        .into_iter()
+        .map(|r| match r.materialize() {
+            Request::Dgemm { a, b, c } => (a, b, c),
+            _ => unreachable!(),
+        })
+        .collect();
+    let concrete: Vec<Request> = materialized
+        .iter()
+        .map(|(a, bm, c)| Request::Dgemm { a: a.clone(), b: bm.clone(), c: c.clone() })
+        .collect();
+
+    // Baseline: per-request codegen + spawn, strictly sequential requests.
+    let t0 = Instant::now();
+    let baseline: Vec<Mat> =
+        materialized.iter().map(|(a, bm, c)| seed_style_dgemm(a, bm, c, ae, b)).collect();
+    let t_seed = t0.elapsed().as_secs_f64();
+
+    // Serving engine: warm the program cache, then time the batch.
+    let mut co = mk_coord();
+    let _ = co.serve_batch(repeated_gemm_workload(1, n, 1));
+    let t0 = Instant::now();
+    let resps = co.serve_batch(concrete);
+    let t_batch = t0.elapsed().as_secs_f64();
+
+    // Identical numeric results, request by request.
+    assert_eq!(resps.len(), baseline.len());
+    for (r, want) in resps.iter().zip(&baseline) {
+        let got = r.matrix.as_ref().expect("dgemm response carries a matrix");
+        assert_eq!(got, want, "serving engine values diverged from baseline");
+    }
+    let cs = co.cache_stats();
+    println!(
+        "{:<44} {:>10.3} ms total  ({:.1} req/s)",
+        "  seed-style: per-request codegen + spawn",
+        t_seed * 1e3,
+        requests as f64 / t_seed
+    );
+    println!(
+        "{:<44} {:>10.3} ms total  ({:.1} req/s)",
+        "  serve_batch: warm cache + worker pool",
+        t_batch * 1e3,
+        requests as f64 / t_batch
+    );
+    println!(
+        "{:<44} {:>10.2}x  (cache: {} kernels, {} hits / {} misses)",
+        "  throughput speedup",
+        t_seed / t_batch,
+        cs.entries,
+        cs.hits,
+        cs.misses
+    );
 }

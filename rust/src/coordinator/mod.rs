@@ -1,10 +1,14 @@
-//! L3 coordinator — the REDEFINE leader.
+//! L3 coordinator — the REDEFINE leader, structured as a serving engine.
 //!
-//! Owns the request loop of the system: it partitions BLAS calls into
-//! 4×4-register-blocked tile jobs, dispatches them across the simulated
-//! tile array (one host thread per tile — the PEs are independent, so the
-//! cycle-accurate simulations parallelize perfectly), schedules the operand
-//! streams over the NoC model, and merges results.
+//! Owns the request path of the system: it partitions BLAS calls into
+//! 4×4-register-blocked tile jobs, dispatches them across a **persistent
+//! pool** of tile workers (spawned once per coordinator — the PE
+//! simulations are independent, so they parallelize perfectly on host
+//! threads), schedules the operand streams over the NoC model, and merges
+//! results. Instruction streams are never re-emitted per request: a
+//! [`ProgramCache`] keyed by (routine, shape, AE level) emits each kernel
+//! once and shares it (`Arc`) across tile workers and requests — the
+//! paper's fixed-program, operands-only-move request path.
 //!
 //! Co-simulation split:
 //! * **timing/energy** — always from the PE + NoC simulators;
@@ -12,21 +16,25 @@
 //!   when they exist for the request shape (the production path: Python
 //!   never runs here, only HLO text compiled at build time), with the PE
 //!   simulator's own functional execution as the fallback and as a
-//!   cross-check (`verify`).
+//!   cross-check (`verify`). Without the `pjrt` feature the runtime is a
+//!   stub and every value comes from [`ValueSource::PeSim`].
 
+pub mod cache;
+mod pool;
 pub mod request;
 
+pub use cache::{CacheStats, ProgramCache, ProgramKey};
 pub use request::{Request, Response};
 
-use crate::codegen::{gen_gemm_rect, GemmLayout};
+use crate::codegen::GemmLayout;
 use crate::energy::PowerModel;
-use crate::metrics::{measure_level1, Measurement, Routine};
+use crate::metrics::{measure_gemv_prog, measure_level1_prog, Measurement, Routine};
 use crate::noc::{Coord, LinkTraffic, RouterConfig, Topology};
-use crate::pe::{AeLevel, Pe, PeConfig, PeStats};
+use crate::pe::{AeLevel, PeConfig, PeStats};
 use crate::runtime::Runtime;
 use crate::util::{round_up, Mat};
-use std::sync::mpsc;
-use std::thread;
+use pool::{TileDone, TileJob, TilePool};
+use std::sync::Arc;
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
@@ -78,23 +86,54 @@ impl DgemmResult {
     }
 }
 
-/// The coordinator.
+/// Bookkeeping for a DGEMM whose tile kernels are in flight on the pool.
+/// Created by [`Coordinator::submit_dgemm`], consumed by
+/// [`Coordinator::finish_dgemm`] once every tile result has been collected.
+pub(crate) struct PendingDgemm {
+    job_id: u64,
+    n: usize,
+    m: usize,
+    bb: usize,
+    ready: Vec<u64>,
+    links: LinkTraffic,
+    topo: Topology,
+    rcfg: RouterConfig,
+    cpad: Mat,
+}
+
+impl PendingDgemm {
+    pub(crate) fn job_id(&self) -> u64 {
+        self.job_id
+    }
+
+    pub(crate) fn tile_count(&self) -> usize {
+        self.bb * self.bb
+    }
+}
+
+/// The coordinator: cached programs + persistent tile workers + optional
+/// XLA value path.
 pub struct Coordinator {
     pub cfg: CoordinatorConfig,
     runtime: Option<Runtime>,
+    cache: ProgramCache,
+    pool: TilePool,
 }
 
 impl Coordinator {
     /// Build a coordinator; the XLA runtime is attached if the artifact
     /// directory exists and PJRT initializes (otherwise values fall back to
-    /// the PE simulator and a warning is recorded).
+    /// the PE simulator). The b×b tile workers are spawned here, once, and
+    /// live for the coordinator's lifetime.
     pub fn new(cfg: CoordinatorConfig) -> Self {
+        assert!(cfg.b >= 1, "need at least a 1x1 tile array");
         let runtime = if std::path::Path::new(&cfg.artifact_dir).is_dir() {
             Runtime::new(&cfg.artifact_dir).ok()
         } else {
             None
         };
-        Self { cfg, runtime }
+        let pool = TilePool::new(cfg.b * cfg.b, PeConfig::paper(cfg.ae));
+        Self { cfg, runtime, cache: ProgramCache::new(), pool }
     }
 
     /// True if the XLA value path is live.
@@ -110,12 +149,36 @@ impl Coordinator {
             .unwrap_or_default()
     }
 
+    /// The program cache (shape/AE-keyed kernel store).
+    pub fn cache(&self) -> &ProgramCache {
+        &self.cache
+    }
+
+    /// Program-cache counters (hits / misses / resident kernels).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Number of persistent tile workers.
+    pub fn pool_size(&self) -> usize {
+        self.pool.worker_count()
+    }
+
     /// Coordinated DGEMM: C ← A·B + C across the tile array.
     ///
     /// The problem is zero-padded to a multiple of 4b so each tile gets a
     /// 4-aligned block; padding cost is simulated (as it would be burned on
-    /// the real fabric).
+    /// the real fabric). The tile kernels run on the persistent pool with
+    /// the cached program for this (shape, AE) key.
     pub fn dgemm(&mut self, a: &Mat, b: &Mat, c: &Mat) -> DgemmResult {
+        let pending = self.submit_dgemm(0, a, b, c);
+        let outs = self.collect_job(&pending);
+        self.finish_dgemm(pending, outs, a, b, c)
+    }
+
+    /// Stage one DGEMM: schedule its operand streams on the NoC, fetch the
+    /// cached tile program, and enqueue all b×b tile jobs on the pool.
+    pub(crate) fn submit_dgemm(&self, job_id: u64, a: &Mat, b: &Mat, c: &Mat) -> PendingDgemm {
         let n = a.rows();
         assert!(a.cols() == n && b.rows() == n && b.cols() == n, "square DGEMM only");
         assert!(c.rows() == n && c.cols() == n);
@@ -143,69 +206,92 @@ impl Coordinator {
             }
         }
 
-        // 2) Tile kernels in parallel: one host thread per tile (the
-        //    leader/worker split — PE simulations are independent).
-        let (tx, rx) = mpssc_chan();
-        thread::scope(|s| {
-            for bi in 0..bb {
-                for bj in 0..bb {
-                    let tx = tx.clone();
-                    let a_blk = ap.block(bi * m, 0, m, np);
-                    let b_blk = bp.block(0, bj * m, np, m);
-                    let c_blk = cp.block(bi * m, bj * m, m, m);
-                    s.spawn(move || {
-                        let layout = GemmLayout::rect(m, m, np);
-                        let prog = gen_gemm_rect(m, m, np, ae, &layout);
-                        let mut pe = Pe::new(PeConfig::paper(ae), layout.gm_words());
-                        pe.write_gm(0, &layout.pack(&a_blk, &b_blk, &c_blk));
-                        let stats = pe.run(&prog);
-                        let out = layout.unpack_c(&pe.gm, m, m);
-                        tx.send((bi, bj, out, stats)).expect("leader hung up");
-                    });
-                }
+        // 2) One cached program shared by every tile of this request (and
+        //    by every later request of the same shape).
+        let prog = self.cache.gemm_rect(m, m, np, ae);
+        let layout = GemmLayout::rect(m, m, np);
+        for bi in 0..bb {
+            for bj in 0..bb {
+                let a_blk = ap.block(bi * m, 0, m, np);
+                let b_blk = bp.block(0, bj * m, np, m);
+                let c_blk = cp.block(bi * m, bj * m, m, m);
+                self.pool.submit(TileJob {
+                    job_id,
+                    tile_idx: bi * bb + bj,
+                    prog: Arc::clone(&prog),
+                    layout,
+                    gm: layout.pack(&a_blk, &b_blk, &c_blk),
+                });
             }
-            drop(tx);
-        });
+        }
 
-        // 3) Merge: assemble C, fold stats, schedule write-backs.
-        let mut cpad = cp.clone();
+        PendingDgemm { job_id, n, m, bb, ready, links, topo, rcfg, cpad: cp }
+    }
+
+    /// Receive the next finished tile from the pool (any job).
+    pub(crate) fn recv_tile(&self) -> TileDone {
+        self.pool.recv()
+    }
+
+    /// Collect exactly this job's tiles (single-request path).
+    pub(crate) fn collect_job(&self, pending: &PendingDgemm) -> Vec<(Mat, PeStats)> {
+        let count = pending.tile_count();
+        let mut slots: TileSlots = vec![None; count];
+        for _ in 0..count {
+            let d = self.recv_tile();
+            assert_eq!(d.job_id, pending.job_id(), "pool delivered a foreign tile");
+            slots[d.tile_idx] = Some((d.out, d.stats));
+        }
+        seal_slots(slots)
+    }
+
+    /// Merge collected tile results: assemble C, schedule write-backs in
+    /// tile order (deterministic regardless of worker arrival order), fold
+    /// stats/energy, and resolve the value source.
+    pub(crate) fn finish_dgemm(
+        &mut self,
+        mut pending: PendingDgemm,
+        outs: Vec<(Mat, PeStats)>,
+        a: &Mat,
+        b: &Mat,
+        c: &Mat,
+    ) -> DgemmResult {
+        let (bb, m, n) = (pending.bb, pending.m, pending.n);
+        assert_eq!(outs.len(), bb * bb);
         let mut agg = PeStats::default();
         let mut tiles = Vec::with_capacity(bb * bb);
         let mut makespan = 0u64;
         let mut energy = 0.0;
         let power = PowerModel::paper();
-        let pe_cfg = PeConfig::paper(ae);
-        for (bi, bj, out, stats) in rx {
-            cpad.set_block(bi * m, bj * m, &out);
+        let pe_cfg = PeConfig::paper(self.cfg.ae);
+        for (idx, (out, stats)) in outs.into_iter().enumerate() {
+            let (bi, bj) = (idx / bb, idx % bb);
+            pending.cpad.set_block(bi * m, bj * m, &out);
             let coord = Coord::new(bi, bj);
-            let r = ready[bi * bb + bj];
-            let (_, fin) = links.transfer(
-                &topo,
-                &rcfg,
+            let r = pending.ready[idx];
+            let (_, fin) = pending.links.transfer(
+                &pending.topo,
+                &pending.rcfg,
                 coord,
-                topo.memory_for_row(bi),
+                pending.topo.memory_for_row(bi),
                 (m * m) as u64,
                 r + stats.cycles,
             );
             makespan = makespan.max(fin);
-            energy += power.energy_joules(ae, &pe_cfg, &stats);
+            energy += power.energy_joules(self.cfg.ae, &pe_cfg, &stats);
             tiles.push((coord, r, stats.cycles, fin));
             fold_stats(&mut agg, &stats);
         }
-        tiles.sort_by_key(|t| t.0);
         agg.cycles = makespan;
-        let sim_c = cpad.block(0, 0, n, n);
+        let sim_c = pending.cpad.block(0, 0, n, n);
 
-        // 4) Values: prefer the XLA artifact for this shape.
+        // Values: prefer the XLA artifact for this shape.
         let (c_out, source) = match self.runtime.as_mut() {
             Some(rt) if rt.has("gemm", n) => match rt.gemm(a, b, c) {
                 Ok(xc) => {
                     if self.cfg.verify {
                         let err = crate::util::rel_fro_error(xc.as_slice(), sim_c.as_slice());
-                        assert!(
-                            err < 1e-10,
-                            "XLA and PE-sim DGEMM disagree: rel err {err}"
-                        );
+                        assert!(err < 1e-10, "XLA and PE-sim DGEMM disagree: rel err {err}");
                     }
                     (xc, ValueSource::Xla)
                 }
@@ -218,11 +304,16 @@ impl Coordinator {
     }
 
     /// Coordinated DGEMV on a single PE (Level-2 is not tiled in the paper;
-    /// the PE realization is the §5 result). Values via XLA when available.
+    /// the PE realization is the §5 result). Timing from the cached kernel,
+    /// values via XLA when available.
     pub fn dgemv(&mut self, a: &Mat, x: &[f64], y: &[f64]) -> (Vec<f64>, Measurement, ValueSource) {
         let n = a.rows();
         let np = round_up(n, 4);
-        let meas = crate::metrics::measure_gemv(np, self.cfg.ae);
+        let ae = self.cfg.ae;
+        let meas = self.cache.measurement_or(ProgramKey::Gemv { n: np, ae }, || {
+            let prog = self.cache.gemv(np, ae);
+            measure_gemv_prog(np, ae, &prog)
+        });
         match self.runtime.as_mut() {
             Some(rt) if rt.has("gemv", n) => {
                 if let Ok(v) = rt.gemv(a, x, y) {
@@ -234,11 +325,16 @@ impl Coordinator {
         }
     }
 
-    /// Coordinated DDOT (single PE).
+    /// Coordinated DDOT (single PE, cached kernel).
     pub fn ddot(&mut self, x: &[f64], y: &[f64]) -> (f64, Measurement, ValueSource) {
         let n = x.len();
         let np = round_up(n.max(4), 4);
-        let meas = measure_level1(Routine::Ddot, np, self.cfg.ae);
+        let ae = self.cfg.ae;
+        let key = ProgramKey::level1(Routine::Ddot, np, 1.5, ae);
+        let meas = self.cache.measurement_or(key, || {
+            let prog = self.cache.level1(Routine::Ddot, np, 1.5, ae);
+            measure_level1_prog(Routine::Ddot, np, 1.5, ae, &prog)
+        });
         match self.runtime.as_mut() {
             Some(rt) if rt.has("dot", n) => {
                 if let Ok(v) = rt.dot(x, y) {
@@ -249,6 +345,15 @@ impl Coordinator {
             _ => (crate::blas::level1::ddot(x, y), meas, ValueSource::PeSim),
         }
     }
+}
+
+/// Collected tile results of one job, indexed by tile (None = outstanding).
+pub(crate) type TileSlots = Vec<Option<(Mat, PeStats)>>;
+
+/// Turn a fully collected slot vector into merge-ready results; panics if
+/// a tile is still outstanding (an accounting bug, not a runtime state).
+pub(crate) fn seal_slots(slots: TileSlots) -> Vec<(Mat, PeStats)> {
+    slots.into_iter().map(|o| o.expect("missing tile result")).collect()
 }
 
 /// Sum PE statistics across tiles (cycles handled separately as makespan).
@@ -268,15 +373,6 @@ fn fold_stats(agg: &mut PeStats, s: &PeStats) {
     agg.stall_mem_window += s.stall_mem_window;
     agg.gm_busy_cycles += s.gm_busy_cycles;
     agg.lm_busy_cycles += s.lm_busy_cycles;
-}
-
-/// std::sync::mpsc channel with a short alias (threads send tile results).
-#[allow(clippy::type_complexity)]
-fn mpssc_chan() -> (
-    mpsc::Sender<(usize, usize, Mat, PeStats)>,
-    mpsc::Receiver<(usize, usize, Mat, PeStats)>,
-) {
-    mpsc::channel()
 }
 
 #[cfg(test)]
@@ -350,5 +446,36 @@ mod tests {
         let (d, m2, _) = co.ddot(&x, &y);
         assert!((d - crate::blas::level1::ddot(&x, &y)).abs() < 1e-12);
         assert!(m2.latency() > 0);
+    }
+
+    #[test]
+    fn repeated_shapes_hit_the_program_cache() {
+        let n = 16;
+        let mut co = coord(2);
+        for seed in 0..3 {
+            let a = Mat::random(n, n, 200 + seed);
+            let b = Mat::random(n, n, 300 + seed);
+            let c = Mat::zeros(n, n);
+            co.dgemm(&a, &b, &c);
+        }
+        let s = co.cache_stats();
+        assert_eq!(s.misses, 1, "one shape must emit exactly one program: {s:?}");
+        assert_eq!(s.hits, 2, "repeats must hit: {s:?}");
+        assert_eq!(co.pool_size(), 4);
+    }
+
+    #[test]
+    fn mixed_shapes_fill_distinct_cache_entries() {
+        let mut co = coord(2);
+        for n in [8usize, 16, 8, 24, 16] {
+            let a = Mat::random(n, n, n as u64);
+            let b = Mat::random(n, n, n as u64 + 1);
+            let c = Mat::zeros(n, n);
+            co.dgemm(&a, &b, &c);
+        }
+        let s = co.cache_stats();
+        assert_eq!(s.entries, 3, "three distinct padded shapes: {s:?}");
+        assert_eq!(s.misses, 3);
+        assert_eq!(s.hits, 2);
     }
 }

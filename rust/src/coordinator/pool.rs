@@ -1,0 +1,245 @@
+//! Persistent tile-worker pool of the serving engine.
+//!
+//! The seed coordinator spawned `b×b` fresh host threads (and allocated a
+//! fresh [`Pe`]) for every DGEMM request. This pool spawns the workers once
+//! per [`super::Coordinator`], feeds them tile jobs over a shared channel,
+//! and reuses each worker's `Pe` across kernels via [`Pe::reset`] — so a
+//! request stream pays only for simulation, and tiles of *independent*
+//! requests overlap (jobs are tagged with a `job_id` and collected by the
+//! dispatcher in any arrival order).
+//!
+//! Host-thread parallelism only: simulated timing comes from the per-tile
+//! `PeStats` and the NoC transfer schedule, both of which are independent
+//! of which worker ran a tile and in which order.
+
+use crate::codegen::GemmLayout;
+use crate::pe::{Pe, PeConfig, PeStats, Program};
+use crate::util::Mat;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// One tile kernel to simulate: a cached program plus its packed operands.
+pub(crate) struct TileJob {
+    /// Request this tile belongs to (dispatcher-assigned).
+    pub job_id: u64,
+    /// Tile index within the request (`bi * b + bj`).
+    pub tile_idx: usize,
+    /// Shared, cached instruction stream (emitted once per shape).
+    pub prog: Arc<Program>,
+    /// GM layout of the packed operands; the output block unpacked after
+    /// the run is the full `layout.m × layout.p` C block.
+    pub layout: GemmLayout,
+    /// Packed GM image (length `layout.gm_words()`).
+    pub gm: Vec<f64>,
+}
+
+/// Result of one tile kernel.
+pub(crate) struct TileDone {
+    pub job_id: u64,
+    pub tile_idx: usize,
+    pub out: Mat,
+    pub stats: PeStats,
+}
+
+/// Worker → dispatcher message: a finished tile, or a caught worker panic
+/// (re-raised on the dispatcher by [`TilePool::recv`], preserving the
+/// fail-loud behavior the scoped-thread design had).
+enum TileMsg {
+    Done(TileDone),
+    Panicked { job_id: u64, tile_idx: usize, msg: String },
+}
+
+/// The pool: `size` workers, spawned once, fed over a shared queue.
+pub(crate) struct TilePool {
+    jobs: Option<mpsc::Sender<TileJob>>,
+    done_rx: mpsc::Receiver<TileMsg>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl TilePool {
+    /// Spawn `size` persistent workers simulating PEs configured by `cfg`.
+    pub fn new(size: usize, cfg: PeConfig) -> Self {
+        assert!(size >= 1, "tile pool needs at least one worker");
+        let (jtx, jrx) = mpsc::channel::<TileJob>();
+        let (dtx, drx) = mpsc::channel::<TileMsg>();
+        let jrx = Arc::new(Mutex::new(jrx));
+        let workers = (0..size)
+            .map(|i| {
+                let jrx = Arc::clone(&jrx);
+                let dtx = dtx.clone();
+                let cfg = cfg.clone();
+                thread::Builder::new()
+                    .name(format!("tile-worker-{i}"))
+                    .spawn(move || worker_loop(cfg, jrx, dtx))
+                    .expect("spawn tile worker")
+            })
+            .collect();
+        Self { jobs: Some(jtx), done_rx: drx, workers }
+    }
+
+    /// Number of persistent workers.
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a tile job (returns immediately; results come via `recv`).
+    pub fn submit(&self, job: TileJob) {
+        self.jobs
+            .as_ref()
+            .expect("pool already shut down")
+            .send(job)
+            .expect("tile pool hung up");
+    }
+
+    /// Block for the next finished tile, in arrival order across jobs.
+    /// A worker panic (caught in the worker loop) is re-raised here so a
+    /// bad kernel fails the request loudly instead of deadlocking it.
+    pub fn recv(&self) -> TileDone {
+        match self.done_rx.recv().expect("tile workers gone") {
+            TileMsg::Done(d) => d,
+            TileMsg::Panicked { job_id, tile_idx, msg } => {
+                panic!("tile worker panicked on job {job_id} tile {tile_idx}: {msg}")
+            }
+        }
+    }
+}
+
+impl Drop for TilePool {
+    fn drop(&mut self) {
+        // Closing the job channel makes every worker's recv() fail → exit.
+        drop(self.jobs.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    cfg: PeConfig,
+    jobs: Arc<Mutex<mpsc::Receiver<TileJob>>>,
+    done: mpsc::Sender<TileMsg>,
+) {
+    // The worker's PE is created on the first job and reset()-reused after:
+    // a reset PE is bit-identical to a fresh one (see pe::core tests).
+    let mut pe: Option<Pe> = None;
+    loop {
+        // Hold the queue lock only while receiving; pickup is serialized,
+        // simulation is not.
+        let job = {
+            let guard = match jobs.lock() {
+                Ok(g) => g,
+                Err(_) => return, // a sibling worker panicked mid-recv
+            };
+            match guard.recv() {
+                Ok(j) => j,
+                Err(_) => return, // pool dropped: shut down
+            }
+        };
+        let (job_id, tile_idx) = (job.job_id, job.tile_idx);
+        let gm_words = job.layout.gm_words();
+        if let Some(p) = pe.as_mut() {
+            p.reset(gm_words);
+        } else {
+            pe = Some(Pe::new(cfg.clone(), gm_words));
+        }
+        let p = pe.as_mut().expect("worker PE initialized above");
+        // Catch kernel panics (codegen bugs, feature misuse) and report
+        // them: a silently-missing tile would deadlock the dispatcher.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            p.write_gm(0, &job.gm);
+            let stats = p.run(&job.prog);
+            let out = job.layout.unpack_c(&p.gm, job.layout.m, job.layout.p);
+            (out, stats)
+        }));
+        let msg = match outcome {
+            Ok((out, stats)) => TileMsg::Done(TileDone { job_id, tile_idx, out, stats }),
+            Err(payload) => {
+                pe = None; // state may be inconsistent; rebuild on next job
+                TileMsg::Panicked { job_id, tile_idx, msg: panic_message(payload) }
+            }
+        };
+        if done.send(msg).is_err() {
+            return; // dispatcher gone: shut down
+        }
+    }
+}
+
+/// Human-readable text from a caught panic payload.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::gen_gemm_rect;
+    use crate::pe::AeLevel;
+    use crate::util::rel_fro_error;
+
+    fn gemm_job(job_id: u64, tile_idx: usize, n: usize, seed: u64) -> (TileJob, Mat) {
+        let ae = AeLevel::Ae5;
+        let a = Mat::random(n, n, seed);
+        let b = Mat::random(n, n, seed + 1);
+        let c = Mat::random(n, n, seed + 2);
+        let layout = GemmLayout::rect(n, n, n);
+        let prog = Arc::new(gen_gemm_rect(n, n, n, ae, &layout));
+        let want = crate::blas::level3::dgemm_ref(&a, &b, &c);
+        let gm = layout.pack(&a, &b, &c);
+        (TileJob { job_id, tile_idx, prog, layout, gm }, want)
+    }
+
+    #[test]
+    fn pool_runs_jobs_and_reuses_workers() {
+        let pool = TilePool::new(2, PeConfig::paper(AeLevel::Ae5));
+        assert_eq!(pool.worker_count(), 2);
+        // More jobs than workers forces PE reuse; mixed shapes force
+        // reset() resizing.
+        let mut wants = std::collections::HashMap::new();
+        for (i, n) in [8usize, 12, 8, 16, 12, 8].into_iter().enumerate() {
+            let (job, want) = gemm_job(i as u64, 0, n, 100 + i as u64);
+            wants.insert(i as u64, want);
+            pool.submit(job);
+        }
+        for _ in 0..6 {
+            let d = pool.recv();
+            let want = &wants[&d.job_id];
+            let err = rel_fro_error(d.out.as_slice(), want.as_slice());
+            assert!(err < 1e-12, "job {}: err {err}", d.job_id);
+            assert!(d.stats.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn drop_joins_idle_workers() {
+        let pool = TilePool::new(3, PeConfig::paper(AeLevel::Ae2));
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    #[should_panic(expected = "tile worker panicked")]
+    fn worker_panic_propagates_instead_of_deadlocking() {
+        use crate::pe::{Instr, Program};
+        // A DOT on an AE1-configured PE trips check_features inside the
+        // worker; recv() must re-raise it rather than block forever.
+        let pool = TilePool::new(1, PeConfig::paper(AeLevel::Ae1));
+        let layout = GemmLayout::rect(4, 4, 4);
+        let mut prog = Program::new();
+        prog.push(Instr::Dot { rd: 0, ra: 16, rb: 32, n: 4, acc: false });
+        prog.push(Instr::Halt);
+        pool.submit(TileJob {
+            job_id: 0,
+            tile_idx: 0,
+            prog: Arc::new(prog),
+            layout,
+            gm: vec![0.0; layout.gm_words()],
+        });
+        let _ = pool.recv();
+    }
+}

@@ -1,10 +1,20 @@
-//! Request/response types and the coordinator's serve loop — the
+//! Request/response types and the coordinator's serve loops — the
 //! "request path" of the system. Requests are BLAS calls; responses carry
 //! values plus the simulated cost report. Everything here is pure Rust over
 //! AOT artifacts: Python is never on this path.
+//!
+//! Two serving modes:
+//! * [`Coordinator::serve`] — strictly sequential (one request fully
+//!   completes before the next starts), kept as the reference semantics;
+//! * [`Coordinator::serve_batch`] — the serving-engine path: every DGEMM's
+//!   tile jobs are staged on the persistent worker pool up front, so tiles
+//!   of independent requests are in flight simultaneously, while Level-1/2
+//!   requests are answered inline. Responses come back in submission order
+//!   and are value- and cycle-identical to `serve_one` (pinned by tests).
 
-use super::{Coordinator, ValueSource};
+use super::{seal_slots, Coordinator, DgemmResult, PendingDgemm, TileSlots, ValueSource};
 use crate::util::{Mat, XorShift64};
+use std::collections::HashMap;
 
 /// A BLAS request to the coordinator.
 #[derive(Debug, Clone)]
@@ -38,6 +48,20 @@ impl Request {
             Request::RandomDgemm { n, .. } => *n,
         }
     }
+
+    /// Resolve synthetic requests into concrete operands. The single
+    /// materialization rule shared by both serve paths, so batched and
+    /// sequential serving see bit-identical inputs.
+    pub fn materialize(self) -> Request {
+        match self {
+            Request::RandomDgemm { n, seed } => Request::Dgemm {
+                a: Mat::random(n, n, seed),
+                b: Mat::random(n, n, seed ^ 0xBEEF),
+                c: Mat::zeros(n, n),
+            },
+            other => other,
+        }
+    }
 }
 
 /// Response: scalar/vector/matrix value + cost accounting.
@@ -56,29 +80,43 @@ pub struct Response {
     pub scalar: Option<f64>,
 }
 
+/// The one place a [`DgemmResult`] becomes a [`Response`] — shared by the
+/// sequential and batched paths so they cannot drift apart.
+fn dgemm_response(n: usize, r: DgemmResult) -> Response {
+    Response {
+        op: "dgemm",
+        n,
+        source: r.source,
+        cycles: r.makespan,
+        energy_j: Some(r.energy_j),
+        matrix: Some(r.c),
+        vector: None,
+        scalar: None,
+    }
+}
+
+/// A DGEMM request whose tiles are on the pool, waiting to be merged.
+struct InFlight {
+    pending: PendingDgemm,
+    a: Mat,
+    b: Mat,
+    c: Mat,
+}
+
+/// Per-request slot of a batch, in submission order.
+enum Slot {
+    Dgemm(Box<InFlight>),
+    Ready(Response),
+}
+
 impl Coordinator {
     /// Serve one request.
     pub fn serve_one(&mut self, req: Request) -> Response {
-        match req {
+        match req.materialize() {
             Request::Dgemm { a, b, c } => {
                 let n = a.rows();
                 let r = self.dgemm(&a, &b, &c);
-                Response {
-                    op: "dgemm",
-                    n,
-                    source: r.source,
-                    cycles: r.makespan,
-                    energy_j: Some(r.energy_j),
-                    matrix: Some(r.c),
-                    vector: None,
-                    scalar: None,
-                }
-            }
-            Request::RandomDgemm { n, seed } => {
-                let a = Mat::random(n, n, seed);
-                let b = Mat::random(n, n, seed ^ 0xBEEF);
-                let c = Mat::zeros(n, n);
-                self.serve_one(Request::Dgemm { a, b, c })
+                dgemm_response(n, r)
             }
             Request::Dgemv { a, x, y } => {
                 let n = a.rows();
@@ -108,12 +146,65 @@ impl Coordinator {
                     scalar: Some(d),
                 }
             }
+            Request::RandomDgemm { .. } => unreachable!("materialize() resolved synthetics"),
         }
     }
 
-    /// Serve a batch of requests in order, returning all responses.
+    /// Serve a batch of requests strictly in order, returning all
+    /// responses (the reference semantics; no cross-request overlap).
     pub fn serve(&mut self, reqs: Vec<Request>) -> Vec<Response> {
         reqs.into_iter().map(|r| self.serve_one(r)).collect()
+    }
+
+    /// Serve a batch with cross-request pipelining. Every DGEMM's tile jobs
+    /// go to the persistent pool immediately, so the pool stays busy across
+    /// request boundaries; Level-1/2 requests are simulated inline on the
+    /// dispatcher thread while tiles drain. Responses are returned in
+    /// submission order and match `serve_one`-in-a-loop exactly (values,
+    /// cycles and energy — simulated timing is independent of host
+    /// scheduling).
+    pub fn serve_batch(&mut self, reqs: Vec<Request>) -> Vec<Response> {
+        // Phase 1: stage everything.
+        let mut slots = Vec::with_capacity(reqs.len());
+        let mut in_flight_tiles = 0usize;
+        for (i, req) in reqs.into_iter().enumerate() {
+            match req.materialize() {
+                Request::Dgemm { a, b, c } => {
+                    let pending = self.submit_dgemm(i as u64, &a, &b, &c);
+                    in_flight_tiles += pending.tile_count();
+                    slots.push(Slot::Dgemm(Box::new(InFlight { pending, a, b, c })));
+                }
+                other => slots.push(Slot::Ready(self.serve_one(other))),
+            }
+        }
+
+        // Phase 2: drain the pool; tiles arrive in any order across jobs.
+        let mut collected: HashMap<u64, TileSlots> = HashMap::new();
+        for _ in 0..in_flight_tiles {
+            let d = self.recv_tile();
+            let count = match &slots[d.job_id as usize] {
+                Slot::Dgemm(f) => f.pending.tile_count(),
+                Slot::Ready(_) => unreachable!("tile for a non-DGEMM slot"),
+            };
+            let entry = collected.entry(d.job_id).or_insert_with(|| vec![None; count]);
+            entry[d.tile_idx] = Some((d.out, d.stats));
+        }
+
+        // Phase 3: merge in submission order.
+        let mut resps = Vec::with_capacity(slots.len());
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot {
+                Slot::Ready(r) => resps.push(r),
+                Slot::Dgemm(flight) => {
+                    let InFlight { pending, a, b, c } = *flight;
+                    let outs = seal_slots(collected.remove(&(i as u64)).expect("tiles lost"));
+                    let n = a.rows();
+                    let r = self.finish_dgemm(pending, outs, &a, &b, &c);
+                    resps.push(dgemm_response(n, r));
+                }
+            }
+        }
+        resps
     }
 }
 
@@ -140,6 +231,13 @@ pub fn random_workload(count: usize, max_n: usize, seed: u64) -> Vec<Request> {
         }
     }
     reqs
+}
+
+/// Repeated-shape DGEMM workload: `count` requests, all n×n, distinct
+/// operand seeds — the serving engine's cache-friendly steady state (and
+/// the bench workload for the cached-vs-uncached comparison).
+pub fn repeated_gemm_workload(count: usize, n: usize, seed: u64) -> Vec<Request> {
+    (0..count).map(|i| Request::RandomDgemm { n, seed: seed + i as u64 }).collect()
 }
 
 #[cfg(test)]
@@ -180,9 +278,38 @@ mod tests {
     }
 
     #[test]
+    fn materialize_is_deterministic() {
+        let r1 = Request::RandomDgemm { n: 12, seed: 7 }.materialize();
+        let r2 = Request::RandomDgemm { n: 12, seed: 7 }.materialize();
+        match (r1, r2) {
+            (Request::Dgemm { a: a1, b: b1, c: c1 }, Request::Dgemm { a: a2, b: b2, c: c2 }) => {
+                assert_eq!(a1, a2);
+                assert_eq!(b1, b2);
+                assert_eq!(c1, c2);
+                assert_eq!(c1, Mat::zeros(12, 12));
+            }
+            _ => panic!("materialize must yield Dgemm"),
+        }
+    }
+
+    #[test]
     fn ddot_request_value() {
         let mut co = coord();
-        let resp = co.serve_one(Request::Ddot { x: vec![1.0, 2.0, 0.0, 0.0], y: vec![3.0, 4.0, 0.0, 0.0] });
+        let resp = co.serve_one(Request::Ddot {
+            x: vec![1.0, 2.0, 0.0, 0.0],
+            y: vec![3.0, 4.0, 0.0, 0.0],
+        });
         assert_eq!(resp.scalar, Some(11.0));
+    }
+
+    #[test]
+    fn serve_batch_handles_mixed_and_empty() {
+        let mut co = coord();
+        assert!(co.serve_batch(Vec::new()).is_empty());
+        let resps = co.serve_batch(random_workload(5, 20, 3));
+        assert_eq!(resps.len(), 5);
+        for r in &resps {
+            assert!(r.cycles > 0);
+        }
     }
 }

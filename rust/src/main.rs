@@ -7,10 +7,14 @@
 //! redefine gemm  --n 64 [--b 2] [--ae 5] [--artifacts DIR]
 //! redefine gemv  --n 64 [--ae 5]
 //! redefine ddot  --n 1024 [--ae 5]
-//! redefine serve --requests 16 --max-n 64 [--b 2] [--ae 5]
+//! redefine serve --requests 16 --max-n 64 [--b 2] [--ae 5] [--seq]
 //! redefine sweep                       # Tables 4-9 summary
 //! redefine artifacts [--artifacts DIR] # list loadable artifacts
 //! ```
+//!
+//! `serve` drives the serving engine: requests flow through the program
+//! cache and the persistent tile-worker pool (`serve_batch`); `--seq`
+//! falls back to the strictly sequential reference loop.
 
 use redefine_blas::coordinator::{request::random_workload, Coordinator, CoordinatorConfig};
 use redefine_blas::metrics::{gemm_sweep, PAPER_SIZES};
@@ -21,7 +25,7 @@ use std::process::exit;
 fn usage() -> ! {
     eprintln!(
         "usage: redefine <gemm|gemv|ddot|serve|sweep|artifacts> [--n N] [--b B] \
-         [--ae 0..5] [--requests K] [--max-n N] [--artifacts DIR]"
+         [--ae 0..5] [--requests K] [--max-n N] [--artifacts DIR] [--seq]"
     );
     exit(2)
 }
@@ -35,6 +39,7 @@ struct Args {
     requests: usize,
     max_n: usize,
     artifacts: String,
+    seq: bool,
 }
 
 fn parse_args() -> Args {
@@ -48,6 +53,7 @@ fn parse_args() -> Args {
         requests: 16,
         max_n: 64,
         artifacts: "artifacts".into(),
+        seq: false,
     };
     while let Some(flag) = it.next() {
         let mut val = || it.next().unwrap_or_else(|| usage());
@@ -57,6 +63,7 @@ fn parse_args() -> Args {
             "--requests" => a.requests = val().parse().unwrap_or_else(|_| usage()),
             "--max-n" => a.max_n = val().parse().unwrap_or_else(|_| usage()),
             "--artifacts" => a.artifacts = val(),
+            "--seq" => a.seq = true,
             "--ae" => {
                 let i: usize = val().parse().unwrap_or_else(|_| usage());
                 a.ae = *AeLevel::ALL.get(i).unwrap_or_else(|| usage());
@@ -138,14 +145,23 @@ fn main() {
             let mut co = Coordinator::new(cfg);
             let reqs = random_workload(args.requests, args.max_n, 42);
             let t0 = std::time::Instant::now();
-            let resps = co.serve(reqs);
+            let resps = if args.seq { co.serve(reqs) } else { co.serve_batch(reqs) };
             let wall = t0.elapsed();
             let total_cycles: u64 = resps.iter().map(|r| r.cycles).sum();
+            let mode = if args.seq { "sequential" } else { "batched (pool + cache)" };
             println!(
-                "served {} requests in {:.1} ms wall; {} simulated cycles total",
+                "served {} requests in {:.1} ms wall [{mode}]; {} simulated cycles total",
                 resps.len(),
                 wall.as_secs_f64() * 1e3,
                 total_cycles
+            );
+            let cs = co.cache_stats();
+            println!(
+                "program cache: {} kernels resident, {} hits / {} misses; {} pool workers",
+                cs.entries,
+                cs.hits,
+                cs.misses,
+                co.pool_size()
             );
             for r in &resps {
                 println!("  {:<6} n={:<4} cycles={:<9} source={:?}", r.op, r.n, r.cycles, r.source);
@@ -162,18 +178,23 @@ fn main() {
                 println!();
             }
         }
-        "artifacts" => match redefine_blas::runtime::Runtime::new(&args.artifacts) {
-            Ok(rt) => {
-                println!("platform: {}", rt.platform());
-                for k in rt.available() {
+        "artifacts" => {
+            // Disk listing works in every build; the PJRT platform line
+            // only when the runtime initializes (pjrt feature + client).
+            match redefine_blas::runtime::Runtime::new(&args.artifacts) {
+                Ok(rt) => println!("platform: {}", rt.platform()),
+                Err(e) => println!("runtime unavailable ({e}); listing artifacts on disk only"),
+            }
+            let dir = std::path::Path::new(&args.artifacts);
+            let found = redefine_blas::runtime::scan_artifacts(dir);
+            if found.is_empty() {
+                println!("no artifacts under {}", dir.display());
+            } else {
+                for k in found {
                     println!("  {}", k.file_name());
                 }
             }
-            Err(e) => {
-                eprintln!("runtime unavailable: {e}");
-                exit(1);
-            }
-        },
+        }
         _ => usage(),
     }
 }

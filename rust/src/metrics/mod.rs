@@ -10,11 +10,11 @@ pub mod paper;
 
 use crate::codegen::{self, layout::VecLayout, GemmLayout};
 use crate::energy::PowerModel;
-use crate::pe::{AeLevel, Pe, PeConfig, PeStats};
+use crate::pe::{AeLevel, Pe, PeConfig, PeStats, Program};
 use crate::util::{Mat, XorShift64};
 
 /// Which BLAS routine a measurement ran.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Routine {
     Dgemm,
     Dgemv,
@@ -151,12 +151,21 @@ pub fn measure_gemm_with(n: usize, ae: AeLevel, a: &Mat, b: &Mat, c: &Mat) -> Me
 
 /// Run DGEMV on the PE simulator (numerics checked).
 pub fn measure_gemv(n: usize, ae: AeLevel) -> Measurement {
+    let l = VecLayout::gemv(n);
+    let prog = codegen::gen_gemv(n, ae, &l);
+    measure_gemv_prog(n, ae, &prog)
+}
+
+/// [`measure_gemv`] with a pre-compiled program — the serving engine's
+/// cached-kernel path (the coordinator emits each (shape, AE) program once
+/// and reuses it; PE timing is data-independent, so the fixed operand seeds
+/// double as a numerical cross-check of the cached stream).
+pub fn measure_gemv_prog(n: usize, ae: AeLevel, prog: &Program) -> Measurement {
     let a = Mat::random(n, n, 0xD0 + n as u64);
     let mut rng = XorShift64::new(0xE0 + n as u64);
     let x = rng.vec(n);
     let y = rng.vec(n);
     let l = VecLayout::gemv(n);
-    let prog = codegen::gen_gemv(n, ae, &l);
     let cfg = PeConfig::paper(ae);
     let mut pe = Pe::new(cfg.clone(), l.gm_words());
     let mut gm = vec![0.0; l.gm_words()];
@@ -168,7 +177,7 @@ pub fn measure_gemv(n: usize, ae: AeLevel) -> Measurement {
     gm[l.base_x..l.base_x + n].copy_from_slice(&x);
     gm[l.base_y..l.base_y + n].copy_from_slice(&y);
     pe.write_gm(0, &gm);
-    let stats = pe.run(&prog);
+    let stats = pe.run(prog);
     let got = pe.read_gm(l.base_y, n).to_vec();
     let want = crate::blas::level2::dgemv_ref(&a, &x, &y);
     crate::util::assert_allclose(&got, &want, 1e-12);
@@ -178,9 +187,6 @@ pub fn measure_gemv(n: usize, ae: AeLevel) -> Measurement {
 /// Run a Level-1 routine on the PE simulator (numerics checked).
 pub fn measure_level1(routine: Routine, n: usize, ae: AeLevel) -> Measurement {
     let l = VecLayout::level1(n);
-    let mut rng = XorShift64::new(0xF0 + n as u64);
-    let x = rng.vec(n);
-    let y = rng.vec(n);
     let alpha = 1.5;
     let prog = match routine {
         Routine::Ddot => codegen::gen_ddot(n, ae, &l),
@@ -188,11 +194,28 @@ pub fn measure_level1(routine: Routine, n: usize, ae: AeLevel) -> Measurement {
         Routine::Daxpy => codegen::gen_daxpy(n, alpha, ae, &l),
         _ => panic!("not a level-1 routine: {routine:?}"),
     };
+    measure_level1_prog(routine, n, alpha, ae, &prog)
+}
+
+/// [`measure_level1`] with a pre-compiled program (the cached-kernel path).
+/// `alpha` must match the constant baked into a DAXPY program; it is
+/// ignored for the reduction routines.
+pub fn measure_level1_prog(
+    routine: Routine,
+    n: usize,
+    alpha: f64,
+    ae: AeLevel,
+    prog: &Program,
+) -> Measurement {
+    let l = VecLayout::level1(n);
+    let mut rng = XorShift64::new(0xF0 + n as u64);
+    let x = rng.vec(n);
+    let y = rng.vec(n);
     let cfg = PeConfig::paper(ae);
     let mut pe = Pe::new(cfg.clone(), l.gm_words());
     pe.write_gm(l.base_x, &x);
     pe.write_gm(l.base_y, &y);
-    let stats = pe.run(&prog);
+    let stats = pe.run(prog);
     match routine {
         Routine::Ddot => {
             let want: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();

@@ -156,6 +156,18 @@ impl Pe {
         }
     }
 
+    /// Reset the architectural state (GM resized to `gm_words` and zeroed,
+    /// LM and register file zeroed) so one PE instance can be reused across
+    /// kernels — the persistent-worker path of the serving engine. A reset
+    /// PE is bit-identical to a freshly constructed one, which the
+    /// determinism tests rely on.
+    pub fn reset(&mut self, gm_words: usize) {
+        self.gm.clear();
+        self.gm.resize(gm_words, 0.0);
+        self.lm.fill(0.0);
+        self.regs = [0.0; NUM_REGS];
+    }
+
     /// Load data into GM at a word offset.
     pub fn write_gm(&mut self, offset: usize, data: &[f64]) {
         self.gm[offset..offset + data.len()].copy_from_slice(data);
@@ -741,6 +753,45 @@ mod tests {
             with_lm < without,
             "LM path ({with_lm}) not faster than AE0 GM path ({without})"
         );
+    }
+
+    #[test]
+    fn reset_makes_reuse_identical_to_fresh() {
+        // A pooled worker reuses one Pe across kernels; after reset() the
+        // run must be bit-identical to a fresh instance.
+        let mk_prog = |seed: u8| {
+            let mut p = Program::new();
+            p.push(I::BlkLd { lm: 0, gm: 0, len: 8 });
+            for i in 0..8u8 {
+                p.push(I::LmLd { rd: i, lm: i as u32 });
+            }
+            p.push(I::Dot { rd: 8, ra: 0, rb: 4, n: 4, acc: false });
+            p.push(I::Fadd { rd: 9, ra: 8, rb: seed % 8 });
+            p.push(I::St { rs: 9, gm: 20 });
+            p.push(I::Halt);
+            p
+        };
+        let data: Vec<f64> = (0..16).map(|i| i as f64 * 0.5 - 3.0).collect();
+
+        let mut reused = pe(AeLevel::Ae5);
+        reused.write_gm(0, &data);
+        reused.run(&mk_prog(1)); // dirty the state
+        reused.reset(1024);
+        reused.write_gm(0, &data);
+        let st_reused = reused.run(&mk_prog(3));
+        let out_reused = reused.read_gm(0, 32).to_vec();
+
+        let mut fresh = pe(AeLevel::Ae5);
+        fresh.write_gm(0, &data);
+        let st_fresh = fresh.run(&mk_prog(3));
+        let out_fresh = fresh.read_gm(0, 32).to_vec();
+
+        assert_eq!(st_reused.cycles, st_fresh.cycles);
+        assert_eq!(out_reused, out_fresh);
+        // reset() also resizes GM.
+        reused.reset(64);
+        assert_eq!(reused.gm.len(), 64);
+        assert!(reused.gm.iter().all(|&v| v == 0.0));
     }
 
     #[test]

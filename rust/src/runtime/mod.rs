@@ -1,5 +1,5 @@
-//! PJRT runtime: loads the AOT-compiled XLA artifacts (HLO text emitted by
-//! `python/compile/aot.py`) and executes them on the CPU PJRT client.
+//! Runtime for the AOT-compiled XLA artifacts (HLO text emitted by
+//! `python/compile/aot.py`).
 //!
 //! This is the value domain of the L3 co-simulation: the coordinator takes
 //! *numerics* from these executables and *timing* from the PE/NoC
@@ -7,11 +7,19 @@
 //! interchange (see `/opt/xla-example` and DESIGN.md: HLO text rather than
 //! serialized protos because xla_extension 0.5.1 rejects jax≥0.5's 64-bit
 //! instruction ids).
+//!
+//! Build modes:
+//!
+//! * **default** (no features): the [`Runtime`] is a stub whose constructor
+//!   always fails, so the coordinator keeps every value on the
+//!   [`crate::coordinator::ValueSource::PeSim`] path. The crate builds and
+//!   tests fully offline with no external dependencies.
+//! * **`--features pjrt`**: compiles the real PJRT client in `pjrt.rs`,
+//!   which requires the vendored `xla` crate (add the dependency in
+//!   `rust/Cargo.toml`, see the comment there).
 
-use crate::util::Mat;
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::fmt;
+use std::path::Path;
 
 /// Artifact naming convention produced by `aot.py`:
 /// `artifacts/<op>_n<N>.hlo.txt`, e.g. `gemm_n64.hlo.txt`.
@@ -27,165 +35,63 @@ impl ArtifactKey {
     }
 }
 
-/// The PJRT runtime: client + compiled-executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    cache: HashMap<ArtifactKey, xla::PjRtLoadedExecutable>,
+/// Runtime error — a dependency-free stand-in for `anyhow` so the default
+/// build needs no external crates.
+#[derive(Debug, Clone)]
+pub struct RtError(String);
+
+impl RtError {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Self(msg.into())
+    }
 }
 
-impl Runtime {
-    /// Create a CPU-PJRT runtime over an artifact directory.
-    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
-        Ok(Self { client, dir: dir.as_ref().to_path_buf(), cache: HashMap::new() })
+impl fmt::Display for RtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
     }
+}
 
-    /// Platform string of the PJRT backend (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+impl std::error::Error for RtError {}
 
-    /// Artifacts available on disk (not necessarily loaded yet).
-    pub fn available(&self) -> Vec<ArtifactKey> {
-        let mut keys = Vec::new();
-        let Ok(rd) = std::fs::read_dir(&self.dir) else {
-            return keys;
-        };
-        for e in rd.flatten() {
-            let name = e.file_name().to_string_lossy().into_owned();
-            if let Some(stem) = name.strip_suffix(".hlo.txt") {
-                if let Some((op, n)) = stem.rsplit_once("_n") {
-                    if let Ok(n) = n.parse::<usize>() {
-                        keys.push(ArtifactKey { op: op.to_string(), n });
-                    }
+/// Result alias for runtime operations.
+pub type RtResult<T> = Result<T, RtError>;
+
+/// Artifacts present on disk under `dir` (not necessarily loadable —
+/// shared by the real and the stub runtime, and usable without either).
+pub fn scan_artifacts(dir: &Path) -> Vec<ArtifactKey> {
+    let mut keys = Vec::new();
+    let Ok(rd) = std::fs::read_dir(dir) else {
+        return keys;
+    };
+    for e in rd.flatten() {
+        let name = e.file_name().to_string_lossy().into_owned();
+        if let Some(stem) = name.strip_suffix(".hlo.txt") {
+            if let Some((op, n)) = stem.rsplit_once("_n") {
+                if let Ok(n) = n.parse::<usize>() {
+                    keys.push(ArtifactKey { op: op.to_string(), n });
                 }
             }
         }
-        keys.sort_by(|a, b| (a.op.clone(), a.n).cmp(&(b.op.clone(), b.n)));
-        keys
     }
-
-    /// True if an artifact exists for (op, n).
-    pub fn has(&self, op: &str, n: usize) -> bool {
-        self.dir.join(ArtifactKey { op: op.into(), n }.file_name()).exists()
-    }
-
-    /// Load (and cache) the executable for (op, n).
-    pub fn load(&mut self, op: &str, n: usize) -> Result<&xla::PjRtLoadedExecutable> {
-        let key = ArtifactKey { op: op.to_string(), n };
-        if !self.cache.contains_key(&key) {
-            let path = self.dir.join(key.file_name());
-            if !path.exists() {
-                bail!("artifact {} not found (run `make artifacts`)", path.display());
-            }
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 path")?,
-            )
-            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
-            self.cache.insert(key.clone(), exe);
-        }
-        Ok(self.cache.get(&key).unwrap())
-    }
-
-    /// Execute `gemm_nN`: C ← A·B + C over f64 [n,n] operands.
-    pub fn gemm(&mut self, a: &Mat, b: &Mat, c: &Mat) -> Result<Mat> {
-        let n = a.rows();
-        assert!(a.cols() == n && b.rows() == n && b.cols() == n, "square only");
-        assert!(c.rows() == n && c.cols() == n);
-        let la = mat_literal(a)?;
-        let lb = mat_literal(b)?;
-        let lc = mat_literal(c)?;
-        let exe = self.load("gemm", n)?;
-        let out = run1(exe, &[la, lb, lc])?;
-        let v = out.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-        Ok(Mat::from_row_major(n, n, &v))
-    }
-
-    /// Execute `gemv_nN`: y ← A·x + y.
-    pub fn gemv(&mut self, a: &Mat, x: &[f64], y: &[f64]) -> Result<Vec<f64>> {
-        let n = a.rows();
-        assert!(a.cols() == n && x.len() == n && y.len() == n);
-        let la = mat_literal(a)?;
-        let lx = xla::Literal::vec1(x);
-        let ly = xla::Literal::vec1(y);
-        let exe = self.load("gemv", n)?;
-        let out = run1(exe, &[la, lx, ly])?;
-        out.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))
-    }
-
-    /// Execute `dot_nN`: xᵀ·y.
-    pub fn dot(&mut self, x: &[f64], y: &[f64]) -> Result<f64> {
-        let n = x.len();
-        assert_eq!(y.len(), n);
-        let lx = xla::Literal::vec1(x);
-        let ly = xla::Literal::vec1(y);
-        let exe = self.load("dot", n)?;
-        let out = run1(exe, &[lx, ly])?;
-        out.get_first_element::<f64>().map_err(|e| anyhow!("scalar: {e:?}"))
-    }
-
-    /// Execute `axpy_nN`: α·x + y (α baked per-artifact? no — passed in).
-    pub fn axpy(&mut self, alpha: f64, x: &[f64], y: &[f64]) -> Result<Vec<f64>> {
-        let n = x.len();
-        assert_eq!(y.len(), n);
-        let la = xla::Literal::scalar(alpha);
-        let lx = xla::Literal::vec1(x);
-        let ly = xla::Literal::vec1(y);
-        let exe = self.load("axpy", n)?;
-        let out = run1(exe, &[la, lx, ly])?;
-        out.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))
-    }
-
-    /// Execute `nrm2_nN`: ‖x‖₂.
-    pub fn nrm2(&mut self, x: &[f64]) -> Result<f64> {
-        let lx = xla::Literal::vec1(x);
-        let exe = self.load("nrm2", x.len())?;
-        let out = run1(exe, &[lx])?;
-        out.get_first_element::<f64>().map_err(|e| anyhow!("scalar: {e:?}"))
-    }
-
-    /// Execute `qr_panel_nN`: one DGEQR2 Householder panel step (v, τ, and
-    /// the updated trailing block) — the L2 fused kernel.
-    pub fn qr_panel(&mut self, a: &Mat) -> Result<(Mat, f64)> {
-        let n = a.rows();
-        let la = mat_literal(a)?;
-        let exe = self.load("qr_panel", n)?;
-        let result = exe
-            .execute::<xla::Literal>(&[la])
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("sync: {e:?}"))?;
-        let (out_a, out_tau) =
-            result.to_tuple2().map_err(|e| anyhow!("tuple2: {e:?}"))?;
-        let v = out_a.to_vec::<f64>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-        let tau = out_tau.get_first_element::<f64>().map_err(|e| anyhow!("tau: {e:?}"))?;
-        Ok((Mat::from_row_major(n, n, &v), tau))
-    }
+    keys.sort_by(|a, b| (a.op.clone(), a.n).cmp(&(b.op.clone(), b.n)));
+    keys
 }
 
-/// Row-major f64 literal for a matrix.
-fn mat_literal(m: &Mat) -> Result<xla::Literal> {
-    xla::Literal::vec1(&m.to_row_major())
-        .reshape(&[m.rows() as i64, m.cols() as i64])
-        .map_err(|e| anyhow!("reshape: {e:?}"))
+/// True if an artifact file exists for (op, n) under `dir`.
+pub fn has_artifact(dir: &Path, op: &str, n: usize) -> bool {
+    dir.join(ArtifactKey { op: op.into(), n }.file_name()).exists()
 }
 
-/// Execute and unwrap a 1-tuple result (aot.py lowers with
-/// `return_tuple=True`).
-fn run1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
-    let result = exe
-        .execute::<xla::Literal>(args)
-        .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-        .to_literal_sync()
-        .map_err(|e| anyhow!("sync: {e:?}"))?;
-    result.to_tuple1().map_err(|e| anyhow!("tuple1: {e:?}"))
-}
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::Runtime;
 
 #[cfg(test)]
 mod tests {
@@ -198,30 +104,42 @@ mod tests {
     }
 
     #[test]
+    fn scan_parses_names_and_ignores_junk() {
+        let dir = std::env::temp_dir().join("redefine-artifact-scan-test");
+        let _ = std::fs::create_dir_all(&dir);
+        std::fs::write(dir.join("gemm_n20.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("qr_panel_n32.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("junk.bin"), "x").unwrap();
+        let av = scan_artifacts(&dir);
+        assert!(av.iter().any(|k| k.op == "gemm" && k.n == 20));
+        assert!(av.iter().any(|k| k.op == "qr_panel" && k.n == 32));
+        assert_eq!(av.len(), 2);
+        assert!(has_artifact(&dir, "gemm", 20));
+        assert!(!has_artifact(&dir, "gemm", 999));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_of_missing_dir_is_empty() {
+        assert!(scan_artifacts(Path::new("/nonexistent-artifacts")).is_empty());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let err = Runtime::new("/nonexistent-artifacts").err().expect("stub must not construct");
+        assert!(err.to_string().contains("pjrt"), "unexpected error: {err}");
+    }
+
+    #[cfg(feature = "pjrt")]
+    #[test]
     fn missing_artifact_is_reported() {
         let mut rt = match Runtime::new("/nonexistent-artifacts") {
             Ok(rt) => rt,
             Err(_) => return, // no PJRT in this environment: skip
         };
-        let a = Mat::eye(4);
+        let a = crate::util::Mat::eye(4);
         let err = rt.gemm(&a, &a, &a).unwrap_err().to_string();
         assert!(err.contains("make artifacts"), "unexpected error: {err}");
-    }
-
-    #[test]
-    fn available_parses_names() {
-        let dir = std::env::temp_dir().join("redefine-artifact-test");
-        let _ = std::fs::create_dir_all(&dir);
-        std::fs::write(dir.join("gemm_n20.hlo.txt"), "x").unwrap();
-        std::fs::write(dir.join("junk.bin"), "x").unwrap();
-        let rt = match Runtime::new(&dir) {
-            Ok(rt) => rt,
-            Err(_) => return,
-        };
-        let av = rt.available();
-        assert!(av.iter().any(|k| k.op == "gemm" && k.n == 20));
-        assert!(rt.has("gemm", 20));
-        assert!(!rt.has("gemm", 999));
-        let _ = std::fs::remove_dir_all(&dir);
     }
 }

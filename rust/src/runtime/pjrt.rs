@@ -1,0 +1,158 @@
+//! Real PJRT runtime (compiled only with `--features pjrt`): loads the AOT
+//! HLO-text artifacts and executes them on the CPU PJRT client via the
+//! vendored `xla` crate.
+
+use super::{has_artifact, scan_artifacts, ArtifactKey, RtError, RtResult};
+use crate::util::Mat;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// The PJRT runtime: client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<ArtifactKey, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifact directory.
+    pub fn new(dir: impl AsRef<Path>) -> RtResult<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| RtError::new(format!("PJRT client: {e:?}")))?;
+        Ok(Self { client, dir: dir.as_ref().to_path_buf(), cache: HashMap::new() })
+    }
+
+    /// Platform string of the PJRT backend (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Artifacts available on disk (not necessarily loaded yet).
+    pub fn available(&self) -> Vec<ArtifactKey> {
+        scan_artifacts(&self.dir)
+    }
+
+    /// True if an artifact exists for (op, n).
+    pub fn has(&self, op: &str, n: usize) -> bool {
+        has_artifact(&self.dir, op, n)
+    }
+
+    /// Load (and cache) the executable for (op, n).
+    pub fn load(&mut self, op: &str, n: usize) -> RtResult<&xla::PjRtLoadedExecutable> {
+        let key = ArtifactKey { op: op.to_string(), n };
+        if !self.cache.contains_key(&key) {
+            let path = self.dir.join(key.file_name());
+            if !path.exists() {
+                return Err(RtError::new(format!(
+                    "artifact {} not found (run `make artifacts`)",
+                    path.display()
+                )));
+            }
+            let path_str = path.to_str().ok_or_else(|| RtError::new("non-utf8 path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .map_err(|e| RtError::new(format!("parse {}: {e:?}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| RtError::new(format!("compile {}: {e:?}", path.display())))?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(self.cache.get(&key).unwrap())
+    }
+
+    /// Execute `gemm_nN`: C ← A·B + C over f64 [n,n] operands.
+    pub fn gemm(&mut self, a: &Mat, b: &Mat, c: &Mat) -> RtResult<Mat> {
+        let n = a.rows();
+        assert!(a.cols() == n && b.rows() == n && b.cols() == n, "square only");
+        assert!(c.rows() == n && c.cols() == n);
+        let la = mat_literal(a)?;
+        let lb = mat_literal(b)?;
+        let lc = mat_literal(c)?;
+        let exe = self.load("gemm", n)?;
+        let out = run1(exe, &[la, lb, lc])?;
+        let v = out.to_vec::<f64>().map_err(|e| RtError::new(format!("to_vec: {e:?}")))?;
+        Ok(Mat::from_row_major(n, n, &v))
+    }
+
+    /// Execute `gemv_nN`: y ← A·x + y.
+    pub fn gemv(&mut self, a: &Mat, x: &[f64], y: &[f64]) -> RtResult<Vec<f64>> {
+        let n = a.rows();
+        assert!(a.cols() == n && x.len() == n && y.len() == n);
+        let la = mat_literal(a)?;
+        let lx = xla::Literal::vec1(x);
+        let ly = xla::Literal::vec1(y);
+        let exe = self.load("gemv", n)?;
+        let out = run1(exe, &[la, lx, ly])?;
+        out.to_vec::<f64>().map_err(|e| RtError::new(format!("to_vec: {e:?}")))
+    }
+
+    /// Execute `dot_nN`: xᵀ·y.
+    pub fn dot(&mut self, x: &[f64], y: &[f64]) -> RtResult<f64> {
+        let n = x.len();
+        assert_eq!(y.len(), n);
+        let lx = xla::Literal::vec1(x);
+        let ly = xla::Literal::vec1(y);
+        let exe = self.load("dot", n)?;
+        let out = run1(exe, &[lx, ly])?;
+        out.get_first_element::<f64>().map_err(|e| RtError::new(format!("scalar: {e:?}")))
+    }
+
+    /// Execute `axpy_nN`: α·x + y (α passed in, not baked per-artifact).
+    pub fn axpy(&mut self, alpha: f64, x: &[f64], y: &[f64]) -> RtResult<Vec<f64>> {
+        let n = x.len();
+        assert_eq!(y.len(), n);
+        let la = xla::Literal::scalar(alpha);
+        let lx = xla::Literal::vec1(x);
+        let ly = xla::Literal::vec1(y);
+        let exe = self.load("axpy", n)?;
+        let out = run1(exe, &[la, lx, ly])?;
+        out.to_vec::<f64>().map_err(|e| RtError::new(format!("to_vec: {e:?}")))
+    }
+
+    /// Execute `nrm2_nN`: ‖x‖₂.
+    pub fn nrm2(&mut self, x: &[f64]) -> RtResult<f64> {
+        let lx = xla::Literal::vec1(x);
+        let exe = self.load("nrm2", x.len())?;
+        let out = run1(exe, &[lx])?;
+        out.get_first_element::<f64>().map_err(|e| RtError::new(format!("scalar: {e:?}")))
+    }
+
+    /// Execute `qr_panel_nN`: one DGEQR2 Householder panel step (v, τ, and
+    /// the updated trailing block) — the L2 fused kernel.
+    pub fn qr_panel(&mut self, a: &Mat) -> RtResult<(Mat, f64)> {
+        let n = a.rows();
+        let la = mat_literal(a)?;
+        let exe = self.load("qr_panel", n)?;
+        let result = exe
+            .execute::<xla::Literal>(&[la])
+            .map_err(|e| RtError::new(format!("execute: {e:?}")))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| RtError::new(format!("sync: {e:?}")))?;
+        let (out_a, out_tau) =
+            result.to_tuple2().map_err(|e| RtError::new(format!("tuple2: {e:?}")))?;
+        let v = out_a.to_vec::<f64>().map_err(|e| RtError::new(format!("to_vec: {e:?}")))?;
+        let tau = out_tau
+            .get_first_element::<f64>()
+            .map_err(|e| RtError::new(format!("tau: {e:?}")))?;
+        Ok((Mat::from_row_major(n, n, &v), tau))
+    }
+}
+
+/// Row-major f64 literal for a matrix.
+fn mat_literal(m: &Mat) -> RtResult<xla::Literal> {
+    xla::Literal::vec1(&m.to_row_major())
+        .reshape(&[m.rows() as i64, m.cols() as i64])
+        .map_err(|e| RtError::new(format!("reshape: {e:?}")))
+}
+
+/// Execute and unwrap a 1-tuple result (aot.py lowers with
+/// `return_tuple=True`).
+fn run1(exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> RtResult<xla::Literal> {
+    let result = exe
+        .execute::<xla::Literal>(args)
+        .map_err(|e| RtError::new(format!("execute: {e:?}")))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| RtError::new(format!("sync: {e:?}")))?;
+    result.to_tuple1().map_err(|e| RtError::new(format!("tuple1: {e:?}")))
+}

@@ -1,0 +1,68 @@
+//! Offline stand-in for the PJRT runtime (default build, no `pjrt`
+//! feature). [`Runtime::new`] always fails, so the coordinator keeps every
+//! value on the `ValueSource::PeSim` path — exactly the behavior of a
+//! `pjrt` build in which PJRT failed to initialize. The full method surface
+//! is kept so downstream code compiles identically in both modes.
+
+use super::{has_artifact, scan_artifacts, ArtifactKey, RtError, RtResult};
+use crate::util::Mat;
+use std::path::{Path, PathBuf};
+
+/// Stub runtime. Never successfully constructed.
+pub struct Runtime {
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Always fails: the `pjrt` feature is off, so no value path exists.
+    pub fn new(dir: impl AsRef<Path>) -> RtResult<Self> {
+        let _ = dir.as_ref();
+        Err(RtError::new(
+            "PJRT runtime unavailable: crate built without the `pjrt` feature \
+             (values fall back to the PE simulator)",
+        ))
+    }
+
+    /// Platform string of the backend (diagnostics).
+    pub fn platform(&self) -> String {
+        "stub (pjrt feature disabled)".into()
+    }
+
+    /// Artifacts available on disk (not loadable in this build).
+    pub fn available(&self) -> Vec<ArtifactKey> {
+        scan_artifacts(&self.dir)
+    }
+
+    /// True if an artifact exists for (op, n).
+    pub fn has(&self, op: &str, n: usize) -> bool {
+        has_artifact(&self.dir, op, n)
+    }
+
+    pub fn gemm(&mut self, _a: &Mat, _b: &Mat, _c: &Mat) -> RtResult<Mat> {
+        Err(unavailable())
+    }
+
+    pub fn gemv(&mut self, _a: &Mat, _x: &[f64], _y: &[f64]) -> RtResult<Vec<f64>> {
+        Err(unavailable())
+    }
+
+    pub fn dot(&mut self, _x: &[f64], _y: &[f64]) -> RtResult<f64> {
+        Err(unavailable())
+    }
+
+    pub fn axpy(&mut self, _alpha: f64, _x: &[f64], _y: &[f64]) -> RtResult<Vec<f64>> {
+        Err(unavailable())
+    }
+
+    pub fn nrm2(&mut self, _x: &[f64]) -> RtResult<f64> {
+        Err(unavailable())
+    }
+
+    pub fn qr_panel(&mut self, _a: &Mat) -> RtResult<(Mat, f64)> {
+        Err(unavailable())
+    }
+}
+
+fn unavailable() -> RtError {
+    RtError::new("pjrt feature disabled")
+}

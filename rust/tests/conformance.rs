@@ -1,0 +1,232 @@
+//! Conformance suite: randomized sweep of the codegen-on-PE kernels across
+//! every enhancement level (AE0–AE5) and ~20 shapes — including
+//! non-multiple-of-4 shapes, which go through the coordinator's
+//! zero-padding convention — checked against the host reference BLAS
+//! within 1e-12 relative error.
+//!
+//! These tests pin the co-design contract: one routine, six compilations,
+//! identical numerics at every level and every (padded) shape.
+
+use redefine_blas::blas;
+use redefine_blas::codegen::{self, layout::VecLayout, GemmLayout};
+use redefine_blas::pe::{AeLevel, Pe, PeConfig};
+use redefine_blas::util::{rel_fro_error, round_up, Mat, XorShift64};
+
+/// ~20 shapes, aligned and unaligned, small enough for debug-build runs.
+const SHAPES: [usize; 20] =
+    [4, 5, 6, 7, 8, 9, 10, 12, 13, 15, 16, 18, 20, 21, 24, 25, 27, 28, 30, 32];
+
+/// One non-4-aligned shape exercised for every routine at every AE level.
+const UNALIGNED: usize = 10;
+
+fn is_aligned(n: usize) -> bool {
+    n % 4 == 0
+}
+
+/// Run DGEMM through the padding convention: emit at np = round_up(n, 4),
+/// zero-pad operands, extract the leading n×n block.
+fn check_gemm(n: usize, ae: AeLevel, seed: u64) {
+    let np = round_up(n, 4);
+    let a = Mat::random(n, n, seed);
+    let b = Mat::random(n, n, seed + 1);
+    let c = Mat::random(n, n, seed + 2);
+    let layout = GemmLayout::rect(np, np, np);
+    let prog = codegen::gen_gemm_rect(np, np, np, ae, &layout);
+    let mut pe = Pe::new(PeConfig::paper(ae), layout.gm_words());
+    pe.write_gm(0, &layout.pack(&a, &b, &c));
+    let st = pe.run(&prog);
+    assert!(st.cycles > 0);
+    let got = layout.unpack_c(&pe.gm, n, n);
+    let want = blas::level3::dgemm_ref(&a, &b, &c);
+    let err = rel_fro_error(got.as_slice(), want.as_slice());
+    assert!(err < 1e-12, "DGEMM n={n} (np={np}) {ae}: rel err {err}");
+}
+
+fn check_gemv(n: usize, ae: AeLevel, seed: u64) {
+    let np = round_up(n, 4);
+    let a = Mat::random(n, n, seed);
+    let mut rng = XorShift64::new(seed + 10);
+    let x = rng.vec(n);
+    let y = rng.vec(n);
+    let l = VecLayout::gemv(np);
+    let prog = codegen::gen_gemv(np, ae, &l);
+    let mut pe = Pe::new(PeConfig::paper(ae), l.gm_words());
+    let mut gm = vec![0.0; l.gm_words()];
+    for i in 0..n {
+        for k in 0..n {
+            gm[l.a(i, k)] = a[(i, k)];
+        }
+    }
+    gm[l.base_x..l.base_x + n].copy_from_slice(&x);
+    gm[l.base_y..l.base_y + n].copy_from_slice(&y);
+    pe.write_gm(0, &gm);
+    pe.run(&prog);
+    let got = pe.read_gm(l.base_y, n).to_vec();
+    let want = blas::level2::dgemv_ref(&a, &x, &y);
+    for i in 0..n {
+        let scale = want[i].abs().max(1.0);
+        assert!(
+            (got[i] - want[i]).abs() <= 1e-12 * scale,
+            "DGEMV n={n} (np={np}) {ae} row {i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+    // Zero-padded tail rows must stay zero (A and y padding are zeros).
+    let tail = pe.read_gm(l.base_y + n, np - n).to_vec();
+    assert!(tail.iter().all(|&v| v == 0.0), "DGEMV padding leaked: {tail:?}");
+}
+
+fn check_ddot(n: usize, ae: AeLevel, seed: u64) {
+    let np = round_up(n, 4);
+    let mut rng = XorShift64::new(seed);
+    let x = rng.vec(n);
+    let y = rng.vec(n);
+    let l = VecLayout::level1(np);
+    let prog = codegen::gen_ddot(np, ae, &l);
+    let mut pe = Pe::new(PeConfig::paper(ae), l.gm_words());
+    pe.write_gm(l.base_x, &x);
+    pe.write_gm(l.base_y, &y);
+    pe.run(&prog);
+    let got = pe.read_gm(l.scratch(), 1)[0];
+    let want = blas::level1::ddot(&x, &y);
+    assert!(
+        (got - want).abs() <= 1e-12 * want.abs().max(1.0),
+        "DDOT n={n} (np={np}) {ae}: {got} vs {want}"
+    );
+}
+
+fn check_daxpy(n: usize, ae: AeLevel, seed: u64) {
+    let np = round_up(n, 4);
+    let alpha = 1.75;
+    let mut rng = XorShift64::new(seed);
+    let x = rng.vec(n);
+    let y = rng.vec(n);
+    let l = VecLayout::level1(np);
+    let prog = codegen::gen_daxpy(np, alpha, ae, &l);
+    let mut pe = Pe::new(PeConfig::paper(ae), l.gm_words());
+    pe.write_gm(l.base_x, &x);
+    pe.write_gm(l.base_y, &y);
+    pe.run(&prog);
+    let got = pe.read_gm(l.base_y, np).to_vec();
+    for k in 0..n {
+        let want = alpha * x[k] + y[k];
+        assert!(
+            (got[k] - want).abs() <= 1e-12 * want.abs().max(1.0),
+            "DAXPY n={n} (np={np}) {ae} k={k}: {} vs {want}",
+            got[k]
+        );
+    }
+    assert!(got[n..].iter().all(|&v| v == 0.0), "DAXPY padding leaked");
+}
+
+fn check_dnrm2(n: usize, ae: AeLevel, seed: u64) {
+    let np = round_up(n, 4);
+    let mut rng = XorShift64::new(seed);
+    let x = rng.vec(n);
+    let l = VecLayout::level1(np);
+    let prog = codegen::gen_dnrm2(np, ae, &l);
+    let mut pe = Pe::new(PeConfig::paper(ae), l.gm_words());
+    pe.write_gm(l.base_x, &x);
+    pe.run(&prog);
+    let got = pe.read_gm(l.scratch(), 1)[0];
+    let want = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+    assert!(
+        (got - want).abs() <= 1e-12 * want.abs().max(1.0),
+        "DNRM2 n={n} (np={np}) {ae}: {got} vs {want}"
+    );
+}
+
+#[test]
+fn gemm_shape_sweep_across_levels() {
+    let mut saw_unaligned = false;
+    for (i, &n) in SHAPES.iter().enumerate() {
+        let ae = AeLevel::ALL[i % 6];
+        saw_unaligned |= !is_aligned(n);
+        check_gemm(n, ae, 1000 + i as u64);
+    }
+    assert!(saw_unaligned, "sweep must include padded shapes");
+}
+
+#[test]
+fn gemm_every_level_aligned_and_padded() {
+    for (j, &ae) in AeLevel::ALL.iter().enumerate() {
+        check_gemm(8, ae, 2000 + j as u64);
+        check_gemm(UNALIGNED, ae, 2100 + j as u64);
+    }
+}
+
+#[test]
+fn gemv_every_level_aligned_and_padded() {
+    for (j, &ae) in AeLevel::ALL.iter().enumerate() {
+        check_gemv(12, ae, 3000 + j as u64);
+        check_gemv(UNALIGNED, ae, 3100 + j as u64);
+    }
+}
+
+#[test]
+fn gemv_shape_sweep() {
+    for (i, &n) in SHAPES.iter().enumerate() {
+        let ae = AeLevel::ALL[(i + 3) % 6];
+        check_gemv(n, ae, 3200 + i as u64);
+    }
+}
+
+#[test]
+fn ddot_every_level_aligned_and_padded() {
+    for (j, &ae) in AeLevel::ALL.iter().enumerate() {
+        check_ddot(64, ae, 4000 + j as u64);
+        check_ddot(UNALIGNED, ae, 4100 + j as u64);
+        check_ddot(45, ae, 4200 + j as u64); // crosses a 32-word LM group
+    }
+}
+
+#[test]
+fn daxpy_every_level_aligned_and_padded() {
+    for (j, &ae) in AeLevel::ALL.iter().enumerate() {
+        check_daxpy(64, ae, 5000 + j as u64);
+        check_daxpy(UNALIGNED, ae, 5100 + j as u64);
+        check_daxpy(33, ae, 5200 + j as u64);
+    }
+}
+
+#[test]
+fn dnrm2_every_level_aligned_and_padded() {
+    for (j, &ae) in AeLevel::ALL.iter().enumerate() {
+        check_dnrm2(64, ae, 6000 + j as u64);
+        check_dnrm2(UNALIGNED, ae, 6100 + j as u64);
+    }
+}
+
+#[test]
+fn level1_shape_sweep() {
+    for (i, &n) in SHAPES.iter().enumerate() {
+        let ae = AeLevel::ALL[(i + 1) % 6];
+        check_ddot(n, ae, 7000 + i as u64);
+        check_daxpy(n, ae, 7100 + i as u64);
+        check_dnrm2(n, ae, 7200 + i as u64);
+    }
+}
+
+#[test]
+fn coordinator_serves_unaligned_shapes() {
+    // The full request path (pad → cache → pool → merge) at an
+    // awkward size on every tiled level.
+    use redefine_blas::coordinator::{Coordinator, CoordinatorConfig};
+    let n = 13;
+    let a = Mat::random(n, n, 901);
+    let b = Mat::random(n, n, 902);
+    let c = Mat::random(n, n, 903);
+    let want = blas::level3::dgemm_ref(&a, &b, &c);
+    for ae in AeLevel::ALL {
+        let mut co = Coordinator::new(CoordinatorConfig {
+            ae,
+            b: 2,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+        });
+        let r = co.dgemm(&a, &b, &c);
+        let err = rel_fro_error(r.c.as_slice(), want.as_slice());
+        assert!(err < 1e-12, "coordinator DGEMM n={n} {ae}: rel err {err}");
+    }
+}

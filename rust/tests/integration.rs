@@ -11,6 +11,11 @@ use redefine_blas::runtime::Runtime;
 use redefine_blas::util::{assert_allclose, rel_fro_error, Mat, XorShift64};
 
 fn artifact_dir() -> Option<String> {
+    if cfg!(not(feature = "pjrt")) {
+        // The stub runtime can never execute artifacts — even ones on disk.
+        eprintln!("skipping: built without the `pjrt` feature (stub runtime)");
+        return None;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("gemm_n8.hlo.txt").exists() {
         Some(dir.to_string_lossy().into_owned())

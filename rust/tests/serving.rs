@@ -1,0 +1,122 @@
+//! Serving-engine tests: program-cache determinism (pointer-equal shared
+//! kernels), `serve_batch` vs `serve_one` equivalence, and the pooled
+//! path's makespan behavior.
+
+use redefine_blas::coordinator::{
+    request::{random_workload, repeated_gemm_workload, Request},
+    Coordinator, CoordinatorConfig, ProgramCache, ValueSource,
+};
+use redefine_blas::pe::AeLevel;
+use redefine_blas::util::Mat;
+use std::sync::Arc;
+
+fn coord(ae: AeLevel, b: usize) -> Coordinator {
+    Coordinator::new(CoordinatorConfig {
+        ae,
+        b,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+    })
+}
+
+#[test]
+fn cache_same_key_returns_the_identical_arc() {
+    let cache = ProgramCache::new();
+    let p1 = cache.gemm_rect(12, 12, 24, AeLevel::Ae5);
+    let p2 = cache.gemm_rect(12, 12, 24, AeLevel::Ae5);
+    assert!(Arc::ptr_eq(&p1, &p2), "same (routine, shape, ae) must share one Program");
+    let p3 = cache.gemm_rect(12, 12, 24, AeLevel::Ae3);
+    assert!(!Arc::ptr_eq(&p1, &p3), "AE level is part of the key");
+    let s = cache.stats();
+    assert_eq!(s.hits, 1);
+    assert_eq!(s.misses, 2);
+    assert_eq!(s.entries, 2);
+}
+
+#[test]
+fn coordinator_reuses_one_program_across_a_request_stream() {
+    let mut co = coord(AeLevel::Ae5, 2);
+    let resps = co.serve_batch(repeated_gemm_workload(6, 20, 77));
+    assert_eq!(resps.len(), 6);
+    let s = co.cache_stats();
+    assert_eq!(s.misses, 1, "one shape → one emission: {s:?}");
+    assert_eq!(s.hits, 5, "five cache hits: {s:?}");
+    // All six responses simulate identical tile timing (same shape).
+    let cycles: Vec<u64> = resps.iter().map(|r| r.cycles).collect();
+    assert!(cycles.windows(2).all(|w| w[0] == w[1]), "same shape, same makespan: {cycles:?}");
+}
+
+#[test]
+fn serve_batch_matches_serve_one_exactly() {
+    let reqs = random_workload(10, 28, 2026);
+    let mut seq = coord(AeLevel::Ae5, 2);
+    let mut bat = coord(AeLevel::Ae5, 2);
+    let r_seq: Vec<_> = reqs.clone().into_iter().map(|r| seq.serve_one(r)).collect();
+    let r_bat = bat.serve_batch(reqs);
+    assert_eq!(r_seq.len(), r_bat.len());
+    for (i, (a, b)) in r_seq.iter().zip(&r_bat).enumerate() {
+        assert_eq!(a.op, b.op, "request {i}");
+        assert_eq!(a.n, b.n, "request {i}");
+        assert_eq!(a.source, b.source, "request {i}");
+        assert_eq!(a.cycles, b.cycles, "request {i}: simulated cycles must be identical");
+        assert_eq!(a.energy_j, b.energy_j, "request {i}");
+        assert_eq!(a.matrix, b.matrix, "request {i}: matrix payload");
+        assert_eq!(a.vector, b.vector, "request {i}: vector payload");
+        assert_eq!(a.scalar, b.scalar, "request {i}: scalar payload");
+    }
+}
+
+#[test]
+fn serve_batch_is_deterministic_across_runs() {
+    // Run the same batch twice on fresh coordinators: every simulated
+    // quantity must repeat bit-for-bit (host thread scheduling must not
+    // leak into results).
+    let reqs = random_workload(8, 24, 555);
+    let r1 = coord(AeLevel::Ae5, 2).serve_batch(reqs.clone());
+    let r2 = coord(AeLevel::Ae5, 2).serve_batch(reqs);
+    for (a, b) in r1.iter().zip(&r2) {
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(a.energy_j, b.energy_j);
+        assert_eq!(a.matrix, b.matrix);
+        assert_eq!(a.vector, b.vector);
+        assert_eq!(a.scalar, b.scalar);
+    }
+}
+
+#[test]
+fn pooled_bigger_array_is_faster() {
+    // Makespan monotonicity through the pooled path (the seed's
+    // bigger_array_is_faster invariant must survive the serving engine).
+    let n = 48;
+    let a = Mat::random(n, n, 81);
+    let b = Mat::random(n, n, 82);
+    let c = Mat::zeros(n, n);
+    let m1 = coord(AeLevel::Ae5, 1).dgemm(&a, &b, &c).makespan;
+    let m2 = coord(AeLevel::Ae5, 2).dgemm(&a, &b, &c).makespan;
+    let m3 = coord(AeLevel::Ae5, 3).dgemm(&a, &b, &c).makespan;
+    assert!(m2 < m1, "2x2 ({m2}) not faster than 1x1 ({m1})");
+    assert!(m3 < m2, "3x3 ({m3}) not faster than 2x2 ({m2})");
+}
+
+#[test]
+fn pool_sized_by_tile_array() {
+    assert_eq!(coord(AeLevel::Ae5, 1).pool_size(), 1);
+    assert_eq!(coord(AeLevel::Ae5, 3).pool_size(), 9);
+}
+
+#[test]
+fn batch_values_match_host_blas() {
+    // End-to-end value audit of the batched path against the oracle.
+    let mut co = coord(AeLevel::Ae4, 2);
+    let reqs: Vec<Request> =
+        (0..4).map(|i| Request::RandomDgemm { n: 18, seed: 9_000 + i }).collect();
+    let resps = co.serve_batch(reqs.clone());
+    for (req, resp) in reqs.into_iter().zip(resps) {
+        let Request::Dgemm { a, b, c } = req.materialize() else { unreachable!() };
+        let want = redefine_blas::blas::level3::dgemm_ref(&a, &b, &c);
+        let got = resp.matrix.expect("matrix payload");
+        let err = redefine_blas::util::rel_fro_error(got.as_slice(), want.as_slice());
+        assert!(err < 1e-12, "batched DGEMM off: {err}");
+        assert_eq!(resp.source, ValueSource::PeSim);
+    }
+}
