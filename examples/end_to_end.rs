@@ -18,7 +18,13 @@ use redefine_blas::util::{rel_fro_error, Mat, XorShift64};
 
 fn main() {
     let ae = AeLevel::Ae5;
-    let cfg = CoordinatorConfig { ae, b: 2, artifact_dir: "artifacts".into(), verify: true };
+    let cfg = CoordinatorConfig {
+        ae,
+        b: 2,
+        artifact_dir: "artifacts".into(),
+        verify: true,
+        ..CoordinatorConfig::default()
+    };
     let mut co = Coordinator::new(cfg);
     println!(
         "end-to-end: 2x2 REDEFINE array, {ae}, XLA value path: {}",

@@ -23,6 +23,7 @@ fn main() {
         b: 2,
         artifact_dir: "artifacts".into(),
         verify: true,
+        ..CoordinatorConfig::default()
     });
     println!("XLA value path live: {}", co.has_xla());
     if co.has_xla() {

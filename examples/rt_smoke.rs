@@ -2,8 +2,9 @@
 //! CPU PJRT client, and verify the numerics against host BLAS — the
 //! smallest possible proof that the L2→L3 bridge works.
 //!
-//! Run: `make artifacts && cargo run --release --features pjrt --example rt_smoke`
-//! (requires the `pjrt` feature — see rust/Cargo.toml.)
+//! Run: `make artifacts && cargo run --release --features pjrt,xla-rt --example rt_smoke`
+//! (`pjrt` alone builds the offline stub; the real client needs `xla-rt`
+//! plus the vendored `xla` crate — see rust/Cargo.toml.)
 
 use redefine_blas::runtime::Runtime;
 use redefine_blas::util::Mat;

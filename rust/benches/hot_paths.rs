@@ -5,6 +5,12 @@
 //! enhancement sweep is interactive.
 //!
 //! Run: `cargo bench --bench hot_paths`
+//!
+//! Flags (after `--`):
+//! * `--quick`     — smaller sizes / fewer iterations (CI smoke mode);
+//! * `--json PATH` — also write every measurement to PATH as JSON (the
+//!   `BENCH_hot_paths.json` workflow artifact that tracks the perf
+//!   trajectory commit by commit).
 
 use redefine_blas::codegen::{gen_gemm, gen_gemm_rect, GemmLayout};
 use redefine_blas::coordinator::{
@@ -16,7 +22,33 @@ use redefine_blas::pe::{AeLevel, Pe, PeConfig};
 use redefine_blas::util::{round_up, Mat};
 use std::time::Instant;
 
-fn timeit<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+/// Collected (name, milliseconds-per-iteration) measurements, written out
+/// as the JSON artifact at the end of the run.
+struct Report {
+    quick: bool,
+    entries: Vec<(String, f64)>,
+}
+
+impl Report {
+    fn record(&mut self, name: &str, ms_per_iter: f64) {
+        self.entries.push((name.to_string(), ms_per_iter));
+    }
+
+    /// Hand-rolled JSON (the crate is dependency-free by design).
+    fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"bench\": \"hot_paths\",\n");
+        s.push_str(&format!("  \"quick\": {},\n  \"results\": [\n", self.quick));
+        for (i, (name, ms)) in self.entries.iter().enumerate() {
+            let esc: String = name.chars().filter(|c| *c != '"' && *c != '\\').collect();
+            let comma = if i + 1 < self.entries.len() { "," } else { "" };
+            s.push_str(&format!("    {{\"name\": \"{esc}\", \"ms_per_iter\": {ms:.6}}}{comma}\n"));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+fn timeit<F: FnMut()>(report: &mut Report, name: &str, iters: usize, mut f: F) -> f64 {
     // Warm-up.
     f();
     let t0 = Instant::now();
@@ -25,14 +57,28 @@ fn timeit<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     }
     let per = t0.elapsed().as_secs_f64() / iters as f64;
     println!("{name:<44} {:>10.3} ms/iter", per * 1e3);
+    report.record(name, per * 1e3);
     per
 }
 
 fn main() {
-    println!("host hot-path benchmarks (release)\n");
+    let mut quick = false;
+    let mut json_path: Option<String> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--quick" => quick = true,
+            "--json" => json_path = args.next(),
+            other => eprintln!("ignoring unknown bench flag {other:?}"),
+        }
+    }
+    let mut report = Report { quick, entries: Vec::new() };
+    let mode = if quick { " (quick mode)" } else { "" };
+    println!("host hot-path benchmarks (release){mode}\n");
 
     // 1) PE simulator throughput: simulated cycles per host second.
-    let n = 100;
+    let n = if quick { 32 } else { 100 };
+    let iters = if quick { 2 } else { 5 };
     let layout = GemmLayout::packed(n);
     let prog = gen_gemm(n, AeLevel::Ae5, &layout);
     let a = Mat::random(n, n, 1);
@@ -40,7 +86,7 @@ fn main() {
     let c = Mat::random(n, n, 3);
     let gm = layout.pack(&a, &b, &c);
     let mut cycles = 0u64;
-    let per = timeit("PE sim: DGEMM n=100 AE5 (full run)", 5, || {
+    let per = timeit(&mut report, &format!("PE sim: DGEMM n={n} AE5 (full run)"), iters, || {
         let mut pe = Pe::new(PeConfig::paper(AeLevel::Ae5), layout.gm_words());
         pe.write_gm(0, &gm);
         cycles = pe.run(&prog).cycles;
@@ -54,49 +100,64 @@ fn main() {
     );
 
     // 2) Codegen emission rate.
-    timeit("codegen: gen_gemm n=100 AE5", 10, || {
+    timeit(&mut report, &format!("codegen: gen_gemm n={n} AE5"), if quick { 3 } else { 10 }, || {
         let p = gen_gemm(n, AeLevel::Ae5, &layout);
         assert!(!p.is_empty());
     });
 
     // 3) Full measurement (codegen + sim + numeric check).
-    timeit("measure_gemm n=60 AE5 (incl. host check)", 5, || {
-        let m = measure_gemm(60, AeLevel::Ae5);
+    let mn = if quick { 20 } else { 60 };
+    let miters = if quick { 2 } else { 5 };
+    timeit(&mut report, &format!("measure_gemm n={mn} AE5 (incl. host check)"), miters, || {
+        let m = measure_gemm(mn, AeLevel::Ae5);
         assert!(m.latency() > 0);
     });
 
-    // 4) Full AE0..AE5 sweep at n=40 (the table harness inner loop).
-    timeit("AE0..AE5 sweep n=40", 3, || {
+    // 4) Full AE0..AE5 sweep (the table harness inner loop).
+    let sn = if quick { 16 } else { 40 };
+    timeit(&mut report, &format!("AE0..AE5 sweep n={sn}"), if quick { 1 } else { 3 }, || {
         for ae in AeLevel::ALL {
-            let _ = measure_gemm(40, ae);
+            let _ = measure_gemm(sn, ae);
         }
     });
 
-    // 5) Coordinator serve throughput (multi-threaded tiles).
-    timeit("coordinator: 8-request mixed workload", 3, || {
+    // 5) Coordinator serve throughput (multi-threaded pool, all levels).
+    let (wreqs, wmax) = if quick { (6, 24) } else { (8, 48) };
+    timeit(&mut report, &format!("coordinator: {wreqs}-request mixed workload"), 3, || {
         let mut co = Coordinator::new(CoordinatorConfig {
             ae: AeLevel::Ae5,
             b: 2,
             artifact_dir: "/nonexistent".into(),
             verify: false,
+            ..CoordinatorConfig::default()
         });
-        let resps = co.serve(random_workload(8, 48, 7));
-        assert_eq!(resps.len(), 8);
+        let resps = co.serve(random_workload(wreqs, wmax, 7));
+        assert_eq!(resps.len(), wreqs);
     });
 
     // 6) Host reference BLAS (oracle cost).
-    let big = Mat::random(192, 192, 9);
-    timeit("host dgemm_ref 192x192", 5, || {
+    let hn = if quick { 96 } else { 192 };
+    let big = Mat::random(hn, hn, 9);
+    timeit(&mut report, &format!("host dgemm_ref {hn}x{hn}"), if quick { 2 } else { 5 }, || {
         let r = redefine_blas::blas::level3::dgemm_ref(&big, &big, &big);
-        assert!(r.rows() == 192);
+        assert!(r.rows() == hn);
     });
 
-    // 7) Serving engine: 64-request repeated-shape DGEMM workload —
-    //    warm program cache + persistent pool (serve_batch) vs the
-    //    seed-style per-request codegen + thread-spawn path. Values must be
-    //    identical; wall-clock is the cached-vs-uncached headline recorded
-    //    in CHANGES.md.
-    serving_engine_bench(64, 32, 2, AeLevel::Ae5);
+    // 7) Serving engine: repeated-shape DGEMM workload — warm program
+    //    cache + persistent pool (serve_batch) vs the seed-style
+    //    per-request codegen + thread-spawn path. Values must be identical;
+    //    wall-clock is the cached-vs-uncached headline recorded in
+    //    CHANGES.md.
+    if quick {
+        serving_engine_bench(&mut report, 16, 16, 2, AeLevel::Ae5);
+    } else {
+        serving_engine_bench(&mut report, 64, 32, 2, AeLevel::Ae5);
+    }
+
+    if let Some(path) = json_path {
+        std::fs::write(&path, report.to_json()).expect("write bench JSON");
+        println!("\nwrote {} measurements to {path}", report.entries.len());
+    }
 }
 
 /// The pre-serving-engine DGEMM path, kept verbatim as the bench baseline:
@@ -135,7 +196,7 @@ fn seed_style_dgemm(a: &Mat, b: &Mat, c: &Mat, ae: AeLevel, bb: usize) -> Mat {
     cpad.block(0, 0, n, n)
 }
 
-fn serving_engine_bench(requests: usize, n: usize, b: usize, ae: AeLevel) {
+fn serving_engine_bench(report: &mut Report, requests: usize, n: usize, b: usize, ae: AeLevel) {
     println!("\nserving engine: {requests} DGEMM requests, n={n}, {b}x{b} tiles, {ae}");
     let mk_coord = || {
         Coordinator::new(CoordinatorConfig {
@@ -143,6 +204,7 @@ fn serving_engine_bench(requests: usize, n: usize, b: usize, ae: AeLevel) {
             b,
             artifact_dir: "/nonexistent".into(),
             verify: false,
+            ..CoordinatorConfig::default()
         })
     };
 
@@ -201,4 +263,7 @@ fn serving_engine_bench(requests: usize, n: usize, b: usize, ae: AeLevel) {
         cs.hits,
         cs.misses
     );
+    report.record("serve.seed_style_total_ms", t_seed * 1e3);
+    report.record("serve.batch_total_ms", t_batch * 1e3);
+    report.record("serve.speedup_x", t_seed / t_batch);
 }

@@ -5,13 +5,20 @@
 //! (the persistent-kernel approach of KBLAS-style GPU servers, realized
 //! here for the PE). This cache makes the coordinator behave the same way:
 //! `gen_gemm_rect`/`gen_gemv`/Level-1 emission runs once per key and the
-//! resulting [`Program`] is shared by reference ([`Arc`]) across tile
+//! resulting [`Program`] is shared by reference ([`Arc`]) across pool
 //! workers and across requests.
 //!
 //! Keys are exact: a program is only reused for the identical padded shape
 //! and AE level (and, for DAXPY, the identical α, which the generator bakes
 //! into the stream as a `Li` constant). Layouts are pure functions of the
 //! shape, so they are recomputed by callers rather than cached.
+//!
+//! The cache is unbounded by default (fine for the paper's shape set) but
+//! takes an optional **LRU capacity cap** for adversarial shape streams:
+//! when more than `capacity` programs are resident, the least recently
+//! used (program, measurement) pair is dropped and counted in
+//! [`CacheStats::evictions`]. In-flight kernels are unaffected — workers
+//! hold the program by `Arc`.
 
 use crate::codegen::{self, layout::VecLayout, GemmLayout};
 use crate::metrics::{Measurement, Routine};
@@ -41,46 +48,104 @@ impl ProgramKey {
     }
 }
 
-/// Cache hit/miss accounting (monotonic counters).
+/// Cache hit/miss/eviction accounting (monotonic counters).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    /// Programs (with their paired measurements) dropped by the LRU cap.
+    pub evictions: u64,
     pub entries: usize,
 }
 
-/// Thread-safe program cache. Emission happens at most once per key; the
-/// emitting call holds the map lock so concurrent requests for the same key
-/// block rather than duplicating multi-million-instruction emission work.
+/// A resident program with its LRU clock stamp.
+#[derive(Debug)]
+struct Entry {
+    prog: Arc<Program>,
+    /// Monotonic clock value of the most recent use.
+    last_used: u64,
+}
+
+/// Lock-protected state: programs and their memoized measurements share one
+/// lock (and one LRU clock) so eviction can drop both sides of a key
+/// atomically.
 #[derive(Debug, Default)]
-pub struct ProgramCache {
-    map: Mutex<HashMap<ProgramKey, Arc<Program>>>,
+struct Inner {
+    programs: HashMap<ProgramKey, Entry>,
     /// Single-PE measurements are pure functions of the key (fixed operand
     /// seeds + cached program + data-independent timing), so they are
     /// memoized alongside the programs.
-    measurements: Mutex<HashMap<ProgramKey, Measurement>>,
+    measurements: HashMap<ProgramKey, Measurement>,
+    clock: u64,
+}
+
+/// Thread-safe program cache. Emission happens at most once per resident
+/// key; the emitting call holds the map lock so concurrent requests for the
+/// same key block rather than duplicating multi-million-instruction
+/// emission work.
+#[derive(Debug, Default)]
+pub struct ProgramCache {
+    inner: Mutex<Inner>,
+    /// LRU capacity in resident programs (`None` = unbounded).
+    capacity: Option<usize>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 impl ProgramCache {
+    /// Unbounded cache (the default — every emitted kernel stays resident).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Cache holding at most `capacity` programs, evicting the least
+    /// recently used kernel (and its memoized measurement) beyond that.
+    pub fn with_capacity(capacity: usize) -> Self {
+        assert!(capacity >= 1, "program cache capacity must be at least 1");
+        Self { capacity: Some(capacity), ..Self::default() }
+    }
+
+    /// The LRU capacity (`None` = unbounded).
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
     /// Fetch the program for `key`, emitting it with `emit` on first use.
-    /// Repeated calls with the same key return the *same* allocation
-    /// (`Arc::ptr_eq` holds) — the determinism tests pin this.
+    /// Repeated calls with the same resident key return the *same*
+    /// allocation (`Arc::ptr_eq` holds) — the determinism tests pin this.
     pub fn get_or_emit(&self, key: ProgramKey, emit: impl FnOnce() -> Program) -> Arc<Program> {
-        let mut map = self.map.lock().expect("program cache poisoned");
-        if let Some(p) = map.get(&key) {
+        let mut inner = self.inner.lock().expect("program cache poisoned");
+        inner.clock += 1;
+        let clock = inner.clock;
+        if let Some(e) = inner.programs.get_mut(&key) {
+            e.last_used = clock;
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(p);
+            return Arc::clone(&e.prog);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let p = Arc::new(emit());
-        map.insert(key, Arc::clone(&p));
-        p
+        let prog = Arc::new(emit());
+        inner.programs.insert(key, Entry { prog: Arc::clone(&prog), last_used: clock });
+        self.evict_over_capacity(&mut inner, key);
+        prog
+    }
+
+    /// Drop least-recently-used keys until the cap is respected, never
+    /// evicting `keep` (the key just inserted/refreshed).
+    fn evict_over_capacity(&self, inner: &mut Inner, keep: ProgramKey) {
+        let Some(cap) = self.capacity else { return };
+        while inner.programs.len() > cap {
+            let victim = inner
+                .programs
+                .iter()
+                .filter(|(k, _)| **k != keep)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("capacity >= 1 leaves a victim besides `keep`");
+            inner.programs.remove(&victim);
+            inner.measurements.remove(&victim);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Cached rectangular DGEMM tile kernel (dims already padded to 4).
@@ -114,36 +179,49 @@ impl ProgramCache {
         })
     }
 
-    /// Fetch the memoized [`Measurement`] for `key`, computing it once via
-    /// `compute` — the serving engine's single-PE timing path (running the
-    /// same cached kernel on the same seeded operands is bit-identical, so
-    /// repeated requests skip the simulation entirely).
-    pub fn measurement_or(
-        &self,
-        key: ProgramKey,
-        compute: impl FnOnce() -> Measurement,
-    ) -> Measurement {
-        if let Some(m) = self.measurements.lock().expect("measurement cache poisoned").get(&key) {
-            // A memo return is a warm-cache hit even though get_or_emit
-            // never runs — keep the counters honest for repeated L1/L2.
+    /// The memoized [`Measurement`] for `key`, if present. A memo return is
+    /// a warm-cache hit (counted in [`CacheStats::hits`]) even though no
+    /// program is fetched — repeated Level-1/2 requests skip the simulation
+    /// entirely — and refreshes the key's LRU slot.
+    pub fn cached_measurement(&self, key: &ProgramKey) -> Option<Measurement> {
+        let mut inner = self.inner.lock().expect("program cache poisoned");
+        inner.clock += 1;
+        let clock = inner.clock;
+        let meas = inner.measurements.get(key).cloned();
+        if meas.is_some() {
+            if let Some(e) = inner.programs.get_mut(key) {
+                e.last_used = clock;
+            }
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return m.clone();
         }
-        let m = compute();
-        self.measurements
-            .lock()
-            .expect("measurement cache poisoned")
-            .entry(key)
-            .or_insert_with(|| m.clone());
-        m
+        meas
     }
 
-    /// Hit/miss/entry counters since construction.
+    /// Record a warm hit that was served outside the cache — a request that
+    /// attached to an identical in-flight measurement instead of submitting
+    /// a duplicate kernel — so `hits` stays comparable with the sequential
+    /// path, where the same request would memo-hit.
+    pub(crate) fn record_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Store a measurement computed on a pool worker. Dropped silently if
+    /// the paired program was evicted while the kernel was in flight
+    /// (program and measurement must stay paired so eviction removes both).
+    pub(crate) fn store_measurement(&self, key: ProgramKey, meas: Measurement) {
+        let mut inner = self.inner.lock().expect("program cache poisoned");
+        if inner.programs.contains_key(&key) {
+            inner.measurements.entry(key).or_insert(meas);
+        }
+    }
+
+    /// Hit/miss/eviction/entry counters since construction.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
-            entries: self.map.lock().expect("program cache poisoned").len(),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.inner.lock().expect("program cache poisoned").programs.len(),
         }
     }
 
@@ -161,6 +239,7 @@ impl ProgramCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::metrics::measure_level1_prog;
 
     #[test]
     fn same_key_is_pointer_equal() {
@@ -169,7 +248,7 @@ mod tests {
         let p2 = cache.gemm_rect(8, 8, 8, AeLevel::Ae5);
         assert!(Arc::ptr_eq(&p1, &p2), "cache must return the shared program");
         let s = cache.stats();
-        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        assert_eq!((s.hits, s.misses, s.entries, s.evictions), (1, 1, 1, 0));
     }
 
     #[test]
@@ -204,5 +283,61 @@ mod tests {
         let d = cache.level1(Routine::Ddot, 16, 1.5, AeLevel::Ae5);
         let e = cache.level1(Routine::Ddot, 16, 9.0, AeLevel::Ae5);
         assert!(Arc::ptr_eq(&d, &e));
+    }
+
+    #[test]
+    fn unbounded_cache_never_evicts() {
+        let cache = ProgramCache::new();
+        assert_eq!(cache.capacity(), None);
+        for n in 1..=10usize {
+            let _ = cache.gemm_rect(4 * n, 4 * n, 4 * n, AeLevel::Ae5);
+        }
+        let s = cache.stats();
+        assert_eq!((s.entries, s.evictions), (10, 0));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_first() {
+        let cache = ProgramCache::with_capacity(2);
+        assert_eq!(cache.capacity(), Some(2));
+        let a = cache.gemm_rect(4, 4, 4, AeLevel::Ae5); // A
+        let _ = cache.gemm_rect(8, 8, 8, AeLevel::Ae5); // B
+        let a2 = cache.gemm_rect(4, 4, 4, AeLevel::Ae5); // touch A → B is LRU
+        assert!(Arc::ptr_eq(&a, &a2));
+        let _ = cache.gemm_rect(12, 12, 12, AeLevel::Ae5); // C evicts B
+        let s = cache.stats();
+        assert_eq!((s.entries, s.evictions), (2, 1));
+        // A stayed resident (pointer-equal); B was evicted (fresh miss).
+        let a3 = cache.gemm_rect(4, 4, 4, AeLevel::Ae5);
+        assert!(Arc::ptr_eq(&a, &a3), "recently used key must survive eviction");
+        let misses_before = cache.stats().misses;
+        let _ = cache.gemm_rect(8, 8, 8, AeLevel::Ae5);
+        assert_eq!(cache.stats().misses, misses_before + 1, "evicted key must re-emit");
+    }
+
+    #[test]
+    fn eviction_drops_the_paired_measurement() {
+        let cache = ProgramCache::with_capacity(1);
+        let key = ProgramKey::level1(Routine::Ddot, 8, 1.5, AeLevel::Ae4);
+        let prog = cache.level1(Routine::Ddot, 8, 1.5, AeLevel::Ae4);
+        let meas = measure_level1_prog(Routine::Ddot, 8, 1.5, AeLevel::Ae4, &prog);
+        cache.store_measurement(key, meas);
+        assert!(cache.cached_measurement(&key).is_some());
+        let _ = cache.gemm_rect(4, 4, 4, AeLevel::Ae4); // evicts the DDOT pair
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.cached_measurement(&key).is_none(), "measurement must go with program");
+    }
+
+    #[test]
+    fn store_measurement_requires_resident_program() {
+        // A measurement landing after its program was evicted is dropped:
+        // keys stay paired, so the LRU cap really bounds residency.
+        let cache = ProgramCache::with_capacity(1);
+        let key = ProgramKey::level1(Routine::Ddot, 8, 1.5, AeLevel::Ae4);
+        let prog = cache.level1(Routine::Ddot, 8, 1.5, AeLevel::Ae4);
+        let meas = measure_level1_prog(Routine::Ddot, 8, 1.5, AeLevel::Ae4, &prog);
+        let _ = cache.gemm_rect(4, 4, 4, AeLevel::Ae4); // evicts the DDOT key
+        cache.store_measurement(key, meas);
+        assert!(cache.cached_measurement(&key).is_none());
     }
 }

@@ -2,13 +2,16 @@
 //!
 //! Owns the request path of the system: it partitions BLAS calls into
 //! 4×4-register-blocked tile jobs, dispatches them across a **persistent
-//! pool** of tile workers (spawned once per coordinator — the PE
-//! simulations are independent, so they parallelize perfectly on host
-//! threads), schedules the operand streams over the NoC model, and merges
-//! results. Instruction streams are never re-emitted per request: a
-//! [`ProgramCache`] keyed by (routine, shape, AE level) emits each kernel
-//! once and shares it (`Arc`) across tile workers and requests — the
-//! paper's fixed-program, operands-only-move request path.
+//! pool** of PE workers (spawned once per coordinator — the PE simulations
+//! are independent, so they parallelize perfectly on host threads),
+//! schedules the operand streams over the NoC model, and merges results.
+//! Every BLAS level runs on the same pool: DGEMM as `b×b` tile kernels,
+//! DGEMV and the Level-1 routines as single-PE measurement kernels — the
+//! paper's point that one co-designed PE serves all three levels through
+//! one fixed-program datapath. Instruction streams are never re-emitted per
+//! request: a [`ProgramCache`] keyed by (routine, shape, AE level) emits
+//! each kernel once and shares it (`Arc`) across pool workers and requests,
+//! with an optional LRU cap for adversarial shape streams.
 //!
 //! Co-simulation split:
 //! * **timing/energy** — always from the PE + NoC simulators;
@@ -24,22 +27,27 @@ mod pool;
 pub mod request;
 
 pub use cache::{CacheStats, ProgramCache, ProgramKey};
-pub use request::{Request, Response};
+pub use pool::PoolJobCounts;
+pub use request::{BatchStats, Request, Response};
 
 use crate::codegen::GemmLayout;
 use crate::energy::PowerModel;
-use crate::metrics::{measure_gemv_prog, measure_level1_prog, Measurement, Routine};
+use crate::metrics::{Measurement, Routine};
 use crate::noc::{Coord, LinkTraffic, RouterConfig, Topology};
 use crate::pe::{AeLevel, PeConfig, PeStats};
 use crate::runtime::Runtime;
 use crate::util::{round_up, Mat};
-use pool::{TileDone, TileJob, TilePool};
+use pool::{Done, Job, WorkerPool};
 use std::sync::Arc;
+
+/// Job id used by the blocking single-request paths (never collides with
+/// `serve_batch` ids, which are dense from 0).
+const SOLO_JOB_ID: u64 = u64::MAX;
 
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// PE enhancement level for every tile.
+    /// PE enhancement level for every kernel.
     pub ae: AeLevel,
     /// Tile-array order b (b×b compute tiles + memory column).
     pub b: usize,
@@ -47,11 +55,26 @@ pub struct CoordinatorConfig {
     pub artifact_dir: String,
     /// Cross-check XLA values against the PE simulator's functional output.
     pub verify: bool,
+    /// Admission window of [`Coordinator::serve_batch`]: at most this many
+    /// requests are staged (operands packed, kernels in flight) at once, so
+    /// huge batches never hold every packed GM image in memory. `None`
+    /// (default) stages the whole batch up front.
+    pub admission_window: Option<usize>,
+    /// LRU capacity of the program cache, in resident kernels. `None`
+    /// (default) keeps every emitted kernel — the seed behavior.
+    pub cache_capacity: Option<usize>,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { ae: AeLevel::Ae5, b: 2, artifact_dir: "artifacts".into(), verify: true }
+        Self {
+            ae: AeLevel::Ae5,
+            b: 2,
+            artifact_dir: "artifacts".into(),
+            verify: true,
+            admission_window: None,
+            cache_capacity: None,
+        }
     }
 }
 
@@ -111,19 +134,47 @@ impl PendingDgemm {
     }
 }
 
-/// The coordinator: cached programs + persistent tile workers + optional
+/// Everything needed to run a Level-1/2 measurement kernel: the cache key
+/// plus the padded-problem parameters the generators and workers need.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct MeasSpec {
+    pub key: ProgramKey,
+    pub routine: Routine,
+    /// Padded problem size (multiple of 4).
+    pub np: usize,
+    /// DAXPY's baked-in scalar (generator convention 1.5 for reductions).
+    pub alpha: f64,
+}
+
+impl MeasSpec {
+    /// Single-PE DGEMV at raw size `n`.
+    pub fn gemv(n: usize, ae: AeLevel) -> Self {
+        let np = round_up(n, 4);
+        Self { key: ProgramKey::Gemv { n: np, ae }, routine: Routine::Dgemv, np, alpha: 1.5 }
+    }
+
+    /// Level-1 routine at raw size `n`.
+    pub fn level1(routine: Routine, n: usize, alpha: f64, ae: AeLevel) -> Self {
+        let np = round_up(n.max(4), 4);
+        Self { key: ProgramKey::level1(routine, np, alpha, ae), routine, np, alpha }
+    }
+}
+
+/// The coordinator: cached programs + persistent pool workers + optional
 /// XLA value path.
 pub struct Coordinator {
     pub cfg: CoordinatorConfig,
     runtime: Option<Runtime>,
     cache: ProgramCache,
-    pool: TilePool,
+    pool: WorkerPool,
+    /// Telemetry of the last [`Coordinator::serve_batch`] call.
+    last_batch: Option<BatchStats>,
 }
 
 impl Coordinator {
     /// Build a coordinator; the XLA runtime is attached if the artifact
     /// directory exists and PJRT initializes (otherwise values fall back to
-    /// the PE simulator). The b×b tile workers are spawned here, once, and
+    /// the PE simulator). The b×b pool workers are spawned here, once, and
     /// live for the coordinator's lifetime.
     pub fn new(cfg: CoordinatorConfig) -> Self {
         assert!(cfg.b >= 1, "need at least a 1x1 tile array");
@@ -132,8 +183,12 @@ impl Coordinator {
         } else {
             None
         };
-        let pool = TilePool::new(cfg.b * cfg.b, PeConfig::paper(cfg.ae));
-        Self { cfg, runtime, cache: ProgramCache::new(), pool }
+        let cache = match cfg.cache_capacity {
+            Some(cap) => ProgramCache::with_capacity(cap),
+            None => ProgramCache::new(),
+        };
+        let pool = WorkerPool::new(cfg.b * cfg.b, cfg.ae);
+        Self { cfg, runtime, cache, pool, last_batch: None }
     }
 
     /// True if the XLA value path is live.
@@ -154,14 +209,30 @@ impl Coordinator {
         &self.cache
     }
 
-    /// Program-cache counters (hits / misses / resident kernels).
+    /// Program-cache counters (hits / misses / evictions / resident kernels).
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
     }
 
-    /// Number of persistent tile workers.
+    /// Number of persistent pool workers.
     pub fn pool_size(&self) -> usize {
         self.pool.worker_count()
+    }
+
+    /// Jobs executed on the worker pool so far, by kind. Level-1/2 kernels
+    /// count here too — they run on pool workers, not on the dispatcher.
+    pub fn pool_job_counts(&self) -> PoolJobCounts {
+        self.pool.counts()
+    }
+
+    /// Telemetry of the last [`Coordinator::serve_batch`] call (admission
+    /// peaks, shared measurements), if one ran.
+    pub fn last_batch_stats(&self) -> Option<BatchStats> {
+        self.last_batch
+    }
+
+    pub(crate) fn set_last_batch_stats(&mut self, stats: BatchStats) {
+        self.last_batch = Some(stats);
     }
 
     /// Coordinated DGEMM: C ← A·B + C across the tile array.
@@ -215,7 +286,7 @@ impl Coordinator {
                 let a_blk = ap.block(bi * m, 0, m, np);
                 let b_blk = bp.block(0, bj * m, np, m);
                 let c_blk = cp.block(bi * m, bj * m, m, m);
-                self.pool.submit(TileJob {
+                self.pool.submit(Job::GemmTile {
                     job_id,
                     tile_idx: bi * bb + bj,
                     prog: Arc::clone(&prog),
@@ -228,8 +299,51 @@ impl Coordinator {
         PendingDgemm { job_id, n, m, bb, ready, links, topo, rcfg, cpad: cp }
     }
 
-    /// Receive the next finished tile from the pool (any job).
-    pub(crate) fn recv_tile(&self) -> TileDone {
+    /// Fetch the cached program for `spec` and enqueue its measurement
+    /// kernel on the pool, tagged `job_id`.
+    pub(crate) fn submit_measure(&self, job_id: u64, spec: &MeasSpec) {
+        let ae = self.cfg.ae;
+        match spec.routine {
+            Routine::Dgemv => {
+                let prog = self.cache.gemv(spec.np, ae);
+                self.pool.submit(Job::Gemv { job_id, n: spec.np, prog });
+            }
+            routine => {
+                let prog = self.cache.level1(routine, spec.np, spec.alpha, ae);
+                self.pool.submit(Job::Level1 {
+                    job_id,
+                    routine,
+                    n: spec.np,
+                    alpha: spec.alpha,
+                    prog,
+                });
+            }
+        }
+    }
+
+    /// Memoized measurement for `spec`, computed on a pool worker on first
+    /// use — the blocking single-request path ([`Coordinator::serve_batch`]
+    /// overlaps these kernels across requests instead).
+    pub(crate) fn measure_blocking(&self, spec: MeasSpec) -> Measurement {
+        if let Some(m) = self.cache.cached_measurement(&spec.key) {
+            return m;
+        }
+        self.submit_measure(SOLO_JOB_ID, &spec);
+        let meas = match self.pool.recv() {
+            Done::Measured { job_id, meas } => {
+                assert_eq!(job_id, SOLO_JOB_ID, "pool delivered a foreign measurement");
+                meas
+            }
+            Done::GemmTile { job_id, .. } => {
+                panic!("pool delivered a tile of job {job_id} during a solo measurement")
+            }
+        };
+        self.cache.store_measurement(spec.key, meas.clone());
+        meas
+    }
+
+    /// Receive the next finished pool job (any request).
+    pub(crate) fn recv_done(&self) -> Done {
         self.pool.recv()
     }
 
@@ -238,9 +352,15 @@ impl Coordinator {
         let count = pending.tile_count();
         let mut slots: TileSlots = vec![None; count];
         for _ in 0..count {
-            let d = self.recv_tile();
-            assert_eq!(d.job_id, pending.job_id(), "pool delivered a foreign tile");
-            slots[d.tile_idx] = Some((d.out, d.stats));
+            match self.recv_done() {
+                Done::GemmTile { job_id, tile_idx, out, stats } => {
+                    assert_eq!(job_id, pending.job_id(), "pool delivered a foreign tile");
+                    slots[tile_idx] = Some((out, stats));
+                }
+                Done::Measured { job_id, .. } => {
+                    panic!("pool delivered a measurement (job {job_id}) during a solo DGEMM")
+                }
+            }
         }
         seal_slots(slots)
     }
@@ -303,47 +423,100 @@ impl Coordinator {
         DgemmResult { c: c_out, source, makespan, pe_stats: agg, tiles, energy_j: energy }
     }
 
-    /// Coordinated DGEMV on a single PE (Level-2 is not tiled in the paper;
-    /// the PE realization is the §5 result). Timing from the cached kernel,
-    /// values via XLA when available.
+    /// Coordinated DGEMV on a single pooled PE (Level-2 is not tiled in the
+    /// paper; the PE realization is the §5 result). Timing from the cached
+    /// kernel run on a pool worker, values via XLA when available.
     pub fn dgemv(&mut self, a: &Mat, x: &[f64], y: &[f64]) -> (Vec<f64>, Measurement, ValueSource) {
-        let n = a.rows();
-        let np = round_up(n, 4);
-        let ae = self.cfg.ae;
-        let meas = self.cache.measurement_or(ProgramKey::Gemv { n: np, ae }, || {
-            let prog = self.cache.gemv(np, ae);
-            measure_gemv_prog(np, ae, &prog)
-        });
-        match self.runtime.as_mut() {
-            Some(rt) if rt.has("gemv", n) => {
-                if let Ok(v) = rt.gemv(a, x, y) {
-                    return (v, meas, ValueSource::Xla);
-                }
-                (crate::blas::level2::dgemv_ref(a, x, y), meas, ValueSource::PeSim)
-            }
-            _ => (crate::blas::level2::dgemv_ref(a, x, y), meas, ValueSource::PeSim),
-        }
+        let meas = self.measure_blocking(MeasSpec::gemv(a.rows(), self.cfg.ae));
+        let (v, source) = self.gemv_value(a, x, y);
+        (v, meas, source)
     }
 
-    /// Coordinated DDOT (single PE, cached kernel).
+    /// Coordinated DDOT (single pooled PE, cached kernel).
     pub fn ddot(&mut self, x: &[f64], y: &[f64]) -> (f64, Measurement, ValueSource) {
-        let n = x.len();
-        let np = round_up(n.max(4), 4);
-        let ae = self.cfg.ae;
-        let key = ProgramKey::level1(Routine::Ddot, np, 1.5, ae);
-        let meas = self.cache.measurement_or(key, || {
-            let prog = self.cache.level1(Routine::Ddot, np, 1.5, ae);
-            measure_level1_prog(Routine::Ddot, np, 1.5, ae, &prog)
-        });
-        match self.runtime.as_mut() {
-            Some(rt) if rt.has("dot", n) => {
-                if let Ok(v) = rt.dot(x, y) {
-                    return (v, meas, ValueSource::Xla);
+        let spec = MeasSpec::level1(Routine::Ddot, x.len(), 1.5, self.cfg.ae);
+        let meas = self.measure_blocking(spec);
+        let (d, source) = self.ddot_value(x, y);
+        (d, meas, source)
+    }
+
+    /// Coordinated DAXPY: y ← α·x + y (single pooled PE, cached kernel —
+    /// α is baked into the instruction stream, so it is part of the key).
+    pub fn daxpy(
+        &mut self,
+        alpha: f64,
+        x: &[f64],
+        y: &[f64],
+    ) -> (Vec<f64>, Measurement, ValueSource) {
+        let spec = MeasSpec::level1(Routine::Daxpy, x.len(), alpha, self.cfg.ae);
+        let meas = self.measure_blocking(spec);
+        let (v, source) = self.daxpy_value(alpha, x, y);
+        (v, meas, source)
+    }
+
+    /// Coordinated DNRM2: ‖x‖₂ (single pooled PE, cached kernel).
+    pub fn dnrm2(&mut self, x: &[f64]) -> (f64, Measurement, ValueSource) {
+        let spec = MeasSpec::level1(Routine::Dnrm2, x.len(), 1.5, self.cfg.ae);
+        let meas = self.measure_blocking(spec);
+        let (v, source) = self.dnrm2_value(x);
+        (v, meas, source)
+    }
+
+    /// DGEMV values: XLA artifact when present, host reference as the PE
+    /// simulator's functional proxy otherwise.
+    pub(crate) fn gemv_value(&mut self, a: &Mat, x: &[f64], y: &[f64]) -> (Vec<f64>, ValueSource) {
+        let n = a.rows();
+        if let Some(rt) = self.runtime.as_mut() {
+            if rt.has("gemv", n) {
+                if let Ok(v) = rt.gemv(a, x, y) {
+                    return (v, ValueSource::Xla);
                 }
-                (crate::blas::level1::ddot(x, y), meas, ValueSource::PeSim)
             }
-            _ => (crate::blas::level1::ddot(x, y), meas, ValueSource::PeSim),
         }
+        (crate::blas::level2::dgemv_ref(a, x, y), ValueSource::PeSim)
+    }
+
+    /// DDOT values (XLA artifact or host reference).
+    pub(crate) fn ddot_value(&mut self, x: &[f64], y: &[f64]) -> (f64, ValueSource) {
+        if let Some(rt) = self.runtime.as_mut() {
+            if rt.has("dot", x.len()) {
+                if let Ok(v) = rt.dot(x, y) {
+                    return (v, ValueSource::Xla);
+                }
+            }
+        }
+        (crate::blas::level1::ddot(x, y), ValueSource::PeSim)
+    }
+
+    /// DAXPY values (XLA artifact or host reference).
+    pub(crate) fn daxpy_value(
+        &mut self,
+        alpha: f64,
+        x: &[f64],
+        y: &[f64],
+    ) -> (Vec<f64>, ValueSource) {
+        if let Some(rt) = self.runtime.as_mut() {
+            if rt.has("axpy", x.len()) {
+                if let Ok(v) = rt.axpy(alpha, x, y) {
+                    return (v, ValueSource::Xla);
+                }
+            }
+        }
+        let mut v = y.to_vec();
+        crate::blas::level1::daxpy(alpha, x, &mut v);
+        (v, ValueSource::PeSim)
+    }
+
+    /// DNRM2 values (XLA artifact or host reference).
+    pub(crate) fn dnrm2_value(&mut self, x: &[f64]) -> (f64, ValueSource) {
+        if let Some(rt) = self.runtime.as_mut() {
+            if rt.has("nrm2", x.len()) {
+                if let Ok(v) = rt.nrm2(x) {
+                    return (v, ValueSource::Xla);
+                }
+            }
+        }
+        (crate::blas::level1::dnrm2(x), ValueSource::PeSim)
     }
 }
 
@@ -385,6 +558,7 @@ mod tests {
             b,
             artifact_dir: "/nonexistent".into(),
             verify: true,
+            ..CoordinatorConfig::default()
         })
     }
 
@@ -432,7 +606,7 @@ mod tests {
     }
 
     #[test]
-    fn dgemv_and_ddot_paths() {
+    fn dgemv_and_level1_paths() {
         let n = 16;
         let a = Mat::random(n, n, 78);
         let mut rng = crate::util::XorShift64::new(79);
@@ -446,6 +620,18 @@ mod tests {
         let (d, m2, _) = co.ddot(&x, &y);
         assert!((d - crate::blas::level1::ddot(&x, &y)).abs() < 1e-12);
         assert!(m2.latency() > 0);
+        let (ax, m3, _) = co.daxpy(1.5, &x, &y);
+        let mut want = y.clone();
+        crate::blas::level1::daxpy(1.5, &x, &mut want);
+        crate::util::assert_allclose(&ax, &want, 1e-12);
+        assert!(m3.latency() > 0);
+        let (nrm, m4, _) = co.dnrm2(&x);
+        assert!((nrm - crate::blas::level1::dnrm2(&x)).abs() < 1e-12);
+        assert!(m4.latency() > 0);
+        // All four kernels ran on pool workers, none inline.
+        let counts = co.pool_job_counts();
+        assert_eq!(counts.gemv, 1);
+        assert_eq!(counts.level1, 3);
     }
 
     #[test]
@@ -477,5 +663,30 @@ mod tests {
         assert_eq!(s.entries, 3, "three distinct padded shapes: {s:?}");
         assert_eq!(s.misses, 3);
         assert_eq!(s.hits, 2);
+    }
+
+    #[test]
+    fn capped_coordinator_counts_evictions() {
+        let mut co = Coordinator::new(CoordinatorConfig {
+            ae: AeLevel::Ae5,
+            b: 2,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+            cache_capacity: Some(1),
+            ..CoordinatorConfig::default()
+        });
+        for n in [8usize, 16, 8] {
+            let a = Mat::random(n, n, n as u64);
+            let b = Mat::random(n, n, n as u64 + 1);
+            let c = Mat::zeros(n, n);
+            let r = co.dgemm(&a, &b, &c);
+            let want = crate::blas::level3::dgemm_ref(&a, &b, &c);
+            let err = crate::util::rel_fro_error(r.c.as_slice(), want.as_slice());
+            assert!(err < 1e-12, "capped DGEMM n={n} wrong: {err}");
+        }
+        let s = co.cache_stats();
+        assert_eq!(s.entries, 1, "cap must bound residency: {s:?}");
+        assert_eq!(s.evictions, 2, "both shape switches must evict: {s:?}");
+        assert_eq!(s.misses, 3, "the re-requested shape re-emits: {s:?}");
     }
 }

@@ -1,81 +1,132 @@
-//! Persistent tile-worker pool of the serving engine.
+//! Persistent worker pool of the serving engine.
 //!
 //! The seed coordinator spawned `b×b` fresh host threads (and allocated a
-//! fresh [`Pe`]) for every DGEMM request. This pool spawns the workers once
-//! per [`super::Coordinator`], feeds them tile jobs over a shared channel,
+//! fresh [`Pe`]) for every DGEMM request, and simulated every Level-1/2
+//! request inline on the dispatcher thread. This pool spawns the workers
+//! once per [`super::Coordinator`], feeds them jobs over a shared channel,
 //! and reuses each worker's `Pe` across kernels via [`Pe::reset`] — so a
-//! request stream pays only for simulation, and tiles of *independent*
+//! request stream pays only for simulation, and kernels of *independent*
 //! requests overlap (jobs are tagged with a `job_id` and collected by the
 //! dispatcher in any arrival order).
 //!
-//! Host-thread parallelism only: simulated timing comes from the per-tile
+//! Every BLAS level flows through the same [`Job`] channel: DGEMM as
+//! per-tile kernels, DGEMV and the Level-1 routines as single-PE
+//! measurement kernels on the cached-program paths
+//! ([`measure_gemv_prog_on`] / [`measure_level1_prog_on`]). Values are
+//! resolved by the dispatcher; the pool burns the simulated cycles.
+//!
+//! Host-thread parallelism only: simulated timing comes from the per-kernel
 //! `PeStats` and the NoC transfer schedule, both of which are independent
-//! of which worker ran a tile and in which order.
+//! of which worker ran a job and in which order.
 
 use crate::codegen::GemmLayout;
-use crate::pe::{Pe, PeConfig, PeStats, Program};
+use crate::metrics::{measure_gemv_prog_on, measure_level1_prog_on, Measurement, Routine};
+use crate::pe::{AeLevel, Pe, PeConfig, PeStats, Program};
 use crate::util::Mat;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
-/// One tile kernel to simulate: a cached program plus its packed operands.
-pub(crate) struct TileJob {
-    /// Request this tile belongs to (dispatcher-assigned).
-    pub job_id: u64,
-    /// Tile index within the request (`bi * b + bj`).
-    pub tile_idx: usize,
-    /// Shared, cached instruction stream (emitted once per shape).
-    pub prog: Arc<Program>,
-    /// GM layout of the packed operands; the output block unpacked after
-    /// the run is the full `layout.m × layout.p` C block.
-    pub layout: GemmLayout,
-    /// Packed GM image (length `layout.gm_words()`).
-    pub gm: Vec<f64>,
+/// One unit of pooled work: a cached program plus what the worker needs to
+/// run it.
+pub(crate) enum Job {
+    /// One DGEMM tile kernel: shared cached program + packed operands. The
+    /// output block unpacked after the run is the full
+    /// `layout.m × layout.p` C block.
+    GemmTile {
+        /// Request this tile belongs to (dispatcher-assigned).
+        job_id: u64,
+        /// Tile index within the request (`bi * b + bj`).
+        tile_idx: usize,
+        prog: Arc<Program>,
+        layout: GemmLayout,
+        /// Packed GM image (length `layout.gm_words()`).
+        gm: Vec<f64>,
+    },
+    /// Single-PE DGEMV measurement kernel at padded size `n`.
+    Gemv { job_id: u64, n: usize, prog: Arc<Program> },
+    /// Single-PE Level-1 measurement kernel at padded size `n`. `alpha` is
+    /// the constant baked into a DAXPY stream (ignored for reductions).
+    Level1 { job_id: u64, routine: Routine, n: usize, alpha: f64, prog: Arc<Program> },
 }
 
-/// Result of one tile kernel.
-pub(crate) struct TileDone {
-    pub job_id: u64,
-    pub tile_idx: usize,
-    pub out: Mat,
-    pub stats: PeStats,
+impl Job {
+    /// Human-readable tag for panic reports.
+    fn describe(&self) -> String {
+        match self {
+            Job::GemmTile { job_id, tile_idx, .. } => format!("job {job_id} gemm tile {tile_idx}"),
+            Job::Gemv { job_id, n, .. } => format!("job {job_id} gemv n={n}"),
+            Job::Level1 { job_id, routine, n, .. } => format!("job {job_id} {routine:?} n={n}"),
+        }
+    }
 }
 
-/// Worker → dispatcher message: a finished tile, or a caught worker panic
-/// (re-raised on the dispatcher by [`TilePool::recv`], preserving the
+/// Result of one pooled job.
+pub(crate) enum Done {
+    /// A finished DGEMM tile.
+    GemmTile { job_id: u64, tile_idx: usize, out: Mat, stats: PeStats },
+    /// A finished single-PE measurement (DGEMV or Level-1).
+    Measured { job_id: u64, meas: Measurement },
+}
+
+/// Worker → dispatcher message: a finished job, or a caught worker panic
+/// (re-raised on the dispatcher by [`WorkerPool::recv`], preserving the
 /// fail-loud behavior the scoped-thread design had).
-enum TileMsg {
-    Done(TileDone),
-    Panicked { job_id: u64, tile_idx: usize, msg: String },
+enum Msg {
+    Done(Done),
+    Panicked(String),
+}
+
+/// Jobs executed so far, by kind. Incremented by the worker that ran the
+/// job — a nonzero count proves pool execution (pinned by tests).
+#[derive(Debug, Default)]
+struct Counters {
+    gemm_tiles: AtomicU64,
+    gemv: AtomicU64,
+    level1: AtomicU64,
+}
+
+/// Snapshot of the pool's per-kind execution counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolJobCounts {
+    /// DGEMM tile kernels run on pool workers.
+    pub gemm_tiles: u64,
+    /// DGEMV measurement kernels run on pool workers.
+    pub gemv: u64,
+    /// Level-1 measurement kernels run on pool workers.
+    pub level1: u64,
 }
 
 /// The pool: `size` workers, spawned once, fed over a shared queue.
-pub(crate) struct TilePool {
-    jobs: Option<mpsc::Sender<TileJob>>,
-    done_rx: mpsc::Receiver<TileMsg>,
+pub(crate) struct WorkerPool {
+    jobs: Option<mpsc::Sender<Job>>,
+    done_rx: mpsc::Receiver<Msg>,
     workers: Vec<thread::JoinHandle<()>>,
+    counts: Arc<Counters>,
 }
 
-impl TilePool {
-    /// Spawn `size` persistent workers simulating PEs configured by `cfg`.
-    pub fn new(size: usize, cfg: PeConfig) -> Self {
-        assert!(size >= 1, "tile pool needs at least one worker");
-        let (jtx, jrx) = mpsc::channel::<TileJob>();
-        let (dtx, drx) = mpsc::channel::<TileMsg>();
+impl WorkerPool {
+    /// Spawn `size` persistent workers simulating paper-configured PEs at
+    /// enhancement level `ae`.
+    pub fn new(size: usize, ae: AeLevel) -> Self {
+        assert!(size >= 1, "worker pool needs at least one worker");
+        let (jtx, jrx) = mpsc::channel::<Job>();
+        let (dtx, drx) = mpsc::channel::<Msg>();
         let jrx = Arc::new(Mutex::new(jrx));
+        let counts = Arc::new(Counters::default());
         let workers = (0..size)
             .map(|i| {
                 let jrx = Arc::clone(&jrx);
                 let dtx = dtx.clone();
-                let cfg = cfg.clone();
+                let counts = Arc::clone(&counts);
                 thread::Builder::new()
-                    .name(format!("tile-worker-{i}"))
-                    .spawn(move || worker_loop(cfg, jrx, dtx))
-                    .expect("spawn tile worker")
+                    .name(format!("pe-worker-{i}"))
+                    .spawn(move || worker_loop(ae, jrx, dtx, counts))
+                    .expect("spawn pool worker")
             })
             .collect();
-        Self { jobs: Some(jtx), done_rx: drx, workers }
+        Self { jobs: Some(jtx), done_rx: drx, workers, counts }
     }
 
     /// Number of persistent workers.
@@ -83,29 +134,36 @@ impl TilePool {
         self.workers.len()
     }
 
-    /// Enqueue a tile job (returns immediately; results come via `recv`).
-    pub fn submit(&self, job: TileJob) {
+    /// Jobs executed so far, by kind.
+    pub fn counts(&self) -> PoolJobCounts {
+        PoolJobCounts {
+            gemm_tiles: self.counts.gemm_tiles.load(Ordering::Relaxed),
+            gemv: self.counts.gemv.load(Ordering::Relaxed),
+            level1: self.counts.level1.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Enqueue a job (returns immediately; results come via `recv`).
+    pub fn submit(&self, job: Job) {
         self.jobs
             .as_ref()
             .expect("pool already shut down")
             .send(job)
-            .expect("tile pool hung up");
+            .expect("worker pool hung up");
     }
 
-    /// Block for the next finished tile, in arrival order across jobs.
+    /// Block for the next finished job, in arrival order across jobs.
     /// A worker panic (caught in the worker loop) is re-raised here so a
     /// bad kernel fails the request loudly instead of deadlocking it.
-    pub fn recv(&self) -> TileDone {
-        match self.done_rx.recv().expect("tile workers gone") {
-            TileMsg::Done(d) => d,
-            TileMsg::Panicked { job_id, tile_idx, msg } => {
-                panic!("tile worker panicked on job {job_id} tile {tile_idx}: {msg}")
-            }
+    pub fn recv(&self) -> Done {
+        match self.done_rx.recv().expect("pool workers gone") {
+            Msg::Done(d) => d,
+            Msg::Panicked(msg) => panic!("pool worker panicked on {msg}"),
         }
     }
 }
 
-impl Drop for TilePool {
+impl Drop for WorkerPool {
     fn drop(&mut self) {
         // Closing the job channel makes every worker's recv() fail → exit.
         drop(self.jobs.take());
@@ -116,9 +174,10 @@ impl Drop for TilePool {
 }
 
 fn worker_loop(
-    cfg: PeConfig,
-    jobs: Arc<Mutex<mpsc::Receiver<TileJob>>>,
-    done: mpsc::Sender<TileMsg>,
+    ae: AeLevel,
+    jobs: Arc<Mutex<mpsc::Receiver<Job>>>,
+    done: mpsc::Sender<Msg>,
+    counts: Arc<Counters>,
 ) {
     // The worker's PE is created on the first job and reset()-reused after:
     // a reset PE is bit-identical to a fresh one (see pe::core tests).
@@ -136,31 +195,48 @@ fn worker_loop(
                 Err(_) => return, // pool dropped: shut down
             }
         };
-        let (job_id, tile_idx) = (job.job_id, job.tile_idx);
-        let gm_words = job.layout.gm_words();
-        if let Some(p) = pe.as_mut() {
-            p.reset(gm_words);
-        } else {
-            pe = Some(Pe::new(cfg.clone(), gm_words));
+        let what = job.describe();
+        if pe.is_none() {
+            pe = Some(Pe::new(PeConfig::paper(ae), 0));
         }
         let p = pe.as_mut().expect("worker PE initialized above");
         // Catch kernel panics (codegen bugs, feature misuse) and report
-        // them: a silently-missing tile would deadlock the dispatcher.
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            p.write_gm(0, &job.gm);
-            let stats = p.run(&job.prog);
-            let out = job.layout.unpack_c(&p.gm, job.layout.m, job.layout.p);
-            (out, stats)
-        }));
+        // them: a silently-missing result would deadlock the dispatcher.
+        let unwind = std::panic::AssertUnwindSafe(|| run_job(p, ae, job, &counts));
+        let outcome = std::panic::catch_unwind(unwind);
         let msg = match outcome {
-            Ok((out, stats)) => TileMsg::Done(TileDone { job_id, tile_idx, out, stats }),
+            Ok(d) => Msg::Done(d),
             Err(payload) => {
                 pe = None; // state may be inconsistent; rebuild on next job
-                TileMsg::Panicked { job_id, tile_idx, msg: panic_message(payload) }
+                Msg::Panicked(format!("{what}: {}", panic_message(payload)))
             }
         };
         if done.send(msg).is_err() {
             return; // dispatcher gone: shut down
+        }
+    }
+}
+
+/// Run one job on the worker's (reset-reused) PE.
+fn run_job(pe: &mut Pe, ae: AeLevel, job: Job, counts: &Counters) -> Done {
+    match job {
+        Job::GemmTile { job_id, tile_idx, prog, layout, gm } => {
+            pe.reset(layout.gm_words());
+            pe.write_gm(0, &gm);
+            let stats = pe.run(&prog);
+            let out = layout.unpack_c(&pe.gm, layout.m, layout.p);
+            counts.gemm_tiles.fetch_add(1, Ordering::Relaxed);
+            Done::GemmTile { job_id, tile_idx, out, stats }
+        }
+        Job::Gemv { job_id, n, prog } => {
+            let meas = measure_gemv_prog_on(pe, n, ae, &prog);
+            counts.gemv.fetch_add(1, Ordering::Relaxed);
+            Done::Measured { job_id, meas }
+        }
+        Job::Level1 { job_id, routine, n, alpha, prog } => {
+            let meas = measure_level1_prog_on(pe, routine, n, alpha, ae, &prog);
+            counts.level1.fetch_add(1, Ordering::Relaxed);
+            Done::Measured { job_id, meas }
         }
     }
 }
@@ -179,11 +255,12 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codegen::gen_gemm_rect;
-    use crate::pe::AeLevel;
+    use crate::codegen::layout::VecLayout;
+    use crate::codegen::{gen_gemm_rect, gen_gemv};
+    use crate::metrics::measure_gemv_prog;
     use crate::util::rel_fro_error;
 
-    fn gemm_job(job_id: u64, tile_idx: usize, n: usize, seed: u64) -> (TileJob, Mat) {
+    fn gemm_job(job_id: u64, tile_idx: usize, n: usize, seed: u64) -> (Job, Mat) {
         let ae = AeLevel::Ae5;
         let a = Mat::random(n, n, seed);
         let b = Mat::random(n, n, seed + 1);
@@ -192,12 +269,12 @@ mod tests {
         let prog = Arc::new(gen_gemm_rect(n, n, n, ae, &layout));
         let want = crate::blas::level3::dgemm_ref(&a, &b, &c);
         let gm = layout.pack(&a, &b, &c);
-        (TileJob { job_id, tile_idx, prog, layout, gm }, want)
+        (Job::GemmTile { job_id, tile_idx, prog, layout, gm }, want)
     }
 
     #[test]
     fn pool_runs_jobs_and_reuses_workers() {
-        let pool = TilePool::new(2, PeConfig::paper(AeLevel::Ae5));
+        let pool = WorkerPool::new(2, AeLevel::Ae5);
         assert_eq!(pool.worker_count(), 2);
         // More jobs than workers forces PE reuse; mixed shapes force
         // reset() resizing.
@@ -208,32 +285,66 @@ mod tests {
             pool.submit(job);
         }
         for _ in 0..6 {
-            let d = pool.recv();
-            let want = &wants[&d.job_id];
-            let err = rel_fro_error(d.out.as_slice(), want.as_slice());
-            assert!(err < 1e-12, "job {}: err {err}", d.job_id);
-            assert!(d.stats.cycles > 0);
+            let (job_id, out, stats) = match pool.recv() {
+                Done::GemmTile { job_id, out, stats, .. } => (job_id, out, stats),
+                Done::Measured { .. } => panic!("no measurement submitted"),
+            };
+            let want = &wants[&job_id];
+            let err = rel_fro_error(out.as_slice(), want.as_slice());
+            assert!(err < 1e-12, "job {job_id}: err {err}");
+            assert!(stats.cycles > 0);
         }
+        assert_eq!(pool.counts(), PoolJobCounts { gemm_tiles: 6, gemv: 0, level1: 0 });
+    }
+
+    #[test]
+    fn measurement_jobs_run_on_workers_and_match_inline() {
+        // A pooled DGEMV/Level-1 kernel must return exactly the inline
+        // measurement (the pool only moves where the simulation runs).
+        let ae = AeLevel::Ae5;
+        let pool = WorkerPool::new(2, ae);
+        let n = 16;
+        let gprog = Arc::new(gen_gemv(n, ae, &VecLayout::gemv(n)));
+        let want = measure_gemv_prog(n, ae, &gprog);
+        pool.submit(Job::Gemv { job_id: 7, n, prog: Arc::clone(&gprog) });
+        let lprog = Arc::new(crate::codegen::gen_ddot(n, ae, &VecLayout::level1(n)));
+        pool.submit(Job::Level1 { job_id: 8, routine: Routine::Ddot, n, alpha: 1.5, prog: lprog });
+        let mut got = Vec::new();
+        for _ in 0..2 {
+            match pool.recv() {
+                Done::Measured { job_id, meas } => got.push((job_id, meas)),
+                Done::GemmTile { .. } => panic!("no tile submitted"),
+            }
+        }
+        got.sort_by_key(|(id, _)| *id);
+        assert_eq!(got[0].0, 7);
+        assert_eq!(got[0].1.latency(), want.latency());
+        assert_eq!(got[0].1.routine, Routine::Dgemv);
+        assert_eq!(got[1].0, 8);
+        assert_eq!(got[1].1.routine, Routine::Ddot);
+        assert!(got[1].1.latency() > 0);
+        let counts = pool.counts();
+        assert_eq!((counts.gemv, counts.level1, counts.gemm_tiles), (1, 1, 0));
     }
 
     #[test]
     fn drop_joins_idle_workers() {
-        let pool = TilePool::new(3, PeConfig::paper(AeLevel::Ae2));
+        let pool = WorkerPool::new(3, AeLevel::Ae2);
         drop(pool); // must not hang
     }
 
     #[test]
-    #[should_panic(expected = "tile worker panicked")]
+    #[should_panic(expected = "pool worker panicked")]
     fn worker_panic_propagates_instead_of_deadlocking() {
         use crate::pe::{Instr, Program};
         // A DOT on an AE1-configured PE trips check_features inside the
         // worker; recv() must re-raise it rather than block forever.
-        let pool = TilePool::new(1, PeConfig::paper(AeLevel::Ae1));
+        let pool = WorkerPool::new(1, AeLevel::Ae1);
         let layout = GemmLayout::rect(4, 4, 4);
         let mut prog = Program::new();
         prog.push(Instr::Dot { rd: 0, ra: 16, rb: 32, n: 4, acc: false });
         prog.push(Instr::Halt);
-        pool.submit(TileJob {
+        pool.submit(Job::GemmTile {
             job_id: 0,
             tile_idx: 0,
             prog: Arc::new(prog),

@@ -6,15 +6,26 @@
 //! Two serving modes:
 //! * [`Coordinator::serve`] — strictly sequential (one request fully
 //!   completes before the next starts), kept as the reference semantics;
-//! * [`Coordinator::serve_batch`] — the serving-engine path: every DGEMM's
-//!   tile jobs are staged on the persistent worker pool up front, so tiles
-//!   of independent requests are in flight simultaneously, while Level-1/2
-//!   requests are answered inline. Responses come back in submission order
-//!   and are value- and cycle-identical to `serve_one` (pinned by tests).
+//! * [`Coordinator::serve_batch`] — the serving-engine path: requests are
+//!   admitted up to a bounded **admission window**, their kernels (DGEMM
+//!   tiles *and* Level-1/2 measurement kernels) staged on the persistent
+//!   worker pool, and responses finalized in submission order as results
+//!   drain — so kernels of independent requests overlap while huge batches
+//!   never hold more than `window` requests' packed operands in memory.
+//!   Identical in-flight Level-1/2 kernels are shared, not duplicated.
+//!   Responses are value-, cycle- and energy-identical to `serve_one`
+//!   (pinned by tests).
 
-use super::{seal_slots, Coordinator, DgemmResult, PendingDgemm, TileSlots, ValueSource};
+use super::pool::Done;
+use super::{
+    seal_slots, Coordinator, DgemmResult, MeasSpec, PendingDgemm, ProgramKey, TileSlots,
+    ValueSource,
+};
+use crate::metrics::{Measurement, Routine};
+use crate::pe::AeLevel;
 use crate::util::{Mat, XorShift64};
-use std::collections::HashMap;
+use std::collections::hash_map::Entry;
+use std::collections::{HashMap, VecDeque};
 
 /// A BLAS request to the coordinator.
 #[derive(Debug, Clone)]
@@ -25,6 +36,10 @@ pub enum Request {
     Dgemv { a: Mat, x: Vec<f64>, y: Vec<f64> },
     /// xᵀ·y.
     Ddot { x: Vec<f64>, y: Vec<f64> },
+    /// y ← α·x + y.
+    Daxpy { alpha: f64, x: Vec<f64>, y: Vec<f64> },
+    /// ‖x‖₂.
+    Dnrm2 { x: Vec<f64> },
     /// Synthetic request by shape only (workload generators).
     RandomDgemm { n: usize, seed: u64 },
 }
@@ -36,6 +51,8 @@ impl Request {
             Request::Dgemm { .. } | Request::RandomDgemm { .. } => "dgemm",
             Request::Dgemv { .. } => "dgemv",
             Request::Ddot { .. } => "ddot",
+            Request::Daxpy { .. } => "daxpy",
+            Request::Dnrm2 { .. } => "dnrm2",
         }
     }
 
@@ -45,6 +62,8 @@ impl Request {
             Request::Dgemm { a, .. } => a.rows(),
             Request::Dgemv { a, .. } => a.rows(),
             Request::Ddot { x, .. } => x.len(),
+            Request::Daxpy { x, .. } => x.len(),
+            Request::Dnrm2 { x } => x.len(),
             Request::RandomDgemm { n, .. } => *n,
         }
     }
@@ -80,6 +99,19 @@ pub struct Response {
     pub scalar: Option<f64>,
 }
 
+/// Telemetry of one [`Coordinator::serve_batch`] call.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BatchStats {
+    /// Requests served.
+    pub requests: usize,
+    /// Peak number of requests staged (admitted, not yet finalized) at
+    /// once — bounded by [`super::CoordinatorConfig::admission_window`].
+    pub peak_staged: usize,
+    /// Requests that attached to an identical in-flight measurement kernel
+    /// instead of submitting a duplicate.
+    pub shared_measurements: usize,
+}
+
 /// The one place a [`DgemmResult`] becomes a [`Response`] — shared by the
 /// sequential and batched paths so they cannot drift apart.
 fn dgemm_response(n: usize, r: DgemmResult) -> Response {
@@ -95,6 +127,19 @@ fn dgemm_response(n: usize, r: DgemmResult) -> Response {
     }
 }
 
+/// Measurement spec for a Level-1/2 request (key + padded parameters).
+fn meas_spec(req: &Request, ae: AeLevel) -> MeasSpec {
+    match req {
+        Request::Dgemv { a, .. } => MeasSpec::gemv(a.rows(), ae),
+        Request::Ddot { x, .. } => MeasSpec::level1(Routine::Ddot, x.len(), 1.5, ae),
+        Request::Daxpy { alpha, x, .. } => MeasSpec::level1(Routine::Daxpy, x.len(), *alpha, ae),
+        Request::Dnrm2 { x } => MeasSpec::level1(Routine::Dnrm2, x.len(), 1.5, ae),
+        Request::Dgemm { .. } | Request::RandomDgemm { .. } => {
+            unreachable!("not a Level-1/2 request")
+        }
+    }
+}
+
 /// A DGEMM request whose tiles are on the pool, waiting to be merged.
 struct InFlight {
     pending: PendingDgemm,
@@ -105,8 +150,29 @@ struct InFlight {
 
 /// Per-request slot of a batch, in submission order.
 enum Slot {
-    Dgemm(Box<InFlight>),
-    Ready(Response),
+    /// DGEMM with tiles on the pool; complete when all tiles collected.
+    Dgemm { flight: Box<InFlight>, tiles: TileSlots, got: usize },
+    /// Level-1/2 request; complete when its measurement is available
+    /// (boxed: a `Measurement` carries full `PeStats` + `PeConfig`).
+    Meas { req: Request, meas: Option<Box<Measurement>> },
+}
+
+impl Slot {
+    fn complete(&self) -> bool {
+        match self {
+            Slot::Dgemm { flight, got, .. } => *got == flight.pending.tile_count(),
+            Slot::Meas { meas, .. } => meas.is_some(),
+        }
+    }
+}
+
+/// The in-flight slot of request `id` (ids are issued in submission order,
+/// so the deque is sorted by id).
+fn slot_mut(inflight: &mut VecDeque<(u64, Slot)>, id: u64) -> &mut Slot {
+    let at = inflight
+        .binary_search_by_key(&id, |(i, _)| *i)
+        .unwrap_or_else(|_| panic!("pool result for request {id} not in flight"));
+    &mut inflight[at].1
 }
 
 impl Coordinator {
@@ -118,36 +184,45 @@ impl Coordinator {
                 let r = self.dgemm(&a, &b, &c);
                 dgemm_response(n, r)
             }
+            Request::RandomDgemm { .. } => unreachable!("materialize() resolved synthetics"),
+            other => {
+                let meas = self.measure_blocking(meas_spec(&other, self.cfg.ae));
+                self.measured_response(other, meas)
+            }
+        }
+    }
+
+    /// Build the response for a Level-1/2 request whose simulated cost is
+    /// `meas` — the one place those request values are resolved, shared by
+    /// `serve_one` and the batched path so they cannot drift apart.
+    fn measured_response(&mut self, req: Request, meas: Measurement) -> Response {
+        let cycles = meas.latency();
+        let (op, n, source, vector, scalar) = match req {
             Request::Dgemv { a, x, y } => {
                 let n = a.rows();
-                let (v, meas, source) = self.dgemv(&a, &x, &y);
-                Response {
-                    op: "dgemv",
-                    n,
-                    source,
-                    cycles: meas.latency(),
-                    energy_j: None,
-                    matrix: None,
-                    vector: Some(v),
-                    scalar: None,
-                }
+                let (v, source) = self.gemv_value(&a, &x, &y);
+                ("dgemv", n, source, Some(v), None)
             }
             Request::Ddot { x, y } => {
                 let n = x.len();
-                let (d, meas, source) = self.ddot(&x, &y);
-                Response {
-                    op: "ddot",
-                    n,
-                    source,
-                    cycles: meas.latency(),
-                    energy_j: None,
-                    matrix: None,
-                    vector: None,
-                    scalar: Some(d),
-                }
+                let (d, source) = self.ddot_value(&x, &y);
+                ("ddot", n, source, None, Some(d))
             }
-            Request::RandomDgemm { .. } => unreachable!("materialize() resolved synthetics"),
-        }
+            Request::Daxpy { alpha, x, y } => {
+                let n = x.len();
+                let (v, source) = self.daxpy_value(alpha, &x, &y);
+                ("daxpy", n, source, Some(v), None)
+            }
+            Request::Dnrm2 { x } => {
+                let n = x.len();
+                let (s, source) = self.dnrm2_value(&x);
+                ("dnrm2", n, source, None, Some(s))
+            }
+            Request::Dgemm { .. } | Request::RandomDgemm { .. } => {
+                unreachable!("measured_response() is for Level-1/2 requests")
+            }
+        };
+        Response { op, n, source, cycles, energy_j: None, matrix: None, vector, scalar }
     }
 
     /// Serve a batch of requests strictly in order, returning all
@@ -156,66 +231,152 @@ impl Coordinator {
         reqs.into_iter().map(|r| self.serve_one(r)).collect()
     }
 
-    /// Serve a batch with cross-request pipelining. Every DGEMM's tile jobs
-    /// go to the persistent pool immediately, so the pool stays busy across
-    /// request boundaries; Level-1/2 requests are simulated inline on the
-    /// dispatcher thread while tiles drain. Responses are returned in
-    /// submission order and match `serve_one`-in-a-loop exactly (values,
-    /// cycles and energy — simulated timing is independent of host
-    /// scheduling).
+    /// Serve a batch with cross-request pipelining under a bounded
+    /// admission window. Up to `admission_window` requests are staged at
+    /// once: every DGEMM's tile jobs and every Level-1/2 measurement kernel
+    /// go to the persistent pool, identical in-flight measurements are
+    /// shared, and responses are finalized in submission order as the
+    /// oldest request completes (freeing its admission slot). Responses
+    /// match `serve_one`-in-a-loop exactly (values, cycles and energy —
+    /// simulated timing is independent of host scheduling).
     pub fn serve_batch(&mut self, reqs: Vec<Request>) -> Vec<Response> {
-        // Phase 1: stage everything.
-        let mut slots = Vec::with_capacity(reqs.len());
-        let mut in_flight_tiles = 0usize;
-        for (i, req) in reqs.into_iter().enumerate() {
-            match req.materialize() {
-                Request::Dgemm { a, b, c } => {
-                    let pending = self.submit_dgemm(i as u64, &a, &b, &c);
-                    in_flight_tiles += pending.tile_count();
-                    slots.push(Slot::Dgemm(Box::new(InFlight { pending, a, b, c })));
+        let window = self.cfg.admission_window.unwrap_or(usize::MAX).max(1);
+        let total = reqs.len();
+        let mut queue = reqs.into_iter().peekable();
+        let mut next_id: u64 = 0;
+        // Admitted, unfinalized requests in submission order.
+        let mut inflight: VecDeque<(u64, Slot)> = VecDeque::new();
+        // Key → ids waiting on an in-flight measurement; id → its key.
+        let mut waiting: HashMap<ProgramKey, Vec<u64>> = HashMap::new();
+        let mut submitted: HashMap<u64, ProgramKey> = HashMap::new();
+        let mut stats = BatchStats { requests: total, ..BatchStats::default() };
+        let mut resps: Vec<Response> = Vec::with_capacity(total);
+
+        while resps.len() < total {
+            // Admit requests up to the window.
+            while inflight.len() < window {
+                let Some(req) = queue.next() else { break };
+                let id = next_id;
+                next_id += 1;
+                let slot =
+                    self.stage(id, req.materialize(), &mut waiting, &mut submitted, &mut stats);
+                inflight.push_back((id, slot));
+                stats.peak_staged = stats.peak_staged.max(inflight.len());
+            }
+
+            // Finalize completed requests from the front, in submission
+            // order, freeing admission slots.
+            while inflight.front().is_some_and(|(_, s)| s.complete()) {
+                let (_, slot) = inflight.pop_front().expect("front checked above");
+                resps.push(self.finalize(slot));
+            }
+            // Refill freed slots before blocking, so the pool stays busy.
+            if inflight.len() < window && queue.peek().is_some() {
+                continue;
+            }
+            if inflight.is_empty() {
+                continue; // batch drained (loop condition exits)
+            }
+
+            // Block for one pooled result and record it.
+            match self.recv_done() {
+                Done::GemmTile { job_id, tile_idx, out, stats: st } => {
+                    match slot_mut(&mut inflight, job_id) {
+                        Slot::Dgemm { tiles, got, .. } => {
+                            debug_assert!(tiles[tile_idx].is_none(), "duplicate tile");
+                            tiles[tile_idx] = Some((out, st));
+                            *got += 1;
+                        }
+                        Slot::Meas { .. } => unreachable!("tile for a non-DGEMM slot"),
+                    }
                 }
-                other => slots.push(Slot::Ready(self.serve_one(other))),
+                Done::Measured { job_id, meas } => {
+                    let key = submitted.remove(&job_id).expect("measurement without a key");
+                    self.cache.store_measurement(key, meas.clone());
+                    for id in waiting.remove(&key).unwrap_or_default() {
+                        match slot_mut(&mut inflight, id) {
+                            Slot::Meas { meas: m, .. } => *m = Some(Box::new(meas.clone())),
+                            Slot::Dgemm { .. } => unreachable!("measurement for a DGEMM slot"),
+                        }
+                    }
+                }
             }
         }
-
-        // Phase 2: drain the pool; tiles arrive in any order across jobs.
-        let mut collected: HashMap<u64, TileSlots> = HashMap::new();
-        for _ in 0..in_flight_tiles {
-            let d = self.recv_tile();
-            let count = match &slots[d.job_id as usize] {
-                Slot::Dgemm(f) => f.pending.tile_count(),
-                Slot::Ready(_) => unreachable!("tile for a non-DGEMM slot"),
-            };
-            let entry = collected.entry(d.job_id).or_insert_with(|| vec![None; count]);
-            entry[d.tile_idx] = Some((d.out, d.stats));
-        }
-
-        // Phase 3: merge in submission order.
-        let mut resps = Vec::with_capacity(slots.len());
-        for (i, slot) in slots.into_iter().enumerate() {
-            match slot {
-                Slot::Ready(r) => resps.push(r),
-                Slot::Dgemm(flight) => {
-                    let InFlight { pending, a, b, c } = *flight;
-                    let outs = seal_slots(collected.remove(&(i as u64)).expect("tiles lost"));
-                    let n = a.rows();
-                    let r = self.finish_dgemm(pending, outs, &a, &b, &c);
-                    resps.push(dgemm_response(n, r));
-                }
-            }
-        }
+        self.set_last_batch_stats(stats);
         resps
+    }
+
+    /// Stage one materialized request: a DGEMM enqueues its tile kernels; a
+    /// Level-1/2 request resolves its measurement from the cache, attaches
+    /// to an identical in-flight kernel, or submits a new one to the pool.
+    fn stage(
+        &mut self,
+        id: u64,
+        req: Request,
+        waiting: &mut HashMap<ProgramKey, Vec<u64>>,
+        submitted: &mut HashMap<u64, ProgramKey>,
+        stats: &mut BatchStats,
+    ) -> Slot {
+        match req {
+            Request::Dgemm { a, b, c } => {
+                let pending = self.submit_dgemm(id, &a, &b, &c);
+                let tiles = vec![None; pending.tile_count()];
+                Slot::Dgemm { flight: Box::new(InFlight { pending, a, b, c }), tiles, got: 0 }
+            }
+            Request::RandomDgemm { .. } => unreachable!("materialize() resolved synthetics"),
+            other => {
+                let spec = meas_spec(&other, self.cfg.ae);
+                let meas = self.cache.cached_measurement(&spec.key);
+                if meas.is_none() {
+                    match waiting.entry(spec.key) {
+                        Entry::Occupied(mut e) => {
+                            // An identical kernel is in flight: attach
+                            // instead of duplicating the simulation. Counts
+                            // as a warm hit, as it would sequentially.
+                            self.cache.record_hit();
+                            stats.shared_measurements += 1;
+                            e.get_mut().push(id);
+                        }
+                        Entry::Vacant(e) => {
+                            self.submit_measure(id, &spec);
+                            submitted.insert(id, spec.key);
+                            e.insert(vec![id]);
+                        }
+                    }
+                }
+                Slot::Meas { req: other, meas: meas.map(Box::new) }
+            }
+        }
+    }
+
+    /// Merge one completed slot into its response.
+    fn finalize(&mut self, slot: Slot) -> Response {
+        match slot {
+            Slot::Dgemm { flight, tiles, .. } => {
+                let InFlight { pending, a, b, c } = *flight;
+                let outs = seal_slots(tiles);
+                let n = a.rows();
+                let r = self.finish_dgemm(pending, outs, &a, &b, &c);
+                dgemm_response(n, r)
+            }
+            Slot::Meas { req, meas } => {
+                let meas = meas.expect("finalize() called on an incomplete slot");
+                self.measured_response(req, *meas)
+            }
+        }
     }
 }
 
-/// Workload generator: a random mix of BLAS requests, the driver used by
-/// the end-to-end example and the throughput bench.
+/// Workload generator: a random mix of BLAS requests over all three
+/// levels, the driver used by the end-to-end example and the throughput
+/// bench. DAXPY α is drawn from a small set so repeated requests can share
+/// baked-α programs.
 pub fn random_workload(count: usize, max_n: usize, seed: u64) -> Vec<Request> {
     let mut rng = XorShift64::new(seed);
     let mut reqs = Vec::with_capacity(count);
     for i in 0..count {
         let n = 8 + rng.below(max_n.saturating_sub(8).max(1));
-        match rng.below(3) {
+        match rng.below(5) {
             0 => reqs.push(Request::RandomDgemm { n, seed: seed + i as u64 }),
             1 => {
                 let a = Mat::random(n, n, seed + i as u64);
@@ -223,11 +384,18 @@ pub fn random_workload(count: usize, max_n: usize, seed: u64) -> Vec<Request> {
                 let y = rng.vec(n);
                 reqs.push(Request::Dgemv { a, x, y });
             }
-            _ => {
+            2 => {
                 let x = rng.vec(n);
                 let y = rng.vec(n);
                 reqs.push(Request::Ddot { x, y });
             }
+            3 => {
+                let alpha = [0.5, 1.0, 1.5][rng.below(3)];
+                let x = rng.vec(n);
+                let y = rng.vec(n);
+                reqs.push(Request::Daxpy { alpha, x, y });
+            }
+            _ => reqs.push(Request::Dnrm2 { x: rng.vec(n) }),
         }
     }
     reqs
@@ -252,16 +420,17 @@ mod tests {
             b: 2,
             artifact_dir: "/nonexistent".into(),
             verify: false,
+            ..CoordinatorConfig::default()
         })
     }
 
     #[test]
     fn serves_mixed_workload() {
-        let reqs = random_workload(6, 24, 99);
-        assert_eq!(reqs.len(), 6);
+        let reqs = random_workload(8, 24, 99);
+        assert_eq!(reqs.len(), 8);
         let mut co = coord();
         let resps = co.serve(reqs);
-        assert_eq!(resps.len(), 6);
+        assert_eq!(resps.len(), 8);
         for r in &resps {
             assert!(r.cycles > 0, "{} has zero cycles", r.op);
             let payloads =
@@ -275,6 +444,12 @@ mod tests {
         let r = Request::RandomDgemm { n: 32, seed: 1 };
         assert_eq!(r.name(), "dgemm");
         assert_eq!(r.n(), 32);
+        let r = Request::Daxpy { alpha: 2.0, x: vec![0.0; 12], y: vec![0.0; 12] };
+        assert_eq!(r.name(), "daxpy");
+        assert_eq!(r.n(), 12);
+        let r = Request::Dnrm2 { x: vec![0.0; 5] };
+        assert_eq!(r.name(), "dnrm2");
+        assert_eq!(r.n(), 5);
     }
 
     #[test]
@@ -300,6 +475,19 @@ mod tests {
             y: vec![3.0, 4.0, 0.0, 0.0],
         });
         assert_eq!(resp.scalar, Some(11.0));
+    }
+
+    #[test]
+    fn daxpy_and_dnrm2_request_values() {
+        let mut co = coord();
+        let resp = co.serve_one(Request::Daxpy {
+            alpha: 2.0,
+            x: vec![1.0, 2.0, 3.0, 4.0],
+            y: vec![1.0, 1.0, 1.0, 1.0],
+        });
+        assert_eq!(resp.vector, Some(vec![3.0, 5.0, 7.0, 9.0]));
+        let resp = co.serve_one(Request::Dnrm2 { x: vec![3.0, 4.0, 0.0, 0.0] });
+        assert_eq!(resp.scalar, Some(5.0));
     }
 
     #[test]

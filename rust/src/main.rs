@@ -8,13 +8,17 @@
 //! redefine gemv  --n 64 [--ae 5]
 //! redefine ddot  --n 1024 [--ae 5]
 //! redefine serve --requests 16 --max-n 64 [--b 2] [--ae 5] [--seq]
+//!                [--window W] [--cache-cap N]
 //! redefine sweep                       # Tables 4-9 summary
 //! redefine artifacts [--artifacts DIR] # list loadable artifacts
 //! ```
 //!
-//! `serve` drives the serving engine: requests flow through the program
-//! cache and the persistent tile-worker pool (`serve_batch`); `--seq`
-//! falls back to the strictly sequential reference loop.
+//! `serve` drives the serving engine: requests of every BLAS level flow
+//! through the program cache and the persistent worker pool
+//! (`serve_batch`); `--seq` falls back to the strictly sequential
+//! reference loop. `--window W` bounds how many requests are staged in
+//! flight at once (backpressure for huge batches); `--cache-cap N` caps
+//! the program cache at N resident kernels (LRU eviction).
 
 use redefine_blas::coordinator::{request::random_workload, Coordinator, CoordinatorConfig};
 use redefine_blas::metrics::{gemm_sweep, PAPER_SIZES};
@@ -25,7 +29,8 @@ use std::process::exit;
 fn usage() -> ! {
     eprintln!(
         "usage: redefine <gemm|gemv|ddot|serve|sweep|artifacts> [--n N] [--b B] \
-         [--ae 0..5] [--requests K] [--max-n N] [--artifacts DIR] [--seq]"
+         [--ae 0..5] [--requests K] [--max-n N] [--artifacts DIR] [--seq] \
+         [--window W] [--cache-cap N]"
     );
     exit(2)
 }
@@ -40,6 +45,8 @@ struct Args {
     max_n: usize,
     artifacts: String,
     seq: bool,
+    window: Option<usize>,
+    cache_cap: Option<usize>,
 }
 
 fn parse_args() -> Args {
@@ -54,6 +61,8 @@ fn parse_args() -> Args {
         max_n: 64,
         artifacts: "artifacts".into(),
         seq: false,
+        window: None,
+        cache_cap: None,
     };
     while let Some(flag) = it.next() {
         let mut val = || it.next().unwrap_or_else(|| usage());
@@ -64,6 +73,13 @@ fn parse_args() -> Args {
             "--max-n" => a.max_n = val().parse().unwrap_or_else(|_| usage()),
             "--artifacts" => a.artifacts = val(),
             "--seq" => a.seq = true,
+            "--window" => {
+                a.window = Some(val().parse().ok().filter(|w| *w >= 1).unwrap_or_else(|| usage()))
+            }
+            "--cache-cap" => {
+                a.cache_cap =
+                    Some(val().parse().ok().filter(|c| *c >= 1).unwrap_or_else(|| usage()))
+            }
             "--ae" => {
                 let i: usize = val().parse().unwrap_or_else(|_| usage());
                 a.ae = *AeLevel::ALL.get(i).unwrap_or_else(|| usage());
@@ -81,6 +97,8 @@ fn main() {
         b: args.b,
         artifact_dir: args.artifacts.clone(),
         verify: true,
+        admission_window: args.window,
+        cache_capacity: args.cache_cap,
     };
 
     match args.cmd.as_str() {
@@ -157,12 +175,27 @@ fn main() {
             );
             let cs = co.cache_stats();
             println!(
-                "program cache: {} kernels resident, {} hits / {} misses; {} pool workers",
+                "program cache: {} kernels resident, {} hits / {} misses / {} evictions; \
+                 {} pool workers",
                 cs.entries,
                 cs.hits,
                 cs.misses,
+                cs.evictions,
                 co.pool_size()
             );
+            let jc = co.pool_job_counts();
+            println!(
+                "pool executed {} gemm tiles, {} gemv kernels, {} level-1 kernels",
+                jc.gemm_tiles, jc.gemv, jc.level1
+            );
+            if let Some(bs) = co.last_batch_stats() {
+                println!(
+                    "admission: window {}, peak {} staged, {} shared measurements",
+                    args.window.map_or("unbounded".into(), |w| w.to_string()),
+                    bs.peak_staged,
+                    bs.shared_measurements
+                );
+            }
             for r in &resps {
                 println!("  {:<6} n={:<4} cycles={:<9} source={:?}", r.op, r.n, r.cycles, r.source);
             }

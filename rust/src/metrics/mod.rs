@@ -161,13 +161,22 @@ pub fn measure_gemv(n: usize, ae: AeLevel) -> Measurement {
 /// and reuses it; PE timing is data-independent, so the fixed operand seeds
 /// double as a numerical cross-check of the cached stream).
 pub fn measure_gemv_prog(n: usize, ae: AeLevel, prog: &Program) -> Measurement {
+    let mut pe = Pe::new(PeConfig::paper(ae), 0);
+    measure_gemv_prog_on(&mut pe, n, ae, prog)
+}
+
+/// [`measure_gemv_prog`] on a caller-provided PE, which is [`Pe::reset`] to
+/// this kernel's GM image and reused — the pooled-worker path, where one
+/// long-lived PE per worker serves every routine. A reset PE is
+/// bit-identical to a fresh one, so this returns exactly the measurement of
+/// [`measure_gemv_prog`]. `pe` must be configured for `ae`.
+pub fn measure_gemv_prog_on(pe: &mut Pe, n: usize, ae: AeLevel, prog: &Program) -> Measurement {
     let a = Mat::random(n, n, 0xD0 + n as u64);
     let mut rng = XorShift64::new(0xE0 + n as u64);
     let x = rng.vec(n);
     let y = rng.vec(n);
     let l = VecLayout::gemv(n);
-    let cfg = PeConfig::paper(ae);
-    let mut pe = Pe::new(cfg.clone(), l.gm_words());
+    pe.reset(l.gm_words());
     let mut gm = vec![0.0; l.gm_words()];
     for i in 0..n {
         for k in 0..n {
@@ -181,7 +190,7 @@ pub fn measure_gemv_prog(n: usize, ae: AeLevel, prog: &Program) -> Measurement {
     let got = pe.read_gm(l.base_y, n).to_vec();
     let want = crate::blas::level2::dgemv_ref(&a, &x, &y);
     crate::util::assert_allclose(&got, &want, 1e-12);
-    Measurement { routine: Routine::Dgemv, n, ae, stats, cfg }
+    Measurement { routine: Routine::Dgemv, n, ae, stats, cfg: pe.cfg.clone() }
 }
 
 /// Run a Level-1 routine on the PE simulator (numerics checked).
@@ -207,12 +216,25 @@ pub fn measure_level1_prog(
     ae: AeLevel,
     prog: &Program,
 ) -> Measurement {
+    let mut pe = Pe::new(PeConfig::paper(ae), 0);
+    measure_level1_prog_on(&mut pe, routine, n, alpha, ae, prog)
+}
+
+/// [`measure_level1_prog`] on a caller-provided PE (reset and reused) — the
+/// pooled-worker path, exactly as [`measure_gemv_prog_on`].
+pub fn measure_level1_prog_on(
+    pe: &mut Pe,
+    routine: Routine,
+    n: usize,
+    alpha: f64,
+    ae: AeLevel,
+    prog: &Program,
+) -> Measurement {
     let l = VecLayout::level1(n);
     let mut rng = XorShift64::new(0xF0 + n as u64);
     let x = rng.vec(n);
     let y = rng.vec(n);
-    let cfg = PeConfig::paper(ae);
-    let mut pe = Pe::new(cfg.clone(), l.gm_words());
+    pe.reset(l.gm_words());
     pe.write_gm(l.base_x, &x);
     pe.write_gm(l.base_y, &y);
     let stats = pe.run(prog);
@@ -236,7 +258,7 @@ pub fn measure_level1_prog(
         }
         _ => unreachable!(),
     }
-    Measurement { routine, n, ae, stats, cfg }
+    Measurement { routine, n, ae, stats, cfg: pe.cfg.clone() }
 }
 
 /// The paper's representative matrix sizes (§4.5.1).
@@ -300,6 +322,27 @@ mod tests {
             let m = measure_level1(r, 16, AeLevel::Ae4);
             assert!(m.latency() > 0, "{r:?}");
         }
+    }
+
+    #[test]
+    fn measurement_on_reused_pe_matches_fresh() {
+        // The pooled-worker path (one reset-reused PE per worker) must
+        // produce bit-identical measurements to a fresh PE per kernel.
+        let ae = AeLevel::Ae4;
+        let gl = VecLayout::gemv(8);
+        let gprog = codegen::gen_gemv(8, ae, &gl);
+        let fresh = measure_gemv_prog(8, ae, &gprog);
+        // Dirty the reusable PE with an unrelated kernel first.
+        let mut pe = Pe::new(PeConfig::paper(ae), 7);
+        let ll = VecLayout::level1(16);
+        let dprog = codegen::gen_ddot(16, ae, &ll);
+        let _ = measure_level1_prog_on(&mut pe, Routine::Ddot, 16, 1.5, ae, &dprog);
+        let reused = measure_gemv_prog_on(&mut pe, 8, ae, &gprog);
+        assert_eq!(fresh.latency(), reused.latency());
+        assert_eq!(fresh.stats.instructions, reused.stats.instructions);
+        let f1 = measure_level1_prog(Routine::Ddot, 16, 1.5, ae, &dprog);
+        let r1 = measure_level1_prog_on(&mut pe, Routine::Ddot, 16, 1.5, ae, &dprog);
+        assert_eq!(f1.latency(), r1.latency());
     }
 
     #[test]

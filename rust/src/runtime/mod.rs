@@ -14,9 +14,12 @@
 //!   always fails, so the coordinator keeps every value on the
 //!   [`crate::coordinator::ValueSource::PeSim`] path. The crate builds and
 //!   tests fully offline with no external dependencies.
-//! * **`--features pjrt`**: compiles the real PJRT client in `pjrt.rs`,
-//!   which requires the vendored `xla` crate (add the dependency in
-//!   `rust/Cargo.toml`, see the comment there).
+//! * **`--features pjrt`** alone: still the stub — the feature is
+//!   CI-checkable without the vendored `xla` crate, so the gate cannot rot
+//!   unbuilt.
+//! * **`--features pjrt,xla-rt`**: compiles the real PJRT client in
+//!   `pjrt.rs`, which requires the vendored `xla` crate (add the dependency
+//!   in `rust/Cargo.toml`, see the comment there).
 
 use std::fmt;
 use std::path::Path;
@@ -83,14 +86,14 @@ pub fn has_artifact(dir: &Path, op: &str, n: usize) -> bool {
     dir.join(ArtifactKey { op: op.into(), n }.file_name()).exists()
 }
 
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla-rt"))]
 mod pjrt;
-#[cfg(feature = "pjrt")]
+#[cfg(all(feature = "pjrt", feature = "xla-rt"))]
 pub use pjrt::Runtime;
 
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla-rt")))]
 mod stub;
-#[cfg(not(feature = "pjrt"))]
+#[cfg(not(all(feature = "pjrt", feature = "xla-rt")))]
 pub use stub::Runtime;
 
 #[cfg(test)]
@@ -124,14 +127,14 @@ mod tests {
         assert!(scan_artifacts(Path::new("/nonexistent-artifacts")).is_empty());
     }
 
-    #[cfg(not(feature = "pjrt"))]
+    #[cfg(not(all(feature = "pjrt", feature = "xla-rt")))]
     #[test]
     fn stub_runtime_reports_unavailable() {
         let err = Runtime::new("/nonexistent-artifacts").err().expect("stub must not construct");
         assert!(err.to_string().contains("pjrt"), "unexpected error: {err}");
     }
 
-    #[cfg(feature = "pjrt")]
+    #[cfg(all(feature = "pjrt", feature = "xla-rt"))]
     #[test]
     fn missing_artifact_is_reported() {
         let mut rt = match Runtime::new("/nonexistent-artifacts") {

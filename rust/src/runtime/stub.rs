@@ -1,8 +1,10 @@
-//! Offline stand-in for the PJRT runtime (default build, no `pjrt`
-//! feature). [`Runtime::new`] always fails, so the coordinator keeps every
-//! value on the `ValueSource::PeSim` path — exactly the behavior of a
-//! `pjrt` build in which PJRT failed to initialize. The full method surface
-//! is kept so downstream code compiles identically in both modes.
+//! Offline stand-in for the PJRT runtime (any build without *both* the
+//! `pjrt` and `xla-rt` features). [`Runtime::new`] always fails, so the
+//! coordinator keeps every value on the `ValueSource::PeSim` path — exactly
+//! the behavior of a real-PJRT build in which PJRT failed to initialize.
+//! The full method surface is kept so downstream code compiles identically
+//! in every mode, which is what lets CI build-check the `pjrt` gate without
+//! the vendored `xla` crate.
 
 use super::{has_artifact, scan_artifacts, ArtifactKey, RtError, RtResult};
 use crate::util::Mat;
@@ -14,12 +16,14 @@ pub struct Runtime {
 }
 
 impl Runtime {
-    /// Always fails: the `pjrt` feature is off, so no value path exists.
+    /// Always fails: no real PJRT client in this build (requires both the
+    /// `pjrt` and `xla-rt` features plus the vendored `xla` crate), so no
+    /// XLA value path exists.
     pub fn new(dir: impl AsRef<Path>) -> RtResult<Self> {
         let _ = dir.as_ref();
         Err(RtError::new(
-            "PJRT runtime unavailable: crate built without the `pjrt` feature \
-             (values fall back to the PE simulator)",
+            "PJRT runtime unavailable: crate built without the `pjrt` + `xla-rt` \
+             features (values fall back to the PE simulator)",
         ))
     }
 

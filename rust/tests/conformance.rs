@@ -224,6 +224,7 @@ fn coordinator_serves_unaligned_shapes() {
             b: 2,
             artifact_dir: "/nonexistent".into(),
             verify: false,
+            ..CoordinatorConfig::default()
         });
         let r = co.dgemm(&a, &b, &c);
         let err = rel_fro_error(r.c.as_slice(), want.as_slice());

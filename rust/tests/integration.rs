@@ -97,6 +97,7 @@ fn coordinator_prefers_xla_and_verifies() {
         b: 2,
         artifact_dir: dir,
         verify: true, // cross-checks XLA vs PE-sim internally
+        ..CoordinatorConfig::default()
     });
     assert!(co.has_xla());
     let n = 20;
@@ -117,6 +118,7 @@ fn coordinator_off_shape_falls_back_to_pe_sim() {
         b: 2,
         artifact_dir: dir,
         verify: true,
+        ..CoordinatorConfig::default()
     });
     let n = 36; // no artifact for 36
     let a = Mat::random(n, n, 11);
@@ -136,6 +138,7 @@ fn serve_loop_mixed_sources() {
         b: 2,
         artifact_dir: dir,
         verify: true,
+        ..CoordinatorConfig::default()
     });
     let reqs = vec![
         Request::RandomDgemm { n: 20, seed: 1 }, // artifact hit
@@ -163,12 +166,14 @@ fn timing_is_independent_of_value_source() {
         b: 2,
         artifact_dir: dir,
         verify: true,
+        ..CoordinatorConfig::default()
     });
     let mut without = Coordinator::new(CoordinatorConfig {
         ae: AeLevel::Ae5,
         b: 2,
         artifact_dir: "/nonexistent".into(),
         verify: false,
+        ..CoordinatorConfig::default()
     });
     let r1 = with_xla.dgemm(&a, &b, &c);
     let r2 = without.dgemm(&a, &b, &c);

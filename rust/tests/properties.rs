@@ -104,6 +104,7 @@ fn prop_coordinator_values_equal_host_blas() {
             b,
             artifact_dir: "/nonexistent".into(),
             verify: false,
+            ..CoordinatorConfig::default()
         });
         let r = co.dgemm(&a, &bm, &c);
         let want = blas::level3::dgemm_ref(&a, &bm, &c);

@@ -1,13 +1,14 @@
 //! Serving-engine tests: program-cache determinism (pointer-equal shared
-//! kernels), `serve_batch` vs `serve_one` equivalence, and the pooled
+//! kernels), `serve_batch` vs `serve_one` equivalence across admission
+//! windows, pooled Level-1/2 execution, LRU capping, and the pooled
 //! path's makespan behavior.
 
 use redefine_blas::coordinator::{
     request::{random_workload, repeated_gemm_workload, Request},
-    Coordinator, CoordinatorConfig, ProgramCache, ValueSource,
+    Coordinator, CoordinatorConfig, ProgramCache, Response, ValueSource,
 };
 use redefine_blas::pe::AeLevel;
-use redefine_blas::util::Mat;
+use redefine_blas::util::{Mat, XorShift64};
 use std::sync::Arc;
 
 fn coord(ae: AeLevel, b: usize) -> Coordinator {
@@ -16,7 +17,54 @@ fn coord(ae: AeLevel, b: usize) -> Coordinator {
         b,
         artifact_dir: "/nonexistent".into(),
         verify: false,
+        ..CoordinatorConfig::default()
     })
+}
+
+fn coord_with(admission_window: Option<usize>, cache_capacity: Option<usize>) -> Coordinator {
+    Coordinator::new(CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 2,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+        admission_window,
+        cache_capacity,
+    })
+}
+
+/// An explicit all-level batch — DGEMM, DGEMV, DDOT, DAXPY, DNRM2 — with
+/// repeated shapes so cache hits and in-flight measurement sharing are
+/// both exercised.
+fn mixed_requests() -> Vec<Request> {
+    let mut rng = XorShift64::new(0xABCD);
+    vec![
+        Request::RandomDgemm { n: 20, seed: 11 },
+        Request::Ddot { x: rng.vec(64), y: rng.vec(64) },
+        Request::Dgemv { a: Mat::random(12, 12, 12), x: rng.vec(12), y: rng.vec(12) },
+        Request::Ddot { x: rng.vec(64), y: rng.vec(64) }, // same kernel as #1
+        Request::Daxpy { alpha: 1.5, x: rng.vec(32), y: rng.vec(32) },
+        Request::RandomDgemm { n: 20, seed: 13 }, // same shape as #0
+        Request::Dnrm2 { x: rng.vec(16) },
+        Request::Daxpy { alpha: 1.5, x: rng.vec(32), y: rng.vec(32) }, // shared α kernel
+        Request::Dgemv { a: Mat::random(12, 12, 14), x: rng.vec(12), y: rng.vec(12) },
+        Request::RandomDgemm { n: 12, seed: 15 },
+    ]
+}
+
+/// Field-by-field response equality (Response carries one payload plus the
+/// simulated cost report).
+fn assert_same_responses(lhs: &[Response], rhs: &[Response]) {
+    assert_eq!(lhs.len(), rhs.len());
+    for (i, (a, b)) in lhs.iter().zip(rhs).enumerate() {
+        assert_eq!(a.op, b.op, "request {i}");
+        assert_eq!(a.n, b.n, "request {i}");
+        assert_eq!(a.source, b.source, "request {i}");
+        assert_eq!(a.cycles, b.cycles, "request {i}: simulated cycles must be identical");
+        assert_eq!(a.energy_j, b.energy_j, "request {i}");
+        assert_eq!(a.matrix, b.matrix, "request {i}: matrix payload");
+        assert_eq!(a.vector, b.vector, "request {i}: vector payload");
+        assert_eq!(a.scalar, b.scalar, "request {i}: scalar payload");
+    }
 }
 
 #[test]
@@ -53,17 +101,99 @@ fn serve_batch_matches_serve_one_exactly() {
     let mut bat = coord(AeLevel::Ae5, 2);
     let r_seq: Vec<_> = reqs.clone().into_iter().map(|r| seq.serve_one(r)).collect();
     let r_bat = bat.serve_batch(reqs);
-    assert_eq!(r_seq.len(), r_bat.len());
-    for (i, (a, b)) in r_seq.iter().zip(&r_bat).enumerate() {
-        assert_eq!(a.op, b.op, "request {i}");
-        assert_eq!(a.n, b.n, "request {i}");
-        assert_eq!(a.source, b.source, "request {i}");
-        assert_eq!(a.cycles, b.cycles, "request {i}: simulated cycles must be identical");
-        assert_eq!(a.energy_j, b.energy_j, "request {i}");
-        assert_eq!(a.matrix, b.matrix, "request {i}: matrix payload");
-        assert_eq!(a.vector, b.vector, "request {i}: vector payload");
-        assert_eq!(a.scalar, b.scalar, "request {i}: scalar payload");
+    assert_same_responses(&r_seq, &r_bat);
+}
+
+#[test]
+fn mixed_batch_equals_sequential_under_any_window() {
+    // The acceptance invariant: an all-level batch (DGEMM + DGEMV + DDOT +
+    // DAXPY + DNRM2) returns values/cycles/energy identical to the
+    // sequential serve_one loop, for every admission window — including
+    // W=1 (fully serialized staging) and unbounded. Cache counters must
+    // agree too: attaching to an in-flight kernel is the batched analogue
+    // of a sequential memo hit.
+    let reqs = mixed_requests();
+    let mut seq = coord(AeLevel::Ae5, 2);
+    let r_seq: Vec<_> = reqs.clone().into_iter().map(|r| seq.serve_one(r)).collect();
+    for window in [Some(1), Some(2), Some(3), Some(reqs.len()), None] {
+        let mut bat = coord_with(window, None);
+        let r_bat = bat.serve_batch(reqs.clone());
+        assert_same_responses(&r_seq, &r_bat);
+        assert_eq!(
+            seq.cache_stats(),
+            bat.cache_stats(),
+            "cache accounting must not depend on the window ({window:?})"
+        );
+        let bs = bat.last_batch_stats().expect("batch ran");
+        assert_eq!(bs.requests, reqs.len());
+        assert!(
+            bs.peak_staged <= window.unwrap_or(usize::MAX),
+            "window {window:?} violated: peak {}",
+            bs.peak_staged
+        );
     }
+}
+
+#[test]
+fn admission_window_bounds_staged_requests() {
+    let reqs = mixed_requests();
+    let total = reqs.len();
+    // Unbounded: everything is staged up front.
+    let mut unbounded = coord_with(None, None);
+    unbounded.serve_batch(reqs.clone());
+    assert_eq!(unbounded.last_batch_stats().unwrap().peak_staged, total);
+    // Bounded: never more than W requests' operands staged at once.
+    for w in [1usize, 2, 4] {
+        let mut co = coord_with(Some(w), None);
+        co.serve_batch(reqs.clone());
+        let bs = co.last_batch_stats().unwrap();
+        assert_eq!(bs.requests, total);
+        assert!(bs.peak_staged <= w, "window {w} violated: peak {}", bs.peak_staged);
+        // The window is actually used, not trivially satisfied.
+        assert_eq!(bs.peak_staged, w.min(total), "pool should be kept as full as allowed");
+    }
+}
+
+#[test]
+fn level1_and_gemv_jobs_run_on_pool_workers() {
+    // The paper's point: one co-designed PE path serves every BLAS level.
+    // After a mixed batch, the pool — not the dispatcher — must have
+    // executed DGEMV and Level-1 kernels alongside the DGEMM tiles.
+    let mut co = coord(AeLevel::Ae5, 2);
+    co.serve_batch(mixed_requests());
+    let counts = co.pool_job_counts();
+    assert!(counts.gemm_tiles >= 12, "3 DGEMMs × 4 tiles expected: {counts:?}");
+    assert_eq!(counts.gemv, 1, "one DGEMV shape → one pooled kernel: {counts:?}");
+    assert_eq!(counts.level1, 3, "ddot + daxpy + dnrm2 kernels: {counts:?}");
+    // Shared kernels are attached, not re-simulated.
+    let bs = co.last_batch_stats().unwrap();
+    assert_eq!(bs.shared_measurements, 3, "repeat ddot + daxpy + dgemv: {bs:?}");
+}
+
+#[test]
+fn pooled_level12_deterministic_across_runs() {
+    // Fresh coordinators, same requests: every simulated quantity of the
+    // pooled Level-1/2 path must repeat bit-for-bit.
+    let reqs = mixed_requests();
+    let r1 = coord(AeLevel::Ae5, 2).serve_batch(reqs.clone());
+    let r2 = coord(AeLevel::Ae5, 2).serve_batch(reqs);
+    assert_same_responses(&r1, &r2);
+}
+
+#[test]
+fn capped_cache_batch_still_matches_sequential() {
+    // An adversarially small LRU cap forces evictions mid-batch; values
+    // and simulated timing must not change (re-emitted kernels are
+    // identical), and evictions must be counted.
+    let reqs = mixed_requests();
+    let mut seq = coord(AeLevel::Ae5, 2);
+    let r_seq: Vec<_> = reqs.clone().into_iter().map(|r| seq.serve_one(r)).collect();
+    let mut capped = coord_with(None, Some(1));
+    let r_cap = capped.serve_batch(reqs);
+    assert_same_responses(&r_seq, &r_cap);
+    let s = capped.cache_stats();
+    assert!(s.evictions > 0, "cap 1 over many shapes must evict: {s:?}");
+    assert_eq!(s.entries, 1, "cap must bound residency: {s:?}");
 }
 
 #[test]
