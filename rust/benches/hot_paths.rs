@@ -18,7 +18,7 @@ use redefine_blas::coordinator::{
     Coordinator, CoordinatorConfig,
 };
 use redefine_blas::metrics::measure_gemm;
-use redefine_blas::pe::{AeLevel, Pe, PeConfig};
+use redefine_blas::pe::{AeLevel, ExecMode, Pe, PeConfig, ScheduledProgram};
 use redefine_blas::util::{round_up, Mat};
 use std::time::Instant;
 
@@ -39,13 +39,29 @@ impl Report {
         let mut s = String::from("{\n  \"bench\": \"hot_paths\",\n");
         s.push_str(&format!("  \"quick\": {},\n  \"results\": [\n", self.quick));
         for (i, (name, ms)) in self.entries.iter().enumerate() {
-            let esc: String = name.chars().filter(|c| *c != '"' && *c != '\\').collect();
+            let esc = json_escape(name);
             let comma = if i + 1 < self.entries.len() { "," } else { "" };
             s.push_str(&format!("    {{\"name\": \"{esc}\", \"ms_per_iter\": {ms:.6}}}{comma}\n"));
         }
         s.push_str("  ]\n}\n");
         s
     }
+}
+
+/// JSON string escaping: `"` and `\` are escaped (not dropped, so entry
+/// names round-trip through the artifact), control characters become
+/// `\u00XX`.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 fn timeit<F: FnMut()>(report: &mut Report, name: &str, iters: usize, mut f: F) -> f64 {
@@ -98,6 +114,35 @@ fn main() {
         prog.len(),
         cycles
     );
+
+    // 1b) Two-tier split on the same kernel: decode once, then compare the
+    //     combined (value + timing) interpreter against the tier-2
+    //     value-only replay over the pre-decoded stream.
+    let sched = ScheduledProgram::compile(&prog, AeLevel::Ae5).expect("gemm kernel decodes");
+    let mut pe = Pe::new(PeConfig::paper(AeLevel::Ae5), layout.gm_words());
+    pe.write_gm(0, &gm);
+    let _ = sched.execute(&mut pe, ExecMode::Replay); // runs + memoizes the timing pass
+    let t_combined =
+        timeit(&mut report, &format!("PE tier1: combined interp n={n}"), iters, || {
+            pe.reset(layout.gm_words());
+            pe.write_gm(0, &gm);
+            let st = pe.run_decoded(sched.decoded());
+            assert_eq!(Some(&st), sched.scheduled_stats(), "timing pass must be reproducible");
+        });
+    let t_replay = timeit(&mut report, &format!("PE tier2: value replay n={n}"), iters, || {
+        pe.reset(layout.gm_words());
+        pe.write_gm(0, &gm);
+        let st = sched.execute(&mut pe, ExecMode::Replay);
+        assert!(st.cycles > 0);
+    });
+    println!(
+        "{:<44} {:>10.2}x  ({} packed bytes vs {} enum bytes)",
+        "  replay speedup over combined",
+        t_combined / t_replay,
+        sched.decoded().packed_bytes(),
+        prog.len() * std::mem::size_of::<redefine_blas::pe::Instr>()
+    );
+    report.record("pe.replay_speedup_x", t_combined / t_replay);
 
     // 2) Codegen emission rate.
     timeit(&mut report, &format!("codegen: gen_gemm n={n} AE5"), if quick { 3 } else { 10 }, || {
@@ -152,6 +197,17 @@ fn main() {
         serving_engine_bench(&mut report, 16, 16, 2, AeLevel::Ae5);
     } else {
         serving_engine_bench(&mut report, 64, 32, 2, AeLevel::Ae5);
+    }
+
+    // 8) Two-tier execution on the serve path: the repeated-shape DGEMM
+    //    workload again, but comparing cache-hit **value replay** (the
+    //    default ExecMode::Replay) against the **combined interpreter**
+    //    forced on every kernel (ExecMode::Combined). Both run warm caches
+    //    on the same pool — the delta is purely tier 2 vs tier 1 per job.
+    if quick {
+        replay_vs_combined_bench(&mut report, 16, 16, 2, AeLevel::Ae5);
+    } else {
+        replay_vs_combined_bench(&mut report, 64, 32, 2, AeLevel::Ae5);
     }
 
     if let Some(path) = json_path {
@@ -266,4 +322,73 @@ fn serving_engine_bench(report: &mut Report, requests: usize, n: usize, b: usize
     report.record("serve.seed_style_total_ms", t_seed * 1e3);
     report.record("serve.batch_total_ms", t_batch * 1e3);
     report.record("serve.speedup_x", t_seed / t_batch);
+}
+
+/// Serve the repeated-shape DGEMM workload twice over warm caches: once
+/// with every kernel re-running the combined (value + timing) interpreter,
+/// once on the default cache-hit value-replay path. Responses must be
+/// identical (values, cycles, energy); the wall-clock ratio is the
+/// two-tier engine's serve-path headline.
+fn replay_vs_combined_bench(report: &mut Report, requests: usize, n: usize, b: usize, ae: AeLevel) {
+    println!(
+        "\ntwo-tier serve: {requests} repeated-shape DGEMM requests, n={n}, {b}x{b} tiles, {ae}"
+    );
+    let mk_coord = |exec: ExecMode| {
+        Coordinator::new(CoordinatorConfig {
+            ae,
+            b,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+            exec,
+            ..CoordinatorConfig::default()
+        })
+    };
+    let reqs = repeated_gemm_workload(requests, n, 9090);
+
+    // Warm both coordinators: one request emits, decodes and (for the
+    // replay coordinator) schedules the kernel, so the timed regions see
+    // cache hits only.
+    let mut combined = mk_coord(ExecMode::Combined);
+    let mut replay = mk_coord(ExecMode::Replay);
+    let _ = combined.serve_batch(repeated_gemm_workload(1, n, 1));
+    let _ = replay.serve_batch(repeated_gemm_workload(1, n, 1));
+
+    let t0 = Instant::now();
+    let r_combined = combined.serve_batch(reqs.clone());
+    let t_combined = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let r_replay = replay.serve_batch(reqs);
+    let t_replay = t0.elapsed().as_secs_f64();
+
+    // Replay must change nothing but the wall-clock: identical values,
+    // identical simulated cycles and energy, request by request.
+    assert_eq!(r_combined.len(), r_replay.len());
+    for (c, r) in r_combined.iter().zip(&r_replay) {
+        assert_eq!(c.cycles, r.cycles, "replay changed simulated cycles");
+        assert_eq!(c.energy_j, r.energy_j, "replay changed simulated energy");
+        assert_eq!(c.matrix, r.matrix, "replay changed values");
+    }
+    let jc = replay.pool_job_counts();
+    println!(
+        "{:<44} {:>10.3} ms total  ({:.1} req/s)",
+        "  combined interpreter per kernel",
+        t_combined * 1e3,
+        requests as f64 / t_combined
+    );
+    println!(
+        "{:<44} {:>10.3} ms total  ({:.1} req/s)",
+        "  cache-hit value replay",
+        t_replay * 1e3,
+        requests as f64 / t_replay
+    );
+    println!(
+        "{:<44} {:>10.2}x  ({} replayed / {} combined kernels on the replay pool)",
+        "  replay throughput speedup",
+        t_combined / t_replay,
+        jc.replays,
+        jc.combined_runs
+    );
+    report.record("serve.combined_exec_total_ms", t_combined * 1e3);
+    report.record("serve.replay_exec_total_ms", t_replay * 1e3);
+    report.record("serve.replay_speedup_x", t_combined / t_replay);
 }

@@ -5,8 +5,16 @@
 //! (the persistent-kernel approach of KBLAS-style GPU servers, realized
 //! here for the PE). This cache makes the coordinator behave the same way:
 //! `gen_gemm_rect`/`gen_gemv`/Level-1 emission runs once per key and the
-//! resulting [`Program`] is shared by reference ([`Arc`]) across pool
-//! workers and across requests.
+//! resulting kernel is shared by reference ([`Arc`]) across pool workers
+//! and across requests.
+//!
+//! What is cached is a [`ScheduledProgram`] — the emitted stream already
+//! **pre-decoded** into the packed two-tier form (validation and AE
+//! feature checks done once, at insertion) and carrying its memoized
+//! [`PeStats`](crate::pe::PeStats) schedule after the first execution. A
+//! cache hit therefore skips emission, validation, decoding *and* (in
+//! replay mode) the entire cycle-accurate timing pass: pool workers just
+//! replay values over the packed stream.
 //!
 //! Keys are exact: a program is only reused for the identical padded shape
 //! and AE level (and, for DAXPY, the identical α, which the generator bakes
@@ -22,7 +30,7 @@
 
 use crate::codegen::{self, layout::VecLayout, GemmLayout};
 use crate::metrics::{Measurement, Routine};
-use crate::pe::{AeLevel, Program};
+use crate::pe::{AeLevel, Program, ScheduledProgram};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -46,6 +54,16 @@ impl ProgramKey {
         let alpha_bits = if routine == Routine::Daxpy { alpha.to_bits() } else { 0 };
         ProgramKey::Level1 { routine, n, alpha_bits, ae }
     }
+
+    /// The enhancement level baked into the key — the level the cached
+    /// kernel is decoded and feature-checked for.
+    pub fn ae(&self) -> AeLevel {
+        match *self {
+            ProgramKey::GemmRect { ae, .. }
+            | ProgramKey::Gemv { ae, .. }
+            | ProgramKey::Level1 { ae, .. } => ae,
+        }
+    }
 }
 
 /// Cache hit/miss/eviction accounting (monotonic counters).
@@ -58,10 +76,10 @@ pub struct CacheStats {
     pub entries: usize,
 }
 
-/// A resident program with its LRU clock stamp.
+/// A resident pre-decoded program with its LRU clock stamp.
 #[derive(Debug)]
 struct Entry {
-    prog: Arc<Program>,
+    sched: Arc<ScheduledProgram>,
     /// Monotonic clock value of the most recent use.
     last_used: u64,
 }
@@ -82,7 +100,8 @@ struct Inner {
 /// Thread-safe program cache. Emission happens at most once per resident
 /// key; the emitting call holds the map lock so concurrent requests for the
 /// same key block rather than duplicating multi-million-instruction
-/// emission work.
+/// emission work. The decode/validate pass runs under the same lock, once,
+/// so a resident kernel is always ready to replay.
 #[derive(Debug, Default)]
 pub struct ProgramCache {
     inner: Mutex<Inner>,
@@ -111,23 +130,34 @@ impl ProgramCache {
         self.capacity
     }
 
-    /// Fetch the program for `key`, emitting it with `emit` on first use.
-    /// Repeated calls with the same resident key return the *same*
-    /// allocation (`Arc::ptr_eq` holds) — the determinism tests pin this.
-    pub fn get_or_emit(&self, key: ProgramKey, emit: impl FnOnce() -> Program) -> Arc<Program> {
+    /// Fetch the pre-decoded program for `key`, emitting it with `emit`
+    /// (and decoding it for the key's AE level) on first use. Repeated
+    /// calls with the same resident key return the *same* allocation
+    /// (`Arc::ptr_eq` holds) — the determinism tests pin this — which is
+    /// what lets the one-time timing schedule memoized inside the
+    /// [`ScheduledProgram`] be shared by every later request.
+    pub fn get_or_emit(
+        &self,
+        key: ProgramKey,
+        emit: impl FnOnce() -> Program,
+    ) -> Arc<ScheduledProgram> {
         let mut inner = self.inner.lock().expect("program cache poisoned");
         inner.clock += 1;
         let clock = inner.clock;
         if let Some(e) = inner.programs.get_mut(&key) {
             e.last_used = clock;
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(&e.prog);
+            return Arc::clone(&e.sched);
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let prog = Arc::new(emit());
-        inner.programs.insert(key, Entry { prog: Arc::clone(&prog), last_used: clock });
+        let prog = emit();
+        let sched = Arc::new(
+            ScheduledProgram::compile(&prog, key.ae())
+                .unwrap_or_else(|e| panic!("emitted kernel for {key:?} is invalid: {e}")),
+        );
+        inner.programs.insert(key, Entry { sched: Arc::clone(&sched), last_used: clock });
         self.evict_over_capacity(&mut inner, key);
-        prog
+        sched
     }
 
     /// Drop least-recently-used keys until the cap is respected, never
@@ -149,7 +179,7 @@ impl ProgramCache {
     }
 
     /// Cached rectangular DGEMM tile kernel (dims already padded to 4).
-    pub fn gemm_rect(&self, m: usize, p: usize, k: usize, ae: AeLevel) -> Arc<Program> {
+    pub fn gemm_rect(&self, m: usize, p: usize, k: usize, ae: AeLevel) -> Arc<ScheduledProgram> {
         self.get_or_emit(ProgramKey::GemmRect { m, p, k, ae }, || {
             let layout = GemmLayout::rect(m, p, k);
             codegen::gen_gemm_rect(m, p, k, ae, &layout)
@@ -157,7 +187,7 @@ impl ProgramCache {
     }
 
     /// Cached DGEMV kernel (n already padded to 4).
-    pub fn gemv(&self, n: usize, ae: AeLevel) -> Arc<Program> {
+    pub fn gemv(&self, n: usize, ae: AeLevel) -> Arc<ScheduledProgram> {
         self.get_or_emit(ProgramKey::Gemv { n, ae }, || {
             let l = VecLayout::gemv(n);
             codegen::gen_gemv(n, ae, &l)
@@ -167,7 +197,13 @@ impl ProgramCache {
     /// Cached Level-1 kernel (n already padded to 4). `alpha` is only
     /// meaningful for [`Routine::Daxpy`]; it is normalized out of the key
     /// for the reduction routines.
-    pub fn level1(&self, routine: Routine, n: usize, alpha: f64, ae: AeLevel) -> Arc<Program> {
+    pub fn level1(
+        &self,
+        routine: Routine,
+        n: usize,
+        alpha: f64,
+        ae: AeLevel,
+    ) -> Arc<ScheduledProgram> {
         self.get_or_emit(ProgramKey::level1(routine, n, alpha, ae), || {
             let l = VecLayout::level1(n);
             match routine {
@@ -240,6 +276,7 @@ impl ProgramCache {
 mod tests {
     use super::*;
     use crate::metrics::measure_level1_prog;
+    use crate::pe::DecodedProgram;
 
     #[test]
     fn same_key_is_pointer_equal() {
@@ -268,7 +305,9 @@ mod tests {
         let cached = cache.gemv(12, AeLevel::Ae3);
         let l = VecLayout::gemv(12);
         let direct = codegen::gen_gemv(12, AeLevel::Ae3, &l);
-        assert_eq!(cached.instrs, direct.instrs);
+        let decoded_direct = DecodedProgram::decode(&direct, AeLevel::Ae3).unwrap();
+        assert_eq!(cached.decoded(), &decoded_direct);
+        assert_eq!(cached.ae(), AeLevel::Ae3);
     }
 
     #[test]
@@ -319,7 +358,8 @@ mod tests {
     fn eviction_drops_the_paired_measurement() {
         let cache = ProgramCache::with_capacity(1);
         let key = ProgramKey::level1(Routine::Ddot, 8, 1.5, AeLevel::Ae4);
-        let prog = cache.level1(Routine::Ddot, 8, 1.5, AeLevel::Ae4);
+        let _ = cache.level1(Routine::Ddot, 8, 1.5, AeLevel::Ae4);
+        let prog = codegen::gen_ddot(8, AeLevel::Ae4, &VecLayout::level1(8));
         let meas = measure_level1_prog(Routine::Ddot, 8, 1.5, AeLevel::Ae4, &prog);
         cache.store_measurement(key, meas);
         assert!(cache.cached_measurement(&key).is_some());
@@ -334,7 +374,8 @@ mod tests {
         // keys stay paired, so the LRU cap really bounds residency.
         let cache = ProgramCache::with_capacity(1);
         let key = ProgramKey::level1(Routine::Ddot, 8, 1.5, AeLevel::Ae4);
-        let prog = cache.level1(Routine::Ddot, 8, 1.5, AeLevel::Ae4);
+        let _ = cache.level1(Routine::Ddot, 8, 1.5, AeLevel::Ae4);
+        let prog = codegen::gen_ddot(8, AeLevel::Ae4, &VecLayout::level1(8));
         let meas = measure_level1_prog(Routine::Ddot, 8, 1.5, AeLevel::Ae4, &prog);
         let _ = cache.gemm_rect(4, 4, 4, AeLevel::Ae4); // evicts the DDOT key
         cache.store_measurement(key, meas);

@@ -10,8 +10,14 @@
 //! paper's point that one co-designed PE serves all three levels through
 //! one fixed-program datapath. Instruction streams are never re-emitted per
 //! request: a [`ProgramCache`] keyed by (routine, shape, AE level) emits
-//! each kernel once and shares it (`Arc`) across pool workers and requests,
-//! with an optional LRU cap for adversarial shape streams.
+//! each kernel once — **pre-decoded and validated** into a
+//! [`ScheduledProgram`](crate::pe::ScheduledProgram) — and shares it
+//! (`Arc`) across pool workers and requests, with an optional LRU cap for
+//! adversarial shape streams. Execution is two-tier: the cycle-accurate
+//! timing pass runs once per cached kernel and is memoized; every later
+//! request replays values only against the stored schedule (the default
+//! [`ExecMode::Replay`]; [`ExecMode::Combined`] forces the full
+//! interpreter per request, as a baseline and cross-check).
 //!
 //! Co-simulation split:
 //! * **timing/energy** — always from the PE + NoC simulators;
@@ -34,7 +40,7 @@ use crate::codegen::GemmLayout;
 use crate::energy::PowerModel;
 use crate::metrics::{Measurement, Routine};
 use crate::noc::{Coord, LinkTraffic, RouterConfig, Topology};
-use crate::pe::{AeLevel, PeConfig, PeStats};
+use crate::pe::{AeLevel, ExecMode, PeConfig, PeStats};
 use crate::runtime::Runtime;
 use crate::util::{round_up, Mat};
 use pool::{Done, Job, WorkerPool};
@@ -63,6 +69,12 @@ pub struct CoordinatorConfig {
     /// LRU capacity of the program cache, in resident kernels. `None`
     /// (default) keeps every emitted kernel — the seed behavior.
     pub cache_capacity: Option<usize>,
+    /// How pool workers execute cached kernels: [`ExecMode::Replay`]
+    /// (default) runs the cycle-accurate timing pass once per kernel and
+    /// replays values only afterwards; [`ExecMode::Combined`] re-runs the
+    /// full combined interpreter on every request (baseline/cross-check —
+    /// responses are identical either way, pinned by tests).
+    pub exec: ExecMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -74,6 +86,7 @@ impl Default for CoordinatorConfig {
             verify: true,
             admission_window: None,
             cache_capacity: None,
+            exec: ExecMode::Replay,
         }
     }
 }
@@ -187,7 +200,7 @@ impl Coordinator {
             Some(cap) => ProgramCache::with_capacity(cap),
             None => ProgramCache::new(),
         };
-        let pool = WorkerPool::new(cfg.b * cfg.b, cfg.ae);
+        let pool = WorkerPool::new(cfg.b * cfg.b, cfg.ae, cfg.exec);
         Self { cfg, runtime, cache, pool, last_batch: None }
     }
 
@@ -277,9 +290,11 @@ impl Coordinator {
             }
         }
 
-        // 2) One cached program shared by every tile of this request (and
-        //    by every later request of the same shape).
-        let prog = self.cache.gemm_rect(m, m, np, ae);
+        // 2) One cached, pre-decoded program shared by every tile of this
+        //    request (and by every later request of the same shape). The
+        //    first tile to execute anywhere runs the timing pass and
+        //    memoizes the schedule; the rest replay values only.
+        let sched = self.cache.gemm_rect(m, m, np, ae);
         let layout = GemmLayout::rect(m, m, np);
         for bi in 0..bb {
             for bj in 0..bb {
@@ -289,7 +304,7 @@ impl Coordinator {
                 self.pool.submit(Job::GemmTile {
                     job_id,
                     tile_idx: bi * bb + bj,
-                    prog: Arc::clone(&prog),
+                    sched: Arc::clone(&sched),
                     layout,
                     gm: layout.pack(&a_blk, &b_blk, &c_blk),
                 });
@@ -305,17 +320,17 @@ impl Coordinator {
         let ae = self.cfg.ae;
         match spec.routine {
             Routine::Dgemv => {
-                let prog = self.cache.gemv(spec.np, ae);
-                self.pool.submit(Job::Gemv { job_id, n: spec.np, prog });
+                let sched = self.cache.gemv(spec.np, ae);
+                self.pool.submit(Job::Gemv { job_id, n: spec.np, sched });
             }
             routine => {
-                let prog = self.cache.level1(routine, spec.np, spec.alpha, ae);
+                let sched = self.cache.level1(routine, spec.np, spec.alpha, ae);
                 self.pool.submit(Job::Level1 {
                     job_id,
                     routine,
                     n: spec.np,
                     alpha: spec.alpha,
-                    prog,
+                    sched,
                 });
             }
         }
@@ -663,6 +678,35 @@ mod tests {
         assert_eq!(s.entries, 3, "three distinct padded shapes: {s:?}");
         assert_eq!(s.misses, 3);
         assert_eq!(s.hits, 2);
+    }
+
+    #[test]
+    fn repeated_dgemm_replays_the_cached_schedule() {
+        // Three same-shape DGEMMs: the first request's tiles run the
+        // timing pass (workers may race, so 1..=4 combined runs); every
+        // tile of the later requests replays the memoized schedule.
+        let n = 16;
+        let mut co = coord(2);
+        for seed in 0..3u64 {
+            let a = Mat::random(n, n, 400 + seed);
+            let b = Mat::random(n, n, 500 + seed);
+            let c = Mat::zeros(n, n);
+            let r = co.dgemm(&a, &b, &c);
+            let want = crate::blas::level3::dgemm_ref(&a, &b, &c);
+            let err = crate::util::rel_fro_error(r.c.as_slice(), want.as_slice());
+            assert!(err < 1e-12, "replayed DGEMM wrong: {err}");
+        }
+        let counts = co.pool_job_counts();
+        assert_eq!(counts.gemm_tiles, 12);
+        assert_eq!(counts.replays + counts.combined_runs, 12);
+        assert!(
+            (1..=4).contains(&counts.combined_runs),
+            "only the first request's tiles may pay the timing pass: {counts:?}"
+        );
+        assert!(counts.replays >= 8, "later requests must replay: {counts:?}");
+        // The resident kernel carries its memoized schedule.
+        let sched = co.cache().gemm_rect(n / 2, n / 2, n, AeLevel::Ae5);
+        assert!(sched.is_scheduled(), "cached kernel must hold the one-time schedule");
     }
 
     #[test]

@@ -12,24 +12,32 @@
 //! Every BLAS level flows through the same [`Job`] channel: DGEMM as
 //! per-tile kernels, DGEMV and the Level-1 routines as single-PE
 //! measurement kernels on the cached-program paths
-//! ([`measure_gemv_prog_on`] / [`measure_level1_prog_on`]). Values are
+//! ([`measure_gemv_sched_on`] / [`measure_level1_sched_on`]). Values are
 //! resolved by the dispatcher; the pool burns the simulated cycles.
+//!
+//! Jobs carry [`ScheduledProgram`]s — already validated and pre-decoded by
+//! the program cache. In the default [`ExecMode::Replay`] a worker runs
+//! the full combined (value + timing) interpreter only the *first* time a
+//! program executes anywhere, memoizing its schedule; every later
+//! execution of that program — on any worker — is a lean value-only
+//! replay returning the memoized [`PeStats`]. [`ExecMode::Combined`]
+//! forces the full interpreter every time (the bench baseline).
 //!
 //! Host-thread parallelism only: simulated timing comes from the per-kernel
 //! `PeStats` and the NoC transfer schedule, both of which are independent
 //! of which worker ran a job and in which order.
 
 use crate::codegen::GemmLayout;
-use crate::metrics::{measure_gemv_prog_on, measure_level1_prog_on, Measurement, Routine};
-use crate::pe::{AeLevel, Pe, PeConfig, PeStats, Program};
+use crate::metrics::{measure_gemv_sched_on, measure_level1_sched_on, Measurement, Routine};
+use crate::pe::{AeLevel, ExecMode, ExecTier, Pe, PeConfig, PeStats, ScheduledProgram};
 use crate::util::Mat;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
-/// One unit of pooled work: a cached program plus what the worker needs to
-/// run it.
+/// One unit of pooled work: a cached pre-decoded program plus what the
+/// worker needs to run it.
 pub(crate) enum Job {
     /// One DGEMM tile kernel: shared cached program + packed operands. The
     /// output block unpacked after the run is the full
@@ -39,16 +47,16 @@ pub(crate) enum Job {
         job_id: u64,
         /// Tile index within the request (`bi * b + bj`).
         tile_idx: usize,
-        prog: Arc<Program>,
+        sched: Arc<ScheduledProgram>,
         layout: GemmLayout,
         /// Packed GM image (length `layout.gm_words()`).
         gm: Vec<f64>,
     },
     /// Single-PE DGEMV measurement kernel at padded size `n`.
-    Gemv { job_id: u64, n: usize, prog: Arc<Program> },
+    Gemv { job_id: u64, n: usize, sched: Arc<ScheduledProgram> },
     /// Single-PE Level-1 measurement kernel at padded size `n`. `alpha` is
     /// the constant baked into a DAXPY stream (ignored for reductions).
-    Level1 { job_id: u64, routine: Routine, n: usize, alpha: f64, prog: Arc<Program> },
+    Level1 { job_id: u64, routine: Routine, n: usize, alpha: f64, sched: Arc<ScheduledProgram> },
 }
 
 impl Job {
@@ -85,6 +93,8 @@ struct Counters {
     gemm_tiles: AtomicU64,
     gemv: AtomicU64,
     level1: AtomicU64,
+    replays: AtomicU64,
+    combined_runs: AtomicU64,
 }
 
 /// Snapshot of the pool's per-kind execution counters.
@@ -96,6 +106,12 @@ pub struct PoolJobCounts {
     pub gemv: u64,
     /// Level-1 measurement kernels run on pool workers.
     pub level1: u64,
+    /// Kernels executed on the tier-2 value-replay path (schedule already
+    /// memoized when the worker picked the job up).
+    pub replays: u64,
+    /// Kernels executed by the combined value+timing interpreter (first
+    /// run of a program, or every run in [`ExecMode::Combined`]).
+    pub combined_runs: u64,
 }
 
 /// The pool: `size` workers, spawned once, fed over a shared queue.
@@ -108,8 +124,8 @@ pub(crate) struct WorkerPool {
 
 impl WorkerPool {
     /// Spawn `size` persistent workers simulating paper-configured PEs at
-    /// enhancement level `ae`.
-    pub fn new(size: usize, ae: AeLevel) -> Self {
+    /// enhancement level `ae`, executing jobs in `exec` mode.
+    pub fn new(size: usize, ae: AeLevel, exec: ExecMode) -> Self {
         assert!(size >= 1, "worker pool needs at least one worker");
         let (jtx, jrx) = mpsc::channel::<Job>();
         let (dtx, drx) = mpsc::channel::<Msg>();
@@ -122,7 +138,7 @@ impl WorkerPool {
                 let counts = Arc::clone(&counts);
                 thread::Builder::new()
                     .name(format!("pe-worker-{i}"))
-                    .spawn(move || worker_loop(ae, jrx, dtx, counts))
+                    .spawn(move || worker_loop(ae, exec, jrx, dtx, counts))
                     .expect("spawn pool worker")
             })
             .collect();
@@ -140,6 +156,8 @@ impl WorkerPool {
             gemm_tiles: self.counts.gemm_tiles.load(Ordering::Relaxed),
             gemv: self.counts.gemv.load(Ordering::Relaxed),
             level1: self.counts.level1.load(Ordering::Relaxed),
+            replays: self.counts.replays.load(Ordering::Relaxed),
+            combined_runs: self.counts.combined_runs.load(Ordering::Relaxed),
         }
     }
 
@@ -175,6 +193,7 @@ impl Drop for WorkerPool {
 
 fn worker_loop(
     ae: AeLevel,
+    exec: ExecMode,
     jobs: Arc<Mutex<mpsc::Receiver<Job>>>,
     done: mpsc::Sender<Msg>,
     counts: Arc<Counters>,
@@ -202,7 +221,7 @@ fn worker_loop(
         let p = pe.as_mut().expect("worker PE initialized above");
         // Catch kernel panics (codegen bugs, feature misuse) and report
         // them: a silently-missing result would deadlock the dispatcher.
-        let unwind = std::panic::AssertUnwindSafe(|| run_job(p, ae, job, &counts));
+        let unwind = std::panic::AssertUnwindSafe(|| run_job(p, ae, exec, job, &counts));
         let outcome = std::panic::catch_unwind(unwind);
         let msg = match outcome {
             Ok(d) => Msg::Done(d),
@@ -218,24 +237,34 @@ fn worker_loop(
 }
 
 /// Run one job on the worker's (reset-reused) PE.
-fn run_job(pe: &mut Pe, ae: AeLevel, job: Job, counts: &Counters) -> Done {
+fn run_job(pe: &mut Pe, ae: AeLevel, exec: ExecMode, job: Job, counts: &Counters) -> Done {
+    // Count the tier the execution engine reports, not a prediction: a
+    // worker that races another onto a fresh kernel may still replay if
+    // the sibling's timing pass lands first.
+    let tally = |tier: ExecTier| match tier {
+        ExecTier::Replayed => counts.replays.fetch_add(1, Ordering::Relaxed),
+        ExecTier::Combined => counts.combined_runs.fetch_add(1, Ordering::Relaxed),
+    };
     match job {
-        Job::GemmTile { job_id, tile_idx, prog, layout, gm } => {
+        Job::GemmTile { job_id, tile_idx, sched, layout, gm } => {
             pe.reset(layout.gm_words());
             pe.write_gm(0, &gm);
-            let stats = pe.run(&prog);
+            let (stats, tier) = sched.execute_traced(pe, exec);
             let out = layout.unpack_c(&pe.gm, layout.m, layout.p);
             counts.gemm_tiles.fetch_add(1, Ordering::Relaxed);
+            tally(tier);
             Done::GemmTile { job_id, tile_idx, out, stats }
         }
-        Job::Gemv { job_id, n, prog } => {
-            let meas = measure_gemv_prog_on(pe, n, ae, &prog);
+        Job::Gemv { job_id, n, sched } => {
+            let (meas, tier) = measure_gemv_sched_on(pe, n, ae, &sched, exec);
             counts.gemv.fetch_add(1, Ordering::Relaxed);
+            tally(tier);
             Done::Measured { job_id, meas }
         }
-        Job::Level1 { job_id, routine, n, alpha, prog } => {
-            let meas = measure_level1_prog_on(pe, routine, n, alpha, ae, &prog);
+        Job::Level1 { job_id, routine, n, alpha, sched } => {
+            let (meas, tier) = measure_level1_sched_on(pe, routine, n, alpha, ae, &sched, exec);
             counts.level1.fetch_add(1, Ordering::Relaxed);
+            tally(tier);
             Done::Measured { job_id, meas }
         }
     }
@@ -266,15 +295,16 @@ mod tests {
         let b = Mat::random(n, n, seed + 1);
         let c = Mat::random(n, n, seed + 2);
         let layout = GemmLayout::rect(n, n, n);
-        let prog = Arc::new(gen_gemm_rect(n, n, n, ae, &layout));
+        let prog = gen_gemm_rect(n, n, n, ae, &layout);
+        let sched = Arc::new(ScheduledProgram::compile(&prog, ae).expect("tile kernel decodes"));
         let want = crate::blas::level3::dgemm_ref(&a, &b, &c);
         let gm = layout.pack(&a, &b, &c);
-        (Job::GemmTile { job_id, tile_idx, prog, layout, gm }, want)
+        (Job::GemmTile { job_id, tile_idx, sched, layout, gm }, want)
     }
 
     #[test]
     fn pool_runs_jobs_and_reuses_workers() {
-        let pool = WorkerPool::new(2, AeLevel::Ae5);
+        let pool = WorkerPool::new(2, AeLevel::Ae5, ExecMode::Replay);
         assert_eq!(pool.worker_count(), 2);
         // More jobs than workers forces PE reuse; mixed shapes force
         // reset() resizing.
@@ -294,7 +324,73 @@ mod tests {
             assert!(err < 1e-12, "job {job_id}: err {err}");
             assert!(stats.cycles > 0);
         }
-        assert_eq!(pool.counts(), PoolJobCounts { gemm_tiles: 6, gemv: 0, level1: 0 });
+        let counts = pool.counts();
+        assert_eq!((counts.gemm_tiles, counts.gemv, counts.level1), (6, 0, 0));
+        // Every job carried a distinct fresh ScheduledProgram here, so all
+        // six executions were combined timing passes.
+        assert_eq!(counts.combined_runs, 6);
+        assert_eq!(counts.replays, 0);
+    }
+
+    #[test]
+    fn shared_schedule_replays_after_first_run() {
+        // One ScheduledProgram shared by several jobs: only the first
+        // execution pays the timing pass; later jobs replay values and
+        // return identical stats and identical output.
+        let pool = WorkerPool::new(1, AeLevel::Ae5, ExecMode::Replay);
+        let (first, want) = gemm_job(0, 0, 12, 500);
+        let (sched, layout, gm) = match &first {
+            Job::GemmTile { sched, layout, gm, .. } => {
+                (Arc::clone(sched), *layout, gm.clone())
+            }
+            _ => unreachable!(),
+        };
+        pool.submit(first);
+        for id in 1..4u64 {
+            pool.submit(Job::GemmTile {
+                job_id: id,
+                tile_idx: 0,
+                sched: Arc::clone(&sched),
+                layout,
+                gm: gm.clone(),
+            });
+        }
+        let mut stats = Vec::new();
+        for _ in 0..4 {
+            match pool.recv() {
+                Done::GemmTile { out, stats: st, .. } => {
+                    let err = rel_fro_error(out.as_slice(), want.as_slice());
+                    assert!(err < 1e-12, "replayed tile wrong: {err}");
+                    stats.push(st);
+                }
+                Done::Measured { .. } => panic!("no measurement submitted"),
+            }
+        }
+        assert!(stats.windows(2).all(|w| w[0] == w[1]), "replay must return the memoized stats");
+        let counts = pool.counts();
+        assert_eq!(counts.combined_runs, 1, "one worker → exactly one timing pass");
+        assert_eq!(counts.replays, 3, "later executions replay");
+    }
+
+    #[test]
+    fn combined_mode_never_replays() {
+        let pool = WorkerPool::new(1, AeLevel::Ae5, ExecMode::Combined);
+        let (first, _) = gemm_job(0, 0, 8, 600);
+        let (sched, layout, gm) = match &first {
+            Job::GemmTile { sched, layout, gm, .. } => {
+                (Arc::clone(sched), *layout, gm.clone())
+            }
+            _ => unreachable!(),
+        };
+        pool.submit(first);
+        pool.submit(Job::GemmTile { job_id: 1, tile_idx: 0, sched, layout, gm });
+        let (a, b) = match (pool.recv(), pool.recv()) {
+            (Done::GemmTile { stats: a, .. }, Done::GemmTile { stats: b, .. }) => (a, b),
+            _ => panic!("no measurement submitted"),
+        };
+        assert_eq!(a, b, "combined re-runs must reproduce the schedule");
+        let counts = pool.counts();
+        assert_eq!((counts.combined_runs, counts.replays), (2, 0));
     }
 
     #[test]
@@ -302,13 +398,21 @@ mod tests {
         // A pooled DGEMV/Level-1 kernel must return exactly the inline
         // measurement (the pool only moves where the simulation runs).
         let ae = AeLevel::Ae5;
-        let pool = WorkerPool::new(2, ae);
+        let pool = WorkerPool::new(2, ae, ExecMode::Replay);
         let n = 16;
-        let gprog = Arc::new(gen_gemv(n, ae, &VecLayout::gemv(n)));
+        let gprog = gen_gemv(n, ae, &VecLayout::gemv(n));
         let want = measure_gemv_prog(n, ae, &gprog);
-        pool.submit(Job::Gemv { job_id: 7, n, prog: Arc::clone(&gprog) });
-        let lprog = Arc::new(crate::codegen::gen_ddot(n, ae, &VecLayout::level1(n)));
-        pool.submit(Job::Level1 { job_id: 8, routine: Routine::Ddot, n, alpha: 1.5, prog: lprog });
+        let gsched = Arc::new(ScheduledProgram::compile(&gprog, ae).expect("gemv decodes"));
+        pool.submit(Job::Gemv { job_id: 7, n, sched: gsched });
+        let lprog = crate::codegen::gen_ddot(n, ae, &VecLayout::level1(n));
+        let lsched = Arc::new(ScheduledProgram::compile(&lprog, ae).expect("ddot decodes"));
+        pool.submit(Job::Level1 {
+            job_id: 8,
+            routine: Routine::Ddot,
+            n,
+            alpha: 1.5,
+            sched: lsched,
+        });
         let mut got = Vec::new();
         for _ in 0..2 {
             match pool.recv() {
@@ -329,7 +433,7 @@ mod tests {
 
     #[test]
     fn drop_joins_idle_workers() {
-        let pool = WorkerPool::new(3, AeLevel::Ae2);
+        let pool = WorkerPool::new(3, AeLevel::Ae2, ExecMode::Replay);
         drop(pool); // must not hang
     }
 
@@ -337,17 +441,19 @@ mod tests {
     #[should_panic(expected = "pool worker panicked")]
     fn worker_panic_propagates_instead_of_deadlocking() {
         use crate::pe::{Instr, Program};
-        // A DOT on an AE1-configured PE trips check_features inside the
-        // worker; recv() must re-raise it rather than block forever.
-        let pool = WorkerPool::new(1, AeLevel::Ae1);
+        // A kernel decoded for AE5 submitted to an AE1 pool trips the
+        // decoded-level assert inside the worker; recv() must re-raise it
+        // rather than block forever.
+        let pool = WorkerPool::new(1, AeLevel::Ae1, ExecMode::Replay);
         let layout = GemmLayout::rect(4, 4, 4);
         let mut prog = Program::new();
         prog.push(Instr::Dot { rd: 0, ra: 16, rb: 32, n: 4, acc: false });
         prog.push(Instr::Halt);
+        let sched = ScheduledProgram::compile(&prog, AeLevel::Ae5).expect("valid for AE5");
         pool.submit(Job::GemmTile {
             job_id: 0,
             tile_idx: 0,
-            prog: Arc::new(prog),
+            sched: Arc::new(sched),
             layout,
             gm: vec![0.0; layout.gm_words()],
         });

@@ -8,7 +8,7 @@
 //! redefine gemv  --n 64 [--ae 5]
 //! redefine ddot  --n 1024 [--ae 5]
 //! redefine serve --requests 16 --max-n 64 [--b 2] [--ae 5] [--seq]
-//!                [--window W] [--cache-cap N]
+//!                [--window W] [--cache-cap N] [--exec replay|combined]
 //! redefine sweep                       # Tables 4-9 summary
 //! redefine artifacts [--artifacts DIR] # list loadable artifacts
 //! ```
@@ -18,11 +18,14 @@
 //! (`serve_batch`); `--seq` falls back to the strictly sequential
 //! reference loop. `--window W` bounds how many requests are staged in
 //! flight at once (backpressure for huge batches); `--cache-cap N` caps
-//! the program cache at N resident kernels (LRU eviction).
+//! the program cache at N resident kernels (LRU eviction); `--exec
+//! combined` disables the two-tier value-replay fast path (every kernel
+//! re-runs the full cycle-accurate interpreter — the baseline the replay
+//! path is benchmarked against).
 
 use redefine_blas::coordinator::{request::random_workload, Coordinator, CoordinatorConfig};
 use redefine_blas::metrics::{gemm_sweep, PAPER_SIZES};
-use redefine_blas::pe::{AeLevel, PeConfig};
+use redefine_blas::pe::{AeLevel, ExecMode, PeConfig};
 use redefine_blas::util::{Mat, XorShift64};
 use std::process::exit;
 
@@ -30,7 +33,7 @@ fn usage() -> ! {
     eprintln!(
         "usage: redefine <gemm|gemv|ddot|serve|sweep|artifacts> [--n N] [--b B] \
          [--ae 0..5] [--requests K] [--max-n N] [--artifacts DIR] [--seq] \
-         [--window W] [--cache-cap N]"
+         [--window W] [--cache-cap N] [--exec replay|combined]"
     );
     exit(2)
 }
@@ -47,6 +50,7 @@ struct Args {
     seq: bool,
     window: Option<usize>,
     cache_cap: Option<usize>,
+    exec: ExecMode,
 }
 
 fn parse_args() -> Args {
@@ -63,6 +67,7 @@ fn parse_args() -> Args {
         seq: false,
         window: None,
         cache_cap: None,
+        exec: ExecMode::Replay,
     };
     while let Some(flag) = it.next() {
         let mut val = || it.next().unwrap_or_else(|| usage());
@@ -79,6 +84,13 @@ fn parse_args() -> Args {
             "--cache-cap" => {
                 a.cache_cap =
                     Some(val().parse().ok().filter(|c| *c >= 1).unwrap_or_else(|| usage()))
+            }
+            "--exec" => {
+                a.exec = match val().as_str() {
+                    "replay" => ExecMode::Replay,
+                    "combined" => ExecMode::Combined,
+                    _ => usage(),
+                }
             }
             "--ae" => {
                 let i: usize = val().parse().unwrap_or_else(|_| usage());
@@ -99,6 +111,7 @@ fn main() {
         verify: true,
         admission_window: args.window,
         cache_capacity: args.cache_cap,
+        exec: args.exec,
     };
 
     match args.cmd.as_str() {
@@ -185,8 +198,9 @@ fn main() {
             );
             let jc = co.pool_job_counts();
             println!(
-                "pool executed {} gemm tiles, {} gemv kernels, {} level-1 kernels",
-                jc.gemm_tiles, jc.gemv, jc.level1
+                "pool executed {} gemm tiles, {} gemv kernels, {} level-1 kernels \
+                 ({} value-replayed / {} combined timing passes)",
+                jc.gemm_tiles, jc.gemv, jc.level1, jc.replays, jc.combined_runs
             );
             if let Some(bs) = co.last_batch_stats() {
                 println!(

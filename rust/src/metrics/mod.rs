@@ -10,7 +10,7 @@ pub mod paper;
 
 use crate::codegen::{self, layout::VecLayout, GemmLayout};
 use crate::energy::PowerModel;
-use crate::pe::{AeLevel, Pe, PeConfig, PeStats, Program};
+use crate::pe::{AeLevel, ExecMode, ExecTier, Pe, PeConfig, PeStats, Program, ScheduledProgram};
 use crate::util::{Mat, XorShift64};
 
 /// Which BLAS routine a measurement ran.
@@ -171,6 +171,36 @@ pub fn measure_gemv_prog(n: usize, ae: AeLevel, prog: &Program) -> Measurement {
 /// bit-identical to a fresh one, so this returns exactly the measurement of
 /// [`measure_gemv_prog`]. `pe` must be configured for `ae`.
 pub fn measure_gemv_prog_on(pe: &mut Pe, n: usize, ae: AeLevel, prog: &Program) -> Measurement {
+    let fx = gemv_setup(pe, n);
+    let stats = pe.run(prog);
+    gemv_check(pe, n, &fx);
+    Measurement { routine: Routine::Dgemv, n, ae, stats, cfg: pe.cfg.clone() }
+}
+
+/// [`measure_gemv_prog_on`] over a pre-decoded, schedulable kernel — the
+/// two-tier serving path. In [`ExecMode::Replay`], a kernel whose timing
+/// pass already ran (on a config-identical PE) executes values-only and
+/// returns the memoized stats (identical to a fresh combined run: PE
+/// timing is data-independent); the first execution, or
+/// [`ExecMode::Combined`], runs the full combined interpreter. Numerics
+/// are checked either way. Also reports which tier actually ran, for the
+/// pool's telemetry.
+pub fn measure_gemv_sched_on(
+    pe: &mut Pe,
+    n: usize,
+    ae: AeLevel,
+    sched: &ScheduledProgram,
+    mode: ExecMode,
+) -> (Measurement, ExecTier) {
+    let fx = gemv_setup(pe, n);
+    let (stats, tier) = sched.execute_traced(pe, mode);
+    gemv_check(pe, n, &fx);
+    (Measurement { routine: Routine::Dgemv, n, ae, stats, cfg: pe.cfg.clone() }, tier)
+}
+
+/// Reset `pe` to the DGEMV kernel's fixed-seed GM image (operands are
+/// pure functions of `n`, so every measurement of a shape is comparable).
+fn gemv_setup(pe: &mut Pe, n: usize) -> (Mat, Vec<f64>, Vec<f64>, VecLayout) {
     let a = Mat::random(n, n, 0xD0 + n as u64);
     let mut rng = XorShift64::new(0xE0 + n as u64);
     let x = rng.vec(n);
@@ -186,11 +216,15 @@ pub fn measure_gemv_prog_on(pe: &mut Pe, n: usize, ae: AeLevel, prog: &Program) 
     gm[l.base_x..l.base_x + n].copy_from_slice(&x);
     gm[l.base_y..l.base_y + n].copy_from_slice(&y);
     pe.write_gm(0, &gm);
-    let stats = pe.run(prog);
+    (a, x, y, l)
+}
+
+/// Cross-check the DGEMV kernel's output against the host reference.
+fn gemv_check(pe: &Pe, n: usize, fx: &(Mat, Vec<f64>, Vec<f64>, VecLayout)) {
+    let (a, x, y, l) = fx;
     let got = pe.read_gm(l.base_y, n).to_vec();
-    let want = crate::blas::level2::dgemv_ref(&a, &x, &y);
+    let want = crate::blas::level2::dgemv_ref(a, x, y);
     crate::util::assert_allclose(&got, &want, 1e-12);
-    Measurement { routine: Routine::Dgemv, n, ae, stats, cfg: pe.cfg.clone() }
 }
 
 /// Run a Level-1 routine on the PE simulator (numerics checked).
@@ -230,6 +264,32 @@ pub fn measure_level1_prog_on(
     ae: AeLevel,
     prog: &Program,
 ) -> Measurement {
+    let fx = level1_setup(pe, n);
+    let stats = pe.run(prog);
+    level1_check(pe, routine, n, alpha, &fx);
+    Measurement { routine, n, ae, stats, cfg: pe.cfg.clone() }
+}
+
+/// [`measure_level1_prog_on`] over a pre-decoded, schedulable kernel —
+/// the two-tier serving path (see [`measure_gemv_sched_on`] for the
+/// replay/combined semantics and the reported tier).
+pub fn measure_level1_sched_on(
+    pe: &mut Pe,
+    routine: Routine,
+    n: usize,
+    alpha: f64,
+    ae: AeLevel,
+    sched: &ScheduledProgram,
+    mode: ExecMode,
+) -> (Measurement, ExecTier) {
+    let fx = level1_setup(pe, n);
+    let (stats, tier) = sched.execute_traced(pe, mode);
+    level1_check(pe, routine, n, alpha, &fx);
+    (Measurement { routine, n, ae, stats, cfg: pe.cfg.clone() }, tier)
+}
+
+/// Reset `pe` to the Level-1 kernel's fixed-seed GM image.
+fn level1_setup(pe: &mut Pe, n: usize) -> (Vec<f64>, Vec<f64>, VecLayout) {
     let l = VecLayout::level1(n);
     let mut rng = XorShift64::new(0xF0 + n as u64);
     let x = rng.vec(n);
@@ -237,10 +297,15 @@ pub fn measure_level1_prog_on(
     pe.reset(l.gm_words());
     pe.write_gm(l.base_x, &x);
     pe.write_gm(l.base_y, &y);
-    let stats = pe.run(prog);
+    (x, y, l)
+}
+
+/// Cross-check a Level-1 kernel's output against the host reference.
+fn level1_check(pe: &Pe, routine: Routine, n: usize, alpha: f64, fx: &(Vec<f64>, Vec<f64>, VecLayout)) {
+    let (x, y, l) = fx;
     match routine {
         Routine::Ddot => {
-            let want: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            let want: f64 = x.iter().zip(y).map(|(a, b)| a * b).sum();
             let got = pe.read_gm(l.scratch(), 1)[0];
             assert!((got - want).abs() < 1e-10, "ddot numerics: {got} vs {want}");
         }
@@ -258,7 +323,6 @@ pub fn measure_level1_prog_on(
         }
         _ => unreachable!(),
     }
-    Measurement { routine, n, ae, stats, cfg: pe.cfg.clone() }
 }
 
 /// The paper's representative matrix sizes (§4.5.1).
@@ -343,6 +407,40 @@ mod tests {
         let f1 = measure_level1_prog(Routine::Ddot, 16, 1.5, ae, &dprog);
         let r1 = measure_level1_prog_on(&mut pe, Routine::Ddot, 16, 1.5, ae, &dprog);
         assert_eq!(f1.latency(), r1.latency());
+    }
+
+    #[test]
+    fn sched_measurement_matches_prog_measurement() {
+        // The two-tier path (schedule once, replay after) must return the
+        // exact stats of the combined one-shot path, for the first run
+        // (timing pass), warm replays, and forced combined re-runs alike.
+        let ae = AeLevel::Ae5;
+        let n = 12;
+        let gprog = codegen::gen_gemv(n, ae, &VecLayout::gemv(n));
+        let want = measure_gemv_prog(n, ae, &gprog);
+        let sched = ScheduledProgram::compile(&gprog, ae).expect("gemv kernel decodes");
+        let mut pe = Pe::new(PeConfig::paper(ae), 0);
+        let (first, t1) = measure_gemv_sched_on(&mut pe, n, ae, &sched, ExecMode::Replay);
+        assert!(sched.is_scheduled(), "first execution must memoize the schedule");
+        assert_eq!(t1, ExecTier::Combined, "first execution is the timing pass");
+        let (warm, t2) = measure_gemv_sched_on(&mut pe, n, ae, &sched, ExecMode::Replay);
+        assert_eq!(t2, ExecTier::Replayed);
+        let (forced, t3) = measure_gemv_sched_on(&mut pe, n, ae, &sched, ExecMode::Combined);
+        assert_eq!(t3, ExecTier::Combined);
+        assert_eq!(want.stats, first.stats);
+        assert_eq!(want.stats, warm.stats, "memoized stats must equal a fresh run");
+        assert_eq!(want.stats, forced.stats);
+
+        let dprog = codegen::gen_ddot(16, ae, &VecLayout::level1(16));
+        let w = measure_level1_prog(Routine::Ddot, 16, 1.5, ae, &dprog);
+        let dsched = ScheduledProgram::compile(&dprog, ae).expect("ddot kernel decodes");
+        let (r1, _) =
+            measure_level1_sched_on(&mut pe, Routine::Ddot, 16, 1.5, ae, &dsched, ExecMode::Replay);
+        let (r2, d2) =
+            measure_level1_sched_on(&mut pe, Routine::Ddot, 16, 1.5, ae, &dsched, ExecMode::Replay);
+        assert_eq!(d2, ExecTier::Replayed);
+        assert_eq!(w.stats, r1.stats);
+        assert_eq!(w.stats, r2.stats);
     }
 
     #[test]

@@ -81,7 +81,7 @@ impl fmt::Display for AeLevel {
 }
 
 /// Full timing/structure configuration of a PE instance.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PeConfig {
     pub ae: AeLevel,
     /// PE clock in GHz (paper operates the PE at 0.2 GHz).

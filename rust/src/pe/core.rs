@@ -1,4 +1,4 @@
-//! Cycle-accurate PE simulator core.
+//! Cycle-accurate PE simulator core — the two-tier execution engine.
 //!
 //! The PE is an in-order, single-issue sequencer (FPS) with a register
 //! scoreboard, pipelined arithmetic units, a DOT RDP, and a decoupled
@@ -20,12 +20,24 @@
 //! ordering. This is exactly the fixed-point of a cycle-by-cycle simulation
 //! of the same machine, evaluated directly.
 //!
-//! The simulator is *functional + timing*: it executes real f64 values, so
-//! every codegen kernel is numerically checked against the host BLAS while
-//! its latency is measured.
+//! The simulator is *functional + timing*, and the two concerns are split
+//! into tiers over one shared decode ([`super::decoded`]):
+//!
+//! * [`Pe::run_decoded`] — the **combined** interpreter: executes real f64
+//!   values *and* the full timing model over a pre-decoded stream. Run
+//!   once per cached program, it yields the program's [`PeStats`]
+//!   schedule (timing is operand-independent).
+//! * [`Pe::replay`] — the **value-only** interpreter: no scoreboard, no
+//!   queues, no stall attribution — just the data path. Bit-identical
+//!   values at a fraction of the cost; the serving engine's cache-hit
+//!   path.
+//! * [`Pe::run`] — convenience one-shot: decode + combined run, the
+//!   historical entry point (validation now always happens, once, in the
+//!   decode).
 
 use super::config::{AeLevel, ArithKind, PeConfig};
-use super::isa::{Instr, Program, NUM_REGS};
+use super::decoded::{DecodedProgram, Op};
+use super::isa::{Program, NUM_REGS};
 use std::collections::VecDeque;
 
 /// Why an issue slot was lost (for the stall breakdown profile).
@@ -39,7 +51,7 @@ pub enum StallCause {
 }
 
 /// Cycle/energy/traffic statistics of one program execution.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct PeStats {
     /// Total latency in clock cycles (issue of first instruction to last
     /// completion — what Tables 4–9 report).
@@ -178,17 +190,45 @@ impl Pe {
         &self.gm[offset..offset + len]
     }
 
+    /// Read back an LM region (introspection for tests/debugging).
+    pub fn read_lm(&self, offset: usize, len: usize) -> &[f64] {
+        &self.lm[offset..offset + len]
+    }
+
+    /// The architectural register file (introspection for tests/debugging).
+    pub fn regs(&self) -> &[f64; NUM_REGS] {
+        &self.regs
+    }
+
     /// Execute a program to completion, returning its statistics.
     ///
-    /// Panics if the program fails static validation or uses features the
-    /// configured AE level does not provide (e.g. DOT before AE2) — codegen
-    /// bugs should be loud.
+    /// One-shot path: decodes (which validates the stream and the AE
+    /// feature gates — codegen bugs stay loud) and runs the combined
+    /// value+timing interpreter. Callers executing one cached program many
+    /// times should decode once ([`super::ScheduledProgram`]) and
+    /// [`Pe::replay`] instead.
     pub fn run(&mut self, prog: &Program) -> PeStats {
-        // Full static validation is a whole extra pass over multi-million-
-        // instruction programs; every generator validates at emission time
-        // (debug builds re-check here).
-        debug_assert!(prog.validate().is_ok());
-        let cfg = self.cfg.clone();
+        let decoded = DecodedProgram::decode(prog, self.cfg.ae)
+            .unwrap_or_else(|e| panic!("invalid PE program: {e}"));
+        self.run_decoded(&decoded)
+    }
+
+    /// Tier-1 **combined** interpreter: execute values and the full
+    /// cycle-accurate timing model over a pre-decoded stream.
+    ///
+    /// The returned [`PeStats`] depend only on the program and the PE
+    /// configuration — never on operand values — which is what makes the
+    /// schedule memoizable. Panics if `prog` was decoded for a different
+    /// enhancement level than this PE is configured for.
+    pub fn run_decoded(&mut self, prog: &DecodedProgram) -> PeStats {
+        assert_eq!(
+            self.cfg.ae,
+            prog.ae(),
+            "program decoded for {} cannot execute on a {} PE",
+            prog.ae(),
+            self.cfg.ae
+        );
+        let Self { cfg, gm, lm, regs } = self;
         let ae = cfg.ae;
 
         let mut st = PeStats::default();
@@ -211,14 +251,9 @@ impl Pe {
         let mut srcs = [0u8; 12];
         let mut dsts = [0u8; 4];
 
-        for ins in &prog.instrs {
-            if matches!(ins, Instr::Halt) {
-                break;
-            }
-            self.check_features(ins, ae);
-
-            let ns = ins.srcs_into(&mut srcs);
-            let nd = ins.dsts_into(&mut dsts);
+        for op in prog.ops() {
+            let ns = op.srcs_into(&mut srcs);
+            let nd = op.dsts_into(&mut dsts);
             let srcs = &srcs[..ns];
             let dsts = &dsts[..nd];
 
@@ -238,16 +273,19 @@ impl Pe {
                     cause = Some(StallCause::WawDep);
                 }
             }
-            if let Some(kind) = arith_kind(ins) {
+            if let Some(kind) = op.arith_kind() {
                 let f = fu_free[kind as usize];
                 if f > ready {
                     ready = f;
                     cause = Some(StallCause::FuBusy);
                 }
             }
-            if ins.is_mem() {
-                let (q, depth) = if is_gm_op(ins) {
-                    (&mut gm_q, if ae == AeLevel::Ae0 { cfg.ae0_mem_window as usize } else { cfg.lsq_depth })
+            if op.is_mem() {
+                let (q, depth) = if op.is_gm() {
+                    (
+                        &mut gm_q,
+                        if ae == AeLevel::Ae0 { cfg.ae0_mem_window as usize } else { cfg.lsq_depth },
+                    )
                 } else {
                     (&mut lm_q, cfg.lsq_depth)
                 };
@@ -263,7 +301,7 @@ impl Pe {
                     let c = *q.front().unwrap();
                     if c > ready {
                         ready = c;
-                        cause = Some(if ae == AeLevel::Ae0 && is_gm_op(ins) {
+                        cause = Some(if ae == AeLevel::Ae0 && op.is_gm() {
                             StallCause::MemWindow
                         } else {
                             StallCause::LsqFull
@@ -293,19 +331,20 @@ impl Pe {
             }
 
             st.instructions += 1;
-            st.flops += ins.flops();
+            st.flops += op.flops();
             st.rf_accesses += (srcs.len() + dsts.len()) as u64;
 
             // Execute (values) + schedule (timing).
-            let done = match *ins {
-                Instr::Li { rd, val } => {
-                    self.regs[rd as usize] = val;
+            let a = op.a as usize;
+            let done = match op.op {
+                Op::Li => {
+                    regs[a] = prog.const_at(op.addr);
                     let done = issue + 1;
-                    reg_ready[rd as usize] = done;
+                    reg_ready[a] = done;
                     done
                 }
-                Instr::Nop => issue + 1,
-                Instr::Barrier => {
+                Op::Nop => issue + 1,
+                Op::Barrier => {
                     // Loop-edge stall: the simple sequencer waits for every
                     // FPS-visible operation (register writebacks, scalar
                     // loads/stores) before fetching the next iteration. The
@@ -323,41 +362,43 @@ impl Pe {
                     t = drain; // next instruction issues after the drain
                     drain
                 }
-                Instr::Fadd { rd, ra, rb } => self.arith2(
-                    rd, self.regs[ra as usize] + self.regs[rb as usize],
-                    ArithKind::Add, issue, &cfg, &mut reg_ready, &mut fu_free, &mut st,
+                Op::Fadd => arith(
+                    regs, a, regs[op.b as usize] + regs[op.c as usize],
+                    ArithKind::Add, issue, cfg, &mut reg_ready, &mut fu_free, &mut st,
                 ),
-                Instr::Fsub { rd, ra, rb } => self.arith2(
-                    rd, self.regs[ra as usize] - self.regs[rb as usize],
-                    ArithKind::Add, issue, &cfg, &mut reg_ready, &mut fu_free, &mut st,
+                Op::Fsub => arith(
+                    regs, a, regs[op.b as usize] - regs[op.c as usize],
+                    ArithKind::Add, issue, cfg, &mut reg_ready, &mut fu_free, &mut st,
                 ),
-                Instr::Fmul { rd, ra, rb } => self.arith2(
-                    rd, self.regs[ra as usize] * self.regs[rb as usize],
-                    ArithKind::Mul, issue, &cfg, &mut reg_ready, &mut fu_free, &mut st,
+                Op::Fmul => arith(
+                    regs, a, regs[op.b as usize] * regs[op.c as usize],
+                    ArithKind::Mul, issue, cfg, &mut reg_ready, &mut fu_free, &mut st,
                 ),
-                Instr::Fdiv { rd, ra, rb } => self.arith2(
-                    rd, self.regs[ra as usize] / self.regs[rb as usize],
-                    ArithKind::Div, issue, &cfg, &mut reg_ready, &mut fu_free, &mut st,
+                Op::Fdiv => arith(
+                    regs, a, regs[op.b as usize] / regs[op.c as usize],
+                    ArithKind::Div, issue, cfg, &mut reg_ready, &mut fu_free, &mut st,
                 ),
-                Instr::Fsqrt { rd, ra } => self.arith2(
-                    rd, self.regs[ra as usize].sqrt(),
-                    ArithKind::Sqrt, issue, &cfg, &mut reg_ready, &mut fu_free, &mut st,
+                Op::Fsqrt => arith(
+                    regs, a, regs[op.b as usize].sqrt(),
+                    ArithKind::Sqrt, issue, cfg, &mut reg_ready, &mut fu_free, &mut st,
                 ),
-                Instr::Fmac { rd, ra, rb } => self.arith2(
-                    rd,
-                    self.regs[rd as usize] + self.regs[ra as usize] * self.regs[rb as usize],
-                    ArithKind::Mac, issue, &cfg, &mut reg_ready, &mut fu_free, &mut st,
+                Op::Fmac => arith(
+                    regs, a, regs[a] + regs[op.b as usize] * regs[op.c as usize],
+                    ArithKind::Mac, issue, cfg, &mut reg_ready, &mut fu_free, &mut st,
                 ),
-                Instr::Dot { rd, ra, rb, n, acc } => {
-                    let mut s = if acc { self.regs[rd as usize] } else { 0.0 };
-                    for i in 0..n as usize {
-                        s += self.regs[ra as usize + i] * self.regs[rb as usize + i];
+                Op::Dot => {
+                    let (w, acc) = op.dot_params();
+                    let (b, c) = (op.b as usize, op.c as usize);
+                    let mut s = if acc { regs[a] } else { 0.0 };
+                    for i in 0..w as usize {
+                        s += regs[b + i] * regs[c + i];
                     }
                     st.dot_ops += 1;
-                    self.arith2(rd, s, ArithKind::Dot, issue, &cfg, &mut reg_ready, &mut fu_free, &mut st)
+                    arith(regs, a, s, ArithKind::Dot, issue, cfg, &mut reg_ready, &mut fu_free, &mut st)
                 }
-                Instr::Ld { rd, gm } => {
-                    let after = gm_writes.ready_for(gm as u64, 1);
+                Op::Ld => {
+                    let addr = op.addr as usize;
+                    let after = gm_writes.ready_for(op.addr as u64, 1);
                     let grant = (issue + 1).max(gm_port_free).max(after);
                     let busy = (cfg.gm_req_overhead + cfg.gm_word_cycles) as u64;
                     gm_port_free = grant + busy;
@@ -365,12 +406,13 @@ impl Pe {
                     st.gm_words += 1;
                     st.gm_requests += 1;
                     let done = grant + cfg.gm_latency as u64;
-                    self.regs[rd as usize] = self.gm[gm as usize];
-                    reg_ready[rd as usize] = done;
+                    regs[a] = gm[addr];
+                    reg_ready[a] = done;
                     gm_q.push_back(done);
                     done
                 }
-                Instr::St { rs, gm } => {
+                Op::St => {
+                    let addr = op.addr as usize;
                     let grant = (issue + 1).max(gm_port_free);
                     let busy = (cfg.gm_req_overhead + cfg.gm_word_cycles) as u64;
                     gm_port_free = grant + busy;
@@ -378,62 +420,64 @@ impl Pe {
                     st.gm_words += 1;
                     st.gm_requests += 1;
                     let done = grant + cfg.gm_latency as u64;
-                    self.gm[gm as usize] = self.regs[rs as usize];
-                    gm_writes.record(gm as u64, 1, done);
+                    gm[addr] = regs[a];
+                    gm_writes.record(op.addr as u64, 1, done);
                     gm_q.push_back(done);
                     done
                 }
-                Instr::LmLd { rd, lm } => {
-                    let after = lm_writes.ready_for(lm as u64, 1);
+                Op::LmLd => {
+                    let addr = op.addr as usize;
+                    let after = lm_writes.ready_for(op.addr as u64, 1);
                     let grant = (issue + 1).max(lm_port_free).max(after);
                     lm_port_free = grant + cfg.lm_word_cycles as u64;
                     st.lm_busy_cycles += cfg.lm_word_cycles as u64;
                     st.lm_words += 1;
                     let done = grant + cfg.lm_latency as u64;
-                    self.regs[rd as usize] = self.lm[lm as usize];
-                    reg_ready[rd as usize] = done;
+                    regs[a] = lm[addr];
+                    reg_ready[a] = done;
                     lm_q.push_back(done);
                     done
                 }
-                Instr::LmSt { rs, lm } => {
+                Op::LmSt => {
+                    let addr = op.addr as usize;
                     let grant = (issue + 1).max(lm_port_free);
                     lm_port_free = grant + cfg.lm_word_cycles as u64;
                     st.lm_busy_cycles += cfg.lm_word_cycles as u64;
                     st.lm_words += 1;
                     let done = grant + cfg.lm_latency as u64;
-                    self.lm[lm as usize] = self.regs[rs as usize];
-                    lm_writes.record(lm as u64, 1, done);
+                    lm[addr] = regs[a];
+                    lm_writes.record(op.addr as u64, 1, done);
                     lm_q.push_back(done);
                     done
                 }
-                Instr::LmLd4 { rd, lm } => {
-                    let after = lm_writes.ready_for(lm as u64, 4);
+                Op::LmLd4 => {
+                    let addr = op.addr as usize;
+                    let after = lm_writes.ready_for(op.addr as u64, 4);
                     let grant = (issue + 1).max(lm_port_free).max(after);
                     lm_port_free = grant + cfg.lm_wide_cycles as u64;
                     st.lm_busy_cycles += cfg.lm_wide_cycles as u64;
                     st.lm_words += 4;
                     let done = grant + cfg.lm_latency as u64;
                     for i in 0..4 {
-                        self.regs[rd as usize + i] = self.lm[lm as usize + i];
-                        reg_ready[rd as usize + i] = done;
+                        regs[a + i] = lm[addr + i];
+                        reg_ready[a + i] = done;
                     }
                     lm_q.push_back(done);
                     done
                 }
-                Instr::LmSt4 { rs, lm } => {
+                Op::LmSt4 => {
+                    let addr = op.addr as usize;
                     let grant = (issue + 1).max(lm_port_free);
                     lm_port_free = grant + cfg.lm_wide_cycles as u64;
                     st.lm_busy_cycles += cfg.lm_wide_cycles as u64;
                     st.lm_words += 4;
                     let done = grant + cfg.lm_latency as u64;
-                    for i in 0..4 {
-                        self.lm[lm as usize + i] = self.regs[rs as usize + i];
-                    }
-                    lm_writes.record(lm as u64, 4, done);
+                    lm[addr..addr + 4].copy_from_slice(&regs[a..a + 4]);
+                    lm_writes.record(op.addr as u64, 4, done);
                     lm_q.push_back(done);
                     done
                 }
-                Instr::BlkLd { lm, gm, len } => {
+                Op::BlkLd => {
                     // GM -> LM block move by the LS CFU's autonomous block
                     // engine: it runs across loop barriers (the CFU
                     // "operates simultaneously with FPS", §5.1). At AE3+ a
@@ -442,8 +486,9 @@ impl Pe {
                     // writes stream at one word/cycle and are charged to the
                     // LM port as *debt* behind which scalar accesses queue
                     // (single-ported SRAM), without blocking the GM stream.
+                    let (lm_a, gm_a, len) = prog.block_at(op.addr);
                     let len64 = len as u64;
-                    let after = gm_writes.ready_for(gm as u64, len64);
+                    let after = gm_writes.ready_for(gm_a as u64, len64);
                     let grant = (issue + 1).max(gm_port_free).max(after);
                     let (gm_busy, reqs) = if ae.has_block_ldst() {
                         (cfg.gm_req_overhead as u64 + len64 * cfg.gm_word_cycles as u64, 1)
@@ -461,15 +506,14 @@ impl Pe {
                     st.gm_requests += reqs;
                     st.lm_words += len64;
                     let done = grant + cfg.gm_latency as u64 + gm_busy;
-                    for i in 0..len as usize {
-                        self.lm[lm as usize + i] = self.gm[gm as usize + i];
-                    }
-                    lm_writes.record(lm as u64, len64, done);
+                    lm[lm_a..lm_a + len].copy_from_slice(&gm[gm_a..gm_a + len]);
+                    lm_writes.record(lm_a as u64, len64, done);
                     done
                 }
-                Instr::BlkSt { lm, gm, len } => {
+                Op::BlkSt => {
+                    let (lm_a, gm_a, len) = prog.block_at(op.addr);
                     let len64 = len as u64;
-                    let after = lm_writes.ready_for(lm as u64, len64);
+                    let after = lm_writes.ready_for(lm_a as u64, len64);
                     let grant = (issue + 1).max(gm_port_free).max(after);
                     let (gm_busy, reqs) = if ae.has_block_ldst() {
                         (cfg.gm_req_overhead as u64 + len64 * cfg.gm_word_cycles as u64, 1)
@@ -485,13 +529,10 @@ impl Pe {
                     st.gm_requests += reqs;
                     st.lm_words += len64;
                     let done = grant + cfg.gm_latency as u64 + gm_busy;
-                    for i in 0..len as usize {
-                        self.gm[gm as usize + i] = self.lm[lm as usize + i];
-                    }
-                    gm_writes.record(gm as u64, len64, done);
+                    gm[gm_a..gm_a + len].copy_from_slice(&lm[lm_a..lm_a + len]);
+                    gm_writes.record(gm_a as u64, len64, done);
                     done
                 }
-                Instr::Halt => unreachable!(),
             };
 
             finish = finish.max(done);
@@ -502,62 +543,94 @@ impl Pe {
         st
     }
 
-    /// Common scheduling for scalar arithmetic: write value, set scoreboard,
-    /// advance the unit's structural timeline.
-    #[allow(clippy::too_many_arguments)]
-    #[inline(always)]
-    fn arith2(
-        &mut self,
-        rd: u8,
-        value: f64,
-        kind: ArithKind,
-        issue: u64,
-        cfg: &PeConfig,
-        reg_ready: &mut [u64; NUM_REGS],
-        fu_free: &mut [u64; 6],
-        st: &mut PeStats,
-    ) -> u64 {
-        self.regs[rd as usize] = value;
-        let done = issue + cfg.arith_latency(kind) as u64;
-        reg_ready[rd as usize] = done;
-        fu_free[kind as usize] = issue + kind.initiation_interval(cfg) as u64;
-        if kind != ArithKind::Dot {
-            st.scalar_fu_ops += 1;
-        }
-        done
-    }
-
-    /// Panic if the instruction needs a feature the AE level lacks.
-    fn check_features(&self, ins: &Instr, ae: AeLevel) {
-        match ins {
-            Instr::LmLd { .. } | Instr::LmSt { .. } | Instr::BlkLd { .. } | Instr::BlkSt { .. } => {
-                assert!(ae.has_lm(), "{ins:?} requires AE1 Local Memory (config is {ae})");
+    /// Tier-2 **value-only replay**: execute just the data path of a
+    /// pre-decoded stream — no scoreboard, no FU timelines, no LS queues,
+    /// no stall attribution.
+    ///
+    /// Produces GM/LM/register state bit-identical to
+    /// [`Pe::run_decoded`] on the same inputs (every f64 operation is
+    /// evaluated in the same order with the same operands); the timing
+    /// belongs to the program's memoized schedule, not to this call.
+    /// Panics if `prog` was decoded for a different enhancement level.
+    pub fn replay(&mut self, prog: &DecodedProgram) {
+        assert_eq!(
+            self.cfg.ae,
+            prog.ae(),
+            "program decoded for {} cannot execute on a {} PE",
+            prog.ae(),
+            self.cfg.ae
+        );
+        let Self { gm, lm, regs, .. } = self;
+        for op in prog.ops() {
+            let a = op.a as usize;
+            match op.op {
+                Op::Ld => regs[a] = gm[op.addr as usize],
+                Op::St => gm[op.addr as usize] = regs[a],
+                Op::LmLd => regs[a] = lm[op.addr as usize],
+                Op::LmSt => lm[op.addr as usize] = regs[a],
+                Op::LmLd4 => {
+                    let addr = op.addr as usize;
+                    regs[a..a + 4].copy_from_slice(&lm[addr..addr + 4]);
+                }
+                Op::LmSt4 => {
+                    let addr = op.addr as usize;
+                    lm[addr..addr + 4].copy_from_slice(&regs[a..a + 4]);
+                }
+                Op::BlkLd => {
+                    let (lm_a, gm_a, len) = prog.block_at(op.addr);
+                    lm[lm_a..lm_a + len].copy_from_slice(&gm[gm_a..gm_a + len]);
+                }
+                Op::BlkSt => {
+                    let (lm_a, gm_a, len) = prog.block_at(op.addr);
+                    gm[gm_a..gm_a + len].copy_from_slice(&lm[lm_a..lm_a + len]);
+                }
+                Op::Fadd => regs[a] = regs[op.b as usize] + regs[op.c as usize],
+                Op::Fsub => regs[a] = regs[op.b as usize] - regs[op.c as usize],
+                Op::Fmul => regs[a] = regs[op.b as usize] * regs[op.c as usize],
+                Op::Fdiv => regs[a] = regs[op.b as usize] / regs[op.c as usize],
+                Op::Fsqrt => regs[a] = regs[op.b as usize].sqrt(),
+                Op::Fmac => regs[a] += regs[op.b as usize] * regs[op.c as usize],
+                Op::Dot => {
+                    let (w, acc) = op.dot_params();
+                    let (b, c) = (op.b as usize, op.c as usize);
+                    let mut s = if acc { regs[a] } else { 0.0 };
+                    for i in 0..w as usize {
+                        s += regs[b + i] * regs[c + i];
+                    }
+                    regs[a] = s;
+                }
+                Op::Li => regs[a] = prog.const_at(op.addr),
+                Op::Nop | Op::Barrier => {}
             }
-            Instr::LmLd4 { .. } | Instr::LmSt4 { .. } => {
-                assert!(ae.has_wide_path(), "{ins:?} requires AE4 wide path (config is {ae})");
-            }
-            Instr::Dot { .. } => {
-                assert!(ae.has_dot(), "{ins:?} requires AE2 DOT RDP (config is {ae})");
-            }
-            _ => {}
         }
     }
 }
 
-fn is_gm_op(ins: &Instr) -> bool {
-    matches!(ins, Instr::Ld { .. } | Instr::St { .. } | Instr::BlkLd { .. } | Instr::BlkSt { .. })
-}
-
-fn arith_kind(ins: &Instr) -> Option<ArithKind> {
-    match ins {
-        Instr::Fadd { .. } | Instr::Fsub { .. } => Some(ArithKind::Add),
-        Instr::Fmul { .. } => Some(ArithKind::Mul),
-        Instr::Fdiv { .. } => Some(ArithKind::Div),
-        Instr::Fsqrt { .. } => Some(ArithKind::Sqrt),
-        Instr::Fmac { .. } => Some(ArithKind::Mac),
-        Instr::Dot { .. } => Some(ArithKind::Dot),
-        _ => None,
+/// Common scheduling for scalar arithmetic: write value, set scoreboard,
+/// advance the unit's structural timeline. A free function over the
+/// destructured machine state so [`Pe::run_decoded`] can borrow the
+/// config and the register file disjointly (no per-run `PeConfig` clone).
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn arith(
+    regs: &mut [f64; NUM_REGS],
+    rd: usize,
+    value: f64,
+    kind: ArithKind,
+    issue: u64,
+    cfg: &PeConfig,
+    reg_ready: &mut [u64; NUM_REGS],
+    fu_free: &mut [u64; 6],
+    st: &mut PeStats,
+) -> u64 {
+    regs[rd] = value;
+    let done = issue + cfg.arith_latency(kind) as u64;
+    reg_ready[rd] = done;
+    fu_free[kind as usize] = issue + kind.initiation_interval(cfg) as u64;
+    if kind != ArithKind::Dot {
+        st.scalar_fu_ops += 1;
     }
+    done
 }
 
 #[cfg(test)]
@@ -673,6 +746,19 @@ mod tests {
         p.push(I::LmLd { rd: 0, lm: 0 });
         p.push(I::Halt);
         pe.run(&p);
+    }
+
+    #[test]
+    #[should_panic(expected = "decoded for")]
+    fn decoded_ae_must_match_pe_config() {
+        // A stream decoded for one enhancement level must not silently run
+        // on a PE configured for another (the feature gates were checked
+        // against the decode-time level).
+        let mut p = Program::new();
+        p.push(I::Li { rd: 0, val: 1.0 });
+        p.push(I::Halt);
+        let d = crate::pe::DecodedProgram::decode(&p, AeLevel::Ae5).unwrap();
+        pe(AeLevel::Ae1).run_decoded(&d);
     }
 
     #[test]
@@ -792,6 +878,38 @@ mod tests {
         reused.reset(64);
         assert_eq!(reused.gm.len(), 64);
         assert!(reused.gm.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn replay_reproduces_combined_values_and_state() {
+        // The tier-2 value path must leave GM, LM and the register file
+        // bit-identical to the combined interpreter.
+        let mut p = Program::new();
+        p.push(I::BlkLd { lm: 0, gm: 0, len: 8 });
+        for i in 0..8u8 {
+            p.push(I::LmLd { rd: i, lm: i as u32 });
+        }
+        p.push(I::Dot { rd: 8, ra: 0, rb: 4, n: 4, acc: false });
+        p.push(I::Fmac { rd: 8, ra: 0, rb: 1 });
+        p.push(I::LmSt { rs: 8, lm: 40 });
+        p.push(I::BlkSt { lm: 40, gm: 24, len: 1 });
+        p.push(I::St { rs: 8, gm: 30 });
+        p.push(I::Halt);
+        let data: Vec<f64> = (0..8).map(|i| 0.25 * i as f64 - 0.9).collect();
+        let d = crate::pe::DecodedProgram::decode(&p, AeLevel::Ae5).unwrap();
+
+        let mut combined = pe(AeLevel::Ae5);
+        combined.write_gm(0, &data);
+        let st = combined.run_decoded(&d);
+        assert!(st.cycles > 0);
+
+        let mut replayed = pe(AeLevel::Ae5);
+        replayed.write_gm(0, &data);
+        replayed.replay(&d);
+
+        assert_eq!(combined.gm, replayed.gm);
+        assert_eq!(combined.read_lm(0, 64), replayed.read_lm(0, 64));
+        assert_eq!(combined.regs(), replayed.regs());
     }
 
     #[test]

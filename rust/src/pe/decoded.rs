@@ -1,0 +1,580 @@
+//! Tier 1 of the two-tier PE execution engine: pre-decoded programs and
+//! their one-time schedule.
+//!
+//! The serving engine's request path is "fixed program, many operands":
+//! once a kernel is emitted for a (routine, shape, AE) key its timing
+//! never changes — only operand values do. This module splits the work
+//! accordingly:
+//!
+//! 1. **decode** ([`DecodedProgram::decode`]) — one pass per cached
+//!    program that validates the stream (register/LM ranges, DOT widths,
+//!    feature gates) and lowers the 16-byte [`Instr`] enum into a flat,
+//!    cache-friendly array of 8-byte [`PackedOp`] words, with `Li`
+//!    immediates and block-transfer descriptors hoisted into side tables.
+//! 2. **schedule** ([`ScheduledProgram::execute`]) — the first execution
+//!    runs the full cycle-accurate combined interpreter
+//!    ([`Pe::run_decoded`]) and memoizes its [`PeStats`]; PE timing is
+//!    data-independent, so the schedule holds for every later request.
+//! 3. **replay** ([`Pe::replay`]) — every subsequent execution runs the
+//!    lean value-only interpreter over the pre-decoded stream (no
+//!    scoreboard, no queues, no stall attribution) and reuses the
+//!    memoized stats. Values are bit-identical to the combined run.
+//!
+//! [`Pe::run_decoded`]: super::core::Pe::run_decoded
+//! [`Pe::replay`]: super::core::Pe::replay
+
+use super::config::{AeLevel, PeConfig};
+use super::core::{Pe, PeStats};
+use super::isa::{Instr, Program};
+use std::sync::OnceLock;
+
+/// Opcode of one packed operation. `Halt` has no packed form — decoding
+/// truncates at the first `Halt`, exactly where the sequencer stops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub(crate) enum Op {
+    Ld,
+    St,
+    LmLd,
+    LmSt,
+    LmLd4,
+    LmSt4,
+    BlkLd,
+    BlkSt,
+    Fadd,
+    Fsub,
+    Fmul,
+    Fdiv,
+    Fsqrt,
+    Fmac,
+    Dot,
+    Li,
+    Nop,
+    Barrier,
+}
+
+/// One pre-decoded operation, packed into 8 bytes (half the 16-byte
+/// [`Instr`] enum): opcode + up to three register operands + a 32-bit
+/// word that is a memory address (`Ld`/`St`/`LmLd`…), a side-table index
+/// (`Li`, `BlkLd`, `BlkSt`), or the DOT width/accumulate pair (`Dot`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub(crate) struct PackedOp {
+    pub(crate) op: Op,
+    /// Destination register (`rd`) or store source (`rs`).
+    pub(crate) a: u8,
+    /// First source register (`ra`).
+    pub(crate) b: u8,
+    /// Second source register (`rb`).
+    pub(crate) c: u8,
+    /// Address / side-table index / DOT parameters (see [`Op`]).
+    pub(crate) addr: u32,
+}
+
+impl PackedOp {
+    fn new(op: Op, a: u8, b: u8, c: u8, addr: u32) -> Self {
+        Self { op, a, b, c, addr }
+    }
+
+    /// DOT width `n` and accumulate flag packed in `addr`.
+    #[inline]
+    pub(crate) fn dot_params(&self) -> (u8, bool) {
+        ((self.addr & 0xFF) as u8, (self.addr >> 8) & 1 == 1)
+    }
+
+    /// Registers read, written into a fixed buffer — mirrors
+    /// [`Instr::srcs_into`] (same registers, same order, so RAW hazard
+    /// detection and `rf_accesses` accounting are unchanged).
+    #[inline]
+    pub(crate) fn srcs_into(&self, out: &mut [u8; 12]) -> usize {
+        let mut n = 0;
+        let mut push = |r: u8| {
+            out[n] = r;
+            n += 1;
+        };
+        match self.op {
+            Op::St | Op::LmSt => push(self.a),
+            Op::LmSt4 => {
+                for k in 0..4 {
+                    push(self.a + k);
+                }
+            }
+            Op::Fadd | Op::Fsub | Op::Fmul | Op::Fdiv => {
+                push(self.b);
+                push(self.c);
+            }
+            Op::Fsqrt => push(self.b),
+            Op::Fmac => {
+                push(self.a);
+                push(self.b);
+                push(self.c);
+            }
+            Op::Dot => {
+                let (w, acc) = self.dot_params();
+                for i in 0..w {
+                    push(self.b + i);
+                    push(self.c + i);
+                }
+                if acc {
+                    push(self.a);
+                }
+            }
+            _ => {}
+        }
+        n
+    }
+
+    /// Registers written, into a fixed buffer — mirrors [`Instr::dsts_into`].
+    #[inline]
+    pub(crate) fn dsts_into(&self, out: &mut [u8; 4]) -> usize {
+        let mut n = 0;
+        let mut push = |r: u8| {
+            out[n] = r;
+            n += 1;
+        };
+        match self.op {
+            Op::Ld | Op::LmLd | Op::Li => push(self.a),
+            Op::LmLd4 => {
+                for k in 0..4 {
+                    push(self.a + k);
+                }
+            }
+            Op::Fadd | Op::Fsub | Op::Fmul | Op::Fdiv | Op::Fsqrt | Op::Fmac | Op::Dot => {
+                push(self.a)
+            }
+            _ => {}
+        }
+        n
+    }
+
+    /// Arithmetic class (functional unit), if any — mirrors the combined
+    /// interpreter's structural-hazard classification.
+    #[inline]
+    pub(crate) fn arith_kind(&self) -> Option<super::config::ArithKind> {
+        use super::config::ArithKind;
+        match self.op {
+            Op::Fadd | Op::Fsub => Some(ArithKind::Add),
+            Op::Fmul => Some(ArithKind::Mul),
+            Op::Fdiv => Some(ArithKind::Div),
+            Op::Fsqrt => Some(ArithKind::Sqrt),
+            Op::Fmac => Some(ArithKind::Mac),
+            Op::Dot => Some(ArithKind::Dot),
+            _ => None,
+        }
+    }
+
+    /// Executed by the Load-Store CFU?
+    #[inline]
+    pub(crate) fn is_mem(&self) -> bool {
+        matches!(
+            self.op,
+            Op::Ld | Op::St | Op::LmLd | Op::LmSt | Op::LmLd4 | Op::LmSt4 | Op::BlkLd | Op::BlkSt
+        )
+    }
+
+    /// Occupies the GM port?
+    #[inline]
+    pub(crate) fn is_gm(&self) -> bool {
+        matches!(self.op, Op::Ld | Op::St | Op::BlkLd | Op::BlkSt)
+    }
+
+    /// Floating-point operations — mirrors [`Instr::flops`].
+    #[inline]
+    pub(crate) fn flops(&self) -> u64 {
+        match self.op {
+            Op::Fadd | Op::Fsub | Op::Fmul | Op::Fdiv | Op::Fsqrt => 1,
+            Op::Fmac => 2,
+            Op::Dot => {
+                let (n, acc) = self.dot_params();
+                n as u64 + (n as u64 - 1) + if acc { 1 } else { 0 }
+            }
+            _ => 0,
+        }
+    }
+}
+
+/// A validated, feature-checked, pre-decoded instruction stream bound to
+/// one [`AeLevel`]. Produced once per cached program by
+/// [`DecodedProgram::decode`]; consumed by both tiers of the execution
+/// engine ([`Pe::run_decoded`] and [`Pe::replay`]).
+///
+/// [`Pe::run_decoded`]: super::core::Pe::run_decoded
+/// [`Pe::replay`]: super::core::Pe::replay
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecodedProgram {
+    ae: AeLevel,
+    ops: Vec<PackedOp>,
+    /// `Li` immediates, indexed by the op's `addr` field.
+    consts: Vec<f64>,
+    /// Block-transfer descriptors `(lm, gm, len)`, indexed by `addr`.
+    blocks: Vec<(u32, u32, u32)>,
+}
+
+impl DecodedProgram {
+    /// Validate `prog` (static constraints *and* the feature gates of
+    /// `ae`) and lower it into the packed form. The stream is truncated
+    /// at the first `Halt`, where the sequencer would stop anyway.
+    ///
+    /// This is the *only* validation point of the two-tier engine: it
+    /// runs once per cached program instead of once per request, and a
+    /// rejected program never reaches either interpreter.
+    pub fn decode(prog: &Program, ae: AeLevel) -> Result<Self, String> {
+        prog.validate()?;
+        let mut ops = Vec::with_capacity(prog.len());
+        let mut consts = Vec::new();
+        let mut blocks = Vec::new();
+        for ins in &prog.instrs {
+            // Feature gates, with the loud messages Pe::run always had.
+            match ins {
+                Instr::LmLd { .. } | Instr::LmSt { .. } | Instr::BlkLd { .. }
+                | Instr::BlkSt { .. }
+                    if !ae.has_lm() =>
+                {
+                    return Err(format!("{ins:?} requires AE1 Local Memory (config is {ae})"))
+                }
+                Instr::LmLd4 { .. } | Instr::LmSt4 { .. } if !ae.has_wide_path() => {
+                    return Err(format!("{ins:?} requires AE4 wide path (config is {ae})"))
+                }
+                Instr::Dot { .. } if !ae.has_dot() => {
+                    return Err(format!("{ins:?} requires AE2 DOT RDP (config is {ae})"))
+                }
+                _ => {}
+            }
+            let packed = match *ins {
+                Instr::Halt => break,
+                Instr::Ld { rd, gm } => PackedOp::new(Op::Ld, rd, 0, 0, gm),
+                Instr::St { rs, gm } => PackedOp::new(Op::St, rs, 0, 0, gm),
+                Instr::LmLd { rd, lm } => PackedOp::new(Op::LmLd, rd, 0, 0, lm),
+                Instr::LmSt { rs, lm } => PackedOp::new(Op::LmSt, rs, 0, 0, lm),
+                Instr::LmLd4 { rd, lm } => PackedOp::new(Op::LmLd4, rd, 0, 0, lm),
+                Instr::LmSt4 { rs, lm } => PackedOp::new(Op::LmSt4, rs, 0, 0, lm),
+                Instr::BlkLd { lm, gm, len } => {
+                    blocks.push((lm, gm, len));
+                    PackedOp::new(Op::BlkLd, 0, 0, 0, (blocks.len() - 1) as u32)
+                }
+                Instr::BlkSt { lm, gm, len } => {
+                    blocks.push((lm, gm, len));
+                    PackedOp::new(Op::BlkSt, 0, 0, 0, (blocks.len() - 1) as u32)
+                }
+                Instr::Fadd { rd, ra, rb } => PackedOp::new(Op::Fadd, rd, ra, rb, 0),
+                Instr::Fsub { rd, ra, rb } => PackedOp::new(Op::Fsub, rd, ra, rb, 0),
+                Instr::Fmul { rd, ra, rb } => PackedOp::new(Op::Fmul, rd, ra, rb, 0),
+                Instr::Fdiv { rd, ra, rb } => PackedOp::new(Op::Fdiv, rd, ra, rb, 0),
+                Instr::Fsqrt { rd, ra } => PackedOp::new(Op::Fsqrt, rd, ra, 0, 0),
+                Instr::Fmac { rd, ra, rb } => PackedOp::new(Op::Fmac, rd, ra, rb, 0),
+                Instr::Dot { rd, ra, rb, n, acc } => {
+                    PackedOp::new(Op::Dot, rd, ra, rb, n as u32 | ((acc as u32) << 8))
+                }
+                Instr::Li { rd, val } => {
+                    consts.push(val);
+                    PackedOp::new(Op::Li, rd, 0, 0, (consts.len() - 1) as u32)
+                }
+                Instr::Nop => PackedOp::new(Op::Nop, 0, 0, 0, 0),
+                Instr::Barrier => PackedOp::new(Op::Barrier, 0, 0, 0, 0),
+            };
+            ops.push(packed);
+        }
+        Ok(Self { ae, ops, consts, blocks })
+    }
+
+    /// The enhancement level this stream was decoded (and feature-checked)
+    /// for. Executing it on a PE configured differently is a hard error.
+    pub fn ae(&self) -> AeLevel {
+        self.ae
+    }
+
+    /// Number of decoded operations (the executed prefix of the program:
+    /// everything before the first `Halt`).
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// True if the program halts immediately.
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Resident size of the packed representation in bytes (ops + side
+    /// tables) — the compaction the decode pass buys over `Vec<Instr>`.
+    pub fn packed_bytes(&self) -> usize {
+        self.ops.len() * std::mem::size_of::<PackedOp>()
+            + self.consts.len() * std::mem::size_of::<f64>()
+            + self.blocks.len() * std::mem::size_of::<(u32, u32, u32)>()
+    }
+
+    #[inline]
+    pub(crate) fn ops(&self) -> &[PackedOp] {
+        &self.ops
+    }
+
+    #[inline]
+    pub(crate) fn const_at(&self, idx: u32) -> f64 {
+        self.consts[idx as usize]
+    }
+
+    #[inline]
+    pub(crate) fn block_at(&self, idx: u32) -> (usize, usize, usize) {
+        let (lm, gm, len) = self.blocks[idx as usize];
+        (lm as usize, gm as usize, len as usize)
+    }
+}
+
+/// How a [`ScheduledProgram`] should be executed on a PE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Tier-2 fast path: once the program's timing has been memoized by a
+    /// first combined run, execute values only and reuse the stats.
+    Replay,
+    /// Always run the combined value+timing interpreter (the tier-1 pass,
+    /// forced every time) — the reference the replay path is pinned to.
+    Combined,
+}
+
+/// Which interpreter tier actually executed a [`ScheduledProgram`] —
+/// reported by [`ScheduledProgram::execute_traced`] so callers (the pool's
+/// telemetry) count what really ran, not what they predicted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecTier {
+    /// Tier-2 value-only replay against the memoized schedule.
+    Replayed,
+    /// Combined value+timing interpreter: first run of the program,
+    /// [`ExecMode::Combined`], or a PE whose [`PeConfig`] differs from the
+    /// one the schedule was taken under.
+    Combined,
+}
+
+/// A pre-decoded program plus its memoized one-time schedule: the unit
+/// the serving engine's [`ProgramCache`] stores and pool workers execute.
+///
+/// The first [`execute`](Self::execute) runs the cycle-accurate combined
+/// interpreter and memoizes its [`PeStats`]; every later `Replay`-mode
+/// execution runs the lean value-only interpreter and returns the
+/// memoized stats. PE timing is operand-independent, so the memoized
+/// stats equal a fresh combined run bit-for-bit (pinned by the
+/// randomized equivalence tests).
+///
+/// [`ProgramCache`]: crate::coordinator::ProgramCache
+#[derive(Debug)]
+pub struct ScheduledProgram {
+    decoded: DecodedProgram,
+    /// The memoized schedule *and the full [`PeConfig`] it was taken
+    /// under* — timing depends on every latency/port parameter, not just
+    /// the AE level, so replay only trusts the memo on a config-identical
+    /// PE. Filled by the first combined run; thread-safe so concurrent
+    /// pool workers racing on a fresh program all produce (identical)
+    /// stats and the first one wins.
+    stats: OnceLock<(PeConfig, PeStats)>,
+}
+
+impl ScheduledProgram {
+    /// Decode (and validate) `prog` for `ae`; the timing pass runs lazily
+    /// on first execution.
+    pub fn compile(prog: &Program, ae: AeLevel) -> Result<Self, String> {
+        Ok(Self { decoded: DecodedProgram::decode(prog, ae)?, stats: OnceLock::new() })
+    }
+
+    /// The packed instruction stream.
+    pub fn decoded(&self) -> &DecodedProgram {
+        &self.decoded
+    }
+
+    /// The enhancement level the program was decoded for.
+    pub fn ae(&self) -> AeLevel {
+        self.decoded.ae()
+    }
+
+    /// The memoized timing of this program, if the schedule pass ran.
+    pub fn scheduled_stats(&self) -> Option<&PeStats> {
+        self.stats.get().map(|(_, st)| st)
+    }
+
+    /// The [`PeConfig`] the memoized schedule was taken under, if any.
+    pub fn scheduled_config(&self) -> Option<&PeConfig> {
+        self.stats.get().map(|(cfg, _)| cfg)
+    }
+
+    /// True once the one-time timing pass has run.
+    pub fn is_scheduled(&self) -> bool {
+        self.stats.get().is_some()
+    }
+
+    /// Execute on `pe` (whose GM must already hold this kernel's packed
+    /// operands) and return the program's stats. See
+    /// [`execute_traced`](Self::execute_traced).
+    pub fn execute(&self, pe: &mut Pe, mode: ExecMode) -> PeStats {
+        self.execute_traced(pe, mode).0
+    }
+
+    /// Execute on `pe` and also report which tier actually ran.
+    ///
+    /// In [`ExecMode::Replay`], a program scheduled under a [`PeConfig`]
+    /// equal to `pe.cfg` runs the value-only tier and returns the
+    /// memoized stats ([`ExecTier::Replayed`]). Otherwise — first
+    /// execution, [`ExecMode::Combined`], or a config mismatch — the
+    /// combined interpreter runs and its (config, stats) pair is memoized
+    /// if the slot is still empty ([`ExecTier::Combined`]). Values in GM
+    /// are bit-identical either way, and the returned stats always match
+    /// a fresh combined run on the same PE.
+    pub fn execute_traced(&self, pe: &mut Pe, mode: ExecMode) -> (PeStats, ExecTier) {
+        if mode == ExecMode::Replay {
+            if let Some((cfg, st)) = self.stats.get() {
+                if *cfg == pe.cfg {
+                    pe.replay(&self.decoded);
+                    return (st.clone(), ExecTier::Replayed);
+                }
+            }
+        }
+        let st = pe.run_decoded(&self.decoded);
+        let _ = self.stats.set((pe.cfg.clone(), st.clone()));
+        (st, ExecTier::Combined)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::config::PeConfig;
+    use crate::pe::isa::Instr as I;
+
+    #[test]
+    fn packed_op_is_eight_bytes() {
+        assert_eq!(std::mem::size_of::<PackedOp>(), 8, "common ops must pack to ≤8 bytes");
+    }
+
+    #[test]
+    fn decode_truncates_at_halt_and_fills_side_tables() {
+        let mut p = Program::new();
+        p.push(I::Li { rd: 0, val: 2.5 });
+        p.push(I::BlkLd { lm: 0, gm: 4, len: 8 });
+        p.push(I::Dot { rd: 8, ra: 0, rb: 4, n: 3, acc: true });
+        p.push(I::Halt);
+        p.push(I::Fadd { rd: 1, ra: 0, rb: 0 }); // dead: after Halt
+        let d = DecodedProgram::decode(&p, AeLevel::Ae5).unwrap();
+        assert_eq!(d.len(), 3, "Halt truncates; dead tail dropped");
+        assert_eq!(d.const_at(0), 2.5);
+        assert_eq!(d.block_at(0), (0, 4, 8));
+        let (n, acc) = d.ops()[2].dot_params();
+        assert_eq!((n, acc), (3, true));
+        assert!(d.packed_bytes() < 3 * std::mem::size_of::<Instr>());
+    }
+
+    #[test]
+    fn decode_rejects_feature_misuse() {
+        let mut p = Program::new();
+        p.push(I::Dot { rd: 0, ra: 0, rb: 4, n: 4, acc: false });
+        p.push(I::Halt);
+        let err = DecodedProgram::decode(&p, AeLevel::Ae1).unwrap_err();
+        assert!(err.contains("requires AE2"), "got: {err}");
+        assert!(DecodedProgram::decode(&p, AeLevel::Ae2).is_ok());
+
+        let mut p = Program::new();
+        p.push(I::LmLd { rd: 0, lm: 0 });
+        let err = DecodedProgram::decode(&p, AeLevel::Ae0).unwrap_err();
+        assert!(err.contains("requires AE1"), "got: {err}");
+
+        let mut p = Program::new();
+        p.push(I::LmLd4 { rd: 0, lm: 0 });
+        let err = DecodedProgram::decode(&p, AeLevel::Ae3).unwrap_err();
+        assert!(err.contains("requires AE4"), "got: {err}");
+    }
+
+    #[test]
+    fn decode_rejects_invalid_programs() {
+        let mut p = Program::new();
+        p.push(I::Fadd { rd: 63, ra: 64, rb: 0 });
+        assert!(DecodedProgram::decode(&p, AeLevel::Ae5).is_err());
+    }
+
+    #[test]
+    fn packed_hazard_sets_match_instr_sets() {
+        // The packed src/dst extraction must mirror Instr's exactly —
+        // same registers, same order — for every opcode shape.
+        let cases: Vec<Instr> = vec![
+            I::Ld { rd: 3, gm: 9 },
+            I::St { rs: 4, gm: 9 },
+            I::LmLd { rd: 5, lm: 2 },
+            I::LmSt { rs: 6, lm: 2 },
+            I::LmLd4 { rd: 8, lm: 4 },
+            I::LmSt4 { rs: 12, lm: 4 },
+            I::Fadd { rd: 1, ra: 2, rb: 3 },
+            I::Fsub { rd: 1, ra: 2, rb: 3 },
+            I::Fmul { rd: 1, ra: 2, rb: 3 },
+            I::Fdiv { rd: 1, ra: 2, rb: 3 },
+            I::Fsqrt { rd: 1, ra: 2 },
+            I::Fmac { rd: 1, ra: 2, rb: 3 },
+            I::Dot { rd: 0, ra: 4, rb: 8, n: 3, acc: true },
+            I::Dot { rd: 0, ra: 4, rb: 8, n: 2, acc: false },
+            I::Li { rd: 7, val: 1.0 },
+            I::Nop,
+            I::Barrier,
+        ];
+        for ins in cases {
+            let mut p = Program::new();
+            p.push(ins);
+            let d = DecodedProgram::decode(&p, AeLevel::Ae5).unwrap();
+            let op = d.ops()[0];
+            let (mut s12, mut d4) = ([0u8; 12], [0u8; 4]);
+            let (ns, nd) = (op.srcs_into(&mut s12), op.dsts_into(&mut d4));
+            let (mut is12, mut id4) = ([0u8; 12], [0u8; 4]);
+            let (ins_ns, ins_nd) = (ins.srcs_into(&mut is12), ins.dsts_into(&mut id4));
+            assert_eq!(&s12[..ns], &is12[..ins_ns], "{ins:?} srcs");
+            assert_eq!(&d4[..nd], &id4[..ins_nd], "{ins:?} dsts");
+            assert_eq!(op.flops(), ins.flops(), "{ins:?} flops");
+            assert_eq!(op.is_mem(), ins.is_mem(), "{ins:?} is_mem");
+        }
+    }
+
+    #[test]
+    fn config_mismatch_falls_back_to_combined() {
+        // The schedule depends on the full PeConfig, not just the AE
+        // level: a same-AE PE with different timing parameters must not
+        // be handed the memoized stats — it re-runs the combined
+        // interpreter (correct values AND correct timing), while the memo
+        // keeps serving config-identical PEs.
+        let mut p = Program::new();
+        p.push(I::Li { rd: 0, val: 2.0 });
+        p.push(I::Fmul { rd: 1, ra: 0, rb: 0 });
+        p.push(I::St { rs: 1, gm: 0 });
+        p.push(I::Halt);
+        let sched = ScheduledProgram::compile(&p, AeLevel::Ae0).unwrap();
+        let mut pe = Pe::new(PeConfig::paper(AeLevel::Ae0), 4);
+        let st_paper = sched.execute(&mut pe, ExecMode::Replay);
+        assert_eq!(sched.scheduled_config(), Some(&PeConfig::paper(AeLevel::Ae0)));
+
+        let mut slow_cfg = PeConfig::paper(AeLevel::Ae0);
+        slow_cfg.lat_mul += 7;
+        let mut slow = Pe::new(slow_cfg, 4);
+        let (st_slow, tier) = sched.execute_traced(&mut slow, ExecMode::Replay);
+        assert_eq!(tier, ExecTier::Combined, "config mismatch must not replay");
+        assert!(st_slow.cycles > st_paper.cycles, "slower multiplier must cost cycles");
+        assert_eq!(slow.read_gm(0, 1)[0], 4.0);
+
+        // The memo still belongs to (and serves) the original config.
+        let mut pe2 = Pe::new(PeConfig::paper(AeLevel::Ae0), 4);
+        let (st2, tier2) = sched.execute_traced(&mut pe2, ExecMode::Replay);
+        assert_eq!(tier2, ExecTier::Replayed);
+        assert_eq!(st2, st_paper);
+    }
+
+    #[test]
+    fn schedule_memoizes_once_and_replays() {
+        let mut p = Program::new();
+        p.push(I::Li { rd: 0, val: 3.0 });
+        p.push(I::Li { rd: 1, val: 4.0 });
+        p.push(I::Fmul { rd: 2, ra: 0, rb: 1 });
+        p.push(I::St { rs: 2, gm: 0 });
+        p.push(I::Halt);
+        let sched = ScheduledProgram::compile(&p, AeLevel::Ae0).unwrap();
+        assert!(!sched.is_scheduled());
+        let mut pe = Pe::new(PeConfig::paper(AeLevel::Ae0), 16);
+        let st1 = sched.execute(&mut pe, ExecMode::Replay); // combined pass
+        assert!(sched.is_scheduled());
+        assert_eq!(pe.read_gm(0, 1)[0], 12.0);
+        pe.reset(16);
+        let st2 = sched.execute(&mut pe, ExecMode::Replay); // lean replay
+        assert_eq!(pe.read_gm(0, 1)[0], 12.0);
+        assert_eq!(st1, st2, "memoized stats must equal the combined run");
+        pe.reset(16);
+        let st3 = sched.execute(&mut pe, ExecMode::Combined); // forced re-run
+        assert_eq!(st1, st3);
+    }
+}

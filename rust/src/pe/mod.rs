@@ -6,11 +6,19 @@
 //! *functional* (executes real f64 values, so kernels are numerically
 //! validated) and *timing* (reproduces the latency/CPF/Gflops-per-watt
 //! tables through pipeline, scoreboard, port and queue modelling).
+//!
+//! Execution is **two-tier** ([`decoded`]): programs are validated and
+//! lowered once into a compact pre-decoded stream, the cycle-accurate
+//! timing model runs once per cached program ([`Pe::run_decoded`]), and
+//! every later request replays values only ([`Pe::replay`]) against the
+//! memoized [`PeStats`] schedule ([`ScheduledProgram`]).
 
 pub mod config;
 pub mod core;
+pub mod decoded;
 pub mod isa;
 
 pub use config::{AeLevel, ArithKind, PeConfig};
 pub use core::{Pe, PeStats};
+pub use decoded::{DecodedProgram, ExecMode, ExecTier, ScheduledProgram};
 pub use isa::{Addr, Instr, Program, Reg, DOT_PIPELINE_DEPTH, LM_WORDS, NUM_REGS};

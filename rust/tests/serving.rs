@@ -1,13 +1,14 @@
 //! Serving-engine tests: program-cache determinism (pointer-equal shared
 //! kernels), `serve_batch` vs `serve_one` equivalence across admission
-//! windows, pooled Level-1/2 execution, LRU capping, and the pooled
-//! path's makespan behavior.
+//! windows, pooled Level-1/2 execution, LRU capping, two-tier
+//! replay-vs-combined equivalence, and the pooled path's makespan
+//! behavior.
 
 use redefine_blas::coordinator::{
     request::{random_workload, repeated_gemm_workload, Request},
     Coordinator, CoordinatorConfig, ProgramCache, Response, ValueSource,
 };
-use redefine_blas::pe::AeLevel;
+use redefine_blas::pe::{AeLevel, ExecMode};
 use redefine_blas::util::{Mat, XorShift64};
 use std::sync::Arc;
 
@@ -211,6 +212,72 @@ fn serve_batch_is_deterministic_across_runs() {
         assert_eq!(a.vector, b.vector);
         assert_eq!(a.scalar, b.scalar);
     }
+}
+
+#[test]
+fn combined_exec_mode_matches_replay_exactly() {
+    // The two-tier acceptance invariant on the serve path: forcing the
+    // combined interpreter on every kernel (ExecMode::Combined) and the
+    // default cache-hit value replay must produce identical responses —
+    // values, simulated cycles and energy — for an all-level batch, and
+    // against the sequential reference loop.
+    let reqs = mixed_requests();
+    let mut seq = coord(AeLevel::Ae5, 2);
+    let r_seq: Vec<_> = reqs.clone().into_iter().map(|r| seq.serve_one(r)).collect();
+    let mut replay = coord(AeLevel::Ae5, 2);
+    let r_replay = replay.serve_batch(reqs.clone());
+    let mut combined = Coordinator::new(CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 2,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+        exec: ExecMode::Combined,
+        ..CoordinatorConfig::default()
+    });
+    let r_combined = combined.serve_batch(reqs);
+    assert_same_responses(&r_seq, &r_replay);
+    assert_same_responses(&r_seq, &r_combined);
+    // The combined pool never replays; the replay pool did the timing
+    // pass at most once per distinct kernel.
+    let cc = combined.pool_job_counts();
+    assert_eq!(cc.replays, 0, "combined mode must not replay: {cc:?}");
+    assert!(cc.combined_runs > 0);
+    let rc = replay.pool_job_counts();
+    assert_eq!(rc.replays + rc.combined_runs, rc.gemm_tiles + rc.gemv + rc.level1);
+}
+
+#[test]
+fn repeated_shape_serving_replays_at_every_ae() {
+    // Same-shape request streams must converge to the replay fast path at
+    // every enhancement level, with responses identical to the sequential
+    // loop (which itself runs the one-shot combined path for DGEMM).
+    for ae in AeLevel::ALL {
+        let reqs = repeated_gemm_workload(4, 12, 31_000);
+        let mut seq = coord(ae, 2);
+        let r_seq: Vec<_> = reqs.clone().into_iter().map(|r| seq.serve_one(r)).collect();
+        let mut bat = coord(ae, 2);
+        let r_bat = bat.serve_batch(reqs);
+        assert_same_responses(&r_seq, &r_bat);
+        let jc = bat.pool_job_counts();
+        assert_eq!(jc.gemm_tiles, 16, "{ae}: 4 requests x 4 tiles");
+        assert!(
+            jc.replays >= jc.gemm_tiles - 4,
+            "{ae}: at most the first request's tiles may run combined: {jc:?}"
+        );
+    }
+}
+
+#[test]
+fn cached_kernel_carries_its_schedule_after_serving() {
+    // After a repeated-shape stream, the resident ScheduledProgram holds
+    // the memoized timing pass — the state the replay path feeds on.
+    let mut co = coord(AeLevel::Ae5, 2);
+    let _ = co.serve_batch(repeated_gemm_workload(3, 16, 555));
+    // n=16, b=2 → padded 16, tile m=8, k=16.
+    let sched = co.cache().gemm_rect(8, 8, 16, AeLevel::Ae5);
+    assert!(sched.is_scheduled(), "serving must have scheduled the cached kernel");
+    let stats = sched.scheduled_stats().expect("scheduled");
+    assert!(stats.cycles > 0 && stats.instructions > 0);
 }
 
 #[test]

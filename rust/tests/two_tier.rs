@@ -1,0 +1,220 @@
+//! Two-tier execution equivalence: randomized programs over every AE
+//! level, pinning (a) tier-2 value replay bit-identical to the combined
+//! interpreter — GM, LM and register file — and (b) the memoized
+//! [`ScheduledProgram`] stats equal to a fresh `Pe::run`, including after
+//! `Pe::reset` reuse on a pooled-worker-style PE.
+
+use redefine_blas::pe::{
+    AeLevel, DecodedProgram, ExecMode, Instr, Pe, PeConfig, Program, ScheduledProgram, LM_WORDS,
+    NUM_REGS,
+};
+use redefine_blas::util::XorShift64;
+
+/// GM footprint of every random program (small, so block transfers and
+/// scalar accesses overlap and exercise the memory-ordering paths).
+const GM_WORDS: usize = 256;
+
+/// A random *valid* program for `ae`: scalar GM loads/stores, the full
+/// arithmetic set (add/sub/mul/div/sqrt/mac), and — gated on the level's
+/// features — LM scalar traffic, block transfers, DOT2/3/4 and wide
+/// 256-bit moves, interleaved with barriers. Register/address ranges stay
+/// inside the validator's bounds by construction; values may still go
+/// nonfinite (div by ~0, sqrt of negatives), which the bit-exact
+/// comparison must survive.
+fn random_program(ae: AeLevel, seed: u64, len: usize) -> Program {
+    let mut rng = XorShift64::new(seed);
+    let mut p = Program::new();
+    // Seed the register file with live values before the random body.
+    for r in 0..8u8 {
+        p.push(Instr::Li { rd: r, val: rng.range_f64(-4.0, 4.0) });
+    }
+    for _ in 0..len {
+        match rng.below(14) {
+            0 => p.push(Instr::Ld {
+                rd: rng.below(NUM_REGS) as u8,
+                gm: rng.below(GM_WORDS) as u32,
+            }),
+            1 => p.push(Instr::St {
+                rs: rng.below(NUM_REGS) as u8,
+                gm: rng.below(GM_WORDS) as u32,
+            }),
+            2 => p.push(Instr::Fadd {
+                rd: rng.below(NUM_REGS) as u8,
+                ra: rng.below(NUM_REGS) as u8,
+                rb: rng.below(NUM_REGS) as u8,
+            }),
+            3 => p.push(Instr::Fsub {
+                rd: rng.below(NUM_REGS) as u8,
+                ra: rng.below(NUM_REGS) as u8,
+                rb: rng.below(NUM_REGS) as u8,
+            }),
+            4 => p.push(Instr::Fmul {
+                rd: rng.below(NUM_REGS) as u8,
+                ra: rng.below(NUM_REGS) as u8,
+                rb: rng.below(NUM_REGS) as u8,
+            }),
+            5 => p.push(Instr::Fmac {
+                rd: rng.below(NUM_REGS) as u8,
+                ra: rng.below(NUM_REGS) as u8,
+                rb: rng.below(NUM_REGS) as u8,
+            }),
+            6 => p.push(Instr::Fdiv {
+                rd: rng.below(NUM_REGS) as u8,
+                ra: rng.below(NUM_REGS) as u8,
+                rb: rng.below(NUM_REGS) as u8,
+            }),
+            7 => p.push(Instr::Fsqrt {
+                rd: rng.below(NUM_REGS) as u8,
+                ra: rng.below(NUM_REGS) as u8,
+            }),
+            8 => p.push(Instr::Li {
+                rd: rng.below(NUM_REGS) as u8,
+                val: rng.range_f64(-10.0, 10.0),
+            }),
+            9 if ae.has_lm() => p.push(Instr::LmLd {
+                rd: rng.below(NUM_REGS) as u8,
+                lm: rng.below(256) as u32,
+            }),
+            10 if ae.has_lm() => p.push(Instr::LmSt {
+                rs: rng.below(NUM_REGS) as u8,
+                lm: rng.below(256) as u32,
+            }),
+            11 if ae.has_lm() => {
+                let lm = rng.below(240) as u32;
+                let gm = rng.below(GM_WORDS - 16) as u32;
+                let blk_len = 1 + rng.below(16) as u32;
+                if rng.below(2) == 0 {
+                    p.push(Instr::BlkLd { lm, gm, len: blk_len });
+                } else {
+                    p.push(Instr::BlkSt { lm, gm, len: blk_len });
+                }
+            }
+            12 if ae.has_dot() => p.push(Instr::Dot {
+                rd: rng.below(NUM_REGS) as u8,
+                ra: rng.below(61) as u8,
+                rb: rng.below(61) as u8,
+                n: (2 + rng.below(3)) as u8,
+                acc: rng.below(2) == 1,
+            }),
+            13 if ae.has_wide_path() => {
+                let lm = rng.below(252) as u32;
+                if rng.below(2) == 0 {
+                    p.push(Instr::LmLd4 { rd: rng.below(61) as u8, lm });
+                } else {
+                    p.push(Instr::LmSt4 { rs: rng.below(61) as u8, lm });
+                }
+            }
+            // Feature not available at this level: issue-slot fillers so
+            // every draw still emits an instruction.
+            n => p.push(if n % 2 == 0 { Instr::Nop } else { Instr::Barrier }),
+        }
+    }
+    p.push(Instr::Halt);
+    p
+}
+
+/// Bit-exact architectural-state comparison (GM, LM, register file) —
+/// `to_bits` so NaNs produced by random div/sqrt still compare equal when
+/// the data paths truly agree.
+fn assert_state_bits(tag: &str, reference: &Pe, got: &Pe) {
+    assert_eq!(reference.gm.len(), got.gm.len(), "{tag}: GM size");
+    for (i, (x, y)) in reference.gm.iter().zip(got.gm.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: GM[{i}] {x} vs {y}");
+    }
+    let (rl, gl) = (reference.read_lm(0, LM_WORDS), got.read_lm(0, LM_WORDS));
+    for (i, (x, y)) in rl.iter().zip(gl.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: LM[{i}] {x} vs {y}");
+    }
+    for (i, (x, y)) in reference.regs().iter().zip(got.regs().iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: R{i} {x} vs {y}");
+    }
+}
+
+#[test]
+fn replay_matches_combined_for_random_programs_at_every_ae() {
+    for (ai, ae) in AeLevel::ALL.into_iter().enumerate() {
+        // One long-lived "pooled worker" PE, reset-reused across kernels.
+        let mut pooled = Pe::new(PeConfig::paper(ae), GM_WORDS);
+        for round in 0..6u64 {
+            let seed = 1_000 * (ai as u64 + 1) + round;
+            let tag = format!("{ae} seed {seed}");
+            let prog = random_program(ae, seed, 300);
+            let data = XorShift64::new(seed ^ 0xDA7A).vec(GM_WORDS);
+
+            // Reference: fresh PE, one-shot combined path.
+            let mut fresh = Pe::new(PeConfig::paper(ae), GM_WORDS);
+            fresh.write_gm(0, &data);
+            let st_fresh = fresh.run(&prog);
+
+            let sched =
+                ScheduledProgram::compile(&prog, ae).expect("generator only emits valid programs");
+            assert!(!sched.is_scheduled());
+
+            // First pooled execution: the one-time timing pass.
+            pooled.reset(GM_WORDS);
+            pooled.write_gm(0, &data);
+            let st_sched = sched.execute(&mut pooled, ExecMode::Replay);
+            assert!(sched.is_scheduled());
+            assert_eq!(st_fresh, st_sched, "{tag}: timing pass vs fresh Pe::run");
+            assert_state_bits(&format!("{tag} (timing pass)"), &fresh, &pooled);
+
+            // Second pooled execution: lean value replay + memoized stats.
+            pooled.reset(GM_WORDS);
+            pooled.write_gm(0, &data);
+            let st_replay = sched.execute(&mut pooled, ExecMode::Replay);
+            assert_eq!(st_fresh, st_replay, "{tag}: memoized stats vs fresh Pe::run");
+            assert_state_bits(&format!("{tag} (replay)"), &fresh, &pooled);
+
+            // Forced combined re-run: the schedule must reproduce exactly.
+            pooled.reset(GM_WORDS);
+            pooled.write_gm(0, &data);
+            let st_comb = sched.execute(&mut pooled, ExecMode::Combined);
+            assert_eq!(st_fresh, st_comb, "{tag}: forced combined re-run");
+            assert_state_bits(&format!("{tag} (combined re-run)"), &fresh, &pooled);
+        }
+    }
+}
+
+#[test]
+fn decode_is_deterministic_and_compact() {
+    for ae in AeLevel::ALL {
+        let prog = random_program(ae, 42, 200);
+        let d1 = DecodedProgram::decode(&prog, ae).expect("valid by construction");
+        let d2 = DecodedProgram::decode(&prog, ae).expect("valid by construction");
+        assert_eq!(d1, d2, "decode must be a pure function of (program, ae)");
+        assert_eq!(d1.ae(), ae);
+        assert_eq!(d1.len(), prog.len() - 1, "everything but Halt decodes");
+        let enum_bytes = prog.len() * std::mem::size_of::<Instr>();
+        assert!(
+            d1.packed_bytes() < enum_bytes * 3 / 4,
+            "{ae}: packed {} bytes not compact vs {} enum bytes",
+            d1.packed_bytes(),
+            enum_bytes
+        );
+    }
+}
+
+#[test]
+fn replay_survives_heavy_reset_reuse_across_shapes() {
+    // Pooled-worker torture: one PE serves alternating kernels of
+    // different AE-compatible shapes, resetting between every run; each
+    // replay must still match its own fresh reference bit-for-bit.
+    let ae = AeLevel::Ae5;
+    let progs: Vec<Program> = (0..4).map(|i| random_program(ae, 7_000 + i, 250)).collect();
+    let scheds: Vec<ScheduledProgram> =
+        progs.iter().map(|p| ScheduledProgram::compile(p, ae).unwrap()).collect();
+    let mut pooled = Pe::new(PeConfig::paper(ae), GM_WORDS);
+    for pass in 0..3 {
+        for (i, (prog, sched)) in progs.iter().zip(&scheds).enumerate() {
+            let data = XorShift64::new(0xBEEF + i as u64).vec(GM_WORDS);
+            let mut fresh = Pe::new(PeConfig::paper(ae), GM_WORDS);
+            fresh.write_gm(0, &data);
+            let st_fresh = fresh.run(prog);
+            pooled.reset(GM_WORDS);
+            pooled.write_gm(0, &data);
+            let st = sched.execute(&mut pooled, ExecMode::Replay);
+            assert_eq!(st_fresh, st, "pass {pass} prog {i}");
+            assert_state_bits(&format!("pass {pass} prog {i}"), &fresh, &pooled);
+        }
+    }
+}
