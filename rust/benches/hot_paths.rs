@@ -17,9 +17,10 @@ use redefine_blas::coordinator::{
     request::{random_workload, repeated_gemm_workload, Request},
     Coordinator, CoordinatorConfig,
 };
+use redefine_blas::engine::{Engine, EngineConfig};
 use redefine_blas::metrics::measure_gemm;
 use redefine_blas::pe::{AeLevel, ExecMode, Pe, PeConfig, ScheduledProgram};
-use redefine_blas::util::{round_up, Mat};
+use redefine_blas::util::{rel_fro_error, round_up, Mat};
 use std::time::Instant;
 
 /// Collected (name, milliseconds-per-iteration) measurements, written out
@@ -210,6 +211,25 @@ fn main() {
         replay_vs_combined_bench(&mut report, 64, 32, 2, AeLevel::Ae5);
     }
 
+    // 9) Multi-tenant engine: two tenants serving the same repeated shape
+    //    through one shared pool + shared program cache, vs two isolated
+    //    coordinators. The shared cache's cross-tenant hits are the PR 4
+    //    acceptance signal; the wall-clock ratio is the engine headline.
+    if quick {
+        multi_tenant_bench(&mut report, 8, 16, AeLevel::Ae5);
+    } else {
+        multi_tenant_bench(&mut report, 32, 32, AeLevel::Ae5);
+    }
+
+    // 10) Residual vs padded serving for a non-4-aligned shape: the
+    //     cached DOT2/3 residual kernel (no padding) against the cached
+    //     padded tile kernel, end to end through serve_batch.
+    if quick {
+        residual_vs_padded_bench(&mut report, 4, 18, AeLevel::Ae5);
+    } else {
+        residual_vs_padded_bench(&mut report, 8, 30, AeLevel::Ae5);
+    }
+
     if let Some(path) = json_path {
         std::fs::write(&path, report.to_json()).expect("write bench JSON");
         println!("\nwrote {} measurements to {path}", report.entries.len());
@@ -391,4 +411,156 @@ fn replay_vs_combined_bench(report: &mut Report, requests: usize, n: usize, b: u
     report.record("serve.combined_exec_total_ms", t_combined * 1e3);
     report.record("serve.replay_exec_total_ms", t_replay * 1e3);
     report.record("serve.replay_speedup_x", t_combined / t_replay);
+}
+
+/// Two tenants, each serving `per_tenant` repeated-shape DGEMM requests:
+/// once on two isolated coordinators (private pool + cache each, served
+/// back to back), once as concurrent tenants of one shared engine. Values
+/// must be identical; the engine's shared cache must show cross-tenant
+/// hits (strictly more than the isolated sum).
+fn multi_tenant_bench(report: &mut Report, per_tenant: usize, n: usize, ae: AeLevel) {
+    println!("\nmulti-tenant engine: 2 tenants x {per_tenant} repeated-shape DGEMMs, n={n}, {ae}");
+    let tenant_cfg = || CoordinatorConfig {
+        ae,
+        b: 2,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+        ..CoordinatorConfig::default()
+    };
+
+    // Isolated baseline: private pools and private caches, so the second
+    // tenant re-pays emission, decode and the timing pass.
+    let t0 = Instant::now();
+    let mut iso_hits = 0;
+    let mut iso_resps = Vec::new();
+    for t in 0..2u64 {
+        let mut co = Coordinator::new(tenant_cfg());
+        let resps = co.serve_batch(repeated_gemm_workload(per_tenant, n, 777 + t));
+        iso_hits += co.cache_stats().hits;
+        iso_resps.push(resps);
+    }
+    let t_iso = t0.elapsed().as_secs_f64();
+
+    // Shared engine: same total worker count as one coordinator (4), both
+    // tenants concurrent, one warm cache between them.
+    let engine = Engine::new(EngineConfig { workers: 4, cache_capacity: None });
+    let ta = engine.tenant(tenant_cfg());
+    let tb = engine.tenant(tenant_cfg());
+    let t0 = Instant::now();
+    let (ra, rb) = std::thread::scope(|s| {
+        let ha = s.spawn(move || {
+            let mut ta = ta;
+            ta.serve_batch(repeated_gemm_workload(per_tenant, n, 777))
+        });
+        let hb = s.spawn(move || {
+            let mut tb = tb;
+            tb.serve_batch(repeated_gemm_workload(per_tenant, n, 778))
+        });
+        (ha.join().expect("tenant a"), hb.join().expect("tenant b"))
+    });
+    let t_mt = t0.elapsed().as_secs_f64();
+
+    // Tenant responses must equal the isolated runs exactly.
+    for (shared, isolated) in [(&ra, &iso_resps[0]), (&rb, &iso_resps[1])] {
+        assert_eq!(shared.len(), isolated.len());
+        for (x, y) in shared.iter().zip(isolated.iter()) {
+            assert_eq!(x.cycles, y.cycles, "engine changed simulated cycles");
+            assert_eq!(x.energy_j, y.energy_j, "engine changed simulated energy");
+            assert_eq!(x.matrix, y.matrix, "engine changed values");
+        }
+    }
+    let shared = engine.cache_stats();
+    assert!(
+        shared.hits > iso_hits,
+        "shared cache must add cross-tenant hits: {} vs {iso_hits}",
+        shared.hits
+    );
+    println!(
+        "{:<44} {:>10.3} ms total  ({:.1} req/s)",
+        "  isolated: 2 private coordinators",
+        t_iso * 1e3,
+        (2 * per_tenant) as f64 / t_iso
+    );
+    println!(
+        "{:<44} {:>10.3} ms total  ({:.1} req/s)",
+        "  engine: shared pool + shared cache",
+        t_mt * 1e3,
+        (2 * per_tenant) as f64 / t_mt
+    );
+    println!(
+        "{:<44} {:>10.2}x  ({} shared hits vs {} isolated; {} misses total)",
+        "  multi-tenant speedup",
+        t_iso / t_mt,
+        shared.hits,
+        iso_hits,
+        shared.misses
+    );
+    report.record("engine.isolated_total_ms", t_iso * 1e3);
+    report.record("engine.mt_total_ms", t_mt * 1e3);
+    report.record("engine.mt_speedup_x", t_iso / t_mt);
+    report.record("engine.cross_tenant_extra_hits", (shared.hits - iso_hits) as f64);
+}
+
+/// Serve a non-4-aligned repeated-shape DGEMM workload twice on single-PE
+/// coordinators: once padding to the aligned tile kernel, once on the
+/// cached DOT2/3 residual kernel (no padding). Both warm their cache
+/// first, values agree to FP reassociation, and the report records both
+/// the host wall-clock and the simulated-cycle ratio (the ablation the
+/// ROADMAP asked for, end to end through the serve path).
+fn residual_vs_padded_bench(report: &mut Report, requests: usize, n: usize, ae: AeLevel) {
+    assert!(n % 4 != 0, "residual bench needs a non-4-aligned n");
+    println!("\nresidual vs padded serving: {requests} DGEMM requests, n={n}, single PE, {ae}");
+    let mk = |residual: bool| {
+        Coordinator::new(CoordinatorConfig {
+            ae,
+            b: 1,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+            residual,
+            ..CoordinatorConfig::default()
+        })
+    };
+    let mut padded = mk(false);
+    let mut resid = mk(true);
+    let _ = padded.serve_batch(repeated_gemm_workload(1, n, 1));
+    let _ = resid.serve_batch(repeated_gemm_workload(1, n, 1));
+    let reqs = repeated_gemm_workload(requests, n, 31_337);
+    let t0 = Instant::now();
+    let rp = padded.serve_batch(reqs.clone());
+    let t_pad = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let rr = resid.serve_batch(reqs);
+    let t_res = t0.elapsed().as_secs_f64();
+
+    // Same math, different kernels: values agree to FP reassociation.
+    assert_eq!(rp.len(), rr.len());
+    for (p, r) in rp.iter().zip(rr.iter()) {
+        let pm = p.matrix.as_ref().expect("dgemm response carries a matrix");
+        let rm = r.matrix.as_ref().expect("dgemm response carries a matrix");
+        let err = rel_fro_error(rm.as_slice(), pm.as_slice());
+        assert!(err < 1e-12, "residual vs padded numerics: {err}");
+    }
+    let (cyc_pad, cyc_res) = (rp[0].cycles, rr[0].cycles);
+    println!(
+        "{:<44} {:>10.3} ms total  ({} simulated cycles/req)",
+        "  padded tile kernel (cached)",
+        t_pad * 1e3,
+        cyc_pad
+    );
+    println!(
+        "{:<44} {:>10.3} ms total  ({} simulated cycles/req)",
+        "  DOT2/3 residual kernel (cached)",
+        t_res * 1e3,
+        cyc_res
+    );
+    println!(
+        "{:<44} {:>10.2}x host, {:.2}x simulated",
+        "  residual speedup over padded",
+        t_pad / t_res,
+        cyc_pad as f64 / cyc_res as f64
+    );
+    report.record("serve.padded_total_ms", t_pad * 1e3);
+    report.record("serve.residual_total_ms", t_res * 1e3);
+    report.record("serve.residual_vs_padded_host_x", t_pad / t_res);
+    report.record("serve.residual_vs_padded_sim_x", cyc_pad as f64 / cyc_res as f64);
 }

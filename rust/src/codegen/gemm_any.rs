@@ -170,7 +170,7 @@ mod tests {
         let a = Mat::random(n, n, 900 + n as u64);
         let b = Mat::random(n, n, 901 + n as u64);
         let c = Mat::random(n, n, 902 + n as u64);
-        let l = GemmLayout { m: n, p: n, k: n, base_a: 0, base_b: n * n, base_c: 2 * n * n };
+        let l = GemmLayout::rect_any(n, n, n);
         let prog = gen_gemm_any(n, ae, &l);
         let mut pe = Pe::new(PeConfig::paper(ae), 3 * n * n);
         pe.write_gm(0, &l.pack(&a, &b, &c));

@@ -39,6 +39,15 @@ impl GemmLayout {
             m % 4 == 0 && p % 4 == 0 && k % 4 == 0,
             "PE kernels need dims % 4 == 0 (pad first), got {m}x{p}x{k}"
         );
+        Self::rect_any(m, p, k)
+    }
+
+    /// Rectangular packing without the 4-alignment requirement — the
+    /// layout of the DOT2/3 residual kernels
+    /// ([`crate::codegen::gen_gemm_any`]), whose edge blocks use 2- and
+    /// 3-lane dots instead of padding. The aligned generators still
+    /// require [`GemmLayout::rect`].
+    pub fn rect_any(m: usize, p: usize, k: usize) -> Self {
         Self { m, p, k, base_a: 0, base_b: m * k, base_c: m * k + k * p }
     }
 
@@ -160,6 +169,15 @@ mod tests {
     #[should_panic(expected = "% 4 == 0")]
     fn rejects_unpadded() {
         GemmLayout::packed(10);
+    }
+
+    #[test]
+    fn rect_any_allows_unaligned_dims() {
+        let l = GemmLayout::rect_any(10, 10, 10);
+        assert_eq!((l.base_a, l.base_b, l.base_c), (0, 100, 200));
+        assert_eq!(l.gm_words(), 300);
+        // Identical addressing to rect() where both are defined.
+        assert_eq!(GemmLayout::rect_any(8, 8, 8), GemmLayout::rect(8, 8, 8));
     }
 
     #[test]

@@ -1,12 +1,14 @@
-//! Program/layout cache of the serving engine.
+//! Program/layout cache of the serving engine — shared, multi-tenant.
 //!
 //! The paper's request path never recompiles kernels: instruction streams
 //! are fixed per (routine, shape, enhancement level) and only operands move
 //! (the persistent-kernel approach of KBLAS-style GPU servers, realized
 //! here for the PE). This cache makes the coordinator behave the same way:
-//! `gen_gemm_rect`/`gen_gemv`/Level-1 emission runs once per key and the
-//! resulting kernel is shared by reference ([`Arc`]) across pool workers
-//! and across requests.
+//! `gen_gemm_rect`/`gen_gemm_any`/`gen_gemv`/Level-1 emission runs once per
+//! key and the resulting kernel is shared by reference ([`Arc`]) across
+//! pool workers, across requests — and, under the engine
+//! ([`crate::engine::Engine`]), across *tenants*: the second tenant to
+//! request a shape rides the first tenant's warm kernel.
 //!
 //! What is cached is a [`ScheduledProgram`] — the emitted stream already
 //! **pre-decoded** into the packed two-tier form (validation and AE
@@ -21,6 +23,12 @@
 //! into the stream as a `Li` constant). Layouts are pure functions of the
 //! shape, so they are recomputed by callers rather than cached.
 //!
+//! Accounting is two-level: the cache keeps shared hit/miss/eviction
+//! totals, and every accessor has a `_for` variant that additionally bumps
+//! a caller-owned [`CacheTally`] — the per-tenant slice the coordinator
+//! reports. The tallies partition the shared totals exactly (evictions are
+//! attributed to the tenant whose insertion overflowed the capacity).
+//!
 //! The cache is unbounded by default (fine for the paper's shape set) but
 //! takes an optional **LRU capacity cap** for adversarial shape streams:
 //! when more than `capacity` programs are resident, the least recently
@@ -33,13 +41,16 @@ use crate::metrics::{Measurement, Routine};
 use crate::pe::{AeLevel, Program, ScheduledProgram};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Cache key: routine + padded shape + enhancement level.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ProgramKey {
     /// Rectangular tile DGEMM C (m×p) ← A (m×k)·B (k×p) + C.
     GemmRect { m: usize, p: usize, k: usize, ae: AeLevel },
+    /// Single-PE DOT2/3 residual DGEMM at the *raw* (non-4-aligned) size
+    /// n — the no-padding alternative served in residual mode.
+    GemmAny { n: usize, ae: AeLevel },
     /// Single-PE DGEMV at padded size n.
     Gemv { n: usize, ae: AeLevel },
     /// Level-1 routine at padded size n. `alpha_bits` is the f64 bit
@@ -60,6 +71,7 @@ impl ProgramKey {
     pub fn ae(&self) -> AeLevel {
         match *self {
             ProgramKey::GemmRect { ae, .. }
+            | ProgramKey::GemmAny { ae, .. }
             | ProgramKey::Gemv { ae, .. }
             | ProgramKey::Level1 { ae, .. } => ae,
         }
@@ -76,10 +88,50 @@ pub struct CacheStats {
     pub entries: usize,
 }
 
-/// A resident pre-decoded program with its LRU clock stamp.
+/// One caller's (tenant's) slice of the cache counters. The coordinator
+/// passes its tally into the `_for` accessors so multi-tenant serving can
+/// split [`CacheStats`] per tenant while the cache keeps shared totals.
+#[derive(Debug, Default)]
+pub struct CacheTally {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl CacheTally {
+    fn add_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn add_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn add_eviction(&self) {
+        self.evictions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot as [`CacheStats`]. `entries` is supplied by the caller
+    /// (residency is a property of the shared cache, not of one tenant).
+    pub fn snapshot(&self, entries: usize) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries,
+        }
+    }
+}
+
+/// A resident kernel slot with its LRU clock stamp. The slot is filled
+/// *outside* the map lock (see [`ProgramCache::get_or_emit_for`]): the
+/// inserting caller emits + decodes into the [`OnceLock`] while only
+/// same-key callers block on it — a cold miss never head-of-line-blocks
+/// other tenants' keys, and an emission panic unwinds that caller without
+/// poisoning the shared map.
 #[derive(Debug)]
 struct Entry {
-    sched: Arc<ScheduledProgram>,
+    slot: Arc<OnceLock<Arc<ScheduledProgram>>>,
     /// Monotonic clock value of the most recent use.
     last_used: u64,
 }
@@ -98,18 +150,18 @@ struct Inner {
 }
 
 /// Thread-safe program cache. Emission happens at most once per resident
-/// key; the emitting call holds the map lock so concurrent requests for the
-/// same key block rather than duplicating multi-million-instruction
-/// emission work. The decode/validate pass runs under the same lock, once,
-/// so a resident kernel is always ready to replay.
+/// key: the map lock only covers the lookup/insert of a per-key slot, and
+/// the multi-million-instruction emission + decode/validate pass runs
+/// outside it, inside the slot's [`OnceLock`] — concurrent requests for
+/// the *same* key block on the slot rather than duplicating the work,
+/// while requests for other keys (other tenants) proceed untouched.
 #[derive(Debug, Default)]
 pub struct ProgramCache {
     inner: Mutex<Inner>,
     /// LRU capacity in resident programs (`None` = unbounded).
     capacity: Option<usize>,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    evictions: AtomicU64,
+    /// Shared totals across every caller.
+    totals: CacheTally,
 }
 
 impl ProgramCache {
@@ -130,6 +182,27 @@ impl ProgramCache {
         self.capacity
     }
 
+    fn note_hit(&self, tally: Option<&CacheTally>) {
+        self.totals.add_hit();
+        if let Some(t) = tally {
+            t.add_hit();
+        }
+    }
+
+    fn note_miss(&self, tally: Option<&CacheTally>) {
+        self.totals.add_miss();
+        if let Some(t) = tally {
+            t.add_miss();
+        }
+    }
+
+    fn note_eviction(&self, tally: Option<&CacheTally>) {
+        self.totals.add_eviction();
+        if let Some(t) = tally {
+            t.add_eviction();
+        }
+    }
+
     /// Fetch the pre-decoded program for `key`, emitting it with `emit`
     /// (and decoding it for the key's AE level) on first use. Repeated
     /// calls with the same resident key return the *same* allocation
@@ -141,28 +214,53 @@ impl ProgramCache {
         key: ProgramKey,
         emit: impl FnOnce() -> Program,
     ) -> Arc<ScheduledProgram> {
-        let mut inner = self.inner.lock().expect("program cache poisoned");
-        inner.clock += 1;
-        let clock = inner.clock;
-        if let Some(e) = inner.programs.get_mut(&key) {
-            e.last_used = clock;
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(&e.sched);
-        }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let prog = emit();
-        let sched = Arc::new(
-            ScheduledProgram::compile(&prog, key.ae())
-                .unwrap_or_else(|e| panic!("emitted kernel for {key:?} is invalid: {e}")),
-        );
-        inner.programs.insert(key, Entry { sched: Arc::clone(&sched), last_used: clock });
-        self.evict_over_capacity(&mut inner, key);
-        sched
+        self.get_or_emit_for(key, emit, None)
+    }
+
+    /// [`ProgramCache::get_or_emit`] that additionally bumps the caller's
+    /// per-tenant [`CacheTally`].
+    ///
+    /// Locking: the shared map lock covers only the slot lookup/insert;
+    /// emission + decode happen inside the per-key slot, so a cold miss
+    /// blocks same-key callers only (the multi-tenant head-of-line
+    /// guarantee), and a panicking emission unwinds the requesting tenant
+    /// without poisoning the cache for everyone else (a later request for
+    /// the key simply retries the emission into the still-empty slot).
+    pub fn get_or_emit_for(
+        &self,
+        key: ProgramKey,
+        emit: impl FnOnce() -> Program,
+        tally: Option<&CacheTally>,
+    ) -> Arc<ScheduledProgram> {
+        let slot = {
+            let mut inner = self.inner.lock().expect("program cache poisoned");
+            inner.clock += 1;
+            let clock = inner.clock;
+            if let Some(e) = inner.programs.get_mut(&key) {
+                e.last_used = clock;
+                self.note_hit(tally);
+                Arc::clone(&e.slot)
+            } else {
+                self.note_miss(tally);
+                let slot = Arc::new(OnceLock::new());
+                inner.programs.insert(key, Entry { slot: Arc::clone(&slot), last_used: clock });
+                self.evict_over_capacity(&mut inner, key, tally);
+                slot
+            }
+        };
+        Arc::clone(slot.get_or_init(|| {
+            let prog = emit();
+            Arc::new(
+                ScheduledProgram::compile(&prog, key.ae())
+                    .unwrap_or_else(|e| panic!("emitted kernel for {key:?} is invalid: {e}")),
+            )
+        }))
     }
 
     /// Drop least-recently-used keys until the cap is respected, never
-    /// evicting `keep` (the key just inserted/refreshed).
-    fn evict_over_capacity(&self, inner: &mut Inner, keep: ProgramKey) {
+    /// evicting `keep` (the key just inserted/refreshed). Evictions are
+    /// charged to the inserting caller's tally.
+    fn evict_over_capacity(&self, inner: &mut Inner, keep: ProgramKey, tally: Option<&CacheTally>) {
         let Some(cap) = self.capacity else { return };
         while inner.programs.len() > cap {
             let victim = inner
@@ -174,24 +272,78 @@ impl ProgramCache {
                 .expect("capacity >= 1 leaves a victim besides `keep`");
             inner.programs.remove(&victim);
             inner.measurements.remove(&victim);
-            self.evictions.fetch_add(1, Ordering::Relaxed);
+            self.note_eviction(tally);
         }
     }
 
     /// Cached rectangular DGEMM tile kernel (dims already padded to 4).
     pub fn gemm_rect(&self, m: usize, p: usize, k: usize, ae: AeLevel) -> Arc<ScheduledProgram> {
-        self.get_or_emit(ProgramKey::GemmRect { m, p, k, ae }, || {
-            let layout = GemmLayout::rect(m, p, k);
-            codegen::gen_gemm_rect(m, p, k, ae, &layout)
-        })
+        self.gemm_rect_for(m, p, k, ae, None)
+    }
+
+    /// [`ProgramCache::gemm_rect`] with a per-tenant tally.
+    pub fn gemm_rect_for(
+        &self,
+        m: usize,
+        p: usize,
+        k: usize,
+        ae: AeLevel,
+        tally: Option<&CacheTally>,
+    ) -> Arc<ScheduledProgram> {
+        self.get_or_emit_for(
+            ProgramKey::GemmRect { m, p, k, ae },
+            || {
+                let layout = GemmLayout::rect(m, p, k);
+                codegen::gen_gemm_rect(m, p, k, ae, &layout)
+            },
+            tally,
+        )
+    }
+
+    /// Cached single-PE DOT2/3 residual DGEMM kernel at the raw size
+    /// `n ≥ 2` (no padding — edge blocks use 2- and 3-lane dots). AE2+
+    /// only: the residual path needs the RDP.
+    pub fn gemm_any(&self, n: usize, ae: AeLevel) -> Arc<ScheduledProgram> {
+        self.gemm_any_for(n, ae, None)
+    }
+
+    /// [`ProgramCache::gemm_any`] with a per-tenant tally.
+    pub fn gemm_any_for(
+        &self,
+        n: usize,
+        ae: AeLevel,
+        tally: Option<&CacheTally>,
+    ) -> Arc<ScheduledProgram> {
+        self.get_or_emit_for(
+            ProgramKey::GemmAny { n, ae },
+            || {
+                let layout = GemmLayout::rect_any(n, n, n);
+                codegen::gen_gemm_any(n, ae, &layout)
+            },
+            tally,
+        )
     }
 
     /// Cached DGEMV kernel (n already padded to 4).
     pub fn gemv(&self, n: usize, ae: AeLevel) -> Arc<ScheduledProgram> {
-        self.get_or_emit(ProgramKey::Gemv { n, ae }, || {
-            let l = VecLayout::gemv(n);
-            codegen::gen_gemv(n, ae, &l)
-        })
+        self.gemv_for(n, ae, None)
+    }
+
+    /// [`ProgramCache::gemv`] with a per-tenant tally.
+    pub fn gemv_for(
+        &self,
+        n: usize,
+        ae: AeLevel,
+        tally: Option<&CacheTally>,
+    ) -> Arc<ScheduledProgram> {
+        self.get_or_emit_for(
+            ProgramKey::Gemv { n, ae },
+            || {
+                let l = VecLayout::gemv(n);
+                codegen::gen_gemv(n, ae, &l)
+            },
+            tally,
+        )
     }
 
     /// Cached Level-1 kernel (n already padded to 4). `alpha` is only
@@ -204,15 +356,31 @@ impl ProgramCache {
         alpha: f64,
         ae: AeLevel,
     ) -> Arc<ScheduledProgram> {
-        self.get_or_emit(ProgramKey::level1(routine, n, alpha, ae), || {
-            let l = VecLayout::level1(n);
-            match routine {
-                Routine::Ddot => codegen::gen_ddot(n, ae, &l),
-                Routine::Dnrm2 => codegen::gen_dnrm2(n, ae, &l),
-                Routine::Daxpy => codegen::gen_daxpy(n, alpha, ae, &l),
-                _ => panic!("not a level-1 routine: {routine:?}"),
-            }
-        })
+        self.level1_for(routine, n, alpha, ae, None)
+    }
+
+    /// [`ProgramCache::level1`] with a per-tenant tally.
+    pub fn level1_for(
+        &self,
+        routine: Routine,
+        n: usize,
+        alpha: f64,
+        ae: AeLevel,
+        tally: Option<&CacheTally>,
+    ) -> Arc<ScheduledProgram> {
+        self.get_or_emit_for(
+            ProgramKey::level1(routine, n, alpha, ae),
+            || {
+                let l = VecLayout::level1(n);
+                match routine {
+                    Routine::Ddot => codegen::gen_ddot(n, ae, &l),
+                    Routine::Dnrm2 => codegen::gen_dnrm2(n, ae, &l),
+                    Routine::Daxpy => codegen::gen_daxpy(n, alpha, ae, &l),
+                    _ => panic!("not a level-1 routine: {routine:?}"),
+                }
+            },
+            tally,
+        )
     }
 
     /// The memoized [`Measurement`] for `key`, if present. A memo return is
@@ -220,6 +388,15 @@ impl ProgramCache {
     /// program is fetched — repeated Level-1/2 requests skip the simulation
     /// entirely — and refreshes the key's LRU slot.
     pub fn cached_measurement(&self, key: &ProgramKey) -> Option<Measurement> {
+        self.cached_measurement_for(key, None)
+    }
+
+    /// [`ProgramCache::cached_measurement`] with a per-tenant tally.
+    pub fn cached_measurement_for(
+        &self,
+        key: &ProgramKey,
+        tally: Option<&CacheTally>,
+    ) -> Option<Measurement> {
         let mut inner = self.inner.lock().expect("program cache poisoned");
         inner.clock += 1;
         let clock = inner.clock;
@@ -228,7 +405,7 @@ impl ProgramCache {
             if let Some(e) = inner.programs.get_mut(key) {
                 e.last_used = clock;
             }
-            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.note_hit(tally);
         }
         meas
     }
@@ -237,8 +414,8 @@ impl ProgramCache {
     /// attached to an identical in-flight measurement instead of submitting
     /// a duplicate kernel — so `hits` stays comparable with the sequential
     /// path, where the same request would memo-hit.
-    pub(crate) fn record_hit(&self) {
-        self.hits.fetch_add(1, Ordering::Relaxed);
+    pub(crate) fn record_hit(&self, tally: Option<&CacheTally>) {
+        self.note_hit(tally);
     }
 
     /// Store a measurement computed on a pool worker. Dropped silently if
@@ -251,19 +428,15 @@ impl ProgramCache {
         }
     }
 
-    /// Hit/miss/eviction/entry counters since construction.
+    /// Shared hit/miss/eviction/entry counters since construction, over
+    /// every caller (the per-tenant tallies partition these).
     pub fn stats(&self) -> CacheStats {
-        CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
-            entries: self.inner.lock().expect("program cache poisoned").programs.len(),
-        }
+        self.totals.snapshot(self.len())
     }
 
     /// Number of cached programs.
     pub fn len(&self) -> usize {
-        self.stats().entries
+        self.inner.lock().expect("program cache poisoned").programs.len()
     }
 
     /// True if nothing has been cached yet.
@@ -308,6 +481,22 @@ mod tests {
         let decoded_direct = DecodedProgram::decode(&direct, AeLevel::Ae3).unwrap();
         assert_eq!(cached.decoded(), &decoded_direct);
         assert_eq!(cached.ae(), AeLevel::Ae3);
+    }
+
+    #[test]
+    fn gemm_any_is_cached_under_its_own_key() {
+        let cache = ProgramCache::new();
+        let r1 = cache.gemm_any(10, AeLevel::Ae5);
+        let r2 = cache.gemm_any(10, AeLevel::Ae5);
+        assert!(Arc::ptr_eq(&r1, &r2), "residual kernel must be shared");
+        // A 4-aligned residual kernel and the padded tile kernel of the
+        // same n are distinct keys (different instruction streams).
+        let any8 = cache.gemm_any(8, AeLevel::Ae5);
+        let rect8 = cache.gemm_rect(8, 8, 8, AeLevel::Ae5);
+        assert!(!Arc::ptr_eq(&any8, &rect8));
+        assert_eq!(ProgramKey::GemmAny { n: 10, ae: AeLevel::Ae5 }.ae(), AeLevel::Ae5);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 3, 3));
     }
 
     #[test]
@@ -380,5 +569,24 @@ mod tests {
         let _ = cache.gemm_rect(4, 4, 4, AeLevel::Ae4); // evicts the DDOT key
         cache.store_measurement(key, meas);
         assert!(cache.cached_measurement(&key).is_none());
+    }
+
+    #[test]
+    fn tallies_partition_the_shared_totals() {
+        let cache = ProgramCache::with_capacity(1);
+        let ta = CacheTally::default();
+        let tb = CacheTally::default();
+        // Tenant a emits, tenant b rides the warm kernel, then evicts it
+        // with its own shape (the eviction is charged to b).
+        let _ = cache.gemm_rect_for(8, 8, 8, AeLevel::Ae5, Some(&ta));
+        let _ = cache.gemm_rect_for(8, 8, 8, AeLevel::Ae5, Some(&tb));
+        let _ = cache.gemm_rect_for(4, 4, 4, AeLevel::Ae5, Some(&tb));
+        let (sa, sb, total) = (ta.snapshot(cache.len()), tb.snapshot(cache.len()), cache.stats());
+        assert_eq!((sa.hits, sa.misses, sa.evictions), (0, 1, 0));
+        assert_eq!((sb.hits, sb.misses, sb.evictions), (1, 1, 1));
+        assert_eq!(sa.hits + sb.hits, total.hits);
+        assert_eq!(sa.misses + sb.misses, total.misses);
+        assert_eq!(sa.evictions + sb.evictions, total.evictions);
+        assert_eq!(total.entries, 1);
     }
 }

@@ -2,22 +2,29 @@
 //!
 //! Owns the request path of the system: it partitions BLAS calls into
 //! 4×4-register-blocked tile jobs, dispatches them across a **persistent
-//! pool** of PE workers (spawned once per coordinator — the PE simulations
-//! are independent, so they parallelize perfectly on host threads),
-//! schedules the operand streams over the NoC model, and merges results.
-//! Every BLAS level runs on the same pool: DGEMM as `b×b` tile kernels,
-//! DGEMV and the Level-1 routines as single-PE measurement kernels — the
-//! paper's point that one co-designed PE serves all three levels through
-//! one fixed-program datapath. Instruction streams are never re-emitted per
-//! request: a [`ProgramCache`] keyed by (routine, shape, AE level) emits
-//! each kernel once — **pre-decoded and validated** into a
-//! [`ScheduledProgram`](crate::pe::ScheduledProgram) — and shares it
-//! (`Arc`) across pool workers and requests, with an optional LRU cap for
-//! adversarial shape streams. Execution is two-tier: the cycle-accurate
-//! timing pass runs once per cached kernel and is memoized; every later
-//! request replays values only against the stored schedule (the default
+//! pool** of PE workers, schedules the operand streams over the NoC model,
+//! and merges results. Every BLAS level runs on the same pool: DGEMM as
+//! `b×b` tile kernels, DGEMV and the Level-1 routines as single-PE
+//! measurement kernels — the paper's point that one co-designed PE serves
+//! all three levels through one fixed-program datapath. Instruction
+//! streams are never re-emitted per request: a [`ProgramCache`] keyed by
+//! (routine, shape, AE level) emits each kernel once — **pre-decoded and
+//! validated** into a [`ScheduledProgram`](crate::pe::ScheduledProgram) —
+//! and shares it (`Arc`) across pool workers and requests, with an
+//! optional LRU cap for adversarial shape streams. Execution is two-tier:
+//! the cycle-accurate timing pass runs once per cached kernel and is
+//! memoized; every later request replays values only (the default
 //! [`ExecMode::Replay`]; [`ExecMode::Combined`] forces the full
 //! interpreter per request, as a baseline and cross-check).
+//!
+//! Since PR 4 the pool and the program cache are **shared state behind the
+//! coordinator**, not owned by it: a standalone [`Coordinator::new`]
+//! builds a private single-tenant engine (same behavior as before, pinned
+//! by tests), while [`crate::engine::Engine::tenant`] attaches many
+//! coordinators to one process-wide pool + cache so tenants share warm
+//! kernels under a weighted fair scheduler. Non-4-aligned DGEMMs can
+//! optionally serve on cached single-PE DOT2/3 **residual kernels**
+//! instead of padding ([`CoordinatorConfig::residual`]).
 //!
 //! Co-simulation split:
 //! * **timing/energy** — always from the PE + NoC simulators;
@@ -29,21 +36,22 @@
 //!   stub and every value comes from [`ValueSource::PeSim`].
 
 pub mod cache;
-mod pool;
+pub(crate) mod pool;
 pub mod request;
 
-pub use cache::{CacheStats, ProgramCache, ProgramKey};
+pub use cache::{CacheStats, CacheTally, ProgramCache, ProgramKey};
 pub use pool::PoolJobCounts;
 pub use request::{BatchStats, Request, Response};
 
 use crate::codegen::GemmLayout;
 use crate::energy::PowerModel;
+use crate::engine::{Engine, EngineConfig, EngineShared};
 use crate::metrics::{Measurement, Routine};
 use crate::noc::{Coord, LinkTraffic, RouterConfig, Topology};
 use crate::pe::{AeLevel, ExecMode, PeConfig, PeStats};
 use crate::runtime::Runtime;
 use crate::util::{round_up, Mat};
-use pool::{Done, Job, WorkerPool};
+use pool::{Done, Job, PoolClient};
 use std::sync::Arc;
 
 /// Job id used by the blocking single-request paths (never collides with
@@ -55,7 +63,9 @@ const SOLO_JOB_ID: u64 = u64::MAX;
 pub struct CoordinatorConfig {
     /// PE enhancement level for every kernel.
     pub ae: AeLevel,
-    /// Tile-array order b (b×b compute tiles + memory column).
+    /// Tile-array order b (b×b compute tiles + memory column). Controls
+    /// DGEMM tiling; a *standalone* coordinator also sizes its private
+    /// worker pool b², while an engine tenant shares the engine's pool.
     pub b: usize,
     /// Artifact directory for the XLA value path.
     pub artifact_dir: String,
@@ -66,8 +76,20 @@ pub struct CoordinatorConfig {
     /// huge batches never hold every packed GM image in memory. `None`
     /// (default) stages the whole batch up front.
     pub admission_window: Option<usize>,
+    /// Byte budget of [`Coordinator::serve_batch`]'s admission window:
+    /// staged requests may not pin more than this many bytes of packed GM
+    /// images (8 bytes per GM word, priced by
+    /// [`CoordinatorConfig::staged_bytes`]) — except that one oversized
+    /// request is always admitted alone so it cannot wedge the batch.
+    /// Composes with `admission_window` (both bounds apply); `None`
+    /// (default) bounds by request count only. Under the engine every
+    /// tenant enforces its own budget.
+    pub admission_bytes: Option<u64>,
     /// LRU capacity of the program cache, in resident kernels. `None`
-    /// (default) keeps every emitted kernel — the seed behavior.
+    /// (default) keeps every emitted kernel — the seed behavior. Only
+    /// meaningful for a standalone coordinator; engine tenants share the
+    /// engine's cache (sized by
+    /// [`crate::engine::EngineConfig::cache_capacity`]).
     pub cache_capacity: Option<usize>,
     /// How pool workers execute cached kernels: [`ExecMode::Replay`]
     /// (default) runs the cycle-accurate timing pass once per kernel and
@@ -75,6 +97,13 @@ pub struct CoordinatorConfig {
     /// full combined interpreter on every request (baseline/cross-check —
     /// responses are identical either way, pinned by tests).
     pub exec: ExecMode,
+    /// Serve non-4-aligned DGEMMs on the cached single-PE DOT2/3 residual
+    /// kernel ([`crate::codegen::gen_gemm_any`]) instead of padding to the
+    /// tiled 4-aligned kernel. Applies at AE2+ (the residual path needs
+    /// the RDP) and to shapes whose working set fits the LM; everything
+    /// else pads as before. The residual kernel is not tiled: eligible
+    /// requests run on one PE regardless of `b`.
+    pub residual: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -85,9 +114,25 @@ impl Default for CoordinatorConfig {
             artifact_dir: "artifacts".into(),
             verify: true,
             admission_window: None,
+            admission_bytes: None,
             cache_capacity: None,
             exec: ExecMode::Replay,
+            residual: false,
         }
+    }
+}
+
+impl CoordinatorConfig {
+    /// True when an `n`-sized DGEMM serves on the cached DOT2/3 residual
+    /// kernel instead of the padded tile path (see
+    /// [`CoordinatorConfig::residual`]). The LM bound mirrors the residual
+    /// generator's working set: 8n + 16 LM words.
+    pub fn residual_eligible(&self, n: usize) -> bool {
+        self.residual
+            && n % 4 != 0
+            && n >= 2
+            && self.ae.has_dot()
+            && 8 * n + 16 <= crate::pe::LM_WORDS
     }
 }
 
@@ -125,6 +170,8 @@ impl DgemmResult {
 /// Bookkeeping for a DGEMM whose tile kernels are in flight on the pool.
 /// Created by [`Coordinator::submit_dgemm`], consumed by
 /// [`Coordinator::finish_dgemm`] once every tile result has been collected.
+/// The residual path is the `bb == 1, m == n` degenerate case (one
+/// untiled kernel on one PE).
 pub(crate) struct PendingDgemm {
     job_id: u64,
     n: usize,
@@ -173,35 +220,51 @@ impl MeasSpec {
     }
 }
 
-/// The coordinator: cached programs + persistent pool workers + optional
-/// XLA value path.
+/// The coordinator: a tenant handle over shared serving state (program
+/// cache + worker pool) plus the optional XLA value path. Standalone
+/// ([`Coordinator::new`]) it owns a private single-tenant engine; under
+/// [`crate::engine::Engine`] many coordinators share one.
 pub struct Coordinator {
     pub cfg: CoordinatorConfig,
     runtime: Option<Runtime>,
-    cache: ProgramCache,
-    pool: WorkerPool,
+    /// Shared engine state (pool + program cache), reference-counted so it
+    /// outlives the engine value for as long as any tenant is alive.
+    shared: Arc<EngineShared>,
+    /// This tenant's lane into the shared pool (private reply channel,
+    /// per-tenant execution counters, fair-scheduler weight).
+    pool: PoolClient,
+    /// This tenant's slice of the shared cache counters.
+    tally: CacheTally,
     /// Telemetry of the last [`Coordinator::serve_batch`] call.
     last_batch: Option<BatchStats>,
 }
 
 impl Coordinator {
-    /// Build a coordinator; the XLA runtime is attached if the artifact
-    /// directory exists and PJRT initializes (otherwise values fall back to
-    /// the PE simulator). The b×b pool workers are spawned here, once, and
-    /// live for the coordinator's lifetime.
+    /// Build a standalone coordinator: a private single-tenant engine with
+    /// a b×b worker pool and its own program cache — behaviorally
+    /// identical to the pre-engine per-coordinator pool (pinned by tests).
+    /// The XLA runtime is attached if the artifact directory exists and
+    /// PJRT initializes (otherwise values fall back to the PE simulator).
     pub fn new(cfg: CoordinatorConfig) -> Self {
+        assert!(cfg.b >= 1, "need at least a 1x1 tile array");
+        let engine = Engine::new(EngineConfig {
+            workers: cfg.b * cfg.b,
+            cache_capacity: cfg.cache_capacity,
+        });
+        engine.tenant(cfg)
+    }
+
+    /// Attach a tenant coordinator to shared engine state (the
+    /// [`crate::engine::Engine::tenant`] entry point).
+    pub(crate) fn attach(shared: Arc<EngineShared>, cfg: CoordinatorConfig, weight: u64) -> Self {
         assert!(cfg.b >= 1, "need at least a 1x1 tile array");
         let runtime = if std::path::Path::new(&cfg.artifact_dir).is_dir() {
             Runtime::new(&cfg.artifact_dir).ok()
         } else {
             None
         };
-        let cache = match cfg.cache_capacity {
-            Some(cap) => ProgramCache::with_capacity(cap),
-            None => ProgramCache::new(),
-        };
-        let pool = WorkerPool::new(cfg.b * cfg.b, cfg.ae, cfg.exec);
-        Self { cfg, runtime, cache, pool, last_batch: None }
+        let pool = shared.pool.client(weight, cfg.exec);
+        Self { cfg, runtime, shared, pool, tally: CacheTally::default(), last_batch: None }
     }
 
     /// True if the XLA value path is live.
@@ -217,25 +280,44 @@ impl Coordinator {
             .unwrap_or_default()
     }
 
-    /// The program cache (shape/AE-keyed kernel store).
+    /// The (shared) program cache — shape/AE-keyed kernel store.
     pub fn cache(&self) -> &ProgramCache {
-        &self.cache
+        &self.shared.cache
     }
 
-    /// Program-cache counters (hits / misses / evictions / resident kernels).
+    /// This tenant's program-cache counters: hits / misses / evictions
+    /// attributed to this coordinator's traffic, with `entries` reporting
+    /// the shared resident count. For a standalone coordinator this equals
+    /// [`Coordinator::shared_cache_stats`]; under an engine, the tenant
+    /// tallies partition the shared totals.
     pub fn cache_stats(&self) -> CacheStats {
-        self.cache.stats()
+        self.tally.snapshot(self.shared.cache.len())
     }
 
-    /// Number of persistent pool workers.
+    /// Shared program-cache totals across every tenant of this
+    /// coordinator's engine.
+    pub fn shared_cache_stats(&self) -> CacheStats {
+        self.shared.cache.stats()
+    }
+
+    /// Number of persistent workers in the (shared) pool serving this
+    /// coordinator: b² standalone, the engine's worker count for tenants.
     pub fn pool_size(&self) -> usize {
         self.pool.worker_count()
     }
 
-    /// Jobs executed on the worker pool so far, by kind. Level-1/2 kernels
-    /// count here too — they run on pool workers, not on the dispatcher.
+    /// Jobs executed on the worker pool for this tenant so far, by kind.
+    /// Level-1/2 kernels count here too — they run on pool workers, not on
+    /// the dispatcher. Under an engine the tenant counts partition
+    /// [`Coordinator::shared_pool_job_counts`].
     pub fn pool_job_counts(&self) -> PoolJobCounts {
         self.pool.counts()
+    }
+
+    /// Pool-wide execution totals across every tenant of this
+    /// coordinator's engine.
+    pub fn shared_pool_job_counts(&self) -> PoolJobCounts {
+        self.shared.pool.counts()
     }
 
     /// Telemetry of the last [`Coordinator::serve_batch`] call (admission
@@ -253,7 +335,9 @@ impl Coordinator {
     /// The problem is zero-padded to a multiple of 4b so each tile gets a
     /// 4-aligned block; padding cost is simulated (as it would be burned on
     /// the real fabric). The tile kernels run on the persistent pool with
-    /// the cached program for this (shape, AE) key.
+    /// the cached program for this (shape, AE) key. In residual mode
+    /// ([`CoordinatorConfig::residual`]), eligible non-4-aligned shapes
+    /// run unpadded on one PE with the cached DOT2/3 kernel instead.
     pub fn dgemm(&mut self, a: &Mat, b: &Mat, c: &Mat) -> DgemmResult {
         let pending = self.submit_dgemm(0, a, b, c);
         let outs = self.collect_job(&pending);
@@ -261,11 +345,15 @@ impl Coordinator {
     }
 
     /// Stage one DGEMM: schedule its operand streams on the NoC, fetch the
-    /// cached tile program, and enqueue all b×b tile jobs on the pool.
+    /// cached tile program, and enqueue all b×b tile jobs on the pool (or
+    /// the single residual kernel, when eligible).
     pub(crate) fn submit_dgemm(&self, job_id: u64, a: &Mat, b: &Mat, c: &Mat) -> PendingDgemm {
         let n = a.rows();
         assert!(a.cols() == n && b.rows() == n && b.cols() == n, "square DGEMM only");
         assert!(c.rows() == n && c.cols() == n);
+        if self.cfg.residual_eligible(n) {
+            return self.submit_dgemm_residual(job_id, a, b, c);
+        }
         let bb = self.cfg.b;
         let ae = self.cfg.ae;
         let np = round_up(n, 4 * bb);
@@ -294,7 +382,7 @@ impl Coordinator {
         //    request (and by every later request of the same shape). The
         //    first tile to execute anywhere runs the timing pass and
         //    memoizes the schedule; the rest replay values only.
-        let sched = self.cache.gemm_rect(m, m, np, ae);
+        let sched = self.shared.cache.gemm_rect_for(m, m, np, ae, Some(&self.tally));
         let layout = GemmLayout::rect(m, m, np);
         for bi in 0..bb {
             for bj in 0..bb {
@@ -314,17 +402,47 @@ impl Coordinator {
         PendingDgemm { job_id, n, m, bb, ready, links, topo, rcfg, cpad: cp }
     }
 
+    /// Stage one DGEMM on the residual path: no padding, no tiling — the
+    /// whole problem runs on one PE with the cached DOT2/3 kernel
+    /// ([`crate::codegen::gen_gemm_any`]). The NoC schedule degenerates to
+    /// one compute tile's operand streams, so the request flows through
+    /// exactly the same collect/finish machinery as the tiled path.
+    fn submit_dgemm_residual(&self, job_id: u64, a: &Mat, b: &Mat, c: &Mat) -> PendingDgemm {
+        let n = a.rows();
+        let ae = self.cfg.ae;
+        let topo = Topology::new(1);
+        let rcfg = RouterConfig::default();
+        let mut links = LinkTraffic::new();
+        let coord = Coord::new(0, 0);
+        let mem = topo.memory_for_row(0);
+        let (_, ta) = links.transfer(&topo, &rcfg, mem, coord, (n * n) as u64, 0);
+        let (_, tb) = links.transfer(&topo, &rcfg, mem, coord, (n * n) as u64, 0);
+        let (_, tc) = links.transfer(&topo, &rcfg, mem, coord, (n * n) as u64, 0);
+        let ready = vec![ta.max(tb).max(tc)];
+        let sched = self.shared.cache.gemm_any_for(n, ae, Some(&self.tally));
+        let layout = GemmLayout::rect_any(n, n, n);
+        self.pool.submit(Job::GemmTile {
+            job_id,
+            tile_idx: 0,
+            sched,
+            layout,
+            gm: layout.pack(a, b, c),
+        });
+        PendingDgemm { job_id, n, m: n, bb: 1, ready, links, topo, rcfg, cpad: c.padded(n, n) }
+    }
+
     /// Fetch the cached program for `spec` and enqueue its measurement
     /// kernel on the pool, tagged `job_id`.
     pub(crate) fn submit_measure(&self, job_id: u64, spec: &MeasSpec) {
         let ae = self.cfg.ae;
         match spec.routine {
             Routine::Dgemv => {
-                let sched = self.cache.gemv(spec.np, ae);
+                let sched = self.shared.cache.gemv_for(spec.np, ae, Some(&self.tally));
                 self.pool.submit(Job::Gemv { job_id, n: spec.np, sched });
             }
             routine => {
-                let sched = self.cache.level1(routine, spec.np, spec.alpha, ae);
+                let cache = &self.shared.cache;
+                let sched = cache.level1_for(routine, spec.np, spec.alpha, ae, Some(&self.tally));
                 self.pool.submit(Job::Level1 {
                     job_id,
                     routine,
@@ -340,7 +458,7 @@ impl Coordinator {
     /// use — the blocking single-request path ([`Coordinator::serve_batch`]
     /// overlaps these kernels across requests instead).
     pub(crate) fn measure_blocking(&self, spec: MeasSpec) -> Measurement {
-        if let Some(m) = self.cache.cached_measurement(&spec.key) {
+        if let Some(m) = self.shared.cache.cached_measurement_for(&spec.key, Some(&self.tally)) {
             return m;
         }
         self.submit_measure(SOLO_JOB_ID, &spec);
@@ -353,11 +471,11 @@ impl Coordinator {
                 panic!("pool delivered a tile of job {job_id} during a solo measurement")
             }
         };
-        self.cache.store_measurement(spec.key, meas.clone());
+        self.shared.cache.store_measurement(spec.key, meas.clone());
         meas
     }
 
-    /// Receive the next finished pool job (any request).
+    /// Receive the next finished pool job (any request of this tenant).
     pub(crate) fn recv_done(&self) -> Done {
         self.pool.recv()
     }
@@ -608,6 +726,35 @@ mod tests {
     }
 
     #[test]
+    fn residual_mode_serves_odd_sizes_on_one_pe() {
+        let n = 10;
+        let a = Mat::random(n, n, 74);
+        let b = Mat::random(n, n, 75);
+        let c = Mat::random(n, n, 76);
+        let mut co = Coordinator::new(CoordinatorConfig {
+            ae: AeLevel::Ae5,
+            b: 2,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+            residual: true,
+            ..CoordinatorConfig::default()
+        });
+        let r = co.dgemm(&a, &b, &c);
+        let want = crate::blas::level3::dgemm_ref(&a, &b, &c);
+        let err = crate::util::rel_fro_error(r.c.as_slice(), want.as_slice());
+        assert!(err < 1e-12, "residual DGEMM wrong: {err}");
+        assert_eq!(r.tiles.len(), 1, "residual path is single-PE");
+        assert!(r.makespan > 0);
+        assert!(r.energy_j > 0.0);
+        // Aligned shapes still take the tiled path in residual mode.
+        let n = 8;
+        let a = Mat::random(n, n, 80);
+        let b = Mat::random(n, n, 81);
+        let r = co.dgemm(&a, &b, &Mat::zeros(n, n));
+        assert_eq!(r.tiles.len(), 4, "aligned shapes must stay tiled");
+    }
+
+    #[test]
     fn bigger_array_is_faster() {
         let n = 48;
         let a = Mat::random(n, n, 76);
@@ -663,6 +810,9 @@ mod tests {
         assert_eq!(s.misses, 1, "one shape must emit exactly one program: {s:?}");
         assert_eq!(s.hits, 2, "repeats must hit: {s:?}");
         assert_eq!(co.pool_size(), 4);
+        // Standalone: the tenant slice and the shared totals coincide.
+        assert_eq!(s, co.shared_cache_stats());
+        assert_eq!(co.pool_job_counts(), co.shared_pool_job_counts());
     }
 
     #[test]

@@ -1,39 +1,43 @@
-//! Persistent worker pool of the serving engine.
+//! Persistent worker pool of the serving engine — shared, multi-tenant.
 //!
 //! The seed coordinator spawned `b×b` fresh host threads (and allocated a
-//! fresh [`Pe`]) for every DGEMM request, and simulated every Level-1/2
-//! request inline on the dispatcher thread. This pool spawns the workers
-//! once per [`super::Coordinator`], feeds them jobs over a shared channel,
-//! and reuses each worker's `Pe` across kernels via [`Pe::reset`] — so a
-//! request stream pays only for simulation, and kernels of *independent*
-//! requests overlap (jobs are tagged with a `job_id` and collected by the
-//! dispatcher in any arrival order).
+//! fresh [`Pe`]) for every DGEMM request; PR 1–3 made the pool persistent
+//! and two-tier. This revision makes it **shared**: one [`PoolCore`]
+//! (spawned by the engine, or privately by a standalone
+//! [`super::Coordinator`]) serves any number of tenants, each through its
+//! own [`PoolClient`] lane:
 //!
-//! Every BLAS level flows through the same [`Job`] channel: DGEMM as
-//! per-tile kernels, DGEMV and the Level-1 routines as single-PE
-//! measurement kernels on the cached-program paths
-//! ([`measure_gemv_sched_on`] / [`measure_level1_sched_on`]). Values are
-//! resolved by the dispatcher; the pool burns the simulated cycles.
+//! * jobs are tenant-tagged — every client pushes onto its own lane of a
+//!   weighted round-robin [`WrrQueue`], so one tenant's flood cannot
+//!   starve another's traffic;
+//! * results are tenant-routed — every job carries its client's reply
+//!   sender, so a client only ever receives its own completions (and a
+//!   worker panic fails the *owning* tenant's request loudly while the
+//!   pool keeps serving everyone else);
+//! * execution is tenant-parameterized — the enhancement level comes from
+//!   the job's pre-decoded kernel and the exec mode from the submitting
+//!   client, so tenants at different AE levels share one worker fleet (a
+//!   worker keeps one reset-reused PE per level it has seen — at most 6 —
+//!   so per-job interleaving of mixed-AE tenants pays `Pe::reset`, not a
+//!   fresh allocation; a single-AE stream reuses one PE exactly as
+//!   before).
 //!
-//! Jobs carry [`ScheduledProgram`]s — already validated and pre-decoded by
-//! the program cache. In the default [`ExecMode::Replay`] a worker runs
-//! the full combined (value + timing) interpreter only the *first* time a
-//! program executes anywhere, memoizing its schedule; every later
-//! execution of that program — on any worker — is a lean value-only
-//! replay returning the memoized [`PeStats`]. [`ExecMode::Combined`]
-//! forces the full interpreter every time (the bench baseline).
+//! Per-kind execution counters are kept twice: pool-wide totals on the
+//! core and a per-tenant slice on each client — the tenant slices
+//! partition the totals exactly.
 //!
-//! Host-thread parallelism only: simulated timing comes from the per-kernel
-//! `PeStats` and the NoC transfer schedule, both of which are independent
-//! of which worker ran a job and in which order.
+//! Host-thread parallelism only: simulated timing comes from the
+//! per-kernel `PeStats` and the NoC transfer schedule, both independent of
+//! which worker ran a job and in which order.
 
 use crate::codegen::GemmLayout;
+use crate::engine::queue::WrrQueue;
 use crate::metrics::{measure_gemv_sched_on, measure_level1_sched_on, Measurement, Routine};
 use crate::pe::{AeLevel, ExecMode, ExecTier, Pe, PeConfig, PeStats, ScheduledProgram};
 use crate::util::Mat;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread;
 
 /// One unit of pooled work: a cached pre-decoded program plus what the
@@ -68,6 +72,16 @@ impl Job {
             Job::Level1 { job_id, routine, n, .. } => format!("job {job_id} {routine:?} n={n}"),
         }
     }
+
+    /// The enhancement level this job's kernel was decoded for — the level
+    /// the executing worker must configure its PE to.
+    fn ae(&self) -> AeLevel {
+        match self {
+            Job::GemmTile { sched, .. } | Job::Gemv { sched, .. } | Job::Level1 { sched, .. } => {
+                sched.ae()
+            }
+        }
+    }
 }
 
 /// Result of one pooled job.
@@ -78,12 +92,22 @@ pub(crate) enum Done {
     Measured { job_id: u64, meas: Measurement },
 }
 
-/// Worker → dispatcher message: a finished job, or a caught worker panic
-/// (re-raised on the dispatcher by [`WorkerPool::recv`], preserving the
-/// fail-loud behavior the scoped-thread design had).
+/// Worker → client message: a finished job, or a caught worker panic
+/// (re-raised on the owning client by [`PoolClient::recv`], preserving the
+/// fail-loud behavior the scoped-thread design had — scoped to the tenant
+/// that submitted the bad kernel).
 enum Msg {
     Done(Done),
     Panicked(String),
+}
+
+/// A job on the shared queue: the work plus its tenant context (exec mode,
+/// reply route, per-tenant counters).
+struct TaggedJob {
+    job: Job,
+    exec: ExecMode,
+    reply: mpsc::Sender<Msg>,
+    counts: Arc<Counters>,
 }
 
 /// Jobs executed so far, by kind. Incremented by the worker that ran the
@@ -97,7 +121,21 @@ struct Counters {
     combined_runs: AtomicU64,
 }
 
-/// Snapshot of the pool's per-kind execution counters.
+impl Counters {
+    fn snapshot(&self) -> PoolJobCounts {
+        PoolJobCounts {
+            gemm_tiles: self.gemm_tiles.load(Ordering::Relaxed),
+            gemv: self.gemv.load(Ordering::Relaxed),
+            level1: self.level1.load(Ordering::Relaxed),
+            replays: self.replays.load(Ordering::Relaxed),
+            combined_runs: self.combined_runs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Snapshot of per-kind execution counters — pool-wide from
+/// [`super::Coordinator::shared_pool_job_counts`], per-tenant from
+/// [`super::Coordinator::pool_job_counts`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct PoolJobCounts {
     /// DGEMM tile kernels run on pool workers.
@@ -114,35 +152,33 @@ pub struct PoolJobCounts {
     pub combined_runs: u64,
 }
 
-/// The pool: `size` workers, spawned once, fed over a shared queue.
-pub(crate) struct WorkerPool {
-    jobs: Option<mpsc::Sender<Job>>,
-    done_rx: mpsc::Receiver<Msg>,
+/// The shared pool: `size` workers, spawned once, fed from a weighted
+/// round-robin lane queue. Dropping the core closes the queue and joins
+/// the workers (the engine holds it inside the shared state, so this
+/// happens when the engine *and* every tenant handle are gone).
+pub(crate) struct PoolCore {
+    queue: Arc<WrrQueue<TaggedJob>>,
     workers: Vec<thread::JoinHandle<()>>,
     counts: Arc<Counters>,
 }
 
-impl WorkerPool {
-    /// Spawn `size` persistent workers simulating paper-configured PEs at
-    /// enhancement level `ae`, executing jobs in `exec` mode.
-    pub fn new(size: usize, ae: AeLevel, exec: ExecMode) -> Self {
+impl PoolCore {
+    /// Spawn `size` persistent workers.
+    pub fn new(size: usize) -> Self {
         assert!(size >= 1, "worker pool needs at least one worker");
-        let (jtx, jrx) = mpsc::channel::<Job>();
-        let (dtx, drx) = mpsc::channel::<Msg>();
-        let jrx = Arc::new(Mutex::new(jrx));
+        let queue = Arc::new(WrrQueue::new());
         let counts = Arc::new(Counters::default());
         let workers = (0..size)
             .map(|i| {
-                let jrx = Arc::clone(&jrx);
-                let dtx = dtx.clone();
+                let queue = Arc::clone(&queue);
                 let counts = Arc::clone(&counts);
                 thread::Builder::new()
                     .name(format!("pe-worker-{i}"))
-                    .spawn(move || worker_loop(ae, exec, jrx, dtx, counts))
+                    .spawn(move || worker_loop(queue, counts))
                     .expect("spawn pool worker")
             })
             .collect();
-        Self { jobs: Some(jtx), done_rx: drx, workers, counts }
+        Self { queue, workers, counts }
     }
 
     /// Number of persistent workers.
@@ -150,100 +186,142 @@ impl WorkerPool {
         self.workers.len()
     }
 
-    /// Jobs executed so far, by kind.
+    /// Pool-wide execution totals (all tenants).
     pub fn counts(&self) -> PoolJobCounts {
-        PoolJobCounts {
-            gemm_tiles: self.counts.gemm_tiles.load(Ordering::Relaxed),
-            gemv: self.counts.gemv.load(Ordering::Relaxed),
-            level1: self.counts.level1.load(Ordering::Relaxed),
-            replays: self.counts.replays.load(Ordering::Relaxed),
-            combined_runs: self.counts.combined_runs.load(Ordering::Relaxed),
-        }
+        self.counts.snapshot()
     }
 
-    /// Enqueue a job (returns immediately; results come via `recv`).
-    pub fn submit(&self, job: Job) {
-        self.jobs
-            .as_ref()
-            .expect("pool already shut down")
-            .send(job)
-            .expect("worker pool hung up");
-    }
-
-    /// Block for the next finished job, in arrival order across jobs.
-    /// A worker panic (caught in the worker loop) is re-raised here so a
-    /// bad kernel fails the request loudly instead of deadlocking it.
-    pub fn recv(&self) -> Done {
-        match self.done_rx.recv().expect("pool workers gone") {
-            Msg::Done(d) => d,
-            Msg::Panicked(msg) => panic!("pool worker panicked on {msg}"),
+    /// Open a tenant lane with fair-scheduler `weight`, executing this
+    /// tenant's kernels in `exec` mode.
+    pub fn client(&self, weight: u64, exec: ExecMode) -> PoolClient {
+        let lane = self.queue.add_lane(weight);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        PoolClient {
+            queue: Arc::clone(&self.queue),
+            lane,
+            exec,
+            reply_tx,
+            reply_rx,
+            counts: Arc::new(Counters::default()),
+            workers: self.workers.len(),
         }
     }
 }
 
-impl Drop for WorkerPool {
+impl Drop for PoolCore {
     fn drop(&mut self) {
-        // Closing the job channel makes every worker's recv() fail → exit.
-        drop(self.jobs.take());
+        // Closing the queue drains the backlog and then every worker's
+        // pop() returns None → exit.
+        self.queue.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-fn worker_loop(
-    ae: AeLevel,
+/// One tenant's handle into the shared pool: a private submission lane
+/// and a private completion channel. A client only ever receives results
+/// (or panics) of jobs it submitted itself.
+pub(crate) struct PoolClient {
+    queue: Arc<WrrQueue<TaggedJob>>,
+    lane: usize,
     exec: ExecMode,
-    jobs: Arc<Mutex<mpsc::Receiver<Job>>>,
-    done: mpsc::Sender<Msg>,
+    reply_tx: mpsc::Sender<Msg>,
+    reply_rx: mpsc::Receiver<Msg>,
     counts: Arc<Counters>,
-) {
-    // The worker's PE is created on the first job and reset()-reused after:
-    // a reset PE is bit-identical to a fresh one (see pe::core tests).
-    let mut pe: Option<Pe> = None;
-    loop {
-        // Hold the queue lock only while receiving; pickup is serialized,
-        // simulation is not.
-        let job = {
-            let guard = match jobs.lock() {
-                Ok(g) => g,
-                Err(_) => return, // a sibling worker panicked mid-recv
-            };
-            match guard.recv() {
-                Ok(j) => j,
-                Err(_) => return, // pool dropped: shut down
+    workers: usize,
+}
+
+impl PoolClient {
+    /// Enqueue a job on this tenant's lane (returns immediately; the
+    /// result comes back via [`PoolClient::recv`]).
+    pub fn submit(&self, job: Job) {
+        self.queue.push(
+            self.lane,
+            TaggedJob {
+                job,
+                exec: self.exec,
+                reply: self.reply_tx.clone(),
+                counts: Arc::clone(&self.counts),
+            },
+        );
+    }
+
+    /// Block for this tenant's next finished job, in completion order.
+    /// A worker panic on one of this tenant's kernels (caught in the
+    /// worker loop) is re-raised here, so a bad kernel fails the request
+    /// loudly instead of deadlocking it — without touching other tenants.
+    pub fn recv(&self) -> Done {
+        match self.reply_rx.recv().expect("pool workers gone") {
+            Msg::Done(d) => d,
+            Msg::Panicked(msg) => panic!("pool worker panicked on {msg}"),
+        }
+    }
+
+    /// Jobs executed for this tenant so far, by kind.
+    pub fn counts(&self) -> PoolJobCounts {
+        self.counts.snapshot()
+    }
+
+    /// Workers in the shared pool this client submits to.
+    pub fn worker_count(&self) -> usize {
+        self.workers
+    }
+}
+
+fn worker_loop(queue: Arc<WrrQueue<TaggedJob>>, totals: Arc<Counters>) {
+    // PEs are created lazily, one per enhancement level this worker has
+    // seen (at most 6), and reset()-reused across jobs — a reset PE is
+    // bit-identical to a fresh one (see pe::core tests). Keeping one PE
+    // per level matters under the engine: mixed-AE tenants round-robin
+    // per-job on one worker, and rebuilding the PE (LM + full state) on
+    // every level switch would charge that interleaving a fresh
+    // allocation per job.
+    let mut pes: Vec<(AeLevel, Pe)> = Vec::new();
+    while let Some(tagged) = queue.pop() {
+        let TaggedJob { job, exec, reply, counts } = tagged;
+        let what = job.describe();
+        let ae = job.ae();
+        let at = match pes.iter().position(|(held, _)| *held == ae) {
+            Some(at) => at,
+            None => {
+                pes.push((ae, Pe::new(PeConfig::paper(ae), 0)));
+                pes.len() - 1
             }
         };
-        let what = job.describe();
-        if pe.is_none() {
-            pe = Some(Pe::new(PeConfig::paper(ae), 0));
-        }
-        let p = pe.as_mut().expect("worker PE initialized above");
+        let p = &mut pes[at].1;
         // Catch kernel panics (codegen bugs, feature misuse) and report
-        // them: a silently-missing result would deadlock the dispatcher.
-        let unwind = std::panic::AssertUnwindSafe(|| run_job(p, ae, exec, job, &counts));
+        // them to the owning tenant: a silently-missing result would
+        // deadlock that tenant's dispatcher.
+        let unwind = std::panic::AssertUnwindSafe(|| run_job(p, exec, job, &totals, &counts));
         let outcome = std::panic::catch_unwind(unwind);
         let msg = match outcome {
             Ok(d) => Msg::Done(d),
             Err(payload) => {
-                pe = None; // state may be inconsistent; rebuild on next job
+                // State may be inconsistent; rebuild this level's PE on
+                // its next job.
+                pes.swap_remove(at);
                 Msg::Panicked(format!("{what}: {}", panic_message(payload)))
             }
         };
-        if done.send(msg).is_err() {
-            return; // dispatcher gone: shut down
-        }
+        // A dropped tenant is not a pool failure: keep serving the others.
+        let _ = reply.send(msg);
     }
 }
 
-/// Run one job on the worker's (reset-reused) PE.
-fn run_job(pe: &mut Pe, ae: AeLevel, exec: ExecMode, job: Job, counts: &Counters) -> Done {
+/// Run one job on the worker's (reset-reused) PE, tallying both the
+/// pool-wide and the owning tenant's counters.
+fn run_job(pe: &mut Pe, exec: ExecMode, job: Job, totals: &Counters, tenant: &Counters) -> Done {
+    let bump = |pick: fn(&Counters) -> &AtomicU64| {
+        pick(totals).fetch_add(1, Ordering::Relaxed);
+        pick(tenant).fetch_add(1, Ordering::Relaxed);
+    };
     // Count the tier the execution engine reports, not a prediction: a
     // worker that races another onto a fresh kernel may still replay if
     // the sibling's timing pass lands first.
-    let tally = |tier: ExecTier| match tier {
-        ExecTier::Replayed => counts.replays.fetch_add(1, Ordering::Relaxed),
-        ExecTier::Combined => counts.combined_runs.fetch_add(1, Ordering::Relaxed),
+    let tally_tier = |tier: ExecTier| match tier {
+        ExecTier::Replayed => bump(|c| &c.replays),
+        ExecTier::Combined => bump(|c| &c.combined_runs),
     };
     match job {
         Job::GemmTile { job_id, tile_idx, sched, layout, gm } => {
@@ -251,20 +329,21 @@ fn run_job(pe: &mut Pe, ae: AeLevel, exec: ExecMode, job: Job, counts: &Counters
             pe.write_gm(0, &gm);
             let (stats, tier) = sched.execute_traced(pe, exec);
             let out = layout.unpack_c(&pe.gm, layout.m, layout.p);
-            counts.gemm_tiles.fetch_add(1, Ordering::Relaxed);
-            tally(tier);
+            bump(|c| &c.gemm_tiles);
+            tally_tier(tier);
             Done::GemmTile { job_id, tile_idx, out, stats }
         }
         Job::Gemv { job_id, n, sched } => {
-            let (meas, tier) = measure_gemv_sched_on(pe, n, ae, &sched, exec);
-            counts.gemv.fetch_add(1, Ordering::Relaxed);
-            tally(tier);
+            let (meas, tier) = measure_gemv_sched_on(pe, n, sched.ae(), &sched, exec);
+            bump(|c| &c.gemv);
+            tally_tier(tier);
             Done::Measured { job_id, meas }
         }
         Job::Level1 { job_id, routine, n, alpha, sched } => {
-            let (meas, tier) = measure_level1_sched_on(pe, routine, n, alpha, ae, &sched, exec);
-            counts.level1.fetch_add(1, Ordering::Relaxed);
-            tally(tier);
+            let (meas, tier) =
+                measure_level1_sched_on(pe, routine, n, alpha, sched.ae(), &sched, exec);
+            bump(|c| &c.level1);
+            tally_tier(tier);
             Done::Measured { job_id, meas }
         }
     }
@@ -290,7 +369,10 @@ mod tests {
     use crate::util::rel_fro_error;
 
     fn gemm_job(job_id: u64, tile_idx: usize, n: usize, seed: u64) -> (Job, Mat) {
-        let ae = AeLevel::Ae5;
+        gemm_job_at(job_id, tile_idx, n, seed, AeLevel::Ae5)
+    }
+
+    fn gemm_job_at(job_id: u64, tile_idx: usize, n: usize, seed: u64, ae: AeLevel) -> (Job, Mat) {
         let a = Mat::random(n, n, seed);
         let b = Mat::random(n, n, seed + 1);
         let c = Mat::random(n, n, seed + 2);
@@ -304,18 +386,20 @@ mod tests {
 
     #[test]
     fn pool_runs_jobs_and_reuses_workers() {
-        let pool = WorkerPool::new(2, AeLevel::Ae5, ExecMode::Replay);
-        assert_eq!(pool.worker_count(), 2);
+        let core = PoolCore::new(2);
+        let client = core.client(1, ExecMode::Replay);
+        assert_eq!(core.worker_count(), 2);
+        assert_eq!(client.worker_count(), 2);
         // More jobs than workers forces PE reuse; mixed shapes force
         // reset() resizing.
         let mut wants = std::collections::HashMap::new();
         for (i, n) in [8usize, 12, 8, 16, 12, 8].into_iter().enumerate() {
             let (job, want) = gemm_job(i as u64, 0, n, 100 + i as u64);
             wants.insert(i as u64, want);
-            pool.submit(job);
+            client.submit(job);
         }
         for _ in 0..6 {
-            let (job_id, out, stats) = match pool.recv() {
+            let (job_id, out, stats) = match client.recv() {
                 Done::GemmTile { job_id, out, stats, .. } => (job_id, out, stats),
                 Done::Measured { .. } => panic!("no measurement submitted"),
             };
@@ -324,12 +408,13 @@ mod tests {
             assert!(err < 1e-12, "job {job_id}: err {err}");
             assert!(stats.cycles > 0);
         }
-        let counts = pool.counts();
+        let counts = client.counts();
         assert_eq!((counts.gemm_tiles, counts.gemv, counts.level1), (6, 0, 0));
         // Every job carried a distinct fresh ScheduledProgram here, so all
         // six executions were combined timing passes.
         assert_eq!(counts.combined_runs, 6);
         assert_eq!(counts.replays, 0);
+        assert_eq!(core.counts(), counts, "single client: totals equal the tenant slice");
     }
 
     #[test]
@@ -337,17 +422,16 @@ mod tests {
         // One ScheduledProgram shared by several jobs: only the first
         // execution pays the timing pass; later jobs replay values and
         // return identical stats and identical output.
-        let pool = WorkerPool::new(1, AeLevel::Ae5, ExecMode::Replay);
+        let core = PoolCore::new(1);
+        let client = core.client(1, ExecMode::Replay);
         let (first, want) = gemm_job(0, 0, 12, 500);
         let (sched, layout, gm) = match &first {
-            Job::GemmTile { sched, layout, gm, .. } => {
-                (Arc::clone(sched), *layout, gm.clone())
-            }
+            Job::GemmTile { sched, layout, gm, .. } => (Arc::clone(sched), *layout, gm.clone()),
             _ => unreachable!(),
         };
-        pool.submit(first);
+        client.submit(first);
         for id in 1..4u64 {
-            pool.submit(Job::GemmTile {
+            client.submit(Job::GemmTile {
                 job_id: id,
                 tile_idx: 0,
                 sched: Arc::clone(&sched),
@@ -357,7 +441,7 @@ mod tests {
         }
         let mut stats = Vec::new();
         for _ in 0..4 {
-            match pool.recv() {
+            match client.recv() {
                 Done::GemmTile { out, stats: st, .. } => {
                     let err = rel_fro_error(out.as_slice(), want.as_slice());
                     assert!(err < 1e-12, "replayed tile wrong: {err}");
@@ -367,29 +451,28 @@ mod tests {
             }
         }
         assert!(stats.windows(2).all(|w| w[0] == w[1]), "replay must return the memoized stats");
-        let counts = pool.counts();
+        let counts = client.counts();
         assert_eq!(counts.combined_runs, 1, "one worker → exactly one timing pass");
         assert_eq!(counts.replays, 3, "later executions replay");
     }
 
     #[test]
     fn combined_mode_never_replays() {
-        let pool = WorkerPool::new(1, AeLevel::Ae5, ExecMode::Combined);
+        let core = PoolCore::new(1);
+        let client = core.client(1, ExecMode::Combined);
         let (first, _) = gemm_job(0, 0, 8, 600);
         let (sched, layout, gm) = match &first {
-            Job::GemmTile { sched, layout, gm, .. } => {
-                (Arc::clone(sched), *layout, gm.clone())
-            }
+            Job::GemmTile { sched, layout, gm, .. } => (Arc::clone(sched), *layout, gm.clone()),
             _ => unreachable!(),
         };
-        pool.submit(first);
-        pool.submit(Job::GemmTile { job_id: 1, tile_idx: 0, sched, layout, gm });
-        let (a, b) = match (pool.recv(), pool.recv()) {
+        client.submit(first);
+        client.submit(Job::GemmTile { job_id: 1, tile_idx: 0, sched, layout, gm });
+        let (a, b) = match (client.recv(), client.recv()) {
             (Done::GemmTile { stats: a, .. }, Done::GemmTile { stats: b, .. }) => (a, b),
             _ => panic!("no measurement submitted"),
         };
         assert_eq!(a, b, "combined re-runs must reproduce the schedule");
-        let counts = pool.counts();
+        let counts = client.counts();
         assert_eq!((counts.combined_runs, counts.replays), (2, 0));
     }
 
@@ -398,15 +481,16 @@ mod tests {
         // A pooled DGEMV/Level-1 kernel must return exactly the inline
         // measurement (the pool only moves where the simulation runs).
         let ae = AeLevel::Ae5;
-        let pool = WorkerPool::new(2, ae, ExecMode::Replay);
+        let core = PoolCore::new(2);
+        let client = core.client(1, ExecMode::Replay);
         let n = 16;
         let gprog = gen_gemv(n, ae, &VecLayout::gemv(n));
         let want = measure_gemv_prog(n, ae, &gprog);
         let gsched = Arc::new(ScheduledProgram::compile(&gprog, ae).expect("gemv decodes"));
-        pool.submit(Job::Gemv { job_id: 7, n, sched: gsched });
+        client.submit(Job::Gemv { job_id: 7, n, sched: gsched });
         let lprog = crate::codegen::gen_ddot(n, ae, &VecLayout::level1(n));
         let lsched = Arc::new(ScheduledProgram::compile(&lprog, ae).expect("ddot decodes"));
-        pool.submit(Job::Level1 {
+        client.submit(Job::Level1 {
             job_id: 8,
             routine: Routine::Ddot,
             n,
@@ -415,7 +499,7 @@ mod tests {
         });
         let mut got = Vec::new();
         for _ in 0..2 {
-            match pool.recv() {
+            match client.recv() {
                 Done::Measured { job_id, meas } => got.push((job_id, meas)),
                 Done::GemmTile { .. } => panic!("no tile submitted"),
             }
@@ -427,36 +511,117 @@ mod tests {
         assert_eq!(got[1].0, 8);
         assert_eq!(got[1].1.routine, Routine::Ddot);
         assert!(got[1].1.latency() > 0);
-        let counts = pool.counts();
+        let counts = client.counts();
         assert_eq!((counts.gemv, counts.level1, counts.gemm_tiles), (1, 1, 0));
     }
 
     #[test]
+    fn clients_only_receive_their_own_results_and_counts_partition() {
+        // Two tenants on one shared pool: completions route to the
+        // submitting client, and the per-tenant counters sum to the
+        // pool-wide totals.
+        let core = PoolCore::new(2);
+        let a = core.client(1, ExecMode::Replay);
+        let b = core.client(2, ExecMode::Replay);
+        let (ja, want_a) = gemm_job(10, 0, 8, 700);
+        let (jb, want_b) = gemm_job(20, 0, 12, 800);
+        a.submit(ja);
+        b.submit(jb);
+        let got_a = match a.recv() {
+            Done::GemmTile { job_id, out, .. } => {
+                assert_eq!(job_id, 10, "client a got a foreign job");
+                out
+            }
+            Done::Measured { .. } => panic!("no measurement submitted"),
+        };
+        let got_b = match b.recv() {
+            Done::GemmTile { job_id, out, .. } => {
+                assert_eq!(job_id, 20, "client b got a foreign job");
+                out
+            }
+            Done::Measured { .. } => panic!("no measurement submitted"),
+        };
+        assert!(rel_fro_error(got_a.as_slice(), want_a.as_slice()) < 1e-12);
+        assert!(rel_fro_error(got_b.as_slice(), want_b.as_slice()) < 1e-12);
+        let (ca, cb, total) = (a.counts(), b.counts(), core.counts());
+        assert_eq!(ca.gemm_tiles + cb.gemm_tiles, total.gemm_tiles);
+        assert_eq!((ca.gemm_tiles, cb.gemm_tiles), (1, 1));
+    }
+
+    #[test]
+    fn mixed_ae_clients_share_one_worker() {
+        // One worker serving kernels decoded for different AE levels must
+        // swap PE configurations per job and still return exactly the
+        // per-level reference values.
+        let core = PoolCore::new(1);
+        let lo = core.client(1, ExecMode::Replay);
+        let hi = core.client(1, ExecMode::Replay);
+        for round in 0..2u64 {
+            let (j0, want0) = gemm_job_at(round, 0, 8, 900 + round, AeLevel::Ae0);
+            let (j5, want5) = gemm_job_at(round, 0, 8, 950 + round, AeLevel::Ae5);
+            lo.submit(j0);
+            hi.submit(j5);
+            let out0 = match lo.recv() {
+                Done::GemmTile { out, .. } => out,
+                Done::Measured { .. } => panic!("no measurement submitted"),
+            };
+            let out5 = match hi.recv() {
+                Done::GemmTile { out, .. } => out,
+                Done::Measured { .. } => panic!("no measurement submitted"),
+            };
+            assert!(rel_fro_error(out0.as_slice(), want0.as_slice()) < 1e-12, "AE0 job wrong");
+            assert!(rel_fro_error(out5.as_slice(), want5.as_slice()) < 1e-12, "AE5 job wrong");
+        }
+    }
+
+    #[test]
     fn drop_joins_idle_workers() {
-        let pool = WorkerPool::new(3, AeLevel::Ae2, ExecMode::Replay);
-        drop(pool); // must not hang
+        let core = PoolCore::new(3);
+        let _client = core.client(1, ExecMode::Replay);
+        drop(core); // must not hang
+    }
+
+    /// A Level-1 job whose schedule belongs to a *different* routine: the
+    /// worker-side numeric cross-check panics deterministically.
+    fn poison_job(job_id: u64) -> Job {
+        let ae = AeLevel::Ae5;
+        let n = 16;
+        let prog = crate::codegen::gen_daxpy(n, 1.5, ae, &VecLayout::level1(n));
+        let sched = Arc::new(ScheduledProgram::compile(&prog, ae).expect("daxpy decodes"));
+        Job::Level1 { job_id, routine: Routine::Ddot, n, alpha: 1.5, sched }
     }
 
     #[test]
     #[should_panic(expected = "pool worker panicked")]
     fn worker_panic_propagates_instead_of_deadlocking() {
-        use crate::pe::{Instr, Program};
-        // A kernel decoded for AE5 submitted to an AE1 pool trips the
-        // decoded-level assert inside the worker; recv() must re-raise it
-        // rather than block forever.
-        let pool = WorkerPool::new(1, AeLevel::Ae1, ExecMode::Replay);
-        let layout = GemmLayout::rect(4, 4, 4);
-        let mut prog = Program::new();
-        prog.push(Instr::Dot { rd: 0, ra: 16, rb: 32, n: 4, acc: false });
-        prog.push(Instr::Halt);
-        let sched = ScheduledProgram::compile(&prog, AeLevel::Ae5).expect("valid for AE5");
-        pool.submit(Job::GemmTile {
-            job_id: 0,
-            tile_idx: 0,
-            sched: Arc::new(sched),
-            layout,
-            gm: vec![0.0; layout.gm_words()],
-        });
-        let _ = pool.recv();
+        let core = PoolCore::new(1);
+        let client = core.client(1, ExecMode::Replay);
+        client.submit(poison_job(0));
+        let _ = client.recv();
+    }
+
+    #[test]
+    fn worker_panic_is_scoped_to_the_owning_client() {
+        // Tenant `bad` submits a poisoned kernel; tenant `good`'s traffic
+        // must keep flowing on the same (single) worker.
+        let core = PoolCore::new(1);
+        let bad = core.client(1, ExecMode::Replay);
+        let good = core.client(1, ExecMode::Replay);
+        bad.submit(poison_job(1));
+        let n = 16;
+        let ae = AeLevel::Ae5;
+        let gprog = gen_gemv(n, ae, &VecLayout::gemv(n));
+        let want = measure_gemv_prog(n, ae, &gprog);
+        let gsched = Arc::new(ScheduledProgram::compile(&gprog, ae).expect("gemv decodes"));
+        good.submit(Job::Gemv { job_id: 2, n, sched: gsched });
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| bad.recv()));
+        assert!(res.is_err(), "bad client must see its worker panic");
+        match good.recv() {
+            Done::Measured { job_id, meas } => {
+                assert_eq!(job_id, 2);
+                assert_eq!(meas.latency(), want.latency(), "good client served after panic");
+            }
+            Done::GemmTile { .. } => panic!("no tile submitted"),
+        }
     }
 }

@@ -7,23 +7,26 @@
 //! * [`Coordinator::serve`] — strictly sequential (one request fully
 //!   completes before the next starts), kept as the reference semantics;
 //! * [`Coordinator::serve_batch`] — the serving-engine path: requests are
-//!   admitted up to a bounded **admission window**, their kernels (DGEMM
-//!   tiles *and* Level-1/2 measurement kernels) staged on the persistent
-//!   worker pool, and responses finalized in submission order as results
-//!   drain — so kernels of independent requests overlap while huge batches
-//!   never hold more than `window` requests' packed operands in memory.
-//!   Identical in-flight Level-1/2 kernels are shared, not duplicated.
-//!   Responses are value-, cycle- and energy-identical to `serve_one`
-//!   (pinned by tests).
+//!   admitted up to a bounded **admission window** (request count, and
+//!   optionally a **byte budget** over the packed GM images staged
+//!   requests pin — [`CoordinatorConfig::admission_bytes`]), their kernels
+//!   (DGEMM tiles *and* Level-1/2 measurement kernels) staged on the
+//!   persistent worker pool, and responses finalized in submission order
+//!   as results drain — so kernels of independent requests overlap while
+//!   huge batches never hold more than the window's worth of packed
+//!   operands in memory. Identical in-flight Level-1/2 kernels are shared,
+//!   not duplicated. Responses are value-, cycle- and energy-identical to
+//!   `serve_one` (pinned by tests).
 
 use super::pool::Done;
 use super::{
-    seal_slots, Coordinator, DgemmResult, MeasSpec, PendingDgemm, ProgramKey, TileSlots,
-    ValueSource,
+    seal_slots, Coordinator, CoordinatorConfig, DgemmResult, MeasSpec, PendingDgemm, ProgramKey,
+    TileSlots, ValueSource,
 };
+use crate::codegen::layout::VecLayout;
 use crate::metrics::{Measurement, Routine};
 use crate::pe::AeLevel;
-use crate::util::{Mat, XorShift64};
+use crate::util::{round_up, Mat, XorShift64};
 use std::collections::hash_map::Entry;
 use std::collections::{HashMap, VecDeque};
 
@@ -83,6 +86,35 @@ impl Request {
     }
 }
 
+impl CoordinatorConfig {
+    /// Packed GM bytes request `req` pins while staged on a coordinator
+    /// with this configuration: the b² tile images a DGEMM holds on the
+    /// job queue (or the single residual image in residual mode), or the
+    /// worker-side kernel image of a Level-1/2 measurement. A pure
+    /// function of the shape (8 bytes per GM word), so admission can price
+    /// a request *before* materializing its operands — the currency of
+    /// [`CoordinatorConfig::admission_bytes`].
+    pub fn staged_bytes(&self, req: &Request) -> u64 {
+        let n = req.n();
+        let words = match req {
+            Request::Dgemm { .. } | Request::RandomDgemm { .. } => {
+                if self.residual_eligible(n) {
+                    3 * n * n
+                } else {
+                    let np = round_up(n, 4 * self.b);
+                    let m = np / self.b;
+                    self.b * self.b * (m * np + np * m + m * m)
+                }
+            }
+            Request::Dgemv { .. } => VecLayout::gemv(round_up(n, 4)).gm_words(),
+            Request::Ddot { .. } | Request::Daxpy { .. } | Request::Dnrm2 { .. } => {
+                VecLayout::level1(round_up(n.max(4), 4)).gm_words()
+            }
+        };
+        8 * words as u64
+    }
+}
+
 /// Response: scalar/vector/matrix value + cost accounting.
 #[derive(Debug)]
 pub struct Response {
@@ -107,6 +139,11 @@ pub struct BatchStats {
     /// Peak number of requests staged (admitted, not yet finalized) at
     /// once — bounded by [`super::CoordinatorConfig::admission_window`].
     pub peak_staged: usize,
+    /// Peak packed GM bytes pinned by staged requests at once (priced by
+    /// [`CoordinatorConfig::staged_bytes`]) — bounded by
+    /// [`super::CoordinatorConfig::admission_bytes`], except that a single
+    /// request whose image alone exceeds the budget still stages (alone).
+    pub peak_staged_bytes: u64,
     /// Requests that attached to an identical in-flight measurement kernel
     /// instead of submitting a duplicate.
     pub shared_measurements: usize,
@@ -140,6 +177,16 @@ fn meas_spec(req: &Request, ae: AeLevel) -> MeasSpec {
     }
 }
 
+/// Byte-budget admission rule: an empty window always admits (an oversized
+/// request must not wedge the batch); otherwise the staged total may not
+/// exceed the budget. `None` = unbudgeted.
+fn admits_bytes(budget: Option<u64>, window_empty: bool, staged: u64, next: u64) -> bool {
+    match budget {
+        Some(b) => window_empty || staged + next <= b,
+        None => true,
+    }
+}
+
 /// A DGEMM request whose tiles are on the pool, waiting to be merged.
 struct InFlight {
     pending: PendingDgemm,
@@ -166,13 +213,21 @@ impl Slot {
     }
 }
 
+/// An admitted, unfinalized request: its id, the packed bytes it pins
+/// (admission accounting), and its completion slot.
+struct Staged {
+    id: u64,
+    bytes: u64,
+    slot: Slot,
+}
+
 /// The in-flight slot of request `id` (ids are issued in submission order,
 /// so the deque is sorted by id).
-fn slot_mut(inflight: &mut VecDeque<(u64, Slot)>, id: u64) -> &mut Slot {
+fn slot_mut(inflight: &mut VecDeque<Staged>, id: u64) -> &mut Slot {
     let at = inflight
-        .binary_search_by_key(&id, |(i, _)| *i)
+        .binary_search_by_key(&id, |s| s.id)
         .unwrap_or_else(|_| panic!("pool result for request {id} not in flight"));
-    &mut inflight[at].1
+    &mut inflight[at].slot
 }
 
 impl Coordinator {
@@ -232,20 +287,24 @@ impl Coordinator {
     }
 
     /// Serve a batch with cross-request pipelining under a bounded
-    /// admission window. Up to `admission_window` requests are staged at
-    /// once: every DGEMM's tile jobs and every Level-1/2 measurement kernel
-    /// go to the persistent pool, identical in-flight measurements are
-    /// shared, and responses are finalized in submission order as the
-    /// oldest request completes (freeing its admission slot). Responses
-    /// match `serve_one`-in-a-loop exactly (values, cycles and energy —
+    /// admission window. Up to `admission_window` requests — and, when
+    /// `admission_bytes` is set, at most that many bytes of packed GM
+    /// images — are staged at once: every DGEMM's tile jobs and every
+    /// Level-1/2 measurement kernel go to the persistent pool, identical
+    /// in-flight measurements are shared, and responses are finalized in
+    /// submission order as the oldest request completes (freeing its
+    /// admission slot and its byte budget). Responses match
+    /// `serve_one`-in-a-loop exactly (values, cycles and energy —
     /// simulated timing is independent of host scheduling).
     pub fn serve_batch(&mut self, reqs: Vec<Request>) -> Vec<Response> {
         let window = self.cfg.admission_window.unwrap_or(usize::MAX).max(1);
+        let budget = self.cfg.admission_bytes;
         let total = reqs.len();
         let mut queue = reqs.into_iter().peekable();
         let mut next_id: u64 = 0;
         // Admitted, unfinalized requests in submission order.
-        let mut inflight: VecDeque<(u64, Slot)> = VecDeque::new();
+        let mut inflight: VecDeque<Staged> = VecDeque::new();
+        let mut staged_bytes: u64 = 0;
         // Key → ids waiting on an in-flight measurement; id → its key.
         let mut waiting: HashMap<ProgramKey, Vec<u64>> = HashMap::new();
         let mut submitted: HashMap<u64, ProgramKey> = HashMap::new();
@@ -253,26 +312,41 @@ impl Coordinator {
         let mut resps: Vec<Response> = Vec::with_capacity(total);
 
         while resps.len() < total {
-            // Admit requests up to the window.
+            // Admit requests up to the window and the byte budget.
             while inflight.len() < window {
-                let Some(req) = queue.next() else { break };
+                let Some(next) = queue.peek() else { break };
+                let bytes = self.cfg.staged_bytes(next);
+                if !admits_bytes(budget, inflight.is_empty(), staged_bytes, bytes) {
+                    break;
+                }
+                let req = queue.next().expect("peeked above");
                 let id = next_id;
                 next_id += 1;
                 let slot =
                     self.stage(id, req.materialize(), &mut waiting, &mut submitted, &mut stats);
-                inflight.push_back((id, slot));
+                inflight.push_back(Staged { id, bytes, slot });
+                staged_bytes += bytes;
                 stats.peak_staged = stats.peak_staged.max(inflight.len());
+                stats.peak_staged_bytes = stats.peak_staged_bytes.max(staged_bytes);
             }
 
             // Finalize completed requests from the front, in submission
-            // order, freeing admission slots.
-            while inflight.front().is_some_and(|(_, s)| s.complete()) {
-                let (_, slot) = inflight.pop_front().expect("front checked above");
-                resps.push(self.finalize(slot));
+            // order, freeing admission slots and budget.
+            while inflight.front().is_some_and(|s| s.slot.complete()) {
+                let staged = inflight.pop_front().expect("front checked above");
+                staged_bytes -= staged.bytes;
+                resps.push(self.finalize(staged.slot));
             }
-            // Refill freed slots before blocking, so the pool stays busy.
-            if inflight.len() < window && queue.peek().is_some() {
-                continue;
+            // Refill freed slots before blocking, so the pool stays busy —
+            // but only if the next request actually fits the byte budget
+            // (otherwise we must block for completions to free budget).
+            if inflight.len() < window {
+                if let Some(next) = queue.peek() {
+                    let bytes = self.cfg.staged_bytes(next);
+                    if admits_bytes(budget, inflight.is_empty(), staged_bytes, bytes) {
+                        continue;
+                    }
+                }
             }
             if inflight.is_empty() {
                 continue; // batch drained (loop condition exits)
@@ -292,7 +366,7 @@ impl Coordinator {
                 }
                 Done::Measured { job_id, meas } => {
                     let key = submitted.remove(&job_id).expect("measurement without a key");
-                    self.cache.store_measurement(key, meas.clone());
+                    self.cache().store_measurement(key, meas.clone());
                     for id in waiting.remove(&key).unwrap_or_default() {
                         match slot_mut(&mut inflight, id) {
                             Slot::Meas { meas: m, .. } => *m = Some(Box::new(meas.clone())),
@@ -326,14 +400,14 @@ impl Coordinator {
             Request::RandomDgemm { .. } => unreachable!("materialize() resolved synthetics"),
             other => {
                 let spec = meas_spec(&other, self.cfg.ae);
-                let meas = self.cache.cached_measurement(&spec.key);
+                let meas = self.cached_measurement_tallied(&spec.key);
                 if meas.is_none() {
                     match waiting.entry(spec.key) {
                         Entry::Occupied(mut e) => {
                             // An identical kernel is in flight: attach
                             // instead of duplicating the simulation. Counts
                             // as a warm hit, as it would sequentially.
-                            self.cache.record_hit();
+                            self.record_cache_hit();
                             stats.shared_measurements += 1;
                             e.get_mut().push(id);
                         }
@@ -347,6 +421,16 @@ impl Coordinator {
                 Slot::Meas { req: other, meas: meas.map(Box::new) }
             }
         }
+    }
+
+    /// Memoized-measurement lookup charged to this tenant's tally.
+    fn cached_measurement_tallied(&self, key: &ProgramKey) -> Option<Measurement> {
+        self.cache().cached_measurement_for(key, Some(&self.tally))
+    }
+
+    /// Record an in-flight-shared kernel as a warm hit on this tenant.
+    fn record_cache_hit(&self) {
+        self.cache().record_hit(Some(&self.tally));
     }
 
     /// Merge one completed slot into its response.
@@ -450,6 +534,25 @@ mod tests {
         let r = Request::Dnrm2 { x: vec![0.0; 5] };
         assert_eq!(r.name(), "dnrm2");
         assert_eq!(r.n(), 5);
+    }
+
+    #[test]
+    fn staged_bytes_prices_shapes_not_values() {
+        let cfg = CoordinatorConfig { ae: AeLevel::Ae5, b: 2, ..CoordinatorConfig::default() };
+        // A 16×16 DGEMM on a 2×2 array: 4 tiles of (8·16 + 16·8 + 8·8)
+        // words = 4 · 320 · 8 bytes.
+        let dgemm = Request::RandomDgemm { n: 16, seed: 1 };
+        assert_eq!(cfg.staged_bytes(&dgemm), 4 * 320 * 8);
+        // Synthetic and concrete requests of the same shape price equally.
+        let conc = dgemm.clone().materialize();
+        assert_eq!(cfg.staged_bytes(&conc), cfg.staged_bytes(&dgemm));
+        // Level-1: x | y | 4 scratch words.
+        let ddot = Request::Ddot { x: vec![0.0; 16], y: vec![0.0; 16] };
+        assert_eq!(cfg.staged_bytes(&ddot), (16 + 16 + 4) * 8);
+        // Residual mode prices the unpadded single-PE image.
+        let rcfg = CoordinatorConfig { residual: true, ..cfg };
+        let odd = Request::RandomDgemm { n: 10, seed: 2 };
+        assert_eq!(rcfg.staged_bytes(&odd), 3 * 100 * 8);
     }
 
     #[test]

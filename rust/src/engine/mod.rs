@@ -1,0 +1,193 @@
+//! Process-wide multi-tenant serving engine.
+//!
+//! The paper's scalability story (§5.5) attaches many PEs to one REDEFINE
+//! fabric and serves whatever work arrives; the serving-side analogue is
+//! **one resident runtime amortized across callers** (the KBLAS /
+//! persistent-kernel approach). This module is that resident runtime: an
+//! [`Engine`] owns exactly one process-wide pool of PE workers and one
+//! shared [`ProgramCache`], and hands out per-tenant
+//! [`Coordinator`] handles ([`Engine::tenant`]) that keep the whole
+//! existing coordinator API while routing through the shared resources.
+//!
+//! What sharing buys:
+//! * **warm kernels cross tenants** — a `ScheduledProgram` emitted,
+//!   decoded and timing-scheduled for one tenant replays for every other
+//!   tenant requesting the same (routine, shape, AE) key;
+//! * **one worker fleet** — PE simulations from all tenants interleave on
+//!   the same host threads instead of every coordinator spawning its own;
+//! * **fair scheduling** — per-tenant submission lanes drained by weighted
+//!   round-robin, so one tenant's large DGEMM batch cannot starve another
+//!   tenant's Level-1 traffic (see `queue`).
+//!
+//! Accounting splits both ways: the engine reports shared totals
+//! ([`Engine::cache_stats`], [`Engine::pool_job_counts`]) while every
+//! tenant coordinator reports its own slice
+//! ([`Coordinator::cache_stats`], [`Coordinator::pool_job_counts`]).
+//!
+//! A standalone [`Coordinator::new`] builds a private single-tenant engine
+//! under the hood, so its behavior (dispatch order, stats, values, cycles,
+//! energy) is unchanged — pinned by the serving tests.
+
+pub(crate) mod queue;
+
+use crate::coordinator::cache::ProgramCache;
+use crate::coordinator::pool::PoolCore;
+use crate::coordinator::{CacheStats, Coordinator, CoordinatorConfig, PoolJobCounts};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Number of persistent PE workers in the shared pool.
+    pub workers: usize,
+    /// LRU capacity of the shared program cache, in resident kernels
+    /// (`None` = unbounded). Tenant-level `cache_capacity` settings are
+    /// ignored under an engine — residency is a shared property.
+    pub cache_capacity: Option<usize>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { workers: 4, cache_capacity: None }
+    }
+}
+
+/// State shared by the engine and every tenant coordinator: the worker
+/// pool and the program cache. Reference-counted so the workers outlive
+/// the [`Engine`] value for as long as any tenant handle is alive; the
+/// last drop closes the job queue and joins the workers.
+pub(crate) struct EngineShared {
+    pub(crate) pool: PoolCore,
+    pub(crate) cache: ProgramCache,
+}
+
+/// The multi-tenant serving engine: one shared PE worker pool + one shared
+/// program cache behind per-tenant [`Coordinator`] handles.
+///
+/// ```no_run
+/// use redefine_blas::coordinator::CoordinatorConfig;
+/// use redefine_blas::engine::{Engine, EngineConfig};
+///
+/// let engine = Engine::new(EngineConfig { workers: 4, cache_capacity: None });
+/// let mut a = engine.tenant(CoordinatorConfig::default());
+/// let mut b = engine.tenant_weighted(CoordinatorConfig::default(), 3);
+/// // `a` and `b` serve through one pool and share warm kernels; `b` gets
+/// // up to 3 dispatch slots per scheduler round to `a`'s 1.
+/// ```
+pub struct Engine {
+    shared: Arc<EngineShared>,
+    tenants: AtomicUsize,
+}
+
+impl Engine {
+    /// Spawn the shared worker pool and build the shared program cache.
+    pub fn new(cfg: EngineConfig) -> Self {
+        let cache = match cfg.cache_capacity {
+            Some(cap) => ProgramCache::with_capacity(cap),
+            None => ProgramCache::new(),
+        };
+        let shared = Arc::new(EngineShared { pool: PoolCore::new(cfg.workers), cache });
+        Self { shared, tenants: AtomicUsize::new(0) }
+    }
+
+    /// Attach a tenant with scheduling weight 1. The returned
+    /// [`Coordinator`] exposes the full per-tenant API (serve loops,
+    /// BLAS entry points, stats) but executes on the shared pool and
+    /// shares the engine's program cache.
+    pub fn tenant(&self, cfg: CoordinatorConfig) -> Coordinator {
+        self.tenant_weighted(cfg, 1)
+    }
+
+    /// [`Engine::tenant`] with an explicit fair-scheduler weight: when
+    /// lanes contend, a weight-`w` tenant is offered up to `w` jobs per
+    /// round-robin round. Weight bounds *relative service rate*, not
+    /// priority — every backlogged tenant is served every round.
+    pub fn tenant_weighted(&self, cfg: CoordinatorConfig, weight: u64) -> Coordinator {
+        assert!(weight >= 1, "tenant weight must be at least 1");
+        self.tenants.fetch_add(1, Ordering::Relaxed);
+        Coordinator::attach(Arc::clone(&self.shared), cfg, weight)
+    }
+
+    /// Workers in the shared pool.
+    pub fn worker_count(&self) -> usize {
+        self.shared.pool.worker_count()
+    }
+
+    /// Tenant handles created so far (handles are never reclaimed — a
+    /// dropped tenant just leaves an empty scheduler lane).
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.load(Ordering::Relaxed)
+    }
+
+    /// Shared program-cache totals across every tenant. The per-tenant
+    /// slices ([`Coordinator::cache_stats`]) partition these hit/miss/
+    /// eviction counters exactly.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.shared.cache.stats()
+    }
+
+    /// Shared pool execution totals across every tenant.
+    pub fn pool_job_counts(&self) -> PoolJobCounts {
+        self.shared.pool.counts()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pe::AeLevel;
+    use crate::util::Mat;
+
+    fn cfg(ae: AeLevel, b: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            ae,
+            b,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+            ..CoordinatorConfig::default()
+        }
+    }
+
+    #[test]
+    fn engine_reports_workers_and_tenants() {
+        let engine = Engine::new(EngineConfig { workers: 3, cache_capacity: None });
+        assert_eq!(engine.worker_count(), 3);
+        assert_eq!(engine.tenant_count(), 0);
+        let _a = engine.tenant(cfg(AeLevel::Ae5, 2));
+        let _b = engine.tenant_weighted(cfg(AeLevel::Ae2, 1), 4);
+        assert_eq!(engine.tenant_count(), 2);
+    }
+
+    #[test]
+    fn tenants_share_the_program_cache() {
+        let engine = Engine::new(EngineConfig { workers: 2, cache_capacity: None });
+        let mut a = engine.tenant(cfg(AeLevel::Ae5, 2));
+        let mut b = engine.tenant(cfg(AeLevel::Ae5, 2));
+        let n = 16;
+        let (x, y, z) = (Mat::random(n, n, 1), Mat::random(n, n, 2), Mat::zeros(n, n));
+        let ra = a.dgemm(&x, &y, &z);
+        let rb = b.dgemm(&x, &y, &z);
+        // Same shape, same AE: identical simulated cost either way, and
+        // the second tenant never re-emits the kernel.
+        assert_eq!(ra.makespan, rb.makespan);
+        let shared = engine.cache_stats();
+        assert_eq!(shared.misses, 1, "one emission serves both tenants: {shared:?}");
+        assert_eq!(b.cache_stats().misses, 0, "tenant b must ride tenant a's kernel");
+    }
+
+    #[test]
+    fn pool_outlives_the_engine_value() {
+        let mut tenant = {
+            let engine = Engine::new(EngineConfig { workers: 2, cache_capacity: None });
+            engine.tenant(cfg(AeLevel::Ae4, 2))
+        };
+        // The engine value is gone; the shared pool must still serve.
+        let n = 8;
+        let (x, y, z) = (Mat::random(n, n, 3), Mat::random(n, n, 4), Mat::zeros(n, n));
+        let r = tenant.dgemm(&x, &y, &z);
+        let want = crate::blas::level3::dgemm_ref(&x, &y, &z);
+        let err = crate::util::rel_fro_error(r.c.as_slice(), want.as_slice());
+        assert!(err < 1e-12, "post-engine-drop DGEMM wrong: {err}");
+    }
+}

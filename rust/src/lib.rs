@@ -22,6 +22,9 @@
 //! * [`runtime`] / [`coordinator`] — the L3 co-simulation stack: values
 //!   from AOT-compiled XLA artifacts (PJRT), timing from the PE/NoC
 //!   simulators, Python never on the request path;
+//! * [`engine`] — the process-wide multi-tenant serving engine: one shared
+//!   PE worker pool + one shared program cache behind per-tenant
+//!   coordinator handles, with weighted-fair scheduling across tenants;
 //! * [`metrics`] — CPF/FPC/Gflops-per-watt accounting and table printers.
 
 pub mod blas;
@@ -29,6 +32,7 @@ pub mod codegen;
 pub mod coordinator;
 pub mod dag;
 pub mod energy;
+pub mod engine;
 pub mod lapack;
 pub mod metrics;
 pub mod noc;

@@ -4,11 +4,13 @@
 //! crate closure — no clap). Subcommands:
 //!
 //! ```text
-//! redefine gemm  --n 64 [--b 2] [--ae 5] [--artifacts DIR]
+//! redefine gemm  --n 64 [--b 2] [--ae 5] [--artifacts DIR] [--residual]
 //! redefine gemv  --n 64 [--ae 5]
 //! redefine ddot  --n 1024 [--ae 5]
 //! redefine serve --requests 16 --max-n 64 [--b 2] [--ae 5] [--seq]
-//!                [--window W] [--cache-cap N] [--exec replay|combined]
+//!                [--window W] [--window-bytes BYTES] [--cache-cap N]
+//!                [--exec replay|combined] [--residual]
+//!                [--tenants N [--weights w1,w2,...]]
 //! redefine sweep                       # Tables 4-9 summary
 //! redefine artifacts [--artifacts DIR] # list loadable artifacts
 //! ```
@@ -17,13 +19,20 @@
 //! through the program cache and the persistent worker pool
 //! (`serve_batch`); `--seq` falls back to the strictly sequential
 //! reference loop. `--window W` bounds how many requests are staged in
-//! flight at once (backpressure for huge batches); `--cache-cap N` caps
-//! the program cache at N resident kernels (LRU eviction); `--exec
-//! combined` disables the two-tier value-replay fast path (every kernel
-//! re-runs the full cycle-accurate interpreter — the baseline the replay
-//! path is benchmarked against).
+//! flight at once and `--window-bytes B` additionally bounds the packed
+//! GM bytes they pin (backpressure for huge batches); `--cache-cap N`
+//! caps the program cache at N resident kernels (LRU eviction); `--exec
+//! combined` disables the two-tier value-replay fast path; `--residual`
+//! serves non-4-aligned DGEMMs on the cached DOT2/3 residual kernel
+//! instead of padding.
+//!
+//! `serve --tenants N` runs the **multi-tenant engine**: one shared
+//! worker pool + one shared program cache serve N concurrent tenants
+//! (cycling enhancement levels AE0–AE5) under a weighted fair scheduler
+//! (`--weights`), reporting per-tenant and aggregate statistics.
 
 use redefine_blas::coordinator::{request::random_workload, Coordinator, CoordinatorConfig};
+use redefine_blas::engine::{Engine, EngineConfig};
 use redefine_blas::metrics::{gemm_sweep, PAPER_SIZES};
 use redefine_blas::pe::{AeLevel, ExecMode, PeConfig};
 use redefine_blas::util::{Mat, XorShift64};
@@ -33,7 +42,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: redefine <gemm|gemv|ddot|serve|sweep|artifacts> [--n N] [--b B] \
          [--ae 0..5] [--requests K] [--max-n N] [--artifacts DIR] [--seq] \
-         [--window W] [--cache-cap N] [--exec replay|combined]"
+         [--window W] [--window-bytes BYTES] [--cache-cap N] \
+         [--exec replay|combined] [--residual] [--tenants N] [--weights w1,w2,...]"
     );
     exit(2)
 }
@@ -49,8 +59,12 @@ struct Args {
     artifacts: String,
     seq: bool,
     window: Option<usize>,
+    window_bytes: Option<u64>,
     cache_cap: Option<usize>,
     exec: ExecMode,
+    residual: bool,
+    tenants: usize,
+    weights: Option<String>,
 }
 
 fn parse_args() -> Args {
@@ -66,8 +80,12 @@ fn parse_args() -> Args {
         artifacts: "artifacts".into(),
         seq: false,
         window: None,
+        window_bytes: None,
         cache_cap: None,
         exec: ExecMode::Replay,
+        residual: false,
+        tenants: 1,
+        weights: None,
     };
     while let Some(flag) = it.next() {
         let mut val = || it.next().unwrap_or_else(|| usage());
@@ -78,13 +96,22 @@ fn parse_args() -> Args {
             "--max-n" => a.max_n = val().parse().unwrap_or_else(|_| usage()),
             "--artifacts" => a.artifacts = val(),
             "--seq" => a.seq = true,
+            "--residual" => a.residual = true,
             "--window" => {
                 a.window = Some(val().parse().ok().filter(|w| *w >= 1).unwrap_or_else(|| usage()))
+            }
+            "--window-bytes" => {
+                a.window_bytes =
+                    Some(val().parse().ok().filter(|b| *b >= 1).unwrap_or_else(|| usage()))
             }
             "--cache-cap" => {
                 a.cache_cap =
                     Some(val().parse().ok().filter(|c| *c >= 1).unwrap_or_else(|| usage()))
             }
+            "--tenants" => {
+                a.tenants = val().parse().ok().filter(|t| *t >= 1).unwrap_or_else(|| usage())
+            }
+            "--weights" => a.weights = Some(val()),
             "--exec" => {
                 a.exec = match val().as_str() {
                     "replay" => ExecMode::Replay,
@@ -110,8 +137,10 @@ fn main() {
         artifact_dir: args.artifacts.clone(),
         verify: true,
         admission_window: args.window,
+        admission_bytes: args.window_bytes,
         cache_capacity: args.cache_cap,
         exec: args.exec,
+        residual: args.residual,
     };
 
     match args.cmd.as_str() {
@@ -172,6 +201,7 @@ fn main() {
                 meas.pct_peak_fpc()
             );
         }
+        "serve" if args.tenants > 1 => serve_multi_tenant(&args, &cfg),
         "serve" => {
             let mut co = Coordinator::new(cfg);
             let reqs = random_workload(args.requests, args.max_n, 42);
@@ -204,9 +234,12 @@ fn main() {
             );
             if let Some(bs) = co.last_batch_stats() {
                 println!(
-                    "admission: window {}, peak {} staged, {} shared measurements",
+                    "admission: window {}, byte budget {}, peak {} staged / {} B packed, \
+                     {} shared measurements",
                     args.window.map_or("unbounded".into(), |w| w.to_string()),
+                    args.window_bytes.map_or("unbounded".into(), |b| b.to_string()),
                     bs.peak_staged,
+                    bs.peak_staged_bytes,
                     bs.shared_measurements
                 );
             }
@@ -244,4 +277,78 @@ fn main() {
         }
         _ => usage(),
     }
+}
+
+/// Multi-tenant serve: one shared engine (worker pool + program cache)
+/// hosts `--tenants` coordinators at cycling AE0–AE5 enhancement levels,
+/// each replaying its own mixed workload concurrently under the weighted
+/// fair scheduler. Reports per-tenant slices and the shared aggregates.
+fn serve_multi_tenant(args: &Args, base: &CoordinatorConfig) {
+    let weights: Vec<u64> = match &args.weights {
+        Some(spec) => spec
+            .split(',')
+            .map(|w| w.trim().parse().ok().filter(|w| *w >= 1).unwrap_or_else(|| usage()))
+            .collect(),
+        None => vec![1; args.tenants],
+    };
+    if weights.len() != args.tenants {
+        eprintln!("--weights needs exactly {} comma-separated values >= 1", args.tenants);
+        exit(2);
+    }
+    let engine = Engine::new(EngineConfig {
+        workers: args.b * args.b,
+        cache_capacity: args.cache_cap,
+    });
+    let tenants: Vec<(usize, AeLevel, u64, Coordinator)> = weights
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| {
+            let ae = AeLevel::ALL[i % AeLevel::ALL.len()];
+            let cfg = CoordinatorConfig { ae, ..base.clone() };
+            (i, ae, w, engine.tenant_weighted(cfg, w))
+        })
+        .collect();
+    let (requests, max_n, seq) = (args.requests, args.max_n, args.seq);
+    let t0 = std::time::Instant::now();
+    let mut reports: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = tenants
+            .into_iter()
+            .map(|(i, ae, w, mut co)| {
+                s.spawn(move || {
+                    let reqs = random_workload(requests, max_n, 42 + i as u64);
+                    let resps = if seq { co.serve(reqs) } else { co.serve_batch(reqs) };
+                    let cycles: u64 = resps.iter().map(|r| r.cycles).sum();
+                    (i, ae, w, resps.len(), cycles, co.cache_stats(), co.pool_job_counts())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("tenant thread panicked")).collect()
+    });
+    let wall = t0.elapsed();
+    reports.sort_by_key(|r| r.0);
+    println!(
+        "served {} tenants x {requests} requests in {:.1} ms wall on {} shared workers",
+        reports.len(),
+        wall.as_secs_f64() * 1e3,
+        engine.worker_count()
+    );
+    for (i, ae, w, served, cycles, cs, jc) in &reports {
+        println!(
+            "  tenant {i} [{ae}, weight {w}]: {served} served, {cycles} simulated cycles; \
+             cache {} hits / {} misses / {} evictions; \
+             pool {} tiles / {} gemv / {} level-1",
+            cs.hits, cs.misses, cs.evictions, jc.gemm_tiles, jc.gemv, jc.level1
+        );
+    }
+    let cs = engine.cache_stats();
+    let jc = engine.pool_job_counts();
+    println!(
+        "shared cache: {} kernels resident, {} hits / {} misses / {} evictions",
+        cs.entries, cs.hits, cs.misses, cs.evictions
+    );
+    println!(
+        "shared pool: {} gemm tiles, {} gemv, {} level-1 kernels \
+         ({} value-replayed / {} combined timing passes)",
+        jc.gemm_tiles, jc.gemv, jc.level1, jc.replays, jc.combined_runs
+    );
 }

@@ -1,0 +1,220 @@
+//! Multi-tenant engine tests: single-tenant equivalence with the
+//! standalone coordinator, concurrent multi-tenant serving ≡ isolated
+//! per-tenant loops (values/cycles/energy), cross-tenant program-cache
+//! sharing (the PR acceptance invariant), shared-LRU eviction under
+//! cross-tenant churn, and stat partitioning.
+//!
+//! The fair scheduler's no-starvation property is pinned by unit tests on
+//! the WRR queue itself (`engine::queue`); here we pin the end-to-end
+//! consequences: every tenant's batch completes with results identical to
+//! an isolated coordinator's, regardless of what the other tenants do.
+
+use redefine_blas::coordinator::{
+    request::{random_workload, repeated_gemm_workload},
+    Coordinator, CoordinatorConfig, Response,
+};
+use redefine_blas::engine::{Engine, EngineConfig};
+use redefine_blas::pe::AeLevel;
+use redefine_blas::util::Mat;
+
+fn cfg(ae: AeLevel, b: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        ae,
+        b,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+        ..CoordinatorConfig::default()
+    }
+}
+
+/// Field-by-field response equality (values + simulated cost report).
+fn assert_same_responses(lhs: &[Response], rhs: &[Response]) {
+    assert_eq!(lhs.len(), rhs.len());
+    for (i, (a, b)) in lhs.iter().zip(rhs).enumerate() {
+        assert_eq!(a.op, b.op, "request {i}");
+        assert_eq!(a.n, b.n, "request {i}");
+        assert_eq!(a.source, b.source, "request {i}");
+        assert_eq!(a.cycles, b.cycles, "request {i}: simulated cycles must be identical");
+        assert_eq!(a.energy_j, b.energy_j, "request {i}");
+        assert_eq!(a.matrix, b.matrix, "request {i}: matrix payload");
+        assert_eq!(a.vector, b.vector, "request {i}: vector payload");
+        assert_eq!(a.scalar, b.scalar, "request {i}: scalar payload");
+    }
+}
+
+#[test]
+fn single_tenant_engine_matches_standalone_coordinator() {
+    // The PR acceptance invariant: routing through the engine changes
+    // nothing for a single tenant — values, cycles, energy and stats all
+    // match the standalone coordinator (which is itself pinned against
+    // the sequential reference loop).
+    let reqs = random_workload(8, 24, 4_242);
+    let mut standalone = Coordinator::new(cfg(AeLevel::Ae5, 2));
+    let r_standalone = standalone.serve_batch(reqs.clone());
+    let engine = Engine::new(EngineConfig { workers: 4, cache_capacity: None });
+    let mut tenant = engine.tenant(cfg(AeLevel::Ae5, 2));
+    let r_tenant = tenant.serve_batch(reqs);
+    assert_same_responses(&r_standalone, &r_tenant);
+    assert_eq!(standalone.cache_stats(), tenant.cache_stats());
+    // Tier splits (replays vs combined) may vary with worker races, but
+    // the per-kind job counts are exact.
+    let (js, jt) = (standalone.pool_job_counts(), tenant.pool_job_counts());
+    assert_eq!((js.gemm_tiles, js.gemv, js.level1), (jt.gemm_tiles, jt.gemv, jt.level1));
+    assert_eq!(js.replays + js.combined_runs, jt.replays + jt.combined_runs);
+    // Single tenant: the tenant slice IS the engine total.
+    assert_eq!(tenant.cache_stats(), engine.cache_stats());
+    assert_eq!(tenant.pool_job_counts(), engine.pool_job_counts());
+}
+
+#[test]
+fn concurrent_tenants_match_isolated_coordinators() {
+    // Two tenants at different AE levels and weights, serving
+    // concurrently on one shared pool, must each produce exactly what an
+    // isolated coordinator produces for the same workload — the
+    // multi-tenant ≡ interleaved-sequential invariant (simulated timing
+    // is independent of host scheduling and of the other tenant).
+    let wa = random_workload(6, 24, 1_001);
+    let wb = random_workload(6, 24, 2_002);
+    let mut ia = Coordinator::new(cfg(AeLevel::Ae5, 2));
+    let ra_ref = ia.serve_batch(wa.clone());
+    let mut ib = Coordinator::new(cfg(AeLevel::Ae3, 2));
+    let rb_ref = ib.serve_batch(wb.clone());
+
+    let engine = Engine::new(EngineConfig { workers: 4, cache_capacity: None });
+    let mut ta = engine.tenant(cfg(AeLevel::Ae5, 2));
+    let mut tb = engine.tenant_weighted(cfg(AeLevel::Ae3, 2), 3);
+    let (ra, rb) = std::thread::scope(|s| {
+        let ha = s.spawn(|| ta.serve_batch(wa));
+        let hb = s.spawn(|| tb.serve_batch(wb));
+        (ha.join().expect("tenant a"), hb.join().expect("tenant b"))
+    });
+    assert_same_responses(&ra_ref, &ra);
+    assert_same_responses(&rb_ref, &rb);
+    // The shared totals are exactly the sum of the tenant slices.
+    let (sa, sb, total) = (ta.cache_stats(), tb.cache_stats(), engine.cache_stats());
+    assert_eq!(sa.hits + sb.hits, total.hits);
+    assert_eq!(sa.misses + sb.misses, total.misses);
+    let (ja, jb, jt) = (ta.pool_job_counts(), tb.pool_job_counts(), engine.pool_job_counts());
+    assert_eq!(ja.gemm_tiles + jb.gemm_tiles, jt.gemm_tiles);
+    assert_eq!(ja.gemv + jb.gemv, jt.gemv);
+    assert_eq!(ja.level1 + jb.level1, jt.level1);
+}
+
+#[test]
+fn cross_tenant_cache_hits_exceed_isolated_coordinators() {
+    // The tentpole acceptance criterion: a 2-tenant repeated-shape
+    // workload must show *cross-tenant* program-cache hits — shared
+    // CacheStats.hits strictly greater than the sum two isolated
+    // coordinators would see, because the second tenant never pays the
+    // emission miss.
+    let k = 4;
+    let mut iso_hits = 0;
+    for seed in [10u64, 20] {
+        let mut co = Coordinator::new(cfg(AeLevel::Ae5, 2));
+        let _ = co.serve_batch(repeated_gemm_workload(k, 16, seed));
+        iso_hits += co.cache_stats().hits;
+    }
+    assert_eq!(iso_hits, 2 * (k as u64 - 1), "each isolated tenant pays its own miss");
+
+    let engine = Engine::new(EngineConfig { workers: 4, cache_capacity: None });
+    let mut ta = engine.tenant(cfg(AeLevel::Ae5, 2));
+    let mut tb = engine.tenant(cfg(AeLevel::Ae5, 2));
+    let _ = ta.serve_batch(repeated_gemm_workload(k, 16, 10));
+    let _ = tb.serve_batch(repeated_gemm_workload(k, 16, 20));
+    let shared = engine.cache_stats();
+    assert_eq!(shared.misses, 1, "one emission serves both tenants: {shared:?}");
+    assert_eq!(shared.hits, 2 * k as u64 - 1, "every other request rides it: {shared:?}");
+    assert!(
+        shared.hits > iso_hits,
+        "shared cache must add cross-tenant hits: {} vs isolated {iso_hits}",
+        shared.hits
+    );
+    // Tenant tallies partition the shared totals; the riding tenant never
+    // misses.
+    let (sa, sb) = (ta.cache_stats(), tb.cache_stats());
+    assert_eq!(sa.hits + sb.hits, shared.hits);
+    assert_eq!(sa.misses + sb.misses, shared.misses);
+    assert_eq!(sb.misses, 0, "tenant b must never emit: {sb:?}");
+    assert_eq!(sb.hits, k as u64, "all of tenant b's requests are warm: {sb:?}");
+}
+
+#[test]
+fn shared_lru_eviction_survives_cross_tenant_churn() {
+    // Two tenants alternating shapes under a capacity-1 shared cache:
+    // every switch evicts the other tenant's kernel, values stay correct,
+    // residency stays bounded, and eviction counts partition.
+    let engine = Engine::new(EngineConfig { workers: 4, cache_capacity: Some(1) });
+    let mut ta = engine.tenant(cfg(AeLevel::Ae5, 2));
+    let mut tb = engine.tenant(cfg(AeLevel::Ae5, 2));
+    for round in 0..3u64 {
+        for (which, n) in [(0usize, 8usize), (1, 16)] {
+            let a = Mat::random(n, n, 100 + round * 10 + which as u64);
+            let b = Mat::random(n, n, 200 + round * 10 + which as u64);
+            let c = Mat::zeros(n, n);
+            let co = if which == 0 { &mut ta } else { &mut tb };
+            let r = co.dgemm(&a, &b, &c);
+            let want = redefine_blas::blas::level3::dgemm_ref(&a, &b, &c);
+            let err = redefine_blas::util::rel_fro_error(r.c.as_slice(), want.as_slice());
+            assert!(err < 1e-12, "churned DGEMM round {round} n={n} wrong: {err}");
+        }
+    }
+    let s = engine.cache_stats();
+    assert_eq!(s.entries, 1, "cap must bound shared residency: {s:?}");
+    assert_eq!(s.misses, 6, "every alternation re-emits: {s:?}");
+    assert_eq!(s.evictions, 5, "every switch after the first evicts: {s:?}");
+    let (sa, sb) = (ta.cache_stats(), tb.cache_stats());
+    assert_eq!(sa.evictions + sb.evictions, s.evictions);
+    assert_eq!(sa.misses + sb.misses, s.misses);
+}
+
+#[test]
+fn mixed_ae_tenants_share_workers_without_cross_talk() {
+    // A 1-worker engine forces tenants at different enhancement levels to
+    // interleave on the same PE worker: per-level measurements must still
+    // equal an isolated coordinator's (the worker swaps PE configurations
+    // per job).
+    let engine = Engine::new(EngineConfig { workers: 1, cache_capacity: None });
+    let mut t0 = engine.tenant(cfg(AeLevel::Ae0, 1));
+    let mut t5 = engine.tenant(cfg(AeLevel::Ae5, 1));
+    let n = 16;
+    let x: Vec<f64> = (0..n).map(|i| 0.25 * i as f64).collect();
+    let y: Vec<f64> = (0..n).map(|i| 1.0 - 0.125 * i as f64).collect();
+    for round in 0..2 {
+        let (d0, m0, _) = t0.ddot(&x, &y);
+        let (d5, m5, _) = t5.ddot(&x, &y);
+        let want = redefine_blas::blas::level1::ddot(&x, &y);
+        assert!((d0 - want).abs() < 1e-12);
+        assert!((d5 - want).abs() < 1e-12);
+        let mut iso0 = Coordinator::new(cfg(AeLevel::Ae0, 1));
+        let mut iso5 = Coordinator::new(cfg(AeLevel::Ae5, 1));
+        assert_eq!(m0.latency(), iso0.ddot(&x, &y).1.latency(), "round {round}: AE0 drifted");
+        assert_eq!(m5.latency(), iso5.ddot(&x, &y).1.latency(), "round {round}: AE5 drifted");
+        assert!(m0.latency() > m5.latency(), "AE5 must beat AE0 on the same kernel");
+    }
+    // Distinct AE levels are distinct cache keys: both kernels resident.
+    assert_eq!(engine.cache_stats().entries, 2);
+}
+
+#[test]
+fn weighted_tenant_batches_complete_under_flood() {
+    // End-to-end no-starvation smoke: a light tenant's small batch served
+    // concurrently with a heavy tenant's large batch on one worker must
+    // complete with exactly the isolated results (the WRR queue keeps
+    // offering the light lane slots; the property itself is unit-tested
+    // on the queue).
+    let heavy_work = repeated_gemm_workload(12, 16, 5_000);
+    let light_work = random_workload(4, 16, 6_000);
+    let mut iso = Coordinator::new(cfg(AeLevel::Ae5, 2));
+    let light_ref = iso.serve_batch(light_work.clone());
+
+    let engine = Engine::new(EngineConfig { workers: 1, cache_capacity: None });
+    let mut heavy = engine.tenant(cfg(AeLevel::Ae5, 2));
+    let mut light = engine.tenant_weighted(cfg(AeLevel::Ae5, 2), 2);
+    let (hr, lr) = std::thread::scope(|s| {
+        let hh = s.spawn(|| heavy.serve_batch(heavy_work));
+        let lh = s.spawn(|| light.serve_batch(light_work));
+        (hh.join().expect("heavy tenant"), lh.join().expect("light tenant"))
+    });
+    assert_eq!(hr.len(), 12);
+    assert_same_responses(&light_ref, &lr);
+}

@@ -1,8 +1,8 @@
 //! Serving-engine tests: program-cache determinism (pointer-equal shared
 //! kernels), `serve_batch` vs `serve_one` equivalence across admission
-//! windows, pooled Level-1/2 execution, LRU capping, two-tier
-//! replay-vs-combined equivalence, and the pooled path's makespan
-//! behavior.
+//! windows (request-count and byte-budget), pooled Level-1/2 execution,
+//! LRU capping, two-tier replay-vs-combined equivalence, residual-kernel
+//! serving, and the pooled path's makespan behavior.
 
 use redefine_blas::coordinator::{
     request::{random_workload, repeated_gemm_workload, Request},
@@ -30,6 +30,18 @@ fn coord_with(admission_window: Option<usize>, cache_capacity: Option<usize>) ->
         verify: false,
         admission_window,
         cache_capacity,
+        ..CoordinatorConfig::default()
+    })
+}
+
+fn coord_bytes(admission_bytes: Option<u64>) -> Coordinator {
+    Coordinator::new(CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 2,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+        admission_bytes,
+        ..CoordinatorConfig::default()
     })
 }
 
@@ -299,6 +311,160 @@ fn pooled_bigger_array_is_faster() {
 fn pool_sized_by_tile_array() {
     assert_eq!(coord(AeLevel::Ae5, 1).pool_size(), 1);
     assert_eq!(coord(AeLevel::Ae5, 3).pool_size(), 9);
+}
+
+#[test]
+fn byte_budget_batch_matches_sequential() {
+    // The byte-budget invariant: for any admission_bytes setting the
+    // batched responses (values, cycles, energy, cache accounting) are
+    // identical to the sequential loop — the budget only throttles
+    // staging, never results.
+    let reqs = mixed_requests();
+    let mut seq = coord(AeLevel::Ae5, 2);
+    let r_seq: Vec<_> = reqs.clone().into_iter().map(|r| seq.serve_one(r)).collect();
+    for budget in [Some(1u64), Some(4 << 10), Some(64 << 10), Some(u64::MAX), None] {
+        let mut bat = coord_bytes(budget);
+        let r_bat = bat.serve_batch(reqs.clone());
+        assert_same_responses(&r_seq, &r_bat);
+        assert_eq!(
+            seq.cache_stats(),
+            bat.cache_stats(),
+            "cache accounting must not depend on the byte budget ({budget:?})"
+        );
+    }
+}
+
+#[test]
+fn byte_budget_bounds_staged_bytes() {
+    let reqs = mixed_requests();
+    let cfg = CoordinatorConfig { ae: AeLevel::Ae5, b: 2, ..CoordinatorConfig::default() };
+    let max_single = reqs.iter().map(|r| cfg.staged_bytes(r)).max().expect("nonempty");
+    let sum_all: u64 = reqs.iter().map(|r| cfg.staged_bytes(r)).sum();
+    // Unbudgeted: everything stages up front.
+    let mut unbounded = coord_bytes(None);
+    unbounded.serve_batch(reqs.clone());
+    let bs = unbounded.last_batch_stats().unwrap();
+    assert_eq!(bs.peak_staged_bytes, sum_all, "unbudgeted batch must stage everything");
+    // A budget that fits the largest request is a hard bound.
+    for budget in [max_single, 2 * max_single] {
+        let mut co = coord_bytes(Some(budget));
+        co.serve_batch(reqs.clone());
+        let bs = co.last_batch_stats().unwrap();
+        assert!(
+            bs.peak_staged_bytes <= budget,
+            "budget {budget} violated: peak {} B",
+            bs.peak_staged_bytes
+        );
+        assert_eq!(bs.requests, reqs.len());
+    }
+    // A budget below every request still makes progress, one at a time.
+    let mut tiny = coord_bytes(Some(1));
+    let r = tiny.serve_batch(reqs.clone());
+    assert_eq!(r.len(), reqs.len());
+    let bs = tiny.last_batch_stats().unwrap();
+    assert_eq!(bs.peak_staged, 1, "sub-minimal budget must serialize staging");
+    assert!(bs.peak_staged_bytes <= max_single, "only one oversized request may stage");
+}
+
+#[test]
+fn residual_serving_matches_host_blas() {
+    // Non-4-aligned shapes served on the cached DOT2/3 residual kernel:
+    // values must match host BLAS at every RDP level, and repeats must
+    // hit the cache (the ROADMAP gap this closes: the coordinator used to
+    // always pad).
+    for ae in [AeLevel::Ae2, AeLevel::Ae4, AeLevel::Ae5] {
+        let mut co = Coordinator::new(CoordinatorConfig {
+            ae,
+            b: 1,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+            residual: true,
+            ..CoordinatorConfig::default()
+        });
+        for n in [6usize, 9, 13, 17] {
+            let a = Mat::random(n, n, 3_000 + n as u64);
+            let b = Mat::random(n, n, 3_100 + n as u64);
+            let c = Mat::random(n, n, 3_200 + n as u64);
+            let r = co.dgemm(&a, &b, &c);
+            let want = redefine_blas::blas::level3::dgemm_ref(&a, &b, &c);
+            let err = redefine_blas::util::rel_fro_error(r.c.as_slice(), want.as_slice());
+            assert!(err < 1e-12, "{ae} residual n={n} wrong: {err}");
+            assert_eq!(r.tiles.len(), 1, "residual path is single-PE");
+        }
+    }
+}
+
+#[test]
+fn residual_kernels_are_cached_and_replayed() {
+    let mut co = Coordinator::new(CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 1,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+        residual: true,
+        ..CoordinatorConfig::default()
+    });
+    let resps = co.serve_batch(repeated_gemm_workload(4, 10, 6_000));
+    assert_eq!(resps.len(), 4);
+    let s = co.cache_stats();
+    assert_eq!(s.misses, 1, "one residual shape → one emission: {s:?}");
+    assert_eq!(s.hits, 3, "repeats must hit the residual kernel: {s:?}");
+    let jc = co.pool_job_counts();
+    assert_eq!(jc.gemm_tiles, 4, "one untiled kernel per request");
+    assert!(jc.replays >= 3, "cache-hit residual requests must replay: {jc:?}");
+    // The cycle cost differs from the padded path (different kernel), but
+    // is identical across same-shape requests.
+    let cycles: Vec<u64> = resps.iter().map(|r| r.cycles).collect();
+    assert!(cycles.windows(2).all(|w| w[0] == w[1]), "same shape, same cost: {cycles:?}");
+}
+
+#[test]
+fn residual_without_rdp_falls_back_to_padding() {
+    // AE0/AE1 have no DOT hardware: residual mode must quietly keep the
+    // padded tile path and still serve correct values.
+    let mut co = Coordinator::new(CoordinatorConfig {
+        ae: AeLevel::Ae1,
+        b: 2,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+        residual: true,
+        ..CoordinatorConfig::default()
+    });
+    let n = 10;
+    let a = Mat::random(n, n, 7_000);
+    let b = Mat::random(n, n, 7_001);
+    let c = Mat::zeros(n, n);
+    let r = co.dgemm(&a, &b, &c);
+    assert_eq!(r.tiles.len(), 4, "no RDP → padded tiled path");
+    let want = redefine_blas::blas::level3::dgemm_ref(&a, &b, &c);
+    let err = redefine_blas::util::rel_fro_error(r.c.as_slice(), want.as_slice());
+    assert!(err < 1e-12, "fallback DGEMM wrong: {err}");
+}
+
+#[test]
+fn residual_and_padded_agree_numerically() {
+    // Same problem through both paths: different summation groupings
+    // (DOT2/3 vs padded DOT4), so values agree to FP reassociation, and
+    // both match host BLAS.
+    let n = 14;
+    let a = Mat::random(n, n, 8_000);
+    let b = Mat::random(n, n, 8_001);
+    let c = Mat::random(n, n, 8_002);
+    let mk = |residual: bool| {
+        Coordinator::new(CoordinatorConfig {
+            ae: AeLevel::Ae5,
+            b: 1,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+            residual,
+            ..CoordinatorConfig::default()
+        })
+    };
+    let rp = mk(false).dgemm(&a, &b, &c);
+    let rr = mk(true).dgemm(&a, &b, &c);
+    let err = redefine_blas::util::rel_fro_error(rr.c.as_slice(), rp.c.as_slice());
+    assert!(err < 1e-12, "residual vs padded numerics: {err}");
+    assert_ne!(rp.makespan, rr.makespan, "different kernels should cost differently");
 }
 
 #[test]
