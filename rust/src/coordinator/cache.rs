@@ -27,14 +27,41 @@
 //! totals, and every accessor has a `_for` variant that additionally bumps
 //! a caller-owned [`CacheTally`] — the per-tenant slice the coordinator
 //! reports. The tallies partition the shared totals exactly (evictions are
-//! attributed to the tenant whose insertion overflowed the capacity).
+//! attributed to the tenant whose insertion overflowed a limit).
+//!
+//! **The counting invariant** is per *request*, not per map probe: every
+//! logical request records exactly one hit or one miss. DGEMM requests
+//! count at their single program fetch. Level-1/2 requests count at the
+//! measurement memo: a present memo is a hit
+//! ([`ProgramCache::cached_measurement_for`]), an absent memo is a miss
+//! recorded by the submitter (`ProgramCache::record_miss`) — the program
+//! fetch that follows uses the *quiet* accessors (`gemv_quiet`,
+//! `level1_quiet`), which attribute ownership and evictions but add no
+//! second hit/miss event. So `hits + misses` equals the number of requests
+//! served, on the sequential and the batched path alike (pinned by tests).
 //!
 //! The cache is unbounded by default (fine for the paper's shape set) but
-//! takes an optional **LRU capacity cap** for adversarial shape streams:
-//! when more than `capacity` programs are resident, the least recently
-//! used (program, measurement) pair is dropped and counted in
-//! [`CacheStats::evictions`]. In-flight kernels are unaffected — workers
-//! hold the program by `Arc`.
+//! takes two optional residency limits for adversarial shape streams:
+//!
+//! * a global **LRU capacity cap** ([`ProgramCache::with_capacity`]): when
+//!   more than `capacity` programs are resident, a least-recently-used
+//!   (program, measurement) pair is dropped and counted in
+//!   [`CacheStats::evictions`]. Victim selection prefers the inserting
+//!   tenant's own entries, then unowned entries, before touching a
+//!   sibling tenant's warm kernels.
+//! * a per-tenant **residency quota** ([`ProgramCache::with_limits`]):
+//!   each [`CacheTally`] owner may keep at most `quota` resident kernels —
+//!   an insertion that overflows the quota evicts within the overflowing
+//!   tenant's *own* resident set, so a shape-churning tenant can no longer
+//!   flush a sibling's warm kernels out of a shared capped cache.
+//!
+//! Eviction never selects a slot whose kernel is still being emitted by a
+//! concurrent cold miss (the [`OnceLock`] is unfilled): evicting it would
+//! save no memory — the program is not resident yet — and would orphan the
+//! in-flight emission, forcing a same-key re-emission. If every candidate
+//! is unfilled the cap is transiently exceeded and re-enforced on the next
+//! insertion. In-flight kernels are likewise safe from eviction of their
+//! entry — workers hold the program by `Arc`.
 
 use crate::codegen::{self, layout::VecLayout, GemmLayout};
 use crate::metrics::{Measurement, Routine};
@@ -83,19 +110,37 @@ impl ProgramKey {
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
-    /// Programs (with their paired measurements) dropped by the LRU cap.
+    /// Programs (with their paired measurements) dropped by the LRU cap
+    /// or a tenant quota.
     pub evictions: u64,
     pub entries: usize,
 }
 
-/// One caller's (tenant's) slice of the cache counters. The coordinator
-/// passes its tally into the `_for` accessors so multi-tenant serving can
-/// split [`CacheStats`] per tenant while the cache keeps shared totals.
-#[derive(Debug, Default)]
+/// One caller's (tenant's) slice of the cache counters — and, for the
+/// per-tenant residency quota, the caller's *identity*: entries inserted
+/// through a `_for`/`_quiet` accessor are owned by the tally that inserted
+/// them, and the quota bounds each owner's resident set. The coordinator
+/// passes its tally into the accessors so multi-tenant serving can split
+/// [`CacheStats`] per tenant while the cache keeps shared totals.
+#[derive(Debug)]
 pub struct CacheTally {
+    /// Process-unique owner id (assigned at construction).
+    owner: u64,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+}
+
+impl Default for CacheTally {
+    fn default() -> Self {
+        static NEXT_OWNER: AtomicU64 = AtomicU64::new(1);
+        Self {
+            owner: NEXT_OWNER.fetch_add(1, Ordering::Relaxed),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
 }
 
 impl CacheTally {
@@ -123,9 +168,9 @@ impl CacheTally {
     }
 }
 
-/// A resident kernel slot with its LRU clock stamp. The slot is filled
-/// *outside* the map lock (see [`ProgramCache::get_or_emit_for`]): the
-/// inserting caller emits + decodes into the [`OnceLock`] while only
+/// A resident kernel slot with its LRU clock stamp and owner. The slot is
+/// filled *outside* the map lock (see [`ProgramCache::get_or_emit_for`]):
+/// the inserting caller emits + decodes into the [`OnceLock`] while only
 /// same-key callers block on it — a cold miss never head-of-line-blocks
 /// other tenants' keys, and an emission panic unwinds that caller without
 /// poisoning the shared map.
@@ -134,6 +179,17 @@ struct Entry {
     slot: Arc<OnceLock<Arc<ScheduledProgram>>>,
     /// Monotonic clock value of the most recent use.
     last_used: u64,
+    /// The [`CacheTally`] owner whose request inserted this entry (`None`
+    /// for tally-less callers) — the identity the residency quota bounds.
+    owner: Option<u64>,
+}
+
+impl Entry {
+    /// A slot only counts as a resident eviction victim once its kernel
+    /// has actually been emitted into it.
+    fn filled(&self) -> bool {
+        self.slot.get().is_some()
+    }
 }
 
 /// Lock-protected state: programs and their memoized measurements share one
@@ -158,8 +214,10 @@ struct Inner {
 #[derive(Debug, Default)]
 pub struct ProgramCache {
     inner: Mutex<Inner>,
-    /// LRU capacity in resident programs (`None` = unbounded).
+    /// Global LRU capacity in resident programs (`None` = unbounded).
     capacity: Option<usize>,
+    /// Per-[`CacheTally`]-owner residency quota (`None` = unscoped).
+    quota: Option<usize>,
     /// Shared totals across every caller.
     totals: CacheTally,
 }
@@ -170,16 +228,35 @@ impl ProgramCache {
         Self::default()
     }
 
-    /// Cache holding at most `capacity` programs, evicting the least
-    /// recently used kernel (and its memoized measurement) beyond that.
+    /// Cache holding at most `capacity` programs, evicting a
+    /// least-recently-used kernel (and its memoized measurement) beyond
+    /// that. No per-tenant quota.
     pub fn with_capacity(capacity: usize) -> Self {
-        assert!(capacity >= 1, "program cache capacity must be at least 1");
-        Self { capacity: Some(capacity), ..Self::default() }
+        Self::with_limits(Some(capacity), None)
     }
 
-    /// The LRU capacity (`None` = unbounded).
+    /// Cache with both residency limits: the global LRU `capacity` cap and
+    /// the per-tenant `quota` (each [`CacheTally`] owner may keep at most
+    /// `quota` kernels resident; overflowing insertions evict within the
+    /// owner's own resident set). Either limit may be `None`.
+    pub fn with_limits(capacity: Option<usize>, quota: Option<usize>) -> Self {
+        if let Some(cap) = capacity {
+            assert!(cap >= 1, "program cache capacity must be at least 1");
+        }
+        if let Some(q) = quota {
+            assert!(q >= 1, "program cache tenant quota must be at least 1");
+        }
+        Self { capacity, quota, ..Self::default() }
+    }
+
+    /// The global LRU capacity (`None` = unbounded).
     pub fn capacity(&self) -> Option<usize> {
         self.capacity
+    }
+
+    /// The per-tenant residency quota (`None` = unscoped).
+    pub fn quota(&self) -> Option<usize> {
+        self.quota
     }
 
     fn note_hit(&self, tally: Option<&CacheTally>) {
@@ -218,7 +295,8 @@ impl ProgramCache {
     }
 
     /// [`ProgramCache::get_or_emit`] that additionally bumps the caller's
-    /// per-tenant [`CacheTally`].
+    /// per-tenant [`CacheTally`] and owns the inserted entry for quota
+    /// purposes.
     ///
     /// Locking: the shared map lock covers only the slot lookup/insert;
     /// emission + decode happen inside the per-key slot, so a cold miss
@@ -232,19 +310,48 @@ impl ProgramCache {
         emit: impl FnOnce() -> Program,
         tally: Option<&CacheTally>,
     ) -> Arc<ScheduledProgram> {
+        self.get_or_emit_impl(key, emit, tally, true)
+    }
+
+    /// [`ProgramCache::get_or_emit_for`] without the hit/miss event: the
+    /// program fetch of the Level-1/2 measurement path, whose one counting
+    /// event is recorded at the memo instead (see the module docs).
+    /// Ownership and eviction charging still follow `tally`.
+    pub(crate) fn get_or_emit_quiet(
+        &self,
+        key: ProgramKey,
+        emit: impl FnOnce() -> Program,
+        tally: Option<&CacheTally>,
+    ) -> Arc<ScheduledProgram> {
+        self.get_or_emit_impl(key, emit, tally, false)
+    }
+
+    fn get_or_emit_impl(
+        &self,
+        key: ProgramKey,
+        emit: impl FnOnce() -> Program,
+        tally: Option<&CacheTally>,
+        counted: bool,
+    ) -> Arc<ScheduledProgram> {
         let slot = {
             let mut inner = self.inner.lock().expect("program cache poisoned");
             inner.clock += 1;
             let clock = inner.clock;
             if let Some(e) = inner.programs.get_mut(&key) {
                 e.last_used = clock;
-                self.note_hit(tally);
+                if counted {
+                    self.note_hit(tally);
+                }
                 Arc::clone(&e.slot)
             } else {
-                self.note_miss(tally);
+                if counted {
+                    self.note_miss(tally);
+                }
                 let slot = Arc::new(OnceLock::new());
-                inner.programs.insert(key, Entry { slot: Arc::clone(&slot), last_used: clock });
-                self.evict_over_capacity(&mut inner, key, tally);
+                let owner = tally.map(|t| t.owner);
+                let entry = Entry { slot: Arc::clone(&slot), last_used: clock, owner };
+                inner.programs.insert(key, entry);
+                self.enforce_limits(&mut inner, key, owner, tally);
                 slot
             }
         };
@@ -257,22 +364,84 @@ impl ProgramCache {
         }))
     }
 
-    /// Drop least-recently-used keys until the cap is respected, never
-    /// evicting `keep` (the key just inserted/refreshed). Evictions are
-    /// charged to the inserting caller's tally.
-    fn evict_over_capacity(&self, inner: &mut Inner, keep: ProgramKey, tally: Option<&CacheTally>) {
+    /// The least-recently-used *resident* (filled) entry satisfying
+    /// `pred`, never `keep` (the key just inserted/refreshed). Unfilled
+    /// slots — kernels still being emitted by a concurrent cold miss —
+    /// are exempt: evicting one saves no memory and would orphan the
+    /// in-flight emission into a same-key re-emission.
+    fn lru_victim(
+        inner: &Inner,
+        keep: ProgramKey,
+        pred: impl Fn(&Entry) -> bool,
+    ) -> Option<ProgramKey> {
+        inner
+            .programs
+            .iter()
+            .filter(|(k, e)| **k != keep && e.filled() && pred(e))
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| *k)
+    }
+
+    /// Drop `victim` (program and paired measurement), charging the
+    /// eviction to the inserting caller's tally.
+    fn evict_key(&self, inner: &mut Inner, victim: ProgramKey, tally: Option<&CacheTally>) {
+        inner.programs.remove(&victim);
+        inner.measurements.remove(&victim);
+        self.note_eviction(tally);
+    }
+
+    /// Enforce both residency limits after inserting `keep` for `owner`.
+    /// Evictions are charged to the inserting caller's tally. If every
+    /// candidate victim is an unfilled in-flight slot, the limit is
+    /// transiently exceeded and re-enforced on the next insertion.
+    fn enforce_limits(
+        &self,
+        inner: &mut Inner,
+        keep: ProgramKey,
+        owner: Option<u64>,
+        tally: Option<&CacheTally>,
+    ) {
+        // Per-tenant quota: the overflowing tenant evicts within its own
+        // resident set — a sibling's warm kernels are never candidates.
+        if let (Some(quota), Some(o)) = (self.quota, owner) {
+            loop {
+                let owned = inner.programs.values().filter(|e| e.owner == Some(o)).count();
+                if owned <= quota {
+                    break;
+                }
+                let Some(victim) = Self::lru_victim(inner, keep, |e| e.owner == Some(o)) else {
+                    break;
+                };
+                self.evict_key(inner, victim, tally);
+            }
+        }
+        // Global LRU cap: prefer the inserter's own and unowned entries;
+        // touch a sibling tenant's kernels only as the last resort that
+        // keeps the cache bounded at all.
         let Some(cap) = self.capacity else { return };
         while inner.programs.len() > cap {
-            let victim = inner
-                .programs
-                .iter()
-                .filter(|(k, _)| **k != keep)
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| *k)
-                .expect("capacity >= 1 leaves a victim besides `keep`");
-            inner.programs.remove(&victim);
-            inner.measurements.remove(&victim);
-            self.note_eviction(tally);
+            let victim = Self::lru_victim(inner, keep, |e| e.owner == owner || e.owner.is_none())
+                .or_else(|| Self::lru_victim(inner, keep, |_| true));
+            let Some(victim) = victim else { break };
+            self.evict_key(inner, victim, tally);
+        }
+    }
+
+    /// Emit the DGEMV kernel for padded size `n` (shared by the counted
+    /// and quiet accessors so they cannot drift apart).
+    fn emit_gemv(n: usize, ae: AeLevel) -> Program {
+        let l = VecLayout::gemv(n);
+        codegen::gen_gemv(n, ae, &l)
+    }
+
+    /// Emit the Level-1 kernel for `routine` at padded size `n`.
+    fn emit_level1(routine: Routine, n: usize, alpha: f64, ae: AeLevel) -> Program {
+        let l = VecLayout::level1(n);
+        match routine {
+            Routine::Ddot => codegen::gen_ddot(n, ae, &l),
+            Routine::Dnrm2 => codegen::gen_dnrm2(n, ae, &l),
+            Routine::Daxpy => codegen::gen_daxpy(n, alpha, ae, &l),
+            _ => panic!("not a level-1 routine: {routine:?}"),
         }
     }
 
@@ -336,14 +505,18 @@ impl ProgramCache {
         ae: AeLevel,
         tally: Option<&CacheTally>,
     ) -> Arc<ScheduledProgram> {
-        self.get_or_emit_for(
-            ProgramKey::Gemv { n, ae },
-            || {
-                let l = VecLayout::gemv(n);
-                codegen::gen_gemv(n, ae, &l)
-            },
-            tally,
-        )
+        self.get_or_emit_for(ProgramKey::Gemv { n, ae }, || Self::emit_gemv(n, ae), tally)
+    }
+
+    /// [`ProgramCache::gemv`] without a hit/miss event — the measurement
+    /// path's program fetch (its one event was recorded at the memo).
+    pub(crate) fn gemv_quiet(
+        &self,
+        n: usize,
+        ae: AeLevel,
+        tally: Option<&CacheTally>,
+    ) -> Arc<ScheduledProgram> {
+        self.get_or_emit_quiet(ProgramKey::Gemv { n, ae }, || Self::emit_gemv(n, ae), tally)
     }
 
     /// Cached Level-1 kernel (n already padded to 4). `alpha` is only
@@ -370,15 +543,24 @@ impl ProgramCache {
     ) -> Arc<ScheduledProgram> {
         self.get_or_emit_for(
             ProgramKey::level1(routine, n, alpha, ae),
-            || {
-                let l = VecLayout::level1(n);
-                match routine {
-                    Routine::Ddot => codegen::gen_ddot(n, ae, &l),
-                    Routine::Dnrm2 => codegen::gen_dnrm2(n, ae, &l),
-                    Routine::Daxpy => codegen::gen_daxpy(n, alpha, ae, &l),
-                    _ => panic!("not a level-1 routine: {routine:?}"),
-                }
-            },
+            || Self::emit_level1(routine, n, alpha, ae),
+            tally,
+        )
+    }
+
+    /// [`ProgramCache::level1`] without a hit/miss event — the measurement
+    /// path's program fetch (its one event was recorded at the memo).
+    pub(crate) fn level1_quiet(
+        &self,
+        routine: Routine,
+        n: usize,
+        alpha: f64,
+        ae: AeLevel,
+        tally: Option<&CacheTally>,
+    ) -> Arc<ScheduledProgram> {
+        self.get_or_emit_quiet(
+            ProgramKey::level1(routine, n, alpha, ae),
+            || Self::emit_level1(routine, n, alpha, ae),
             tally,
         )
     }
@@ -386,7 +568,10 @@ impl ProgramCache {
     /// The memoized [`Measurement`] for `key`, if present. A memo return is
     /// a warm-cache hit (counted in [`CacheStats::hits`]) even though no
     /// program is fetched — repeated Level-1/2 requests skip the simulation
-    /// entirely — and refreshes the key's LRU slot.
+    /// entirely — and refreshes the key's LRU slot. An absent memo records
+    /// nothing here: the submitter records the request's one miss via
+    /// `ProgramCache::record_miss` when it actually pays the simulation
+    /// (see the module-level counting invariant).
     pub fn cached_measurement(&self, key: &ProgramKey) -> Option<Measurement> {
         self.cached_measurement_for(key, None)
     }
@@ -418,6 +603,14 @@ impl ProgramCache {
         self.note_hit(tally);
     }
 
+    /// Record the miss side of the measurement memo: called once per
+    /// Level-1/2 request that found no memo and submits (pays) the
+    /// simulation — the symmetric counterpart of the memo hit, keeping
+    /// `hits + misses` equal to the number of requests served.
+    pub(crate) fn record_miss(&self, tally: Option<&CacheTally>) {
+        self.note_miss(tally);
+    }
+
     /// Store a measurement computed on a pool worker. Dropped silently if
     /// the paired program was evicted while the kernel was in flight
     /// (program and measurement must stay paired so eviction removes both).
@@ -442,6 +635,13 @@ impl ProgramCache {
     /// True if nothing has been cached yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Resident program count for one [`CacheTally`] owner — what the
+    /// per-tenant quota bounds.
+    pub fn owned_len(&self, tally: &CacheTally) -> usize {
+        let inner = self.inner.lock().expect("program cache poisoned");
+        inner.programs.values().filter(|e| e.owner == Some(tally.owner)).count()
     }
 }
 
@@ -517,6 +717,7 @@ mod tests {
     fn unbounded_cache_never_evicts() {
         let cache = ProgramCache::new();
         assert_eq!(cache.capacity(), None);
+        assert_eq!(cache.quota(), None);
         for n in 1..=10usize {
             let _ = cache.gemm_rect(4 * n, 4 * n, 4 * n, AeLevel::Ae5);
         }
@@ -576,17 +777,125 @@ mod tests {
         let cache = ProgramCache::with_capacity(1);
         let ta = CacheTally::default();
         let tb = CacheTally::default();
-        // Tenant a emits, tenant b rides the warm kernel, then evicts it
-        // with its own shape (the eviction is charged to b).
+        // Request 1–3 (program path): tenant a emits, tenant b rides the
+        // warm kernel, then evicts it with its own shape (the eviction is
+        // charged to b).
         let _ = cache.gemm_rect_for(8, 8, 8, AeLevel::Ae5, Some(&ta));
         let _ = cache.gemm_rect_for(8, 8, 8, AeLevel::Ae5, Some(&tb));
         let _ = cache.gemm_rect_for(4, 4, 4, AeLevel::Ae5, Some(&tb));
+        // Request 4 (memo path, tenant a): no memo → a records the miss
+        // and fetches the program quietly (no second event); inserting the
+        // DDOT kernel overflows the cap and evicts b's resident GEMM —
+        // charged to a.
+        let key = ProgramKey::level1(Routine::Ddot, 8, 1.5, AeLevel::Ae4);
+        assert!(cache.cached_measurement_for(&key, Some(&ta)).is_none());
+        cache.record_miss(Some(&ta));
+        let _ = cache.level1_quiet(Routine::Ddot, 8, 1.5, AeLevel::Ae4, Some(&ta));
+        let prog = codegen::gen_ddot(8, AeLevel::Ae4, &VecLayout::level1(8));
+        let meas = measure_level1_prog(Routine::Ddot, 8, 1.5, AeLevel::Ae4, &prog);
+        cache.store_measurement(key, meas);
+        // Request 5 (memo path, tenant b): warm memo — one hit, no program
+        // fetch at all.
+        assert!(cache.cached_measurement_for(&key, Some(&tb)).is_some());
         let (sa, sb, total) = (ta.snapshot(cache.len()), tb.snapshot(cache.len()), cache.stats());
-        assert_eq!((sa.hits, sa.misses, sa.evictions), (0, 1, 0));
-        assert_eq!((sb.hits, sb.misses, sb.evictions), (1, 1, 1));
+        assert_eq!((sa.hits, sa.misses, sa.evictions), (0, 2, 1));
+        assert_eq!((sb.hits, sb.misses, sb.evictions), (2, 1, 1));
         assert_eq!(sa.hits + sb.hits, total.hits);
         assert_eq!(sa.misses + sb.misses, total.misses);
         assert_eq!(sa.evictions + sb.evictions, total.evictions);
         assert_eq!(total.entries, 1);
+        // The counting invariant: five requests, five hit-or-miss events.
+        assert_eq!(total.hits + total.misses, 5, "one event per request: {total:?}");
+    }
+
+    #[test]
+    fn quota_bounds_each_tenants_residency() {
+        let cache = ProgramCache::with_limits(Some(4), Some(2));
+        assert_eq!((cache.capacity(), cache.quota()), (Some(4), Some(2)));
+        let churn = CacheTally::default();
+        let sibling = CacheTally::default();
+        let warm = cache.gemm_rect_for(8, 8, 8, AeLevel::Ae5, Some(&sibling));
+        // The churning tenant cycles through many distinct shapes: its own
+        // resident set is capped at the quota, its own LRU entries are the
+        // victims, and the sibling's kernel is never touched.
+        for n in [3usize, 4, 5, 6, 7, 8] {
+            let _ = cache.gemm_rect_for(4 * n, 4 * n, 4 * n, AeLevel::Ae5, Some(&churn));
+            assert!(cache.owned_len(&churn) <= 2, "quota must bound the churner");
+        }
+        let still_warm = cache.gemm_rect_for(8, 8, 8, AeLevel::Ae5, Some(&sibling));
+        assert!(
+            Arc::ptr_eq(&warm, &still_warm),
+            "a churning tenant must not evict a sibling's resident kernel"
+        );
+        let (sc, ss) = (churn.snapshot(cache.len()), sibling.snapshot(cache.len()));
+        assert_eq!(sc.evictions, 4, "six inserts into quota 2 evict four of the churner's own");
+        assert_eq!(ss.evictions, 0);
+        assert_eq!((ss.hits, ss.misses), (1, 1));
+        assert_eq!(cache.owned_len(&sibling), 1);
+    }
+
+    #[test]
+    fn capacity_eviction_prefers_own_then_unowned_entries() {
+        let cache = ProgramCache::with_capacity(2);
+        let ta = CacheTally::default();
+        let tb = CacheTally::default();
+        let b_kernel = cache.gemm_rect_for(8, 8, 8, AeLevel::Ae5, Some(&tb));
+        let _ = cache.gemm_rect_for(4, 4, 4, AeLevel::Ae5, Some(&ta)); // a's own
+        // a inserts a third shape: the cap overflows and a's *own* LRU
+        // entry goes first, not b's older kernel.
+        let _ = cache.gemm_rect_for(12, 12, 12, AeLevel::Ae5, Some(&ta));
+        let b_again = cache.gemm_rect_for(8, 8, 8, AeLevel::Ae5, Some(&tb));
+        assert!(Arc::ptr_eq(&b_kernel, &b_again), "own entries must be preferred victims");
+        assert_eq!(ta.snapshot(cache.len()).evictions, 1);
+        assert_eq!(tb.snapshot(cache.len()).evictions, 0);
+    }
+
+    #[test]
+    fn in_flight_slot_is_never_an_eviction_victim() {
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::Barrier;
+        // Two threads race distinct keys into a capacity-1 cache. Both
+        // emissions are in flight (unfilled slots) simultaneously — the
+        // barrier guarantees it — so neither may be evicted: each key is
+        // emitted exactly once, and both programs stay resident until a
+        // later insertion finds filled victims.
+        let cache = Arc::new(ProgramCache::with_capacity(1));
+        let barrier = Arc::new(Barrier::new(2));
+        let emits = Arc::new([AtomicUsize::new(0), AtomicUsize::new(0)]);
+        let keys = [
+            ProgramKey::level1(Routine::Ddot, 8, 1.5, AeLevel::Ae4),
+            ProgramKey::level1(Routine::Ddot, 12, 1.5, AeLevel::Ae4),
+        ];
+        let progs: Vec<_> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2)
+                .map(|i| {
+                    let (cache, barrier, emits) =
+                        (Arc::clone(&cache), Arc::clone(&barrier), Arc::clone(&emits));
+                    s.spawn(move || {
+                        cache.get_or_emit(keys[i], || {
+                            // Both slots are inserted (and unfilled) here.
+                            barrier.wait();
+                            emits[i].fetch_add(1, Ordering::Relaxed);
+                            let n = 8 + 4 * i;
+                            codegen::gen_ddot(n, AeLevel::Ae4, &VecLayout::level1(n))
+                        })
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("racing emitter")).collect()
+        });
+        assert_eq!(emits[0].load(Ordering::Relaxed), 1);
+        assert_eq!(emits[1].load(Ordering::Relaxed), 1);
+        assert_eq!(cache.stats().evictions, 0, "unfilled slots must be exempt");
+        assert_eq!(cache.len(), 2, "cap transiently exceeded rather than orphaning emissions");
+        // Re-requests ride the still-resident kernels — no re-emission.
+        for (i, key) in keys.iter().enumerate() {
+            let again = cache.get_or_emit(*key, || panic!("must not re-emit"));
+            assert!(Arc::ptr_eq(&progs[i], &again), "in-flight kernel was orphaned");
+        }
+        // The next insertion finds filled victims and re-enforces the cap.
+        let _ = cache.gemm_rect(4, 4, 4, AeLevel::Ae4);
+        assert_eq!(cache.len(), 1, "cap must be re-enforced once victims are resident");
+        assert_eq!(cache.stats().evictions, 2);
     }
 }

@@ -45,7 +45,7 @@ pub use request::{BatchStats, Request, Response};
 
 use crate::codegen::GemmLayout;
 use crate::energy::PowerModel;
-use crate::engine::{Engine, EngineConfig, EngineShared};
+use crate::engine::{Engine, EngineConfig, EngineShared, SchedPolicy};
 use crate::metrics::{Measurement, Routine};
 use crate::noc::{Coord, LinkTraffic, RouterConfig, Topology};
 use crate::pe::{AeLevel, ExecMode, PeConfig, PeStats};
@@ -91,6 +91,17 @@ pub struct CoordinatorConfig {
     /// engine's cache (sized by
     /// [`crate::engine::EngineConfig::cache_capacity`]).
     pub cache_capacity: Option<usize>,
+    /// Per-tenant residency quota of the program cache (`None` =
+    /// unscoped). Only meaningful for a standalone coordinator; engine
+    /// tenants are bounded by
+    /// [`crate::engine::EngineConfig::cache_quota`].
+    pub cache_quota: Option<usize>,
+    /// Fairness currency of the worker pool's scheduler — cycle-cost
+    /// deficit round-robin ([`SchedPolicy::Cycles`], the default) or the
+    /// slot-WRR baseline. Only meaningful for a standalone coordinator
+    /// (a single lane is FIFO either way); engine tenants schedule under
+    /// [`crate::engine::EngineConfig::sched`].
+    pub sched: SchedPolicy,
     /// How pool workers execute cached kernels: [`ExecMode::Replay`]
     /// (default) runs the cycle-accurate timing pass once per kernel and
     /// replays values only afterwards; [`ExecMode::Combined`] re-runs the
@@ -116,6 +127,8 @@ impl Default for CoordinatorConfig {
             admission_window: None,
             admission_bytes: None,
             cache_capacity: None,
+            cache_quota: None,
+            sched: SchedPolicy::Cycles,
             exec: ExecMode::Replay,
             residual: false,
         }
@@ -250,6 +263,8 @@ impl Coordinator {
         let engine = Engine::new(EngineConfig {
             workers: cfg.b * cfg.b,
             cache_capacity: cfg.cache_capacity,
+            cache_quota: cfg.cache_quota,
+            sched: cfg.sched,
         });
         engine.tenant(cfg)
     }
@@ -432,17 +447,23 @@ impl Coordinator {
     }
 
     /// Fetch the cached program for `spec` and enqueue its measurement
-    /// kernel on the pool, tagged `job_id`.
+    /// kernel on the pool, tagged `job_id`. Called only after the
+    /// measurement memo came up empty, so this records the request's one
+    /// cache **miss** (the symmetric counterpart of the memo hit) and
+    /// fetches the program through the quiet accessors — one counting
+    /// event per request, whether the request is warm or pays the
+    /// simulation (see the cache module docs).
     pub(crate) fn submit_measure(&self, job_id: u64, spec: &MeasSpec) {
         let ae = self.cfg.ae;
+        let cache = &self.shared.cache;
+        cache.record_miss(Some(&self.tally));
         match spec.routine {
             Routine::Dgemv => {
-                let sched = self.shared.cache.gemv_for(spec.np, ae, Some(&self.tally));
+                let sched = cache.gemv_quiet(spec.np, ae, Some(&self.tally));
                 self.pool.submit(Job::Gemv { job_id, n: spec.np, sched });
             }
             routine => {
-                let cache = &self.shared.cache;
-                let sched = cache.level1_for(routine, spec.np, spec.alpha, ae, Some(&self.tally));
+                let sched = cache.level1_quiet(routine, spec.np, spec.alpha, ae, Some(&self.tally));
                 self.pool.submit(Job::Level1 {
                     job_id,
                     routine,

@@ -8,8 +8,13 @@
 //! own [`PoolClient`] lane:
 //!
 //! * jobs are tenant-tagged — every client pushes onto its own lane of a
-//!   weighted round-robin [`WrrQueue`], so one tenant's flood cannot
-//!   starve another's traffic;
+//!   weighted fair [`WrrQueue`], so one tenant's flood cannot starve
+//!   another's traffic. Each job carries a **cost estimate** in simulated
+//!   cycles ([`Job::cost_estimate`]: the kernel's memoized `PeStats`
+//!   cycles once the schedule exists, its decoded op count before), which
+//!   the cycle-cost deficit scheduler ([`SchedPolicy::Cycles`]) uses to
+//!   keep per-tenant *cycle* service proportional to the weights even
+//!   when tenants queue kernels of wildly mismatched cost;
 //! * results are tenant-routed — every job carries its client's reply
 //!   sender, so a client only ever receives its own completions (and a
 //!   worker panic fails the *owning* tenant's request loudly while the
@@ -31,7 +36,7 @@
 //! which worker ran a job and in which order.
 
 use crate::codegen::GemmLayout;
-use crate::engine::queue::WrrQueue;
+use crate::engine::queue::{SchedPolicy, WrrQueue};
 use crate::metrics::{measure_gemv_sched_on, measure_level1_sched_on, Measurement, Routine};
 use crate::pe::{AeLevel, ExecMode, ExecTier, Pe, PeConfig, PeStats, ScheduledProgram};
 use crate::util::Mat;
@@ -76,10 +81,30 @@ impl Job {
     /// The enhancement level this job's kernel was decoded for — the level
     /// the executing worker must configure its PE to.
     fn ae(&self) -> AeLevel {
+        self.sched().ae()
+    }
+
+    /// The cached kernel this job executes.
+    fn sched(&self) -> &Arc<ScheduledProgram> {
         match self {
             Job::GemmTile { sched, .. } | Job::Gemv { sched, .. } | Job::Level1 { sched, .. } => {
-                sched.ae()
+                sched
             }
+        }
+    }
+
+    /// Estimated simulated cycles this job will burn — the currency of the
+    /// cycle-cost deficit scheduler. Once the kernel's one-time timing
+    /// pass has memoized its `PeStats`, the estimate is exact; before
+    /// that (the first request of a cold kernel) it falls back to the
+    /// decoded op count, which tracks the cycle cost to within the stall
+    /// factor — more than enough to keep a DGEMM tile and a DDOT kernel
+    /// orders of magnitude apart.
+    pub(crate) fn cost_estimate(&self) -> u64 {
+        let sched = self.sched();
+        match sched.scheduled_stats() {
+            Some(stats) => stats.cycles.max(1),
+            None => (sched.decoded().len() as u64).max(1),
         }
     }
 }
@@ -153,9 +178,10 @@ pub struct PoolJobCounts {
 }
 
 /// The shared pool: `size` workers, spawned once, fed from a weighted
-/// round-robin lane queue. Dropping the core closes the queue and joins
-/// the workers (the engine holds it inside the shared state, so this
-/// happens when the engine *and* every tenant handle are gone).
+/// fair lane queue (slot WRR or cycle-cost DRR, per [`SchedPolicy`]).
+/// Dropping the core closes the queue and joins the workers (the engine
+/// holds it inside the shared state, so this happens when the engine
+/// *and* every tenant handle are gone).
 pub(crate) struct PoolCore {
     queue: Arc<WrrQueue<TaggedJob>>,
     workers: Vec<thread::JoinHandle<()>>,
@@ -163,10 +189,10 @@ pub(crate) struct PoolCore {
 }
 
 impl PoolCore {
-    /// Spawn `size` persistent workers.
-    pub fn new(size: usize) -> Self {
+    /// Spawn `size` persistent workers scheduling under `sched`.
+    pub fn new(size: usize, sched: SchedPolicy) -> Self {
         assert!(size >= 1, "worker pool needs at least one worker");
-        let queue = Arc::new(WrrQueue::new());
+        let queue = Arc::new(WrrQueue::new(sched));
         let counts = Arc::new(Counters::default());
         let workers = (0..size)
             .map(|i| {
@@ -189,6 +215,17 @@ impl PoolCore {
     /// Pool-wide execution totals (all tenants).
     pub fn counts(&self) -> PoolJobCounts {
         self.counts.snapshot()
+    }
+
+    /// The fairness currency jobs are dispatched under.
+    pub fn sched(&self) -> SchedPolicy {
+        self.queue.policy()
+    }
+
+    /// Per-lane (weight, cumulative dispatched estimated cycles) — the
+    /// proportional-service observable, in tenant attach order.
+    pub fn lane_service(&self) -> Vec<(u64, u64)> {
+        self.queue.lane_served()
     }
 
     /// Open a tenant lane with fair-scheduler `weight`, executing this
@@ -234,10 +271,15 @@ pub(crate) struct PoolClient {
 
 impl PoolClient {
     /// Enqueue a job on this tenant's lane (returns immediately; the
-    /// result comes back via [`PoolClient::recv`]).
+    /// result comes back via [`PoolClient::recv`]). The job's cycle-cost
+    /// estimate is taken here, at submission: a kernel whose schedule was
+    /// memoized by an earlier request is priced exactly, a cold kernel by
+    /// its decoded op count.
     pub fn submit(&self, job: Job) {
+        let cost = job.cost_estimate();
         self.queue.push(
             self.lane,
+            cost,
             TaggedJob {
                 job,
                 exec: self.exec,
@@ -386,7 +428,7 @@ mod tests {
 
     #[test]
     fn pool_runs_jobs_and_reuses_workers() {
-        let core = PoolCore::new(2);
+        let core = PoolCore::new(2, SchedPolicy::Slots);
         let client = core.client(1, ExecMode::Replay);
         assert_eq!(core.worker_count(), 2);
         assert_eq!(client.worker_count(), 2);
@@ -422,7 +464,7 @@ mod tests {
         // One ScheduledProgram shared by several jobs: only the first
         // execution pays the timing pass; later jobs replay values and
         // return identical stats and identical output.
-        let core = PoolCore::new(1);
+        let core = PoolCore::new(1, SchedPolicy::Slots);
         let client = core.client(1, ExecMode::Replay);
         let (first, want) = gemm_job(0, 0, 12, 500);
         let (sched, layout, gm) = match &first {
@@ -458,7 +500,7 @@ mod tests {
 
     #[test]
     fn combined_mode_never_replays() {
-        let core = PoolCore::new(1);
+        let core = PoolCore::new(1, SchedPolicy::Slots);
         let client = core.client(1, ExecMode::Combined);
         let (first, _) = gemm_job(0, 0, 8, 600);
         let (sched, layout, gm) = match &first {
@@ -481,7 +523,7 @@ mod tests {
         // A pooled DGEMV/Level-1 kernel must return exactly the inline
         // measurement (the pool only moves where the simulation runs).
         let ae = AeLevel::Ae5;
-        let core = PoolCore::new(2);
+        let core = PoolCore::new(2, SchedPolicy::Slots);
         let client = core.client(1, ExecMode::Replay);
         let n = 16;
         let gprog = gen_gemv(n, ae, &VecLayout::gemv(n));
@@ -520,7 +562,7 @@ mod tests {
         // Two tenants on one shared pool: completions route to the
         // submitting client, and the per-tenant counters sum to the
         // pool-wide totals.
-        let core = PoolCore::new(2);
+        let core = PoolCore::new(2, SchedPolicy::Slots);
         let a = core.client(1, ExecMode::Replay);
         let b = core.client(2, ExecMode::Replay);
         let (ja, want_a) = gemm_job(10, 0, 8, 700);
@@ -553,7 +595,7 @@ mod tests {
         // One worker serving kernels decoded for different AE levels must
         // swap PE configurations per job and still return exactly the
         // per-level reference values.
-        let core = PoolCore::new(1);
+        let core = PoolCore::new(1, SchedPolicy::Slots);
         let lo = core.client(1, ExecMode::Replay);
         let hi = core.client(1, ExecMode::Replay);
         for round in 0..2u64 {
@@ -576,9 +618,69 @@ mod tests {
 
     #[test]
     fn drop_joins_idle_workers() {
-        let core = PoolCore::new(3);
+        let core = PoolCore::new(3, SchedPolicy::Slots);
         let _client = core.client(1, ExecMode::Replay);
         drop(core); // must not hang
+    }
+
+    #[test]
+    fn cost_estimate_sharpens_once_the_schedule_memoizes() {
+        // Before the timing pass: decode-derived op count. After: the
+        // exact memoized cycle cost (which includes stalls, so it always
+        // exceeds the op count for a real kernel).
+        let (job, _) = gemm_job(0, 0, 12, 900);
+        let (sched, gm_words) = match &job {
+            Job::GemmTile { sched, layout, .. } => (Arc::clone(sched), layout.gm_words()),
+            _ => unreachable!(),
+        };
+        let cold = job.cost_estimate();
+        assert_eq!(cold, sched.decoded().len() as u64, "cold estimate is the op count");
+        let mut pe = Pe::new(PeConfig::paper(AeLevel::Ae5), gm_words);
+        let stats = sched.execute(&mut pe, ExecMode::Replay);
+        assert_eq!(job.cost_estimate(), stats.cycles, "warm estimate is the memoized cycles");
+        assert!(job.cost_estimate() > cold, "cycles include stalls beyond the op count");
+    }
+
+    #[test]
+    fn drr_pool_serves_both_tenants_and_reports_lane_service() {
+        // A cycle-cost DRR pool end to end: two clients, mismatched kernel
+        // costs, everything completes and the lane-service telemetry sums
+        // to the dispatched estimates.
+        let core = PoolCore::new(1, SchedPolicy::Cycles);
+        assert_eq!(core.sched(), SchedPolicy::Cycles);
+        let a = core.client(1, ExecMode::Replay);
+        let b = core.client(3, ExecMode::Replay);
+        let (ja, want_a) = gemm_job(1, 0, 16, 910);
+        a.submit(ja);
+        let ae = AeLevel::Ae5;
+        let n = 16;
+        let lprog = crate::codegen::gen_ddot(n, ae, &VecLayout::level1(n));
+        let lsched = Arc::new(ScheduledProgram::compile(&lprog, ae).expect("ddot decodes"));
+        for id in 0..3u64 {
+            b.submit(Job::Level1 {
+                job_id: id,
+                routine: Routine::Ddot,
+                n,
+                alpha: 1.5,
+                sched: Arc::clone(&lsched),
+            });
+        }
+        match a.recv() {
+            Done::GemmTile { out, .. } => {
+                assert!(rel_fro_error(out.as_slice(), want_a.as_slice()) < 1e-12);
+            }
+            Done::Measured { .. } => panic!("no measurement submitted on a"),
+        }
+        for _ in 0..3 {
+            match b.recv() {
+                Done::Measured { meas, .. } => assert!(meas.latency() > 0),
+                Done::GemmTile { .. } => panic!("no tile submitted on b"),
+            }
+        }
+        let service = core.lane_service();
+        assert_eq!(service.len(), 2);
+        assert_eq!((service[0].0, service[1].0), (1, 3), "weights in attach order");
+        assert!(service[0].1 > 0 && service[1].1 > 0, "both lanes served: {service:?}");
     }
 
     /// A Level-1 job whose schedule belongs to a *different* routine: the
@@ -594,7 +696,7 @@ mod tests {
     #[test]
     #[should_panic(expected = "pool worker panicked")]
     fn worker_panic_propagates_instead_of_deadlocking() {
-        let core = PoolCore::new(1);
+        let core = PoolCore::new(1, SchedPolicy::Slots);
         let client = core.client(1, ExecMode::Replay);
         client.submit(poison_job(0));
         let _ = client.recv();
@@ -604,7 +706,7 @@ mod tests {
     fn worker_panic_is_scoped_to_the_owning_client() {
         // Tenant `bad` submits a poisoned kernel; tenant `good`'s traffic
         // must keep flowing on the same (single) worker.
-        let core = PoolCore::new(1);
+        let core = PoolCore::new(1, SchedPolicy::Slots);
         let bad = core.client(1, ExecMode::Replay);
         let good = core.client(1, ExecMode::Replay);
         bad.submit(poison_job(1));

@@ -412,6 +412,9 @@ impl Coordinator {
                             e.get_mut().push(id);
                         }
                         Entry::Vacant(e) => {
+                            // Pays the simulation: submit_measure records
+                            // the request's one cache miss (the memo was
+                            // empty) and fetches the program quietly.
                             self.submit_measure(id, &spec);
                             submitted.insert(id, spec.key);
                             e.insert(vec![id]);

@@ -15,9 +15,19 @@
 //!   tenant requesting the same (routine, shape, AE) key;
 //! * **one worker fleet** — PE simulations from all tenants interleave on
 //!   the same host threads instead of every coordinator spawning its own;
-//! * **fair scheduling** — per-tenant submission lanes drained by weighted
-//!   round-robin, so one tenant's large DGEMM batch cannot starve another
-//!   tenant's Level-1 traffic (see `queue`).
+//! * **fair scheduling** — per-tenant submission lanes drained by a
+//!   weighted fair scheduler, so one tenant's large DGEMM batch cannot
+//!   starve another tenant's Level-1 traffic. The default currency is
+//!   **estimated simulated cycles** ([`SchedPolicy::Cycles`]: deficit
+//!   round-robin over per-job cost estimates), so a tenant flooding huge
+//!   DGEMM tile kernels and a tenant submitting DDOT kernels receive
+//!   cycle service in proportion to their weights — the slot-based WRR of
+//!   PR 4 ([`SchedPolicy::Slots`]) counted both the same per dispatch and
+//!   stays available as the pinned baseline (see `queue`);
+//! * **scoped cache residency** — [`EngineConfig::cache_quota`] bounds
+//!   each tenant's resident kernel count, so a shape-churning tenant
+//!   evicts within its own set instead of flushing a sibling's warm
+//!   kernels out of the shared capped cache.
 //!
 //! Accounting splits both ways: the engine reports shared totals
 //! ([`Engine::cache_stats`], [`Engine::pool_job_counts`]) while every
@@ -29,6 +39,8 @@
 //! energy) is unchanged — pinned by the serving tests.
 
 pub(crate) mod queue;
+
+pub use queue::SchedPolicy;
 
 use crate::coordinator::cache::ProgramCache;
 use crate::coordinator::pool::PoolCore;
@@ -45,11 +57,22 @@ pub struct EngineConfig {
     /// (`None` = unbounded). Tenant-level `cache_capacity` settings are
     /// ignored under an engine — residency is a shared property.
     pub cache_capacity: Option<usize>,
+    /// Per-tenant residency quota of the shared cache (`None` =
+    /// unscoped): each tenant may keep at most this many kernels
+    /// resident, and an overflowing insertion evicts within the
+    /// overflowing tenant's *own* set — a churning tenant cannot flush a
+    /// sibling's warm kernels. Composes with `cache_capacity` (the global
+    /// cap still bounds the total).
+    pub cache_quota: Option<usize>,
+    /// Fairness currency of the shared pool's scheduler: cycle-cost
+    /// deficit round-robin ([`SchedPolicy::Cycles`], the default) or the
+    /// slot-based WRR baseline ([`SchedPolicy::Slots`]).
+    pub sched: SchedPolicy,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { workers: 4, cache_capacity: None }
+        Self { workers: 4, cache_capacity: None, cache_quota: None, sched: SchedPolicy::Cycles }
     }
 }
 
@@ -69,25 +92,35 @@ pub(crate) struct EngineShared {
 /// use redefine_blas::coordinator::CoordinatorConfig;
 /// use redefine_blas::engine::{Engine, EngineConfig};
 ///
-/// let engine = Engine::new(EngineConfig { workers: 4, cache_capacity: None });
+/// let engine = Engine::new(EngineConfig { workers: 4, ..EngineConfig::default() });
 /// let mut a = engine.tenant(CoordinatorConfig::default());
 /// let mut b = engine.tenant_weighted(CoordinatorConfig::default(), 3);
-/// // `a` and `b` serve through one pool and share warm kernels; `b` gets
-/// // up to 3 dispatch slots per scheduler round to `a`'s 1.
+/// // `a` and `b` serve through one pool and share warm kernels; under the
+/// // default cycle-cost scheduler `b` receives up to 3 estimated
+/// // simulated cycles of service per scheduler round to `a`'s 1.
 /// ```
 pub struct Engine {
     shared: Arc<EngineShared>,
     tenants: AtomicUsize,
 }
 
+/// One tenant lane's slice of the fair scheduler's service telemetry, in
+/// tenant attach order (see [`Engine::lane_service`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneService {
+    /// The lane's scheduling weight.
+    pub weight: u64,
+    /// Cumulative estimated simulated cycles dispatched from this lane
+    /// (per-job cost estimates at submission time: exact memoized cycles
+    /// for warm kernels, decoded op count for cold ones).
+    pub served_cost: u64,
+}
+
 impl Engine {
     /// Spawn the shared worker pool and build the shared program cache.
     pub fn new(cfg: EngineConfig) -> Self {
-        let cache = match cfg.cache_capacity {
-            Some(cap) => ProgramCache::with_capacity(cap),
-            None => ProgramCache::new(),
-        };
-        let shared = Arc::new(EngineShared { pool: PoolCore::new(cfg.workers), cache });
+        let cache = ProgramCache::with_limits(cfg.cache_capacity, cfg.cache_quota);
+        let shared = Arc::new(EngineShared { pool: PoolCore::new(cfg.workers, cfg.sched), cache });
         Self { shared, tenants: AtomicUsize::new(0) }
     }
 
@@ -100,9 +133,11 @@ impl Engine {
     }
 
     /// [`Engine::tenant`] with an explicit fair-scheduler weight: when
-    /// lanes contend, a weight-`w` tenant is offered up to `w` jobs per
-    /// round-robin round. Weight bounds *relative service rate*, not
-    /// priority — every backlogged tenant is served every round.
+    /// lanes contend, a weight-`w` tenant accrues `w` units of service per
+    /// scheduler round — estimated simulated cycles under the default
+    /// [`SchedPolicy::Cycles`], dispatch slots under
+    /// [`SchedPolicy::Slots`]. Weight bounds *relative service rate*, not
+    /// priority — every backlogged tenant accrues every round.
     pub fn tenant_weighted(&self, cfg: CoordinatorConfig, weight: u64) -> Coordinator {
         assert!(weight >= 1, "tenant weight must be at least 1");
         self.tenants.fetch_add(1, Ordering::Relaxed);
@@ -131,6 +166,26 @@ impl Engine {
     pub fn pool_job_counts(&self) -> PoolJobCounts {
         self.shared.pool.counts()
     }
+
+    /// The fairness currency the shared pool schedules under.
+    pub fn sched(&self) -> SchedPolicy {
+        self.shared.pool.sched()
+    }
+
+    /// Per-tenant-lane service telemetry, in tenant attach order: each
+    /// lane's weight and the cumulative estimated simulated cycles
+    /// dispatched from it. Under [`SchedPolicy::Cycles`] the served costs
+    /// of continuously backlogged lanes track the weight ratio (the
+    /// proportional-service property pinned by the queue tests and
+    /// asserted end to end by the `hot_paths` bench).
+    pub fn lane_service(&self) -> Vec<LaneService> {
+        self.shared
+            .pool
+            .lane_service()
+            .into_iter()
+            .map(|(weight, served_cost)| LaneService { weight, served_cost })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -151,17 +206,22 @@ mod tests {
 
     #[test]
     fn engine_reports_workers_and_tenants() {
-        let engine = Engine::new(EngineConfig { workers: 3, cache_capacity: None });
+        let engine = Engine::new(EngineConfig { workers: 3, ..EngineConfig::default() });
         assert_eq!(engine.worker_count(), 3);
         assert_eq!(engine.tenant_count(), 0);
+        assert_eq!(engine.sched(), SchedPolicy::Cycles, "cycle-cost DRR is the default");
         let _a = engine.tenant(cfg(AeLevel::Ae5, 2));
         let _b = engine.tenant_weighted(cfg(AeLevel::Ae2, 1), 4);
         assert_eq!(engine.tenant_count(), 2);
+        let service = engine.lane_service();
+        assert_eq!(service.len(), 2);
+        assert_eq!((service[0].weight, service[1].weight), (1, 4));
+        assert_eq!((service[0].served_cost, service[1].served_cost), (0, 0));
     }
 
     #[test]
     fn tenants_share_the_program_cache() {
-        let engine = Engine::new(EngineConfig { workers: 2, cache_capacity: None });
+        let engine = Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() });
         let mut a = engine.tenant(cfg(AeLevel::Ae5, 2));
         let mut b = engine.tenant(cfg(AeLevel::Ae5, 2));
         let n = 16;
@@ -179,7 +239,7 @@ mod tests {
     #[test]
     fn pool_outlives_the_engine_value() {
         let mut tenant = {
-            let engine = Engine::new(EngineConfig { workers: 2, cache_capacity: None });
+            let engine = Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() });
             engine.tenant(cfg(AeLevel::Ae4, 2))
         };
         // The engine value is gone; the shared pool must still serve.

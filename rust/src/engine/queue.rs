@@ -1,52 +1,93 @@
-//! Weighted round-robin job queue — the fair scheduler of the shared
-//! engine pool.
+//! Fair job queue of the shared engine pool: weighted round-robin over
+//! dispatch slots, or deficit round-robin over estimated simulated cycles.
 //!
-//! One lane per tenant. Workers pop in WRR order: the scheduler visits
-//! lanes cyclically and serves up to `weight` items from a lane before
-//! moving to the next, so a tenant flooding its lane (a large DGEMM batch
-//! queueing hundreds of tile kernels) cannot starve another tenant's
-//! Level-1 traffic — every backlogged lane is served at least `weight`
-//! items per round. A single lane degenerates to plain FIFO, which is what
-//! keeps a standalone single-tenant coordinator's dispatch order identical
-//! to the pre-engine pool.
+//! One lane per tenant. Every queued item carries a **cost** (the
+//! submitter's estimate of the simulated cycles the job will burn — see
+//! `Job::cost_estimate`), and the queue supports two currencies of
+//! fairness, selected by [`SchedPolicy`]:
 //!
-//! The queue is deliberately dumb about *time*: fairness is defined over
-//! dispatch slots, not simulated cycles, because the simulated cost of a
-//! job is only known after it runs. Weights bound relative service rates
-//! whenever lanes contend.
+//! * [`SchedPolicy::Slots`] — the original weighted round-robin: the
+//!   scheduler visits lanes cyclically and serves up to `weight` *items*
+//!   from a lane before moving on. Simple and starvation-free, but blind
+//!   to cost: a tenant whose items are 56×56 DGEMM tile kernels receives
+//!   orders of magnitude more simulated cycles per slot than a tenant
+//!   queueing DDOT kernels. Kept reachable as the pinned baseline.
+//! * [`SchedPolicy::Cycles`] — deficit round-robin (DRR) over the cost
+//!   estimates: each backlogged lane banks a cycle *deficit* that accrues
+//!   per scheduler round in proportion to its weight, and a lane may only
+//!   dispatch its head item once its balance covers the item's cost. Over
+//!   any contended interval, the simulated-cycle service of backlogged
+//!   lanes converges to the weight ratio (within one maximal item cost per
+//!   lane — the classic DRR bound), regardless of how mismatched the
+//!   per-item costs are. Idle lanes forfeit their balance, so a tenant
+//!   cannot bank credit while absent. Instead of spinning the round clock
+//!   one quantum at a time, the scheduler fast-forwards it by the minimal
+//!   whole number of rounds that makes some lane solvent — identical
+//!   accrual, O(lanes) work per dispatch.
+//!
+//! Under either policy a single lane degenerates to plain FIFO, which is
+//! what keeps a standalone single-tenant coordinator's dispatch order
+//! identical to the pre-engine pool. Per-lane cumulative dispatched cost
+//! is tracked ([`WrrQueue::lane_served`]) so fairness is observable, not
+//! just implemented.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 
+/// The fairness currency of the shared engine's job scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    /// Weighted round-robin over dispatch slots: `weight` items per lane
+    /// per round. Cost-blind — the PR 4 baseline.
+    Slots,
+    /// Deficit round-robin over estimated simulated cycles: `weight`
+    /// cycles of deficit per lane per round. Cost-aware — the default.
+    #[default]
+    Cycles,
+}
+
 struct Lane<T> {
     weight: u64,
-    items: VecDeque<T>,
+    /// Queued (cost, item) pairs, FIFO within the lane.
+    items: VecDeque<(u64, T)>,
+    /// DRR cycle balance: accrued but not yet spent service. Reset when
+    /// the lane goes idle (no banking while absent).
+    deficit: u64,
+    /// Cumulative cost of items dispatched from this lane (telemetry).
+    served: u64,
 }
 
 struct State<T> {
     lanes: Vec<Lane<T>>,
     /// Lane currently being served by the round-robin scan.
     cursor: usize,
-    /// Items the cursor lane may still take before the scan advances.
+    /// Slots policy: items the cursor lane may still take this turn.
     credit: u64,
     /// False once `close()` ran: pops drain the backlog, then return `None`.
     open: bool,
 }
 
-/// Multi-producer multi-consumer queue with weighted round-robin lane
-/// scheduling. Producers push onto their own lane; consumers (pool
-/// workers) pop in WRR order across all lanes.
+/// Multi-producer multi-consumer queue with weighted fair lane scheduling.
+/// Producers push onto their own lane; consumers (pool workers) pop in
+/// policy order across all lanes.
 pub(crate) struct WrrQueue<T> {
+    policy: SchedPolicy,
     state: Mutex<State<T>>,
     ready: Condvar,
 }
 
 impl<T> WrrQueue<T> {
-    pub fn new() -> Self {
+    pub fn new(policy: SchedPolicy) -> Self {
         Self {
+            policy,
             state: Mutex::new(State { lanes: Vec::new(), cursor: 0, credit: 0, open: true }),
             ready: Condvar::new(),
         }
+    }
+
+    /// The scheduling policy this queue dispatches under.
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
     }
 
     /// Register a new lane with scheduling weight `weight` (≥ 1); returns
@@ -55,26 +96,40 @@ impl<T> WrrQueue<T> {
     pub fn add_lane(&self, weight: u64) -> usize {
         assert!(weight >= 1, "lane weight must be at least 1");
         let mut st = self.state.lock().expect("wrr queue poisoned");
-        st.lanes.push(Lane { weight, items: VecDeque::new() });
+        if st.lanes.is_empty() {
+            // Cold start: the scan begins at lane 0 with a full slot
+            // credit, so the first tenant is served first in the first
+            // round (the cursor used to advance before serving, pushing
+            // lane 0 to the back of round one).
+            st.cursor = 0;
+            st.credit = weight;
+        }
+        st.lanes.push(Lane { weight, items: VecDeque::new(), deficit: 0, served: 0 });
         st.lanes.len() - 1
     }
 
-    /// Enqueue `item` on `lane` and wake one waiting consumer.
-    pub fn push(&self, lane: usize, item: T) {
+    /// Enqueue `item` on `lane` with estimated cost `cost` (simulated
+    /// cycles; clamped to ≥ 1 so a zero estimate cannot starve the DRR
+    /// accounting) and wake one waiting consumer.
+    pub fn push(&self, lane: usize, cost: u64, item: T) {
         let mut st = self.state.lock().expect("wrr queue poisoned");
         assert!(st.open, "push after close");
-        st.lanes[lane].items.push_back(item);
+        st.lanes[lane].items.push_back((cost.max(1), item));
         drop(st);
         self.ready.notify_one();
     }
 
-    /// Dequeue the next item in weighted round-robin order, blocking while
-    /// the queue is open but empty. Returns `None` once the queue is
-    /// closed *and* fully drained.
+    /// Dequeue the next item in fair order, blocking while the queue is
+    /// open but empty. Returns `None` once the queue is closed *and*
+    /// fully drained.
     pub fn pop(&self) -> Option<T> {
         let mut st = self.state.lock().expect("wrr queue poisoned");
         loop {
-            if let Some(item) = Self::pop_locked(&mut st) {
+            let popped = match self.policy {
+                SchedPolicy::Slots => Self::pop_slots(&mut st),
+                SchedPolicy::Cycles => Self::pop_cycles(&mut st),
+            };
+            if let Some(item) = popped {
                 return Some(item);
             }
             if !st.open {
@@ -91,30 +146,90 @@ impl<T> WrrQueue<T> {
         self.ready.notify_all();
     }
 
-    /// The WRR scan. Terminates because it only loops while some lane is
-    /// non-empty, and every iteration either serves an item or advances
-    /// the cursor past an empty lane (of which there are finitely many).
-    fn pop_locked(st: &mut State<T>) -> Option<T> {
+    /// Per-lane (weight, cumulative dispatched cost) snapshot — the
+    /// observable the proportional-service assertions read.
+    pub fn lane_served(&self) -> Vec<(u64, u64)> {
+        let st = self.state.lock().expect("wrr queue poisoned");
+        st.lanes.iter().map(|l| (l.weight, l.served)).collect()
+    }
+
+    /// The slot-WRR scan. Terminates because it only runs while some lane
+    /// is non-empty, and every iteration either serves an item or advances
+    /// the cursor (each advance refills the credit, so a non-empty lane is
+    /// served within one full cycle of the lanes).
+    fn pop_slots(st: &mut State<T>) -> Option<T> {
         if st.lanes.iter().all(|l| l.items.is_empty()) {
             return None;
         }
         loop {
-            if st.credit == 0 {
-                st.cursor = (st.cursor + 1) % st.lanes.len();
-                st.credit = st.lanes[st.cursor].weight;
+            if st.credit > 0 {
+                if let Some((cost, item)) = st.lanes[st.cursor].items.pop_front() {
+                    st.credit -= 1;
+                    st.lanes[st.cursor].served += cost;
+                    return Some(item);
+                }
             }
-            if let Some(item) = st.lanes[st.cursor].items.pop_front() {
-                st.credit -= 1;
-                return Some(item);
-            }
-            st.credit = 0;
+            st.cursor = (st.cursor + 1) % st.lanes.len();
+            st.credit = st.lanes[st.cursor].weight;
         }
     }
-}
 
-impl<T> Default for WrrQueue<T> {
-    fn default() -> Self {
-        Self::new()
+    /// The DRR scan. A lane dispatches while its banked deficit covers its
+    /// head item's cost; when no backlogged lane is solvent, the round
+    /// clock fast-forwards: every backlogged lane accrues `k · weight`
+    /// cycles where `k` is the minimal number of whole rounds that makes
+    /// at least one lane solvent (so the loop terminates after one
+    /// top-up). Idle lanes forfeit their balance.
+    fn pop_cycles(st: &mut State<T>) -> Option<T> {
+        if st.lanes.iter().all(|l| l.items.is_empty()) {
+            return None;
+        }
+        loop {
+            // One round-robin scan from the cursor for a solvent lane.
+            for _ in 0..st.lanes.len() {
+                let lane = &mut st.lanes[st.cursor];
+                match lane.items.front() {
+                    Some(&(cost, _)) if cost <= lane.deficit => {
+                        let (cost, item) = lane.items.pop_front().expect("front checked above");
+                        lane.deficit -= cost;
+                        lane.served += cost;
+                        // The lane keeps the cursor only while its balance
+                        // covers its next item (FIFO burst within
+                        // deficit); otherwise its turn ends — a drained
+                        // lane also forfeits its balance.
+                        match lane.items.front() {
+                            Some(&(next, _)) if next <= lane.deficit => {}
+                            Some(_) => st.cursor = (st.cursor + 1) % st.lanes.len(),
+                            None => {
+                                lane.deficit = 0;
+                                st.cursor = (st.cursor + 1) % st.lanes.len();
+                            }
+                        }
+                        return Some(item);
+                    }
+                    Some(_) => {}
+                    None => lane.deficit = 0,
+                }
+                st.cursor = (st.cursor + 1) % st.lanes.len();
+            }
+            // No backlogged lane can afford its head item: advance the
+            // round clock. `need / weight` rounds (rounded up) make lane
+            // `i` solvent; the minimum over backlogged lanes is granted to
+            // all of them at once — proportional accrual, fast-forwarded.
+            let k = st
+                .lanes
+                .iter()
+                .filter(|l| !l.items.is_empty())
+                .map(|l| {
+                    let head = l.items.front().expect("filtered to backlogged").0;
+                    (head - l.deficit).div_ceil(l.weight)
+                })
+                .min()
+                .expect("pop_cycles runs only while some lane is backlogged");
+            for lane in st.lanes.iter_mut().filter(|l| !l.items.is_empty()) {
+                lane.deficit = lane.deficit.saturating_add(k.saturating_mul(lane.weight));
+            }
+        }
     }
 }
 
@@ -122,23 +237,31 @@ impl<T> Default for WrrQueue<T> {
 mod tests {
     use super::*;
 
+    /// A DGEMM tile kernel's ballpark simulated cost, vs a DDOT kernel's —
+    /// the orders-of-magnitude mismatch the DRR scheduler exists for.
+    const TILE_COST: u64 = 120_000;
+    const DDOT_COST: u64 = 600;
+
     #[test]
-    fn single_lane_is_fifo() {
-        let q = WrrQueue::new();
-        let lane = q.add_lane(1);
-        for i in 0..10 {
-            q.push(lane, i);
-        }
-        for want in 0..10 {
-            assert_eq!(q.pop(), Some(want));
+    fn single_lane_is_fifo_under_both_policies() {
+        for policy in [SchedPolicy::Slots, SchedPolicy::Cycles] {
+            let q = WrrQueue::new(policy);
+            assert_eq!(q.policy(), policy);
+            let lane = q.add_lane(1);
+            for i in 0..10 {
+                q.push(lane, 1 + (i % 3), i);
+            }
+            for want in 0..10 {
+                assert_eq!(q.pop(), Some(want), "{policy:?}");
+            }
         }
     }
 
     #[test]
     fn close_drains_backlog_then_ends() {
-        let q = WrrQueue::new();
+        let q = WrrQueue::new(SchedPolicy::Cycles);
         let lane = q.add_lane(1);
-        q.push(lane, 7);
+        q.push(lane, 5, 7);
         q.close();
         assert_eq!(q.pop(), Some(7));
         assert_eq!(q.pop(), None);
@@ -147,13 +270,44 @@ mod tests {
 
     #[test]
     fn pop_blocks_until_a_push_arrives() {
-        let q = std::sync::Arc::new(WrrQueue::new());
+        let q = std::sync::Arc::new(WrrQueue::new(SchedPolicy::Cycles));
         let lane = q.add_lane(1);
         let q2 = std::sync::Arc::clone(&q);
         let h = std::thread::spawn(move || q2.pop());
         std::thread::sleep(std::time::Duration::from_millis(20));
-        q.push(lane, 42);
+        q.push(lane, 3, 42);
         assert_eq!(h.join().expect("popper thread"), Some(42));
+    }
+
+    /// The cold-start lane-bias fix: the very first dispatch must come
+    /// from lane 0 (the standalone/first tenant), not from lane 1 — the
+    /// old scan advanced the cursor before serving, so lane 0 was served
+    /// *last* in the first round.
+    #[test]
+    fn cold_start_serves_lane_zero_first() {
+        let q = WrrQueue::new(SchedPolicy::Slots);
+        let a = q.add_lane(1);
+        let b = q.add_lane(1);
+        for i in 0..2 {
+            q.push(a, 1, (a, i));
+            q.push(b, 1, (b, i));
+        }
+        let order: Vec<_> = (0..4).map(|_| q.pop().expect("queued item")).collect();
+        assert_eq!(order, vec![(a, 0), (b, 0), (a, 1), (b, 1)], "lane 0 must open the round");
+    }
+
+    /// Same property under DRR: with equal weights and equal costs the
+    /// round top-up makes every lane solvent at once, and the scan starts
+    /// at lane 0.
+    #[test]
+    fn cold_start_serves_lane_zero_first_under_drr() {
+        let q = WrrQueue::new(SchedPolicy::Cycles);
+        let a = q.add_lane(1);
+        let b = q.add_lane(1);
+        q.push(a, 10, (a, 0));
+        q.push(b, 10, (b, 0));
+        assert_eq!(q.pop(), Some((a, 0)), "lane 0 must open the round");
+        assert_eq!(q.pop(), Some((b, 0)));
     }
 
     /// The no-starvation property: however much one lane floods, a
@@ -162,14 +316,14 @@ mod tests {
     /// least k times (while it still has backlog).
     #[test]
     fn flooded_lane_cannot_starve_the_other() {
-        let q = WrrQueue::new();
+        let q = WrrQueue::new(SchedPolicy::Slots);
         let flood = q.add_lane(1);
         let light = q.add_lane(1);
         for i in 0..100 {
-            q.push(flood, (flood, i));
+            q.push(flood, 1, (flood, i));
         }
         for i in 0..10 {
-            q.push(light, (light, i));
+            q.push(light, 1, (light, i));
         }
         let mut seen_light = 0u64;
         for step in 0..110u64 {
@@ -189,15 +343,15 @@ mod tests {
     }
 
     #[test]
-    fn weights_bias_service_proportionally() {
-        let q = WrrQueue::new();
+    fn weights_bias_slot_service_proportionally() {
+        let q = WrrQueue::new(SchedPolicy::Slots);
         let heavy = q.add_lane(3);
         let light = q.add_lane(1);
         for i in 0..60 {
-            q.push(heavy, (heavy, i));
+            q.push(heavy, 1, (heavy, i));
         }
         for i in 0..20 {
-            q.push(light, (light, i));
+            q.push(light, 1, (light, i));
         }
         // While both lanes have backlog every full round serves 3 heavy +
         // 1 light items, so the first 40 dispatches split exactly 30/10.
@@ -213,18 +367,122 @@ mod tests {
 
     #[test]
     fn items_within_a_lane_stay_fifo_under_contention() {
-        let q = WrrQueue::new();
-        let a = q.add_lane(2);
-        let b = q.add_lane(1);
-        for i in 0..30 {
-            q.push(a, (a, i));
-            q.push(b, (b, i));
+        for policy in [SchedPolicy::Slots, SchedPolicy::Cycles] {
+            let q = WrrQueue::new(policy);
+            let a = q.add_lane(2);
+            let b = q.add_lane(1);
+            for i in 0..30 {
+                q.push(a, 7, (a, i));
+                q.push(b, 3, (b, i));
+            }
+            let mut next = [0; 2];
+            for _ in 0..60 {
+                let (lane, i) = q.pop().expect("queued item");
+                assert_eq!(i, next[lane], "{policy:?}: lane {lane} reordered");
+                next[lane] += 1;
+            }
         }
-        let mut next = [0; 2];
-        for _ in 0..60 {
-            let (lane, i) = q.pop().expect("queued item");
-            assert_eq!(i, next[lane], "lane {lane} reordered");
-            next[lane] += 1;
+    }
+
+    /// The tentpole acceptance property: two backlogged lanes with weights
+    /// 1:3 and deliberately mismatched per-item costs — one flooding
+    /// DGEMM-tile-sized jobs, one DDOT-sized jobs — must receive
+    /// simulated-cycle service within 25% of 1:3 under the cycles
+    /// scheduler.
+    #[test]
+    fn drr_cycle_service_tracks_weights_despite_cost_mismatch() {
+        let q = WrrQueue::new(SchedPolicy::Cycles);
+        let gemm = q.add_lane(1); // few huge items
+        let ddot = q.add_lane(3); // many tiny items
+        for i in 0..12 {
+            q.push(gemm, TILE_COST, (gemm, i));
+        }
+        for i in 0..3_200 {
+            q.push(ddot, DDOT_COST, (ddot, i));
+        }
+        // Dispatch until the DDOT lane has been served 3000 items; both
+        // lanes stay backlogged throughout the measured window.
+        let mut ddot_items = 0u64;
+        while ddot_items < 3_000 {
+            let (lane, _) = q.pop().expect("queued item");
+            if lane == ddot {
+                ddot_items += 1;
+            }
+        }
+        let served = q.lane_served();
+        let (gemm_cycles, ddot_cycles) = (served[gemm].1, served[ddot].1);
+        assert_eq!(ddot_cycles, 3_000 * DDOT_COST);
+        let ratio = ddot_cycles as f64 / gemm_cycles as f64;
+        assert!(
+            (2.25..=3.75).contains(&ratio),
+            "cycle service must track the 1:3 weights within 25%: \
+             gemm {gemm_cycles}, ddot {ddot_cycles}, ratio {ratio:.2}"
+        );
+    }
+
+    /// The same workload under the slot-WRR baseline demonstrably violates
+    /// cycle proportionality: slots are cost-blind, so the DGEMM lane
+    /// receives orders of magnitude more simulated cycles than its 1:3
+    /// weight share.
+    #[test]
+    fn slot_wrr_violates_cycle_proportionality_on_mismatched_costs() {
+        let q = WrrQueue::new(SchedPolicy::Slots);
+        let gemm = q.add_lane(1);
+        let ddot = q.add_lane(3);
+        for i in 0..100 {
+            q.push(gemm, TILE_COST, (gemm, i));
+        }
+        for i in 0..3_200 {
+            q.push(ddot, DDOT_COST, (ddot, i));
+        }
+        // 40 full rounds: 40 gemm items + 120 ddot items, both backlogged.
+        for _ in 0..160 {
+            let _ = q.pop().expect("queued item");
+        }
+        let served = q.lane_served();
+        let (gemm_cycles, ddot_cycles) = (served[gemm].1, served[ddot].1);
+        assert_eq!(gemm_cycles, 40 * TILE_COST);
+        assert_eq!(ddot_cycles, 120 * DDOT_COST);
+        let ratio = ddot_cycles as f64 / gemm_cycles as f64;
+        assert!(
+            ratio < 2.25,
+            "slot WRR should hand the heavy lane far more than its cycle share \
+             (got ratio {ratio:.3}, weights say 3.0)"
+        );
+    }
+
+    /// DRR must not let an idle lane bank credit: a lane that was empty
+    /// while another served gets no retroactive burst when it wakes up.
+    #[test]
+    fn idle_lane_forfeits_its_deficit() {
+        let q = WrrQueue::new(SchedPolicy::Cycles);
+        let a = q.add_lane(1);
+        let b = q.add_lane(1);
+        for i in 0..6 {
+            q.push(a, 100, (a, i));
+        }
+        // b is idle while a drains half its backlog.
+        for _ in 0..3 {
+            assert_eq!(q.pop().map(|(l, _)| l), Some(a));
+        }
+        for i in 0..4 {
+            q.push(b, 100, (b, i));
+        }
+        // From here service alternates: b holds no banked balance from its
+        // idle period, so it cannot burst ahead of a.
+        let mut a_seen = 0;
+        let mut b_seen = 0;
+        for step in 0..6 {
+            let (lane, _) = q.pop().expect("queued item");
+            if lane == a {
+                a_seen += 1;
+            } else {
+                b_seen += 1;
+            }
+            assert!(
+                (a_seen as i64 - b_seen as i64).abs() <= 1,
+                "step {step}: idle lane banked credit (a {a_seen}, b {b_seen})"
+            );
         }
     }
 }

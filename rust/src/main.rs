@@ -9,6 +9,7 @@
 //! redefine ddot  --n 1024 [--ae 5]
 //! redefine serve --requests 16 --max-n 64 [--b 2] [--ae 5] [--seq]
 //!                [--window W] [--window-bytes BYTES] [--cache-cap N]
+//!                [--cache-quota N] [--sched slots|cycles]
 //!                [--exec replay|combined] [--residual]
 //!                [--tenants N [--weights w1,w2,...]]
 //! redefine sweep                       # Tables 4-9 summary
@@ -30,9 +31,15 @@
 //! worker pool + one shared program cache serve N concurrent tenants
 //! (cycling enhancement levels AE0–AE5) under a weighted fair scheduler
 //! (`--weights`), reporting per-tenant and aggregate statistics.
+//! `--sched cycles` (the default) schedules by estimated simulated
+//! cycles (deficit round-robin), so mismatched kernel costs cannot skew
+//! cycle service away from the weights; `--sched slots` pins the
+//! PR 4 slot-WRR baseline. `--cache-quota N` bounds each tenant to N
+//! resident kernels in the shared cache, so a shape-churning tenant
+//! evicts its own warm kernels, never a sibling's.
 
 use redefine_blas::coordinator::{request::random_workload, Coordinator, CoordinatorConfig};
-use redefine_blas::engine::{Engine, EngineConfig};
+use redefine_blas::engine::{Engine, EngineConfig, SchedPolicy};
 use redefine_blas::metrics::{gemm_sweep, PAPER_SIZES};
 use redefine_blas::pe::{AeLevel, ExecMode, PeConfig};
 use redefine_blas::util::{Mat, XorShift64};
@@ -42,8 +49,9 @@ fn usage() -> ! {
     eprintln!(
         "usage: redefine <gemm|gemv|ddot|serve|sweep|artifacts> [--n N] [--b B] \
          [--ae 0..5] [--requests K] [--max-n N] [--artifacts DIR] [--seq] \
-         [--window W] [--window-bytes BYTES] [--cache-cap N] \
-         [--exec replay|combined] [--residual] [--tenants N] [--weights w1,w2,...]"
+         [--window W] [--window-bytes BYTES] [--cache-cap N] [--cache-quota N] \
+         [--sched slots|cycles] [--exec replay|combined] [--residual] \
+         [--tenants N] [--weights w1,w2,...]"
     );
     exit(2)
 }
@@ -61,6 +69,8 @@ struct Args {
     window: Option<usize>,
     window_bytes: Option<u64>,
     cache_cap: Option<usize>,
+    cache_quota: Option<usize>,
+    sched: SchedPolicy,
     exec: ExecMode,
     residual: bool,
     tenants: usize,
@@ -82,6 +92,8 @@ fn parse_args() -> Args {
         window: None,
         window_bytes: None,
         cache_cap: None,
+        cache_quota: None,
+        sched: SchedPolicy::Cycles,
         exec: ExecMode::Replay,
         residual: false,
         tenants: 1,
@@ -107,6 +119,17 @@ fn parse_args() -> Args {
             "--cache-cap" => {
                 a.cache_cap =
                     Some(val().parse().ok().filter(|c| *c >= 1).unwrap_or_else(|| usage()))
+            }
+            "--cache-quota" => {
+                a.cache_quota =
+                    Some(val().parse().ok().filter(|q| *q >= 1).unwrap_or_else(|| usage()))
+            }
+            "--sched" => {
+                a.sched = match val().as_str() {
+                    "slots" => SchedPolicy::Slots,
+                    "cycles" => SchedPolicy::Cycles,
+                    _ => usage(),
+                }
             }
             "--tenants" => {
                 a.tenants = val().parse().ok().filter(|t| *t >= 1).unwrap_or_else(|| usage())
@@ -139,6 +162,8 @@ fn main() {
         admission_window: args.window,
         admission_bytes: args.window_bytes,
         cache_capacity: args.cache_cap,
+        cache_quota: args.cache_quota,
+        sched: args.sched,
         exec: args.exec,
         residual: args.residual,
     };
@@ -298,6 +323,8 @@ fn serve_multi_tenant(args: &Args, base: &CoordinatorConfig) {
     let engine = Engine::new(EngineConfig {
         workers: args.b * args.b,
         cache_capacity: args.cache_cap,
+        cache_quota: args.cache_quota,
+        sched: args.sched,
     });
     let tenants: Vec<(usize, AeLevel, u64, Coordinator)> = weights
         .iter()
@@ -327,17 +354,27 @@ fn serve_multi_tenant(args: &Args, base: &CoordinatorConfig) {
     let wall = t0.elapsed();
     reports.sort_by_key(|r| r.0);
     println!(
-        "served {} tenants x {requests} requests in {:.1} ms wall on {} shared workers",
+        "served {} tenants x {requests} requests in {:.1} ms wall on {} shared workers \
+         [{:?} scheduler]",
         reports.len(),
         wall.as_secs_f64() * 1e3,
-        engine.worker_count()
+        engine.worker_count(),
+        engine.sched()
     );
+    let service = engine.lane_service();
     for (i, ae, w, served, cycles, cs, jc) in &reports {
         println!(
-            "  tenant {i} [{ae}, weight {w}]: {served} served, {cycles} simulated cycles; \
+            "  tenant {i} [{ae}, weight {w}]: {served} served, {cycles} simulated cycles \
+             ({} est. cycles dispatched); \
              cache {} hits / {} misses / {} evictions; \
              pool {} tiles / {} gemv / {} level-1",
-            cs.hits, cs.misses, cs.evictions, jc.gemm_tiles, jc.gemv, jc.level1
+            service[*i].served_cost,
+            cs.hits,
+            cs.misses,
+            cs.evictions,
+            jc.gemm_tiles,
+            jc.gemv,
+            jc.level1
         );
     }
     let cs = engine.cache_stats();

@@ -13,7 +13,7 @@ use redefine_blas::coordinator::{
     request::{random_workload, repeated_gemm_workload},
     Coordinator, CoordinatorConfig, Response,
 };
-use redefine_blas::engine::{Engine, EngineConfig};
+use redefine_blas::engine::{Engine, EngineConfig, SchedPolicy};
 use redefine_blas::pe::AeLevel;
 use redefine_blas::util::Mat;
 
@@ -51,7 +51,7 @@ fn single_tenant_engine_matches_standalone_coordinator() {
     let reqs = random_workload(8, 24, 4_242);
     let mut standalone = Coordinator::new(cfg(AeLevel::Ae5, 2));
     let r_standalone = standalone.serve_batch(reqs.clone());
-    let engine = Engine::new(EngineConfig { workers: 4, cache_capacity: None });
+    let engine = Engine::new(EngineConfig { workers: 4, ..EngineConfig::default() });
     let mut tenant = engine.tenant(cfg(AeLevel::Ae5, 2));
     let r_tenant = tenant.serve_batch(reqs);
     assert_same_responses(&r_standalone, &r_tenant);
@@ -80,7 +80,7 @@ fn concurrent_tenants_match_isolated_coordinators() {
     let mut ib = Coordinator::new(cfg(AeLevel::Ae3, 2));
     let rb_ref = ib.serve_batch(wb.clone());
 
-    let engine = Engine::new(EngineConfig { workers: 4, cache_capacity: None });
+    let engine = Engine::new(EngineConfig { workers: 4, ..EngineConfig::default() });
     let mut ta = engine.tenant(cfg(AeLevel::Ae5, 2));
     let mut tb = engine.tenant_weighted(cfg(AeLevel::Ae3, 2), 3);
     let (ra, rb) = std::thread::scope(|s| {
@@ -116,7 +116,7 @@ fn cross_tenant_cache_hits_exceed_isolated_coordinators() {
     }
     assert_eq!(iso_hits, 2 * (k as u64 - 1), "each isolated tenant pays its own miss");
 
-    let engine = Engine::new(EngineConfig { workers: 4, cache_capacity: None });
+    let engine = Engine::new(EngineConfig { workers: 4, ..EngineConfig::default() });
     let mut ta = engine.tenant(cfg(AeLevel::Ae5, 2));
     let mut tb = engine.tenant(cfg(AeLevel::Ae5, 2));
     let _ = ta.serve_batch(repeated_gemm_workload(k, 16, 10));
@@ -143,7 +143,11 @@ fn shared_lru_eviction_survives_cross_tenant_churn() {
     // Two tenants alternating shapes under a capacity-1 shared cache:
     // every switch evicts the other tenant's kernel, values stay correct,
     // residency stays bounded, and eviction counts partition.
-    let engine = Engine::new(EngineConfig { workers: 4, cache_capacity: Some(1) });
+    let engine = Engine::new(EngineConfig {
+        workers: 4,
+        cache_capacity: Some(1),
+        ..EngineConfig::default()
+    });
     let mut ta = engine.tenant(cfg(AeLevel::Ae5, 2));
     let mut tb = engine.tenant(cfg(AeLevel::Ae5, 2));
     for round in 0..3u64 {
@@ -173,7 +177,7 @@ fn mixed_ae_tenants_share_workers_without_cross_talk() {
     // interleave on the same PE worker: per-level measurements must still
     // equal an isolated coordinator's (the worker swaps PE configurations
     // per job).
-    let engine = Engine::new(EngineConfig { workers: 1, cache_capacity: None });
+    let engine = Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() });
     let mut t0 = engine.tenant(cfg(AeLevel::Ae0, 1));
     let mut t5 = engine.tenant(cfg(AeLevel::Ae5, 1));
     let n = 16;
@@ -196,6 +200,87 @@ fn mixed_ae_tenants_share_workers_without_cross_talk() {
 }
 
 #[test]
+fn cycles_scheduler_preserves_results_and_accounting() {
+    // The cycle-cost DRR scheduler only reorders *dispatch*: concurrent
+    // tenants under either scheduling policy must produce exactly the
+    // isolated coordinators' responses (values, simulated cycles, energy)
+    // and the same partitioned accounting — simulated results never
+    // depend on the fairness currency.
+    let wa = random_workload(6, 24, 7_001);
+    let wb = random_workload(6, 24, 7_002);
+    let mut ia = Coordinator::new(cfg(AeLevel::Ae5, 2));
+    let ra_ref = ia.serve_batch(wa.clone());
+    let mut ib = Coordinator::new(cfg(AeLevel::Ae3, 2));
+    let rb_ref = ib.serve_batch(wb.clone());
+    for sched in [SchedPolicy::Slots, SchedPolicy::Cycles] {
+        let engine = Engine::new(EngineConfig { workers: 2, sched, ..EngineConfig::default() });
+        assert_eq!(engine.sched(), sched);
+        let mut ta = engine.tenant(cfg(AeLevel::Ae5, 2));
+        let mut tb = engine.tenant_weighted(cfg(AeLevel::Ae3, 2), 3);
+        let (ra, rb) = std::thread::scope(|s| {
+            let ha = s.spawn(|| ta.serve_batch(wa.clone()));
+            let hb = s.spawn(|| tb.serve_batch(wb.clone()));
+            (ha.join().expect("tenant a"), hb.join().expect("tenant b"))
+        });
+        assert_same_responses(&ra_ref, &ra);
+        assert_same_responses(&rb_ref, &rb);
+        let (sa, sb, total) = (ta.cache_stats(), tb.cache_stats(), engine.cache_stats());
+        assert_eq!(sa.hits + sb.hits, total.hits, "{sched:?}");
+        assert_eq!(sa.misses + sb.misses, total.misses, "{sched:?}");
+        // The counting invariant: one hit-or-miss event per request.
+        assert_eq!(total.hits + total.misses, 12, "{sched:?}: one event per request");
+        // Every dispatched job was priced: the lane service telemetry is
+        // live and covers both tenants.
+        let service = engine.lane_service();
+        assert_eq!(service.len(), 2);
+        assert!(service.iter().all(|l| l.served_cost > 0), "{sched:?}: {service:?}");
+    }
+}
+
+#[test]
+fn cache_quota_stops_a_churning_tenant_from_evicting_a_sibling() {
+    // The tentpole quota criterion: under a shared capped cache, an
+    // adversarial tenant cycling through distinct DGEMM shapes must not
+    // be able to evict a sibling tenant's resident kernel — its own set
+    // is bounded by the quota and its evictions land on its own kernels.
+    let engine = Engine::new(EngineConfig {
+        workers: 2,
+        cache_capacity: Some(4),
+        cache_quota: Some(2),
+        ..EngineConfig::default()
+    });
+    let mut sibling = engine.tenant(cfg(AeLevel::Ae5, 2));
+    let mut churn = engine.tenant(cfg(AeLevel::Ae5, 2));
+    // The sibling warms one kernel (n=16 → one GemmRect key).
+    let a = Mat::random(16, 16, 9_000);
+    let b = Mat::random(16, 16, 9_001);
+    let _ = sibling.dgemm(&a, &b, &Mat::zeros(16, 16));
+    assert_eq!(sibling.cache_stats().misses, 1);
+    // The churner floods distinct shapes — far more than cap and quota.
+    for n in [8usize, 24, 32, 40, 48, 56] {
+        let x = Mat::random(n, n, n as u64);
+        let y = Mat::random(n, n, n as u64 + 1);
+        let r = churn.dgemm(&x, &y, &Mat::zeros(n, n));
+        let want = redefine_blas::blas::level3::dgemm_ref(&x, &y, &Mat::zeros(n, n));
+        let err = redefine_blas::util::rel_fro_error(r.c.as_slice(), want.as_slice());
+        assert!(err < 1e-12, "churned DGEMM n={n} wrong: {err}");
+    }
+    // The sibling's kernel is still warm: re-requesting it must hit, not
+    // re-emit.
+    let _ = sibling.dgemm(&a, &b, &Mat::zeros(16, 16));
+    let ss = sibling.cache_stats();
+    assert_eq!(ss.misses, 1, "sibling must never re-emit under churn: {ss:?}");
+    assert_eq!(ss.hits, 1, "sibling's repeat must ride its warm kernel: {ss:?}");
+    assert_eq!(ss.evictions, 0, "no eviction may be charged to the sibling: {ss:?}");
+    // The churner ate its own quota: 6 distinct shapes through a quota of
+    // 2 evicts 4 of its own kernels, and the shared cache stays bounded.
+    let sc = churn.cache_stats();
+    assert_eq!(sc.evictions, 4, "churn evictions must hit the churner's own set: {sc:?}");
+    let shared = engine.cache_stats();
+    assert!(shared.entries <= 4, "global cap must hold: {shared:?}");
+}
+
+#[test]
 fn weighted_tenant_batches_complete_under_flood() {
     // End-to-end no-starvation smoke: a light tenant's small batch served
     // concurrently with a heavy tenant's large batch on one worker must
@@ -207,7 +292,7 @@ fn weighted_tenant_batches_complete_under_flood() {
     let mut iso = Coordinator::new(cfg(AeLevel::Ae5, 2));
     let light_ref = iso.serve_batch(light_work.clone());
 
-    let engine = Engine::new(EngineConfig { workers: 1, cache_capacity: None });
+    let engine = Engine::new(EngineConfig { workers: 1, ..EngineConfig::default() });
     let mut heavy = engine.tenant(cfg(AeLevel::Ae5, 2));
     let mut light = engine.tenant_weighted(cfg(AeLevel::Ae5, 2), 2);
     let (hr, lr) = std::thread::scope(|s| {

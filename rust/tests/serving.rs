@@ -8,6 +8,7 @@ use redefine_blas::coordinator::{
     request::{random_workload, repeated_gemm_workload, Request},
     Coordinator, CoordinatorConfig, ProgramCache, Response, ValueSource,
 };
+use redefine_blas::engine::SchedPolicy;
 use redefine_blas::pe::{AeLevel, ExecMode};
 use redefine_blas::util::{Mat, XorShift64};
 use std::sync::Arc;
@@ -145,6 +146,48 @@ fn mixed_batch_equals_sequential_under_any_window() {
             bs.peak_staged
         );
     }
+}
+
+#[test]
+fn every_request_records_exactly_one_cache_event() {
+    // The measurement-memo accounting invariant: hits + misses equals the
+    // number of requests served — the memo hit, the in-flight attach, and
+    // the submit-side miss are mutually exclusive per request, and the
+    // measurement path's program fetch adds no second event. Holds on the
+    // sequential and the batched path alike.
+    let reqs = mixed_requests();
+    let total = reqs.len() as u64;
+    let mut seq = coord(AeLevel::Ae5, 2);
+    for r in reqs.clone() {
+        let _ = seq.serve_one(r);
+    }
+    let s = seq.cache_stats();
+    assert_eq!(s.hits + s.misses, total, "sequential: one event per request: {s:?}");
+    let mut bat = coord(AeLevel::Ae5, 2);
+    let _ = bat.serve_batch(reqs);
+    let b = bat.cache_stats();
+    assert_eq!(b.hits + b.misses, total, "batched: one event per request: {b:?}");
+    assert_eq!(s, b, "the two paths must account identically");
+}
+
+#[test]
+fn slot_wrr_baseline_still_serves_identically() {
+    // The pinned baseline: a coordinator scheduling under the slot-WRR
+    // policy returns exactly the sequential responses — the fairness
+    // currency is reachable via config and changes dispatch order only.
+    let reqs = mixed_requests();
+    let mut seq = coord(AeLevel::Ae5, 2);
+    let r_seq: Vec<_> = reqs.clone().into_iter().map(|r| seq.serve_one(r)).collect();
+    let mut slots = Coordinator::new(CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 2,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+        sched: SchedPolicy::Slots,
+        ..CoordinatorConfig::default()
+    });
+    let r_slots = slots.serve_batch(reqs);
+    assert_same_responses(&r_seq, &r_slots);
 }
 
 #[test]
@@ -364,6 +407,65 @@ fn byte_budget_bounds_staged_bytes() {
     let bs = tiny.last_batch_stats().unwrap();
     assert_eq!(bs.peak_staged, 1, "sub-minimal budget must serialize staging");
     assert!(bs.peak_staged_bytes <= max_single, "only one oversized request may stage");
+}
+
+#[test]
+fn admission_window_and_byte_budget_compose_over_random_workloads() {
+    // Property test over the joint (admission_window × admission_bytes)
+    // space: for randomized mixed-level workloads — with an oversized
+    // DGEMM planted mid-queue — the batch must (a) never wedge (every
+    // response returned, in order, equal to the sequential loop), and
+    // (b) never stage more than the byte budget except for the
+    // admit-one-alone case, where the peak is exactly one oversized
+    // request's image.
+    let base = CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 2,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+        ..CoordinatorConfig::default()
+    };
+    for seed in [11u64, 22] {
+        // A big request mid-queue: larger than most byte budgets below.
+        let mut reqs = random_workload(7, 20, seed);
+        reqs.insert(3, Request::RandomDgemm { n: 40, seed: 1_000 + seed });
+        let max_single = reqs.iter().map(|r| base.staged_bytes(r)).max().expect("nonempty");
+        let min_single = reqs.iter().map(|r| base.staged_bytes(r)).min().expect("nonempty");
+        let mut seq = Coordinator::new(base.clone());
+        let r_seq: Vec<_> = reqs.clone().into_iter().map(|r| seq.serve_one(r)).collect();
+        for window in [Some(1), Some(2), Some(4), None] {
+            for budget in [Some(1), Some(min_single), Some(max_single / 2), None] {
+                let mut co = Coordinator::new(CoordinatorConfig {
+                    admission_window: window,
+                    admission_bytes: budget,
+                    ..base.clone()
+                });
+                let r_bat = co.serve_batch(reqs.clone());
+                assert_same_responses(&r_seq, &r_bat);
+                let bs = co.last_batch_stats().expect("batch ran");
+                assert_eq!(bs.requests, reqs.len(), "w={window:?} b={budget:?}");
+                assert!(
+                    bs.peak_staged <= window.unwrap_or(usize::MAX),
+                    "w={window:?} b={budget:?}: window violated: {bs:?}"
+                );
+                // The byte bound, with the admit-one exception: a peak
+                // above the budget is only legal when it is a single
+                // oversized request staged alone.
+                if let Some(budget) = budget {
+                    assert!(
+                        bs.peak_staged_bytes <= budget.max(max_single),
+                        "w={window:?} b={budget:?}: byte budget violated: {bs:?}"
+                    );
+                    if bs.peak_staged_bytes > budget {
+                        assert!(
+                            max_single > budget,
+                            "w={window:?} b={budget:?}: overage without an oversized request"
+                        );
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[test]
