@@ -211,6 +211,18 @@ fn main() {
         replay_vs_combined_bench(&mut report, 64, 32, 2, AeLevel::Ae5);
     }
 
+    // 8b) Tier-2b ablation: the same warm repeated-shape workload served
+    //     with the coordinator coalescing same-kernel tiles into fused
+    //     replay-batch jobs, swept over batch caps N in {1, 4, 16, 64}
+    //     against the per-tile single-replay baseline. Batching must be
+    //     invisible in every simulated observable — values, cycles,
+    //     energy — and only move host wall-clock.
+    if quick {
+        replay_batch_bench(&mut report, 16, 16, 2, AeLevel::Ae5);
+    } else {
+        replay_batch_bench(&mut report, 64, 32, 2, AeLevel::Ae5);
+    }
+
     // 9) Multi-tenant engine: two tenants serving the same repeated shape
     //    through one shared pool + shared program cache, vs two isolated
     //    coordinators. The shared cache's cross-tenant hits are the PR 4
@@ -421,6 +433,74 @@ fn replay_vs_combined_bench(report: &mut Report, requests: usize, n: usize, b: u
     report.record("serve.combined_exec_total_ms", t_combined * 1e3);
     report.record("serve.replay_exec_total_ms", t_replay * 1e3);
     report.record("serve.replay_speedup_x", t_combined / t_replay);
+}
+
+/// Tier-2b replay-batching ablation on the serve path: the repeated-shape
+/// DGEMM workload on warm caches, once per tile (`replay_batch: None`, the
+/// single-replay tier) and once per batch cap N in {1, 4, 16, 64}
+/// (`replay_batch: Some(N)` coalesces same-kernel tiles into one fused
+/// pass over the decoded stream). Every cap must reproduce the baseline
+/// responses bit for bit — values, simulated cycles, simulated energy —
+/// and the N=64 host wall-clock ratio is recorded as
+/// `serve.replay_batch_speedup_x`.
+fn replay_batch_bench(report: &mut Report, requests: usize, n: usize, b: usize, ae: AeLevel) {
+    println!(
+        "\nreplay batching: {requests} repeated-shape DGEMM requests, n={n}, {b}x{b} tiles, {ae}"
+    );
+    let mk_coord = |cap: Option<usize>| {
+        Coordinator::new(CoordinatorConfig {
+            ae,
+            b,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+            replay_batch: cap,
+            ..CoordinatorConfig::default()
+        })
+    };
+    let reqs = repeated_gemm_workload(requests, n, 6060);
+
+    // Baseline: the PR 3 per-tile replay tier, warm cache.
+    let mut solo = mk_coord(None);
+    let _ = solo.serve_batch(repeated_gemm_workload(1, n, 1));
+    let t0 = Instant::now();
+    let r_solo = solo.serve_batch(reqs.clone());
+    let t_solo = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<44} {:>10.3} ms total  ({:.1} req/s)",
+        "  per-tile replay (no coalescing)",
+        t_solo * 1e3,
+        requests as f64 / t_solo
+    );
+    report.record("serve.replay_batch_base_total_ms", t_solo * 1e3);
+
+    for cap in [1usize, 4, 16, 64] {
+        let mut co = mk_coord(Some(cap));
+        let _ = co.serve_batch(repeated_gemm_workload(1, n, 1));
+        let t0 = Instant::now();
+        let r = co.serve_batch(reqs.clone());
+        let t = t0.elapsed().as_secs_f64();
+
+        // Coalescing must change nothing but the wall-clock.
+        assert_eq!(r.len(), r_solo.len());
+        for (x, y) in r.iter().zip(&r_solo) {
+            assert_eq!(x.cycles, y.cycles, "replay batching changed simulated cycles");
+            assert_eq!(x.energy_j, y.energy_j, "replay batching changed simulated energy");
+            assert_eq!(x.matrix, y.matrix, "replay batching changed values");
+        }
+        let jc = co.pool_job_counts();
+        println!(
+            "{:<44} {:>10.3} ms total  ({:.2}x, {} coalesced batches, {} replays)",
+            format!("  replay batch cap N={cap}"),
+            t * 1e3,
+            t_solo / t,
+            jc.batched_replays,
+            jc.replays
+        );
+        report.record(&format!("serve.replay_batch_total_ms_n{cap}"), t * 1e3);
+        if cap == 64 {
+            report.record("serve.replay_batch_speedup_x", t_solo / t);
+        }
+    }
 }
 
 /// Two tenants, each serving `per_tenant` repeated-shape DGEMM requests:

@@ -54,6 +54,10 @@
 //!   an insertion that overflows the quota evicts within the overflowing
 //!   tenant's *own* resident set, so a shape-churning tenant can no longer
 //!   flush a sibling's warm kernels out of a shared capped cache.
+//!   Ownership is not permanent: once warm uses by *other* tenants
+//!   overtake the inserter's own, the entry is promoted to shared/unowned
+//!   — a community kernel stops counting against (and being evictable
+//!   under) the quota of whichever tenant happened to emit it first.
 //!
 //! Eviction never selects a slot whose kernel is still being emitted by a
 //! concurrent cold miss (the [`OnceLock`] is unfilled): evicting it would
@@ -181,7 +185,15 @@ struct Entry {
     last_used: u64,
     /// The [`CacheTally`] owner whose request inserted this entry (`None`
     /// for tally-less callers) — the identity the residency quota bounds.
+    /// Cleared (promoted to shared/unowned) once cross-tenant use
+    /// dominates the owner's own, so community property stops burning
+    /// the inserting tenant's quota.
     owner: Option<u64>,
+    /// Warm uses by the owning tenant since insertion.
+    own_hits: u64,
+    /// Warm uses by other tenants (or tally-less callers) — when these
+    /// overtake `own_hits`, the entry is promoted to unowned.
+    foreign_hits: u64,
 }
 
 impl Entry {
@@ -189,6 +201,27 @@ impl Entry {
     /// has actually been emitted into it.
     fn filled(&self) -> bool {
         self.slot.get().is_some()
+    }
+
+    /// Record a warm use by `user` and promote the entry to shared/unowned
+    /// once foreign uses overtake the owner's own. The first inserter paid
+    /// the emission, but a kernel that mostly serves *other* tenants is
+    /// community property — charging it against the inserter's quota
+    /// forever would let siblings' traffic evict the inserter's genuinely
+    /// private kernels (and, worse, let the inserter's own quota pressure
+    /// evict a kernel everyone else is warm on).
+    fn note_use(&mut self, user: Option<u64>) {
+        if self.owner.is_none() {
+            return;
+        }
+        if user == self.owner {
+            self.own_hits += 1;
+        } else {
+            self.foreign_hits += 1;
+            if self.foreign_hits > self.own_hits {
+                self.owner = None;
+            }
+        }
     }
 }
 
@@ -339,6 +372,7 @@ impl ProgramCache {
             let clock = inner.clock;
             if let Some(e) = inner.programs.get_mut(&key) {
                 e.last_used = clock;
+                e.note_use(tally.map(|t| t.owner));
                 if counted {
                     self.note_hit(tally);
                 }
@@ -349,7 +383,13 @@ impl ProgramCache {
                 }
                 let slot = Arc::new(OnceLock::new());
                 let owner = tally.map(|t| t.owner);
-                let entry = Entry { slot: Arc::clone(&slot), last_used: clock, owner };
+                let entry = Entry {
+                    slot: Arc::clone(&slot),
+                    last_used: clock,
+                    owner,
+                    own_hits: 0,
+                    foreign_hits: 0,
+                };
                 inner.programs.insert(key, entry);
                 self.enforce_limits(&mut inner, key, owner, tally);
                 slot
@@ -589,6 +629,7 @@ impl ProgramCache {
         if meas.is_some() {
             if let Some(e) = inner.programs.get_mut(key) {
                 e.last_used = clock;
+                e.note_use(tally.map(|t| t.owner));
             }
             self.note_hit(tally);
         }
@@ -832,6 +873,30 @@ mod tests {
         assert_eq!(ss.evictions, 0);
         assert_eq!((ss.hits, ss.misses), (1, 1));
         assert_eq!(cache.owned_len(&sibling), 1);
+    }
+
+    #[test]
+    fn dominated_entries_promote_to_shared_and_leave_the_inserters_quota() {
+        let cache = ProgramCache::with_limits(None, Some(1));
+        let gen = CacheTally::default();
+        let sib = CacheTally::default();
+        let warm = cache.gemm_rect_for(8, 8, 8, AeLevel::Ae5, Some(&gen));
+        assert_eq!(cache.owned_len(&gen), 1);
+        // The sibling's warm traffic overtakes the inserter's (one foreign
+        // hit against zero own): the kernel becomes community property.
+        let _ = cache.gemm_rect_for(8, 8, 8, AeLevel::Ae5, Some(&sib));
+        assert_eq!(cache.owned_len(&gen), 0, "dominated entry must shed its owner");
+        // The inserter's quota-1 slot is free again, so its next shape
+        // coexists with the community kernel instead of evicting it.
+        let _ = cache.gemm_rect_for(4, 4, 4, AeLevel::Ae5, Some(&gen));
+        let again = cache.gemm_rect_for(8, 8, 8, AeLevel::Ae5, Some(&sib));
+        assert!(
+            Arc::ptr_eq(&warm, &again),
+            "a promoted kernel must survive its first inserter's quota pressure"
+        );
+        assert_eq!(gen.snapshot(cache.len()).evictions, 0);
+        assert_eq!(cache.owned_len(&gen), 1, "only the fresh private shape is charged");
+        assert_eq!(cache.len(), 2);
     }
 
     #[test]

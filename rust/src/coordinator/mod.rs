@@ -48,7 +48,7 @@ use crate::energy::PowerModel;
 use crate::engine::{Engine, EngineConfig, EngineShared, SchedPolicy};
 use crate::metrics::{Measurement, Routine};
 use crate::noc::{Coord, LinkTraffic, RouterConfig, Topology};
-use crate::pe::{AeLevel, ExecMode, PeConfig, PeStats};
+use crate::pe::{AeLevel, ExecMode, PeConfig, PeStats, ScheduledProgram};
 use crate::runtime::Runtime;
 use crate::util::{round_up, Mat};
 use pool::{Done, Job, PoolClient};
@@ -115,6 +115,15 @@ pub struct CoordinatorConfig {
     /// else pads as before. The residual kernel is not tiled: eligible
     /// requests run on one PE regardless of `b`.
     pub residual: bool,
+    /// Coalesce same-kernel DGEMM tile jobs staged by
+    /// [`Coordinator::serve_batch`] into replay-batched pool jobs of up to
+    /// this many tiles: a worker walks the decoded program *once* per
+    /// group, executing each op across every member's operand context (the
+    /// tier-2b fast path, [`crate::pe::replay_batch`]). `None` (default)
+    /// submits every tile as its own job, the pre-batching behavior.
+    /// Values, cycles and energy are identical either way (pinned by
+    /// tests); only host-side serving throughput changes.
+    pub replay_batch: Option<usize>,
 }
 
 impl Default for CoordinatorConfig {
@@ -131,6 +140,7 @@ impl Default for CoordinatorConfig {
             sched: SchedPolicy::Cycles,
             exec: ExecMode::Replay,
             residual: false,
+            replay_batch: None,
         }
     }
 }
@@ -205,6 +215,18 @@ impl PendingDgemm {
     pub(crate) fn tile_count(&self) -> usize {
         self.bb * self.bb
     }
+}
+
+/// One DGEMM's tile kernels, prepared but not yet enqueued: the shared
+/// cached program, the tile layout, and each tile's `(job_id, tile_idx,
+/// packed GM image)`. [`Coordinator::submit_dgemm`] enqueues them directly
+/// as independent jobs; the batched serving path may first coalesce
+/// same-program tiles across staged requests into replay-batched jobs
+/// ([`CoordinatorConfig::replay_batch`]).
+pub(crate) struct StagedTiles {
+    pub(crate) sched: Arc<ScheduledProgram>,
+    pub(crate) layout: GemmLayout,
+    pub(crate) tiles: Vec<(u64, usize, Vec<f64>)>,
 }
 
 /// Everything needed to run a Level-1/2 measurement kernel: the cache key
@@ -363,11 +385,37 @@ impl Coordinator {
     /// cached tile program, and enqueue all b×b tile jobs on the pool (or
     /// the single residual kernel, when eligible).
     pub(crate) fn submit_dgemm(&self, job_id: u64, a: &Mat, b: &Mat, c: &Mat) -> PendingDgemm {
+        let (pending, staged) = self.prepare_dgemm(job_id, a, b, c);
+        let StagedTiles { sched, layout, tiles } = staged;
+        for (job_id, tile_idx, gm) in tiles {
+            self.pool.submit(Job::GemmTile {
+                job_id,
+                tile_idx,
+                sched: Arc::clone(&sched),
+                layout,
+                gm,
+            });
+        }
+        pending
+    }
+
+    /// [`Coordinator::submit_dgemm`] minus the enqueue: runs the NoC
+    /// schedule and the cache fetch, packs every tile's GM image, and hands
+    /// the jobs back instead of submitting them — the staging half the
+    /// batched serving path needs so it can coalesce same-program tiles
+    /// across requests before they reach the pool.
+    pub(crate) fn prepare_dgemm(
+        &self,
+        job_id: u64,
+        a: &Mat,
+        b: &Mat,
+        c: &Mat,
+    ) -> (PendingDgemm, StagedTiles) {
         let n = a.rows();
         assert!(a.cols() == n && b.rows() == n && b.cols() == n, "square DGEMM only");
         assert!(c.rows() == n && c.cols() == n);
         if self.cfg.residual_eligible(n) {
-            return self.submit_dgemm_residual(job_id, a, b, c);
+            return self.prepare_dgemm_residual(job_id, a, b, c);
         }
         let bb = self.cfg.b;
         let ae = self.cfg.ae;
@@ -399,22 +447,18 @@ impl Coordinator {
         //    memoizes the schedule; the rest replay values only.
         let sched = self.shared.cache.gemm_rect_for(m, m, np, ae, Some(&self.tally));
         let layout = GemmLayout::rect(m, m, np);
+        let mut tiles = Vec::with_capacity(bb * bb);
         for bi in 0..bb {
             for bj in 0..bb {
                 let a_blk = ap.block(bi * m, 0, m, np);
                 let b_blk = bp.block(0, bj * m, np, m);
                 let c_blk = cp.block(bi * m, bj * m, m, m);
-                self.pool.submit(Job::GemmTile {
-                    job_id,
-                    tile_idx: bi * bb + bj,
-                    sched: Arc::clone(&sched),
-                    layout,
-                    gm: layout.pack(&a_blk, &b_blk, &c_blk),
-                });
+                tiles.push((job_id, bi * bb + bj, layout.pack(&a_blk, &b_blk, &c_blk)));
             }
         }
 
-        PendingDgemm { job_id, n, m, bb, ready, links, topo, rcfg, cpad: cp }
+        let pending = PendingDgemm { job_id, n, m, bb, ready, links, topo, rcfg, cpad: cp };
+        (pending, StagedTiles { sched, layout, tiles })
     }
 
     /// Stage one DGEMM on the residual path: no padding, no tiling — the
@@ -422,7 +466,13 @@ impl Coordinator {
     /// ([`crate::codegen::gen_gemm_any`]). The NoC schedule degenerates to
     /// one compute tile's operand streams, so the request flows through
     /// exactly the same collect/finish machinery as the tiled path.
-    fn submit_dgemm_residual(&self, job_id: u64, a: &Mat, b: &Mat, c: &Mat) -> PendingDgemm {
+    fn prepare_dgemm_residual(
+        &self,
+        job_id: u64,
+        a: &Mat,
+        b: &Mat,
+        c: &Mat,
+    ) -> (PendingDgemm, StagedTiles) {
         let n = a.rows();
         let ae = self.cfg.ae;
         let topo = Topology::new(1);
@@ -436,14 +486,10 @@ impl Coordinator {
         let ready = vec![ta.max(tb).max(tc)];
         let sched = self.shared.cache.gemm_any_for(n, ae, Some(&self.tally));
         let layout = GemmLayout::rect_any(n, n, n);
-        self.pool.submit(Job::GemmTile {
-            job_id,
-            tile_idx: 0,
-            sched,
-            layout,
-            gm: layout.pack(a, b, c),
-        });
-        PendingDgemm { job_id, n, m: n, bb: 1, ready, links, topo, rcfg, cpad: c.padded(n, n) }
+        let tiles = vec![(job_id, 0, layout.pack(a, b, c))];
+        let pending =
+            PendingDgemm { job_id, n, m: n, bb: 1, ready, links, topo, rcfg, cpad: c.padded(n, n) };
+        (pending, StagedTiles { sched, layout, tiles })
     }
 
     /// Fetch the cached program for `spec` and enqueue its measurement

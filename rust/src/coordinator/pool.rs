@@ -38,7 +38,7 @@
 use crate::codegen::GemmLayout;
 use crate::engine::queue::{SchedPolicy, WrrQueue};
 use crate::metrics::{measure_gemv_sched_on, measure_level1_sched_on, Measurement, Routine};
-use crate::pe::{AeLevel, ExecMode, ExecTier, Pe, PeConfig, PeStats, ScheduledProgram};
+use crate::pe::{AeLevel, ExecMode, ExecTier, Pe, PeConfig, PeStats, ReplayCtx, ScheduledProgram};
 use crate::util::Mat;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -66,6 +66,21 @@ pub(crate) enum Job {
     /// Single-PE Level-1 measurement kernel at padded size `n`. `alpha` is
     /// the constant baked into a DAXPY stream (ignored for reductions).
     Level1 { job_id: u64, routine: Routine, n: usize, alpha: f64, sched: Arc<ScheduledProgram> },
+    /// A coalesced run of same-kernel DGEMM tiles: one shared cached
+    /// program and layout, one packed operand image per member. When the
+    /// schedule is warm (and the worker's PE config matches it), the
+    /// worker executes all members in a *single* tier-2b pass
+    /// ([`crate::pe::replay_batch`]) and fans out one
+    /// [`Done::GemmTile`] per member; a cold kernel or
+    /// [`ExecMode::Combined`] falls back to the per-member sequential
+    /// path, bit-identical either way.
+    ReplayBatch {
+        sched: Arc<ScheduledProgram>,
+        layout: GemmLayout,
+        /// `(job_id, tile_idx, packed GM image)` per member, in
+        /// submission order.
+        members: Vec<(u64, usize, Vec<f64>)>,
+    },
 }
 
 impl Job {
@@ -75,6 +90,9 @@ impl Job {
             Job::GemmTile { job_id, tile_idx, .. } => format!("job {job_id} gemm tile {tile_idx}"),
             Job::Gemv { job_id, n, .. } => format!("job {job_id} gemv n={n}"),
             Job::Level1 { job_id, routine, n, .. } => format!("job {job_id} {routine:?} n={n}"),
+            Job::ReplayBatch { members, .. } => {
+                format!("replay batch of {} gemm tiles", members.len())
+            }
         }
     }
 
@@ -87,9 +105,10 @@ impl Job {
     /// The cached kernel this job executes.
     fn sched(&self) -> &Arc<ScheduledProgram> {
         match self {
-            Job::GemmTile { sched, .. } | Job::Gemv { sched, .. } | Job::Level1 { sched, .. } => {
-                sched
-            }
+            Job::GemmTile { sched, .. }
+            | Job::Gemv { sched, .. }
+            | Job::Level1 { sched, .. }
+            | Job::ReplayBatch { sched, .. } => sched,
         }
     }
 
@@ -99,12 +118,19 @@ impl Job {
     /// that (the first request of a cold kernel) it falls back to the
     /// decoded op count, which tracks the cycle cost to within the stall
     /// factor — more than enough to keep a DGEMM tile and a DDOT kernel
-    /// orders of magnitude apart.
+    /// orders of magnitude apart. A coalesced [`Job::ReplayBatch`] is
+    /// priced as the **sum of its members'** estimates — coalescing
+    /// amortizes host dispatch, not simulated cycles, so DRR fairness
+    /// must still charge the lane for every member it serves.
     pub(crate) fn cost_estimate(&self) -> u64 {
         let sched = self.sched();
-        match sched.scheduled_stats() {
+        let each = match sched.scheduled_stats() {
             Some(stats) => stats.cycles.max(1),
             None => (sched.decoded().len() as u64).max(1),
+        };
+        match self {
+            Job::ReplayBatch { members, .. } => each.saturating_mul(members.len().max(1) as u64),
+            _ => each,
         }
     }
 }
@@ -144,6 +170,7 @@ struct Counters {
     level1: AtomicU64,
     replays: AtomicU64,
     combined_runs: AtomicU64,
+    batched_replays: AtomicU64,
 }
 
 impl Counters {
@@ -154,6 +181,7 @@ impl Counters {
             level1: self.level1.load(Ordering::Relaxed),
             replays: self.replays.load(Ordering::Relaxed),
             combined_runs: self.combined_runs.load(Ordering::Relaxed),
+            batched_replays: self.batched_replays.load(Ordering::Relaxed),
         }
     }
 }
@@ -175,6 +203,12 @@ pub struct PoolJobCounts {
     /// Kernels executed by the combined value+timing interpreter (first
     /// run of a program, or every run in [`ExecMode::Combined`]).
     pub combined_runs: u64,
+    /// Coalesced tier-2b executions: each counts *one* fused
+    /// [`crate::pe::replay_batch`] pass over N member contexts (the
+    /// members themselves still count in `gemm_tiles`/`replays`, so
+    /// `replays + combined_runs == gemm_tiles + gemv + level1` holds
+    /// with or without batching).
+    pub batched_replays: u64,
 }
 
 /// The shared pool: `size` workers, spawned once, fed from a weighted
@@ -192,7 +226,12 @@ impl PoolCore {
     /// Spawn `size` persistent workers scheduling under `sched`.
     pub fn new(size: usize, sched: SchedPolicy) -> Self {
         assert!(size >= 1, "worker pool needs at least one worker");
-        let queue = Arc::new(WrrQueue::new(sched));
+        // Dispatch-time repricing: a job queued while its kernel was cold
+        // re-reads the cost estimate when the scheduler actually considers
+        // it, so a schedule memoized mid-queue debits the lane by real
+        // cycles, not the stale decoded-op-count estimate.
+        let queue =
+            Arc::new(WrrQueue::new(sched).with_repricer(|t: &TaggedJob| t.job.cost_estimate()));
         let counts = Arc::new(Counters::default());
         let workers = (0..size)
             .map(|i| {
@@ -272,9 +311,10 @@ pub(crate) struct PoolClient {
 impl PoolClient {
     /// Enqueue a job on this tenant's lane (returns immediately; the
     /// result comes back via [`PoolClient::recv`]). The job's cycle-cost
-    /// estimate is taken here, at submission: a kernel whose schedule was
-    /// memoized by an earlier request is priced exactly, a cold kernel by
-    /// its decoded op count.
+    /// estimate is taken here at submission *and refreshed again at
+    /// dispatch* (the queue's repricer re-reads [`Job::cost_estimate`]),
+    /// so a kernel whose schedule memoizes while the job sits queued is
+    /// debited by its real cycles.
     pub fn submit(&self, job: Job) {
         let cost = job.cost_estimate();
         self.queue.push(
@@ -337,23 +377,37 @@ fn worker_loop(queue: Arc<WrrQueue<TaggedJob>>, totals: Arc<Counters>) {
         // deadlock that tenant's dispatcher.
         let unwind = std::panic::AssertUnwindSafe(|| run_job(p, exec, job, &totals, &counts));
         let outcome = std::panic::catch_unwind(unwind);
-        let msg = match outcome {
-            Ok(d) => Msg::Done(d),
+        match outcome {
+            // A coalesced batch fans out one Done per member; single jobs
+            // send exactly one. A dropped tenant is not a pool failure:
+            // keep serving the others.
+            Ok(dones) => {
+                for d in dones {
+                    let _ = reply.send(Msg::Done(d));
+                }
+            }
             Err(payload) => {
                 // State may be inconsistent; rebuild this level's PE on
                 // its next job.
                 pes.swap_remove(at);
-                Msg::Panicked(format!("{what}: {}", panic_message(payload)))
+                let _ =
+                    reply.send(Msg::Panicked(format!("{what}: {}", panic_message(payload))));
             }
-        };
-        // A dropped tenant is not a pool failure: keep serving the others.
-        let _ = reply.send(msg);
+        }
     }
 }
 
 /// Run one job on the worker's (reset-reused) PE, tallying both the
-/// pool-wide and the owning tenant's counters.
-fn run_job(pe: &mut Pe, exec: ExecMode, job: Job, totals: &Counters, tenant: &Counters) -> Done {
+/// pool-wide and the owning tenant's counters. Returns one [`Done`] per
+/// request the job carried: exactly one for the single-job kinds, one per
+/// member for a coalesced [`Job::ReplayBatch`].
+fn run_job(
+    pe: &mut Pe,
+    exec: ExecMode,
+    job: Job,
+    totals: &Counters,
+    tenant: &Counters,
+) -> Vec<Done> {
     let bump = |pick: fn(&Counters) -> &AtomicU64| {
         pick(totals).fetch_add(1, Ordering::Relaxed);
         pick(tenant).fetch_add(1, Ordering::Relaxed);
@@ -373,20 +427,60 @@ fn run_job(pe: &mut Pe, exec: ExecMode, job: Job, totals: &Counters, tenant: &Co
             let out = layout.unpack_c(&pe.gm, layout.m, layout.p);
             bump(|c| &c.gemm_tiles);
             tally_tier(tier);
-            Done::GemmTile { job_id, tile_idx, out, stats }
+            vec![Done::GemmTile { job_id, tile_idx, out, stats }]
         }
         Job::Gemv { job_id, n, sched } => {
             let (meas, tier) = measure_gemv_sched_on(pe, n, sched.ae(), &sched, exec);
             bump(|c| &c.gemv);
             tally_tier(tier);
-            Done::Measured { job_id, meas }
+            vec![Done::Measured { job_id, meas }]
         }
         Job::Level1 { job_id, routine, n, alpha, sched } => {
             let (meas, tier) =
                 measure_level1_sched_on(pe, routine, n, alpha, sched.ae(), &sched, exec);
             bump(|c| &c.level1);
             tally_tier(tier);
-            Done::Measured { job_id, meas }
+            vec![Done::Measured { job_id, meas }]
+        }
+        Job::ReplayBatch { sched, layout, members } => {
+            // Tier 2b: one fused value pass when the schedule is warm and
+            // was taken under this worker's exact PE config (the memo is
+            // write-once, so a warm check cannot go stale). Otherwise —
+            // cold kernel or Combined mode — fall back to the per-member
+            // sequential path, which is what the members would have run
+            // as individual jobs.
+            let warm =
+                exec == ExecMode::Replay && sched.scheduled_config().is_some_and(|c| *c == pe.cfg);
+            let mut dones = Vec::with_capacity(members.len());
+            if warm {
+                let mut ids = Vec::with_capacity(members.len());
+                let mut ctxs = Vec::with_capacity(members.len());
+                for (job_id, tile_idx, gm) in members {
+                    ids.push((job_id, tile_idx));
+                    ctxs.push(ReplayCtx::from_gm(gm));
+                }
+                let stats = sched
+                    .replay_batch_scheduled(&mut ctxs, &pe.cfg)
+                    .expect("schedule verified warm under this config");
+                bump(|c| &c.batched_replays);
+                for ((job_id, tile_idx), ctx) in ids.into_iter().zip(ctxs) {
+                    let out = layout.unpack_c(&ctx.gm, layout.m, layout.p);
+                    bump(|c| &c.gemm_tiles);
+                    bump(|c| &c.replays);
+                    dones.push(Done::GemmTile { job_id, tile_idx, out, stats: stats.clone() });
+                }
+            } else {
+                for (job_id, tile_idx, gm) in members {
+                    pe.reset(layout.gm_words());
+                    pe.write_gm(0, &gm);
+                    let (stats, tier) = sched.execute_traced(pe, exec);
+                    let out = layout.unpack_c(&pe.gm, layout.m, layout.p);
+                    bump(|c| &c.gemm_tiles);
+                    tally_tier(tier);
+                    dones.push(Done::GemmTile { job_id, tile_idx, out, stats });
+                }
+            }
+            dones
         }
     }
 }
@@ -639,6 +733,120 @@ mod tests {
         let stats = sched.execute(&mut pe, ExecMode::Replay);
         assert_eq!(job.cost_estimate(), stats.cycles, "warm estimate is the memoized cycles");
         assert!(job.cost_estimate() > cold, "cycles include stalls beyond the op count");
+    }
+
+    /// Distinct operand images (and references) for `count` members of one
+    /// shared kernel/layout.
+    fn batch_members(
+        layout: &GemmLayout,
+        n: usize,
+        count: u64,
+        seed: u64,
+    ) -> (Vec<(u64, usize, Vec<f64>)>, std::collections::HashMap<u64, Mat>) {
+        let mut members = Vec::new();
+        let mut wants = std::collections::HashMap::new();
+        for id in 1..=count {
+            let a = Mat::random(n, n, seed + 3 * id);
+            let b = Mat::random(n, n, seed + 3 * id + 1);
+            let c = Mat::random(n, n, seed + 3 * id + 2);
+            wants.insert(id, crate::blas::level3::dgemm_ref(&a, &b, &c));
+            members.push((id, 0, layout.pack(&a, &b, &c)));
+        }
+        (members, wants)
+    }
+
+    #[test]
+    fn warm_replay_batch_fans_out_per_member_results() {
+        // One coalesced job over a warm kernel: a single tier-2b pass must
+        // return every member's correct values and the memoized stats,
+        // counting each member as a replayed gemm tile and the fused pass
+        // once in batched_replays.
+        let core = PoolCore::new(1, SchedPolicy::Slots);
+        let client = core.client(1, ExecMode::Replay);
+        let n = 12;
+        let (first, want0) = gemm_job(0, 0, n, 1200);
+        let (sched, layout) = match &first {
+            Job::GemmTile { sched, layout, .. } => (Arc::clone(sched), *layout),
+            _ => unreachable!(),
+        };
+        client.submit(first); // warm the schedule
+        let out0 = match client.recv() {
+            Done::GemmTile { out, .. } => out,
+            Done::Measured { .. } => panic!("no measurement submitted"),
+        };
+        assert!(rel_fro_error(out0.as_slice(), want0.as_slice()) < 1e-12);
+        let memo = sched.scheduled_stats().expect("warmed").clone();
+
+        let (members, wants) = batch_members(&layout, n, 3, 4000);
+        client.submit(Job::ReplayBatch { sched, layout, members });
+        for _ in 0..3 {
+            match client.recv() {
+                Done::GemmTile { job_id, out, stats, .. } => {
+                    let want = &wants[&job_id];
+                    let err = rel_fro_error(out.as_slice(), want.as_slice());
+                    assert!(err < 1e-12, "batch member {job_id}: err {err}");
+                    assert_eq!(stats, memo, "batch members report the memoized schedule");
+                }
+                Done::Measured { .. } => panic!("no measurement submitted"),
+            }
+        }
+        let counts = client.counts();
+        assert_eq!(counts.gemm_tiles, 4);
+        assert_eq!(counts.combined_runs, 1, "only the warm-up paid the timing pass");
+        assert_eq!(counts.replays, 3, "every batch member counts as a replay");
+        assert_eq!(counts.batched_replays, 1, "one fused pass for the whole batch");
+        assert_eq!(core.counts(), counts, "single client: totals equal the tenant slice");
+    }
+
+    #[test]
+    fn cold_replay_batch_falls_back_to_sequential_members() {
+        // A batch submitted before any execution memoized the schedule:
+        // the first member pays the combined timing pass, the rest replay
+        // — exactly what N individual jobs on one worker would do — and
+        // no fused pass is counted.
+        let core = PoolCore::new(1, SchedPolicy::Slots);
+        let client = core.client(1, ExecMode::Replay);
+        let n = 8;
+        let (probe, _) = gemm_job(0, 0, n, 1300);
+        let (sched, layout) = match &probe {
+            Job::GemmTile { sched, layout, .. } => (Arc::clone(sched), *layout),
+            _ => unreachable!(),
+        };
+        assert!(!sched.is_scheduled());
+        let (members, wants) = batch_members(&layout, n, 3, 5000);
+        client.submit(Job::ReplayBatch { sched, layout, members });
+        for _ in 0..3 {
+            match client.recv() {
+                Done::GemmTile { job_id, out, .. } => {
+                    let err = rel_fro_error(out.as_slice(), wants[&job_id].as_slice());
+                    assert!(err < 1e-12, "cold batch member {job_id}: err {err}");
+                }
+                Done::Measured { .. } => panic!("no measurement submitted"),
+            }
+        }
+        let counts = client.counts();
+        assert_eq!(counts.gemm_tiles, 3);
+        assert_eq!(counts.combined_runs, 1);
+        assert_eq!(counts.replays, 2);
+        assert_eq!(counts.batched_replays, 0, "cold batches never take the fused pass");
+    }
+
+    #[test]
+    fn replay_batch_cost_is_the_sum_of_member_costs() {
+        // DRR fairness must price a coalesced job as N members, warm or
+        // cold — coalescing amortizes host dispatch, not simulated cycles.
+        let n = 12;
+        let (probe, _) = gemm_job(0, 0, n, 1400);
+        let (sched, layout) = match &probe {
+            Job::GemmTile { sched, layout, .. } => (Arc::clone(sched), *layout),
+            _ => unreachable!(),
+        };
+        let (members, _) = batch_members(&layout, n, 4, 6000);
+        let batch = Job::ReplayBatch { sched: Arc::clone(&sched), layout, members };
+        assert_eq!(batch.cost_estimate(), 4 * probe.cost_estimate(), "cold: 4x the op count");
+        let mut pe = Pe::new(PeConfig::paper(AeLevel::Ae5), layout.gm_words());
+        let stats = sched.execute(&mut pe, ExecMode::Replay);
+        assert_eq!(batch.cost_estimate(), 4 * stats.cycles, "warm: 4x the memoized cycles");
     }
 
     #[test]

@@ -15,20 +15,24 @@
 //!   as results drain — so kernels of independent requests overlap while
 //!   huge batches never hold more than the window's worth of packed
 //!   operands in memory. Identical in-flight Level-1/2 kernels are shared,
-//!   not duplicated. Responses are value-, cycle- and energy-identical to
-//!   `serve_one` (pinned by tests).
+//!   not duplicated, and same-kernel DGEMM tiles can be coalesced into
+//!   replay-batched pool jobs ([`CoordinatorConfig::replay_batch`]).
+//!   Responses are value-, cycle- and energy-identical to `serve_one`
+//!   (pinned by tests).
 
-use super::pool::Done;
+use super::pool::{Done, Job};
 use super::{
     seal_slots, Coordinator, CoordinatorConfig, DgemmResult, MeasSpec, PendingDgemm, ProgramKey,
-    TileSlots, ValueSource,
+    StagedTiles, TileSlots, ValueSource,
 };
 use crate::codegen::layout::VecLayout;
+use crate::codegen::GemmLayout;
 use crate::metrics::{Measurement, Routine};
-use crate::pe::AeLevel;
+use crate::pe::{AeLevel, ScheduledProgram};
 use crate::util::{round_up, Mat, XorShift64};
 use std::collections::hash_map::Entry;
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 /// A BLAS request to the coordinator.
 #[derive(Debug, Clone)]
@@ -187,6 +191,88 @@ fn admits_bytes(budget: Option<u64>, window_empty: bool, staged: u64, next: u64)
     }
 }
 
+/// Same-kernel tile coalescer of the batched serving path
+/// ([`CoordinatorConfig::replay_batch`]). Tile jobs whose requests
+/// resolved to the *same cached kernel* — pointer-identical
+/// [`ScheduledProgram`], which the cache guarantees per resident
+/// (routine, shape, AE) key — accumulate into groups of up to `cap`
+/// members; a sealed group ships as one [`Job::ReplayBatch`], so a worker
+/// walks the decoded program once for the whole group. With the feature
+/// off (`cap == None`) every tile passes straight through as its own
+/// [`Job::GemmTile`], the pre-batching behavior. Tiles of *different*
+/// kernels never share a group: a mixed-key batch coalesces only its
+/// same-key runs.
+struct TileBatcher {
+    cap: Option<usize>,
+    /// Keyed by the shared program's allocation address. If the cache
+    /// evicts and re-emits a key mid-batch the two allocations simply land
+    /// in different groups — a lost coalescing opportunity, never a
+    /// correctness hazard.
+    groups: HashMap<usize, (Arc<ScheduledProgram>, GemmLayout, Vec<(u64, usize, Vec<f64>)>)>,
+}
+
+impl TileBatcher {
+    fn new(cap: Option<usize>) -> Self {
+        Self { cap: cap.map(|c| c.max(1)), groups: HashMap::new() }
+    }
+
+    /// Absorb one request's prepared tiles, returning the jobs ready to
+    /// enqueue now: everything when batching is off, groups that just
+    /// reached `cap` when it is on.
+    fn add(&mut self, staged: StagedTiles) -> Vec<Job> {
+        let StagedTiles { sched, layout, tiles } = staged;
+        let Some(cap) = self.cap else {
+            return tiles
+                .into_iter()
+                .map(|(job_id, tile_idx, gm)| Job::GemmTile {
+                    job_id,
+                    tile_idx,
+                    sched: Arc::clone(&sched),
+                    layout,
+                    gm,
+                })
+                .collect();
+        };
+        let key = Arc::as_ptr(&sched) as usize;
+        let group = self.groups.entry(key).or_insert_with(|| (sched, layout, Vec::new()));
+        let mut ready = Vec::new();
+        for t in tiles {
+            group.2.push(t);
+            if group.2.len() >= cap {
+                ready.push(seal_group(&group.0, group.1, std::mem::take(&mut group.2)));
+            }
+        }
+        ready
+    }
+
+    /// Flush every accumulated group, full or not — called before blocking
+    /// on pool results, so no staged tile is ever waited on while it still
+    /// sits unsubmitted in the coalescer.
+    fn drain(&mut self) -> Vec<Job> {
+        self.groups
+            .drain()
+            .filter(|(_, g)| !g.2.is_empty())
+            .map(|(_, (sched, layout, members))| seal_group(&sched, layout, members))
+            .collect()
+    }
+}
+
+/// Seal one group into a pool job: a group of one stays a plain tile job
+/// (there is nothing to amortize), anything larger becomes a
+/// [`Job::ReplayBatch`].
+fn seal_group(
+    sched: &Arc<ScheduledProgram>,
+    layout: GemmLayout,
+    mut members: Vec<(u64, usize, Vec<f64>)>,
+) -> Job {
+    if members.len() == 1 {
+        let (job_id, tile_idx, gm) = members.pop().expect("group of one");
+        Job::GemmTile { job_id, tile_idx, sched: Arc::clone(sched), layout, gm }
+    } else {
+        Job::ReplayBatch { sched: Arc::clone(sched), layout, members }
+    }
+}
+
 /// A DGEMM request whose tiles are on the pool, waiting to be merged.
 struct InFlight {
     pending: PendingDgemm,
@@ -293,9 +379,12 @@ impl Coordinator {
     /// Level-1/2 measurement kernel go to the persistent pool, identical
     /// in-flight measurements are shared, and responses are finalized in
     /// submission order as the oldest request completes (freeing its
-    /// admission slot and its byte budget). Responses match
-    /// `serve_one`-in-a-loop exactly (values, cycles and energy —
-    /// simulated timing is independent of host scheduling).
+    /// admission slot and its byte budget). With
+    /// [`CoordinatorConfig::replay_batch`] set, staged DGEMM tiles that
+    /// share a cached kernel are additionally coalesced into
+    /// replay-batched pool jobs (the tier-2b fast path) before they ship.
+    /// Responses match `serve_one`-in-a-loop exactly (values, cycles and
+    /// energy — simulated timing is independent of host scheduling).
     pub fn serve_batch(&mut self, reqs: Vec<Request>) -> Vec<Response> {
         let window = self.cfg.admission_window.unwrap_or(usize::MAX).max(1);
         let budget = self.cfg.admission_bytes;
@@ -308,6 +397,8 @@ impl Coordinator {
         // Key → ids waiting on an in-flight measurement; id → its key.
         let mut waiting: HashMap<ProgramKey, Vec<u64>> = HashMap::new();
         let mut submitted: HashMap<u64, ProgramKey> = HashMap::new();
+        // Same-kernel tile coalescer (inert unless `replay_batch` is set).
+        let mut batcher = TileBatcher::new(self.cfg.replay_batch);
         let mut stats = BatchStats { requests: total, ..BatchStats::default() };
         let mut resps: Vec<Response> = Vec::with_capacity(total);
 
@@ -322,8 +413,14 @@ impl Coordinator {
                 let req = queue.next().expect("peeked above");
                 let id = next_id;
                 next_id += 1;
-                let slot =
-                    self.stage(id, req.materialize(), &mut waiting, &mut submitted, &mut stats);
+                let slot = self.stage(
+                    id,
+                    req.materialize(),
+                    &mut waiting,
+                    &mut submitted,
+                    &mut batcher,
+                    &mut stats,
+                );
                 inflight.push_back(Staged { id, bytes, slot });
                 staged_bytes += bytes;
                 stats.peak_staged = stats.peak_staged.max(inflight.len());
@@ -350,6 +447,12 @@ impl Coordinator {
             }
             if inflight.is_empty() {
                 continue; // batch drained (loop condition exits)
+            }
+
+            // Ship every partially filled coalescer group before blocking:
+            // a tile waited on below must already be on the pool.
+            for job in batcher.drain() {
+                self.pool.submit(job);
             }
 
             // Block for one pooled result and record it.
@@ -389,11 +492,15 @@ impl Coordinator {
         req: Request,
         waiting: &mut HashMap<ProgramKey, Vec<u64>>,
         submitted: &mut HashMap<u64, ProgramKey>,
+        batcher: &mut TileBatcher,
         stats: &mut BatchStats,
     ) -> Slot {
         match req {
             Request::Dgemm { a, b, c } => {
-                let pending = self.submit_dgemm(id, &a, &b, &c);
+                let (pending, staged) = self.prepare_dgemm(id, &a, &b, &c);
+                for job in batcher.add(staged) {
+                    self.pool.submit(job);
+                }
                 let tiles = vec![None; pending.tile_count()];
                 Slot::Dgemm { flight: Box::new(InFlight { pending, a, b, c }), tiles, got: 0 }
             }

@@ -23,7 +23,10 @@
 //!   DGEMM tile kernels and a tenant submitting DDOT kernels receive
 //!   cycle service in proportion to their weights — the slot-based WRR of
 //!   PR 4 ([`SchedPolicy::Slots`]) counted both the same per dispatch and
-//!   stays available as the pinned baseline (see `queue`);
+//!   stays available as the pinned baseline (see `queue`). Estimates are
+//!   repriced at dispatch time, so a kernel whose timing pass memoizes
+//!   while its jobs sit queued is debited by real cycles, not the stale
+//!   submission-time op count;
 //! * **scoped cache residency** — [`EngineConfig::cache_quota`] bounds
 //!   each tenant's resident kernel count, so a shape-churning tenant
 //!   evicts within its own set instead of flushing a sibling's warm
@@ -110,9 +113,11 @@ pub struct Engine {
 pub struct LaneService {
     /// The lane's scheduling weight.
     pub weight: u64,
-    /// Cumulative estimated simulated cycles dispatched from this lane
-    /// (per-job cost estimates at submission time: exact memoized cycles
-    /// for warm kernels, decoded op count for cold ones).
+    /// Cumulative estimated simulated cycles dispatched from this lane.
+    /// Costs are repriced at dispatch time: exact memoized cycles for any
+    /// kernel whose schedule exists by then (even if it was cold at
+    /// submission), decoded op count only for kernels still cold at
+    /// dispatch.
     pub served_cost: u64,
 }
 

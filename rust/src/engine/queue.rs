@@ -30,6 +30,13 @@
 //! identical to the pre-engine pool. Per-lane cumulative dispatched cost
 //! is tracked ([`WrrQueue::lane_served`]) so fairness is observable, not
 //! just implemented.
+//!
+//! Costs are **repriced at dispatch time** when the queue carries a
+//! repricer ([`WrrQueue::with_repricer`]): a job whose kernel memoized its
+//! real `PeStats.cycles` *while the job sat queued* is debited (and
+//! telemetered) by the sharpened cost, not the stale submission-time
+//! estimate — the first few jobs of a new shape no longer distort DRR
+//! fairness just because they were priced before the timing pass landed.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -74,6 +81,11 @@ pub(crate) struct WrrQueue<T> {
     policy: SchedPolicy,
     state: Mutex<State<T>>,
     ready: Condvar,
+    /// Optional dispatch-time cost refresher: re-reads an item's current
+    /// cost just before the scheduler commits to it, so estimates that
+    /// sharpened while the item sat queued (a kernel's timing pass
+    /// memoizing mid-queue) are debited at their real value.
+    repricer: Option<Box<dyn Fn(&T) -> u64 + Send + Sync>>,
 }
 
 impl<T> WrrQueue<T> {
@@ -82,7 +94,17 @@ impl<T> WrrQueue<T> {
             policy,
             state: Mutex::new(State { lanes: Vec::new(), cursor: 0, credit: 0, open: true }),
             ready: Condvar::new(),
+            repricer: None,
         }
+    }
+
+    /// Install a dispatch-time repricer (builder style, before the queue
+    /// is shared). With one installed, every solvency check, deficit
+    /// debit and `lane_served` tally uses `f(item)` evaluated at dispatch
+    /// time instead of the frozen submission-time cost.
+    pub fn with_repricer(mut self, f: impl Fn(&T) -> u64 + Send + Sync + 'static) -> Self {
+        self.repricer = Some(Box::new(f));
+        self
     }
 
     /// The scheduling policy this queue dispatches under.
@@ -126,8 +148,8 @@ impl<T> WrrQueue<T> {
         let mut st = self.state.lock().expect("wrr queue poisoned");
         loop {
             let popped = match self.policy {
-                SchedPolicy::Slots => Self::pop_slots(&mut st),
-                SchedPolicy::Cycles => Self::pop_cycles(&mut st),
+                SchedPolicy::Slots => self.pop_slots(&mut st),
+                SchedPolicy::Cycles => self.pop_cycles(&mut st),
             };
             if let Some(item) = popped {
                 return Some(item);
@@ -153,16 +175,31 @@ impl<T> WrrQueue<T> {
         st.lanes.iter().map(|l| (l.weight, l.served)).collect()
     }
 
+    /// Refresh the stored cost of `lane`'s head item from the repricer, if
+    /// one is installed — the executed-cycle feedback point: an estimate
+    /// frozen at submission is replaced by whatever the job is known to
+    /// cost *now* (clamped ≥ 1, like pushes).
+    fn reprice_head(&self, lane: &mut Lane<T>) {
+        if let Some(reprice) = &self.repricer {
+            if let Some((cost, item)) = lane.items.front_mut() {
+                *cost = reprice(item).max(1);
+            }
+        }
+    }
+
     /// The slot-WRR scan. Terminates because it only runs while some lane
     /// is non-empty, and every iteration either serves an item or advances
     /// the cursor (each advance refills the credit, so a non-empty lane is
     /// served within one full cycle of the lanes).
-    fn pop_slots(st: &mut State<T>) -> Option<T> {
+    fn pop_slots(&self, st: &mut State<T>) -> Option<T> {
         if st.lanes.iter().all(|l| l.items.is_empty()) {
             return None;
         }
         loop {
             if st.credit > 0 {
+                // Slots are cost-blind for *scheduling*, but the service
+                // telemetry must still record the dispatch-time cost.
+                self.reprice_head(&mut st.lanes[st.cursor]);
                 if let Some((cost, item)) = st.lanes[st.cursor].items.pop_front() {
                     st.credit -= 1;
                     st.lanes[st.cursor].served += cost;
@@ -179,8 +216,10 @@ impl<T> WrrQueue<T> {
     /// clock fast-forwards: every backlogged lane accrues `k · weight`
     /// cycles where `k` is the minimal number of whole rounds that makes
     /// at least one lane solvent (so the loop terminates after one
-    /// top-up). Idle lanes forfeit their balance.
-    fn pop_cycles(st: &mut State<T>) -> Option<T> {
+    /// top-up). Idle lanes forfeit their balance. Head costs are repriced
+    /// as the scan visits each lane, so solvency, the deficit debit and
+    /// the round top-up all price jobs at dispatch-time accuracy.
+    fn pop_cycles(&self, st: &mut State<T>) -> Option<T> {
         if st.lanes.iter().all(|l| l.items.is_empty()) {
             return None;
         }
@@ -188,6 +227,7 @@ impl<T> WrrQueue<T> {
             // One round-robin scan from the cursor for a solvent lane.
             for _ in 0..st.lanes.len() {
                 let lane = &mut st.lanes[st.cursor];
+                self.reprice_head(lane);
                 match lane.items.front() {
                     Some(&(cost, _)) if cost <= lane.deficit => {
                         let (cost, item) = lane.items.pop_front().expect("front checked above");
@@ -197,6 +237,7 @@ impl<T> WrrQueue<T> {
                         // covers its next item (FIFO burst within
                         // deficit); otherwise its turn ends — a drained
                         // lane also forfeits its balance.
+                        self.reprice_head(lane);
                         match lane.items.front() {
                             Some(&(next, _)) if next <= lane.deficit => {}
                             Some(_) => st.cursor = (st.cursor + 1) % st.lanes.len(),
@@ -449,6 +490,52 @@ mod tests {
             "slot WRR should hand the heavy lane far more than its cycle share \
              (got ratio {ratio:.3}, weights say 3.0)"
         );
+    }
+
+    /// The executed-cycle feedback bugfix: a shape's cost estimate that
+    /// sharpens *while its jobs sit queued* (the kernel's timing pass
+    /// memoizing mid-queue) must be what the scheduler debits and
+    /// telemeters at dispatch — not the stale submission-time estimate.
+    #[test]
+    fn dispatch_time_repricing_reads_the_sharpened_estimate() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Arc;
+        const COLD_EST: u64 = 100; // decoded op count
+        const REAL_COST: u64 = 12_000; // memoized PeStats.cycles
+        for policy in [SchedPolicy::Cycles, SchedPolicy::Slots] {
+            // The "memo": every queued job of this shape prices at
+            // whatever the memo currently says.
+            let memo = Arc::new(AtomicU64::new(COLD_EST));
+            let m = Arc::clone(&memo);
+            let q = WrrQueue::new(policy).with_repricer(move |_: &u64| m.load(Ordering::Relaxed));
+            let lane = q.add_lane(1);
+            q.push(lane, COLD_EST, 1);
+            q.push(lane, COLD_EST, 2);
+            // The shape's schedule memoizes while both jobs are queued.
+            memo.store(REAL_COST, Ordering::Relaxed);
+            assert_eq!(q.pop(), Some(1), "{policy:?}");
+            assert_eq!(q.pop(), Some(2), "{policy:?}");
+            let served = q.lane_served();
+            assert_eq!(
+                served[lane].1,
+                2 * REAL_COST,
+                "{policy:?}: lane must be debited the dispatch-time cost, \
+                 not the frozen submission estimate"
+            );
+        }
+    }
+
+    /// Without a repricer the pre-fix behavior is preserved: submission
+    /// costs stay frozen (the baseline the existing tests pin).
+    #[test]
+    fn without_a_repricer_submission_costs_stay_frozen() {
+        let q = WrrQueue::new(SchedPolicy::Cycles);
+        let lane = q.add_lane(1);
+        q.push(lane, 70, 1);
+        q.push(lane, 30, 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.lane_served()[lane].1, 100);
     }
 
     /// DRR must not let an idle lane bank credit: a lane that was empty

@@ -10,7 +10,7 @@
 //! redefine serve --requests 16 --max-n 64 [--b 2] [--ae 5] [--seq]
 //!                [--window W] [--window-bytes BYTES] [--cache-cap N]
 //!                [--cache-quota N] [--sched slots|cycles]
-//!                [--exec replay|combined] [--residual]
+//!                [--exec replay|combined] [--residual] [--replay-batch N]
 //!                [--tenants N [--weights w1,w2,...]]
 //! redefine sweep                       # Tables 4-9 summary
 //! redefine artifacts [--artifacts DIR] # list loadable artifacts
@@ -25,7 +25,9 @@
 //! caps the program cache at N resident kernels (LRU eviction); `--exec
 //! combined` disables the two-tier value-replay fast path; `--residual`
 //! serves non-4-aligned DGEMMs on the cached DOT2/3 residual kernel
-//! instead of padding.
+//! instead of padding; `--replay-batch N` coalesces up to N same-kernel
+//! staged DGEMM tiles into one replay-batched pool job (the tier-2b fast
+//! path — identical results, fewer decode-stream walks).
 //!
 //! `serve --tenants N` runs the **multi-tenant engine**: one shared
 //! worker pool + one shared program cache serve N concurrent tenants
@@ -51,7 +53,7 @@ fn usage() -> ! {
          [--ae 0..5] [--requests K] [--max-n N] [--artifacts DIR] [--seq] \
          [--window W] [--window-bytes BYTES] [--cache-cap N] [--cache-quota N] \
          [--sched slots|cycles] [--exec replay|combined] [--residual] \
-         [--tenants N] [--weights w1,w2,...]"
+         [--replay-batch N] [--tenants N] [--weights w1,w2,...]"
     );
     exit(2)
 }
@@ -73,6 +75,7 @@ struct Args {
     sched: SchedPolicy,
     exec: ExecMode,
     residual: bool,
+    replay_batch: Option<usize>,
     tenants: usize,
     weights: Option<String>,
 }
@@ -96,6 +99,7 @@ fn parse_args() -> Args {
         sched: SchedPolicy::Cycles,
         exec: ExecMode::Replay,
         residual: false,
+        replay_batch: None,
         tenants: 1,
         weights: None,
     };
@@ -123,6 +127,10 @@ fn parse_args() -> Args {
             "--cache-quota" => {
                 a.cache_quota =
                     Some(val().parse().ok().filter(|q| *q >= 1).unwrap_or_else(|| usage()))
+            }
+            "--replay-batch" => {
+                a.replay_batch =
+                    Some(val().parse().ok().filter(|n| *n >= 1).unwrap_or_else(|| usage()))
             }
             "--sched" => {
                 a.sched = match val().as_str() {
@@ -166,6 +174,7 @@ fn main() {
         sched: args.sched,
         exec: args.exec,
         residual: args.residual,
+        replay_batch: args.replay_batch,
     };
 
     match args.cmd.as_str() {
@@ -254,8 +263,8 @@ fn main() {
             let jc = co.pool_job_counts();
             println!(
                 "pool executed {} gemm tiles, {} gemv kernels, {} level-1 kernels \
-                 ({} value-replayed / {} combined timing passes)",
-                jc.gemm_tiles, jc.gemv, jc.level1, jc.replays, jc.combined_runs
+                 ({} value-replayed / {} combined timing passes, {} coalesced replay batches)",
+                jc.gemm_tiles, jc.gemv, jc.level1, jc.replays, jc.combined_runs, jc.batched_replays
             );
             if let Some(bs) = co.last_batch_stats() {
                 println!(
@@ -385,7 +394,7 @@ fn serve_multi_tenant(args: &Args, base: &CoordinatorConfig) {
     );
     println!(
         "shared pool: {} gemm tiles, {} gemv, {} level-1 kernels \
-         ({} value-replayed / {} combined timing passes)",
-        jc.gemm_tiles, jc.gemv, jc.level1, jc.replays, jc.combined_runs
+         ({} value-replayed / {} combined timing passes, {} coalesced replay batches)",
+        jc.gemm_tiles, jc.gemv, jc.level1, jc.replays, jc.combined_runs, jc.batched_replays
     );
 }

@@ -31,6 +31,11 @@
 //!   queues, no stall attribution — just the data path. Bit-identical
 //!   values at a fraction of the cost; the serving engine's cache-hit
 //!   path.
+//! * [`replay_batch`] — the **operand-batched** value interpreter
+//!   (tier 2b): one pass over the decoded stream advances N independent
+//!   [`ReplayCtx`] operand contexts, amortizing decode iteration and
+//!   dispatch across a batch of same-kernel requests while staying
+//!   bit-identical to N single replays.
 //! * [`Pe::run`] — convenience one-shot: decode + combined run, the
 //!   historical entry point (validation now always happens, once, in the
 //!   decode).
@@ -606,6 +611,202 @@ impl Pe {
     }
 }
 
+/// One request's architectural state for the **batched** replay tier: a
+/// private GM window, LM scratchpad and register file, without the timing
+/// machinery a full [`Pe`] carries. [`replay_batch`] advances N of these
+/// through one shared decoded stream in a single pass.
+///
+/// Construction mirrors [`Pe::new`] / [`Pe::reset`] exactly (GM zeroed to
+/// size, LM zeroed to [`super::isa::LM_WORDS`], registers zeroed), so a
+/// context starts bit-identical to a fresh or reset PE — the property the
+/// batched-replay equivalence tests pin.
+pub struct ReplayCtx {
+    /// The context's global-memory window (the packed operand image).
+    pub gm: Vec<f64>,
+    lm: Vec<f64>,
+    regs: [f64; NUM_REGS],
+}
+
+impl ReplayCtx {
+    /// Fresh context over a zeroed GM window of `gm_words` f64 words.
+    pub fn new(gm_words: usize) -> Self {
+        Self::from_gm(vec![0.0; gm_words])
+    }
+
+    /// Context over a pre-packed GM image (LM and registers zeroed) —
+    /// equivalent to `Pe::reset(gm.len())` followed by `write_gm(0, &gm)`.
+    pub fn from_gm(gm: Vec<f64>) -> Self {
+        Self { gm, lm: vec![0.0; super::isa::LM_WORDS], regs: [0.0; NUM_REGS] }
+    }
+
+    /// Reset to the fresh state over a zeroed `gm_words` window, mirroring
+    /// [`Pe::reset`] for pooled reuse across kernels.
+    pub fn reset(&mut self, gm_words: usize) {
+        self.gm.clear();
+        self.gm.resize(gm_words, 0.0);
+        self.lm.fill(0.0);
+        self.regs = [0.0; NUM_REGS];
+    }
+
+    /// Read back an LM region (introspection for tests/debugging).
+    pub fn read_lm(&self, offset: usize, len: usize) -> &[f64] {
+        &self.lm[offset..offset + len]
+    }
+
+    /// The architectural register file (introspection for tests/debugging).
+    pub fn regs(&self) -> &[f64; NUM_REGS] {
+        &self.regs
+    }
+}
+
+/// Tier-2b **operand-batched value replay**: advance every context in
+/// `ctxs` through `prog` in a *single* pass over the decoded stream.
+///
+/// Each op is decoded once — side-table lookups ([`Op::Li`] constants,
+/// [`Op::BlkLd`]/[`Op::BlkSt`] block descriptors, DOT width/accumulate
+/// bits) are hoisted out of the per-context loop, and runs of adjacent
+/// block moves are fused into one resolved transfer list streamed through
+/// each context — so decode iteration, dispatch and loop control amortize
+/// over the batch instead of being paid once per request.
+///
+/// Per context, every f64 operation is evaluated in exactly the order and
+/// with exactly the operands of a standalone [`Pe::replay`] call (block
+/// moves touch only GM/LM, so fusing them across an adjacent run never
+/// reorders anything a register op observes): the result is bit-identical
+/// to N independent replays, which the randomized two-tier property tests
+/// pin. Timing is untouched — it belongs to the program's memoized
+/// schedule, exactly as for single replay.
+pub fn replay_batch(ctxs: &mut [ReplayCtx], prog: &DecodedProgram) {
+    let ops = prog.ops();
+    let mut i = 0;
+    while i < ops.len() {
+        let op = &ops[i];
+        let a = op.a as usize;
+        match op.op {
+            Op::BlkLd | Op::BlkSt => {
+                // Fuse the whole adjacent run of block moves: resolve each
+                // side-table descriptor once, then stream the run through
+                // every context before advancing the op cursor.
+                let mut j = i + 1;
+                while j < ops.len() && matches!(ops[j].op, Op::BlkLd | Op::BlkSt) {
+                    j += 1;
+                }
+                let run: Vec<(bool, usize, usize, usize)> = ops[i..j]
+                    .iter()
+                    .map(|o| {
+                        let (lm_a, gm_a, len) = prog.block_at(o.addr);
+                        (matches!(o.op, Op::BlkLd), lm_a, gm_a, len)
+                    })
+                    .collect();
+                for ctx in ctxs.iter_mut() {
+                    let ReplayCtx { gm, lm, .. } = ctx;
+                    for &(is_load, lm_a, gm_a, len) in &run {
+                        if is_load {
+                            lm[lm_a..lm_a + len].copy_from_slice(&gm[gm_a..gm_a + len]);
+                        } else {
+                            gm[gm_a..gm_a + len].copy_from_slice(&lm[lm_a..lm_a + len]);
+                        }
+                    }
+                }
+                i = j;
+                continue;
+            }
+            Op::Ld => {
+                let addr = op.addr as usize;
+                for ctx in ctxs.iter_mut() {
+                    ctx.regs[a] = ctx.gm[addr];
+                }
+            }
+            Op::St => {
+                let addr = op.addr as usize;
+                for ctx in ctxs.iter_mut() {
+                    ctx.gm[addr] = ctx.regs[a];
+                }
+            }
+            Op::LmLd => {
+                let addr = op.addr as usize;
+                for ctx in ctxs.iter_mut() {
+                    ctx.regs[a] = ctx.lm[addr];
+                }
+            }
+            Op::LmSt => {
+                let addr = op.addr as usize;
+                for ctx in ctxs.iter_mut() {
+                    ctx.lm[addr] = ctx.regs[a];
+                }
+            }
+            Op::LmLd4 => {
+                let addr = op.addr as usize;
+                for ctx in ctxs.iter_mut() {
+                    ctx.regs[a..a + 4].copy_from_slice(&ctx.lm[addr..addr + 4]);
+                }
+            }
+            Op::LmSt4 => {
+                let addr = op.addr as usize;
+                for ctx in ctxs.iter_mut() {
+                    ctx.lm[addr..addr + 4].copy_from_slice(&ctx.regs[a..a + 4]);
+                }
+            }
+            Op::Fadd => {
+                let (b, c) = (op.b as usize, op.c as usize);
+                for ctx in ctxs.iter_mut() {
+                    ctx.regs[a] = ctx.regs[b] + ctx.regs[c];
+                }
+            }
+            Op::Fsub => {
+                let (b, c) = (op.b as usize, op.c as usize);
+                for ctx in ctxs.iter_mut() {
+                    ctx.regs[a] = ctx.regs[b] - ctx.regs[c];
+                }
+            }
+            Op::Fmul => {
+                let (b, c) = (op.b as usize, op.c as usize);
+                for ctx in ctxs.iter_mut() {
+                    ctx.regs[a] = ctx.regs[b] * ctx.regs[c];
+                }
+            }
+            Op::Fdiv => {
+                let (b, c) = (op.b as usize, op.c as usize);
+                for ctx in ctxs.iter_mut() {
+                    ctx.regs[a] = ctx.regs[b] / ctx.regs[c];
+                }
+            }
+            Op::Fsqrt => {
+                let b = op.b as usize;
+                for ctx in ctxs.iter_mut() {
+                    ctx.regs[a] = ctx.regs[b].sqrt();
+                }
+            }
+            Op::Fmac => {
+                let (b, c) = (op.b as usize, op.c as usize);
+                for ctx in ctxs.iter_mut() {
+                    ctx.regs[a] += ctx.regs[b] * ctx.regs[c];
+                }
+            }
+            Op::Dot => {
+                let (w, acc) = op.dot_params();
+                let (b, c) = (op.b as usize, op.c as usize);
+                for ctx in ctxs.iter_mut() {
+                    let regs = &mut ctx.regs;
+                    let mut s = if acc { regs[a] } else { 0.0 };
+                    for k in 0..w as usize {
+                        s += regs[b + k] * regs[c + k];
+                    }
+                    regs[a] = s;
+                }
+            }
+            Op::Li => {
+                let v = prog.const_at(op.addr);
+                for ctx in ctxs.iter_mut() {
+                    ctx.regs[a] = v;
+                }
+            }
+            Op::Nop | Op::Barrier => {}
+        }
+        i += 1;
+    }
+}
+
 /// Common scheduling for scalar arithmetic: write value, set scoreboard,
 /// advance the unit's structural timeline. A free function over the
 /// destructured machine state so [`Pe::run_decoded`] can borrow the
@@ -910,6 +1111,62 @@ mod tests {
         assert_eq!(combined.gm, replayed.gm);
         assert_eq!(combined.read_lm(0, 64), replayed.read_lm(0, 64));
         assert_eq!(combined.regs(), replayed.regs());
+    }
+
+    #[test]
+    fn replay_batch_matches_independent_replays() {
+        // Tier-2b: N contexts through one pass must leave each context
+        // bit-identical to its own standalone Pe::replay. The program
+        // includes an adjacent BlkLd/BlkSt pair so the fusion path runs.
+        let mut p = Program::new();
+        p.push(I::BlkLd { lm: 0, gm: 0, len: 8 });
+        p.push(I::BlkSt { lm: 0, gm: 8, len: 4 });
+        for i in 0..8u8 {
+            p.push(I::LmLd { rd: i, lm: i as u32 });
+        }
+        p.push(I::Dot { rd: 8, ra: 0, rb: 4, n: 4, acc: false });
+        p.push(I::Fmac { rd: 8, ra: 0, rb: 1 });
+        p.push(I::Li { rd: 9, val: -2.5 });
+        p.push(I::Fdiv { rd: 10, ra: 8, rb: 9 });
+        p.push(I::LmSt { rs: 10, lm: 40 });
+        p.push(I::BlkSt { lm: 40, gm: 24, len: 1 });
+        p.push(I::St { rs: 8, gm: 30 });
+        p.push(I::Halt);
+        let d = crate::pe::DecodedProgram::decode(&p, AeLevel::Ae5).unwrap();
+
+        let images: Vec<Vec<f64>> = (0..5)
+            .map(|k| (0..64).map(|i| (i as f64 + 1.0) * 0.125 - k as f64).collect())
+            .collect();
+        let mut ctxs: Vec<ReplayCtx> =
+            images.iter().map(|img| ReplayCtx::from_gm(img.clone())).collect();
+        replay_batch(&mut ctxs, &d);
+
+        for (img, ctx) in images.iter().zip(&ctxs) {
+            let mut solo = pe(AeLevel::Ae5);
+            solo.reset(img.len());
+            solo.write_gm(0, img);
+            solo.replay(&d);
+            assert_eq!(solo.gm, ctx.gm);
+            assert_eq!(solo.read_lm(0, 64), ctx.read_lm(0, 64));
+            assert_eq!(solo.regs(), ctx.regs());
+        }
+    }
+
+    #[test]
+    fn replay_ctx_reset_matches_fresh() {
+        let mut ctx = ReplayCtx::from_gm(vec![7.0; 32]);
+        let mut p = Program::new();
+        p.push(I::Ld { rd: 0, gm: 0 });
+        p.push(I::LmSt { rs: 0, lm: 3 });
+        p.push(I::Halt);
+        let d = crate::pe::DecodedProgram::decode(&p, AeLevel::Ae5).unwrap();
+        replay_batch(std::slice::from_mut(&mut ctx), &d);
+        assert_eq!(ctx.read_lm(3, 1), &[7.0]);
+        ctx.reset(16);
+        let fresh = ReplayCtx::new(16);
+        assert_eq!(ctx.gm, fresh.gm);
+        assert_eq!(ctx.read_lm(0, crate::pe::LM_WORDS), fresh.read_lm(0, crate::pe::LM_WORDS));
+        assert_eq!(ctx.regs(), fresh.regs());
     }
 
     #[test]

@@ -19,12 +19,18 @@
 //!    lean value-only interpreter over the pre-decoded stream (no
 //!    scoreboard, no queues, no stall attribution) and reuses the
 //!    memoized stats. Values are bit-identical to the combined run.
+//! 4. **batched replay** ([`replay_batch`]) — when a serving batch holds
+//!    many requests for one warm kernel, a single pass over the decoded
+//!    stream advances all their operand contexts at once
+//!    ([`ScheduledProgram::replay_batch_scheduled`]), amortizing decode
+//!    iteration and dispatch while staying bit-identical to step 3.
 //!
 //! [`Pe::run_decoded`]: super::core::Pe::run_decoded
 //! [`Pe::replay`]: super::core::Pe::replay
+//! [`replay_batch`]: super::core::replay_batch
 
 use super::config::{AeLevel, PeConfig};
-use super::core::{Pe, PeStats};
+use super::core::{Pe, PeStats, ReplayCtx};
 use super::isa::{Instr, Program};
 use std::sync::OnceLock;
 
@@ -426,6 +432,28 @@ impl ScheduledProgram {
         let st = pe.run_decoded(&self.decoded);
         let _ = self.stats.set((pe.cfg.clone(), st.clone()));
         (st, ExecTier::Combined)
+    }
+
+    /// Tier-2b batched execution: if this program's schedule is memoized
+    /// under a config equal to `cfg`, advance every context in `ctxs`
+    /// through one fused pass ([`super::core::replay_batch`]) and return
+    /// the memoized stats (identical for every member — timing is
+    /// operand-independent). Returns `None` and touches nothing when the
+    /// memo is missing or was taken under a different config; the caller
+    /// then falls back to per-member [`Self::execute_traced`], exactly as
+    /// a cold single replay would.
+    pub fn replay_batch_scheduled(
+        &self,
+        ctxs: &mut [ReplayCtx],
+        cfg: &PeConfig,
+    ) -> Option<PeStats> {
+        match self.stats.get() {
+            Some((scfg, st)) if scfg == cfg => {
+                super::core::replay_batch(ctxs, &self.decoded);
+                Some(st.clone())
+            }
+            _ => None,
+        }
     }
 }
 

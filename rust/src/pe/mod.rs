@@ -19,6 +19,6 @@ pub mod decoded;
 pub mod isa;
 
 pub use config::{AeLevel, ArithKind, PeConfig};
-pub use core::{Pe, PeStats};
+pub use core::{replay_batch, Pe, PeStats, ReplayCtx};
 pub use decoded::{DecodedProgram, ExecMode, ExecTier, ScheduledProgram};
 pub use isa::{Addr, Instr, Program, Reg, DOT_PIPELINE_DEPTH, LM_WORDS, NUM_REGS};

@@ -281,6 +281,38 @@ fn cache_quota_stops_a_churning_tenant_from_evicting_a_sibling() {
 }
 
 #[test]
+fn community_kernel_promotes_out_of_the_inserting_tenants_quota() {
+    // Quota accounting bugfix: an entry is charged to its first inserter
+    // only while the inserter dominates its use. Once a sibling's warm
+    // hits overtake the inserter's own, the kernel is community property
+    // (shared/unowned) — the inserter's own quota pressure must no longer
+    // evict what every other tenant rides on.
+    let engine =
+        Engine::new(EngineConfig { workers: 2, cache_quota: Some(1), ..EngineConfig::default() });
+    let mut first = engine.tenant(cfg(AeLevel::Ae5, 2));
+    let mut rider = engine.tenant(cfg(AeLevel::Ae5, 2));
+    let a = Mat::random(16, 16, 9_100);
+    let b = Mat::random(16, 16, 9_101);
+    // The first tenant pays the emission; the rider's repeated warm
+    // traffic then dominates and promotes the kernel.
+    let _ = first.dgemm(&a, &b, &Mat::zeros(16, 16));
+    for round in 0..2u64 {
+        let x = Mat::random(16, 16, 9_200 + round);
+        let y = Mat::random(16, 16, 9_300 + round);
+        let _ = rider.dgemm(&x, &y, &Mat::zeros(16, 16));
+    }
+    assert_eq!(rider.cache_stats().misses, 0, "the rider only rides the warm kernel");
+    // The inserter moves on to a new shape: its quota of 1 must charge the
+    // new private kernel only, not the promoted community kernel.
+    let _ = first.dgemm(&Mat::random(8, 8, 1), &Mat::random(8, 8, 2), &Mat::zeros(8, 8));
+    let _ = rider.dgemm(&a, &b, &Mat::zeros(16, 16));
+    let (sf, sr) = (first.cache_stats(), rider.cache_stats());
+    assert_eq!(sr.misses, 0, "the community kernel must survive the inserter's quota: {sr:?}");
+    assert_eq!(sf.evictions, 0, "nothing evicts once the dominated entry is unowned: {sf:?}");
+    assert_eq!(engine.cache_stats().entries, 2, "both kernels stay resident");
+}
+
+#[test]
 fn weighted_tenant_batches_complete_under_flood() {
     // End-to-end no-starvation smoke: a light tenant's small batch served
     // concurrently with a heavy tenant's large batch on one worker must

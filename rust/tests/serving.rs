@@ -1,8 +1,9 @@
 //! Serving-engine tests: program-cache determinism (pointer-equal shared
 //! kernels), `serve_batch` vs `serve_one` equivalence across admission
 //! windows (request-count and byte-budget), pooled Level-1/2 execution,
-//! LRU capping, two-tier replay-vs-combined equivalence, residual-kernel
-//! serving, and the pooled path's makespan behavior.
+//! LRU capping, two-tier replay-vs-combined equivalence, tier-2b
+//! replay-batch coalescing, residual-kernel serving, and the pooled
+//! path's makespan behavior.
 
 use redefine_blas::coordinator::{
     request::{random_workload, repeated_gemm_workload, Request},
@@ -567,6 +568,120 @@ fn residual_and_padded_agree_numerically() {
     let err = redefine_blas::util::rel_fro_error(rr.c.as_slice(), rp.c.as_slice());
     assert!(err < 1e-12, "residual vs padded numerics: {err}");
     assert_ne!(rp.makespan, rr.makespan, "different kernels should cost differently");
+}
+
+/// A coordinator with the tier-2b tile coalescer enabled at `cap`.
+fn coord_replay_batch(cap: usize) -> Coordinator {
+    Coordinator::new(CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 2,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+        replay_batch: Some(cap),
+        ..CoordinatorConfig::default()
+    })
+}
+
+#[test]
+fn replay_batched_serving_matches_sequential_exactly() {
+    // The tentpole invariant: coalescing same-kernel tiles into batched
+    // replay jobs changes host-side dispatch only — responses (values,
+    // simulated cycles, energy) stay identical to the sequential loop at
+    // every coalescing cap, cold and warm.
+    let reqs = repeated_gemm_workload(8, 16, 4_400);
+    let mut seq = coord(AeLevel::Ae5, 2);
+    let r_seq: Vec<_> = reqs.clone().into_iter().map(|r| seq.serve_one(r)).collect();
+    for cap in [1usize, 4, 64] {
+        let mut bat = coord_replay_batch(cap);
+        // First pass is cold: coalesced jobs fall back to sequential
+        // member execution (one of them pays the timing pass). The second
+        // pass replays every member through the fused warm path.
+        let r_cold = bat.serve_batch(reqs.clone());
+        assert_same_responses(&r_seq, &r_cold);
+        let r_warm = bat.serve_batch(reqs.clone());
+        assert_same_responses(&r_seq, &r_warm);
+        let jc = bat.pool_job_counts();
+        assert_eq!(jc.gemm_tiles, 64, "cap {cap}: two passes x 8 requests x 4 tiles");
+        assert_eq!(
+            jc.replays + jc.combined_runs,
+            jc.gemm_tiles,
+            "cap {cap}: per-member accounting must survive coalescing: {jc:?}"
+        );
+        if cap > 1 {
+            assert!(jc.batched_replays >= 1, "cap {cap}: warm pass must coalesce: {jc:?}");
+        } else {
+            assert_eq!(jc.batched_replays, 0, "cap 1 degenerates to plain tile jobs");
+        }
+    }
+}
+
+#[test]
+fn mixed_key_batches_coalesce_only_same_key_runs() {
+    // Two interleaved shapes under replay batching: each kernel's tiles
+    // coalesce into their own batched job; the two keys never share one.
+    let mut reqs = Vec::new();
+    for i in 0..4u64 {
+        reqs.push(Request::RandomDgemm { n: 16, seed: 5_000 + i });
+        reqs.push(Request::RandomDgemm { n: 24, seed: 5_100 + i });
+    }
+    let mut seq = coord(AeLevel::Ae5, 2);
+    let r_seq: Vec<_> = reqs.clone().into_iter().map(|r| seq.serve_one(r)).collect();
+    let mut bat = coord_replay_batch(64);
+    // Warm both kernels through the solo path so the coalesced groups take
+    // the fused warm fast path deterministically.
+    for n in [16usize, 24] {
+        let (a, b, c) = (Mat::random(n, n, 1), Mat::random(n, n, 2), Mat::zeros(n, n));
+        let _ = bat.dgemm(&a, &b, &c);
+    }
+    let before = bat.pool_job_counts();
+    let r_bat = bat.serve_batch(reqs);
+    assert_same_responses(&r_seq, &r_bat);
+    let after = bat.pool_job_counts();
+    assert_eq!(after.gemm_tiles - before.gemm_tiles, 32, "8 requests x 4 tiles");
+    assert_eq!(
+        after.batched_replays - before.batched_replays,
+        2,
+        "exactly one coalesced job per kernel, never across keys: {after:?}"
+    );
+    assert_eq!(after.replays - before.replays, 32, "every coalesced tile value-replays");
+    assert_eq!(after.replays + after.combined_runs, after.gemm_tiles + after.gemv + after.level1);
+}
+
+#[test]
+fn oversized_admit_reports_truthful_peak_bytes() {
+    // Regression pin for the admission accounting: the "always admit one"
+    // escape hatch must price the oversized request at its true packed
+    // size — peak_staged_bytes reports what was actually pinned, not the
+    // budget it overflowed. Checked with and without the tile coalescer,
+    // which must not perturb byte accounting.
+    let cfg = CoordinatorConfig { ae: AeLevel::Ae5, b: 2, ..CoordinatorConfig::default() };
+    let big = Request::RandomDgemm { n: 40, seed: 77 };
+    let big_bytes = cfg.staged_bytes(&big);
+    assert!(big_bytes > 64, "test premise: the planted request is oversized");
+    let batch = vec![
+        Request::RandomDgemm { n: 8, seed: 1 },
+        big,
+        Request::RandomDgemm { n: 8, seed: 2 },
+    ];
+    for replay_batch in [None, Some(8)] {
+        let mut co = Coordinator::new(CoordinatorConfig {
+            ae: AeLevel::Ae5,
+            b: 2,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+            admission_bytes: Some(64),
+            replay_batch,
+            ..CoordinatorConfig::default()
+        });
+        let resps = co.serve_batch(batch.clone());
+        assert_eq!(resps.len(), 3);
+        let bs = co.last_batch_stats().unwrap();
+        assert_eq!(
+            bs.peak_staged_bytes, big_bytes,
+            "replay_batch {replay_batch:?}: oversized admit-one must report its true size"
+        );
+        assert_eq!(bs.peak_staged, 1, "a 64 B budget serializes staging");
+    }
 }
 
 #[test]

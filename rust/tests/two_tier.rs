@@ -1,12 +1,14 @@
 //! Two-tier execution equivalence: randomized programs over every AE
 //! level, pinning (a) tier-2 value replay bit-identical to the combined
-//! interpreter — GM, LM and register file — and (b) the memoized
+//! interpreter — GM, LM and register file — (b) the memoized
 //! [`ScheduledProgram`] stats equal to a fresh `Pe::run`, including after
-//! `Pe::reset` reuse on a pooled-worker-style PE.
+//! `Pe::reset` reuse on a pooled-worker-style PE, and (c) the tier-2b
+//! batched replay (`replay_batch`) bit-identical to N independent
+//! `Pe::replay` calls over the same operand contexts.
 
 use redefine_blas::pe::{
-    AeLevel, DecodedProgram, ExecMode, Instr, Pe, PeConfig, Program, ScheduledProgram, LM_WORDS,
-    NUM_REGS,
+    replay_batch, AeLevel, DecodedProgram, ExecMode, Instr, Pe, PeConfig, Program, ReplayCtx,
+    ScheduledProgram, LM_WORDS, NUM_REGS,
 };
 use redefine_blas::util::XorShift64;
 
@@ -191,6 +193,55 @@ fn decode_is_deterministic_and_compact() {
             d1.packed_bytes(),
             enum_bytes
         );
+    }
+}
+
+/// Bit-exact comparison of a batched-replay operand context against the
+/// reference PE that ran the same kernel over the same operands.
+fn assert_ctx_bits(tag: &str, reference: &Pe, got: &ReplayCtx) {
+    assert_eq!(reference.gm.len(), got.gm.len(), "{tag}: GM size");
+    for (i, (x, y)) in reference.gm.iter().zip(got.gm.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: GM[{i}] {x} vs {y}");
+    }
+    let (rl, gl) = (reference.read_lm(0, LM_WORDS), got.read_lm(0, LM_WORDS));
+    for (i, (x, y)) in rl.iter().zip(gl.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: LM[{i}] {x} vs {y}");
+    }
+    for (i, (x, y)) in reference.regs().iter().zip(got.regs().iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: R{i} {x} vs {y}");
+    }
+}
+
+#[test]
+fn batched_replay_matches_sequential_replays_at_every_ae() {
+    for (ai, ae) in AeLevel::ALL.into_iter().enumerate() {
+        // Long-lived contexts and a long-lived reference PE, reset-reused
+        // across kernels the way pooled workers reuse their PEs.
+        let mut ctxs: Vec<ReplayCtx> = (0..5).map(|_| ReplayCtx::new(GM_WORDS)).collect();
+        let mut solo = Pe::new(PeConfig::paper(ae), GM_WORDS);
+        for round in 0..4u64 {
+            let seed = 20_000 * (ai as u64 + 1) + round;
+            let tag = format!("{ae} seed {seed}");
+            let prog = random_program(ae, seed, 300);
+            let d = DecodedProgram::decode(&prog, ae).expect("valid by construction");
+            // Distinct operand images per member.
+            for (m, ctx) in ctxs.iter_mut().enumerate() {
+                ctx.reset(GM_WORDS);
+                let data = XorShift64::new(seed ^ (0xC0FFEE + m as u64)).vec(GM_WORDS);
+                ctx.gm.copy_from_slice(&data);
+            }
+            // One fused pass over all members...
+            replay_batch(&mut ctxs, &d);
+            // ...must be bit-identical to N independent Pe::replay calls
+            // over the same operands.
+            for (m, ctx) in ctxs.iter().enumerate() {
+                let data = XorShift64::new(seed ^ (0xC0FFEE + m as u64)).vec(GM_WORDS);
+                solo.reset(GM_WORDS);
+                solo.write_gm(0, &data);
+                solo.replay(&d);
+                assert_ctx_bits(&format!("{tag} member {m}"), &solo, ctx);
+            }
+        }
     }
 }
 
