@@ -15,8 +15,9 @@
 use redefine_blas::codegen::{gen_gemm, gen_gemm_rect, GemmLayout};
 use redefine_blas::coordinator::{
     request::{random_workload, repeated_gemm_workload, Request},
-    Coordinator, CoordinatorConfig,
+    Coordinator, CoordinatorConfig, OpenLoopOptions,
 };
+use redefine_blas::engine::traffic::{self, Arrival, TrafficConfig};
 use redefine_blas::engine::{Engine, EngineConfig, SchedPolicy};
 use redefine_blas::metrics::{measure_gemm, Routine};
 use redefine_blas::pe::{AeLevel, ExecMode, Pe, PeConfig, ScheduledProgram};
@@ -251,6 +252,15 @@ fn main() {
     } else {
         drr_fairness_bench(&mut report, 24, 24, 128, AeLevel::Ae5);
     }
+
+    // 12) Open-loop serving: a latency trajectory instead of a throughput
+    //     point. A heavy DGEMM tenant is offered Poisson load at a
+    //     multiple of the engine's measured closed-loop capacity while a
+    //     weight-3 light DDOT tenant runs alongside; the light tenant's
+    //     p99 total latency per (scheduler, load) is the recorded curve —
+    //     cycle-cost DRR is supposed to keep the light tail flat where
+    //     slot-WRR lets the flood push it out.
+    open_loop_bench(&mut report, quick, AeLevel::Ae5);
 
     if let Some(path) = json_path {
         std::fs::write(&path, report.to_json()).expect("write bench JSON");
@@ -755,4 +765,130 @@ fn residual_vs_padded_bench(report: &mut Report, requests: usize, n: usize, ae: 
     report.record("serve.residual_total_ms", t_res * 1e3);
     report.record("serve.residual_vs_padded_host_x", t_pad / t_res);
     report.record("serve.residual_vs_padded_sim_x", cyc_pad as f64 / cyc_res as f64);
+}
+
+/// Open-loop serving trajectory (`serve.open_loop.*`): the closed-loop
+/// benches above measure throughput with the next request always ready;
+/// this one measures what a latency SLO would see. The engine's
+/// closed-loop DGEMM capacity is probed once, then a weight-1 heavy
+/// DGEMM tenant is offered seeded Poisson traffic at fixed multiples of
+/// that capacity while a weight-3 light DDOT tenant runs alongside at a
+/// quarter of it — under both schedulers. The recorded curve is the
+/// light tenant's p99 total latency per (scheduler, load): cycle-cost
+/// DRR should hold the light tail roughly flat where slot-WRR lets the
+/// flood push it out. The heavy lane runs with a bounded queue, so
+/// overload is shed explicitly (and its fraction recorded) instead of
+/// queueing without bound — every offered request is accounted for.
+fn open_loop_bench(report: &mut Report, quick: bool, ae: AeLevel) {
+    let (probe_reqs, heavy_n, duration_ms) = if quick { (8, 16, 120u64) } else { (16, 24, 300) };
+    let loads: &[f64] = if quick { &[1.0, 2.0] } else { &[0.5, 1.0, 2.0] };
+    println!(
+        "\nopen-loop serving: Poisson DGEMM flood (w=1) vs DDOT (w=3), {duration_ms} ms, {ae}"
+    );
+    let tenant_cfg = |queue_depth: Option<usize>| CoordinatorConfig {
+        ae,
+        b: 2,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+        queue_depth,
+        ..CoordinatorConfig::default()
+    };
+
+    // Closed-loop capacity probe on the same pool size as the runs below:
+    // how fast a warmed tenant drains the heavy shape when the next
+    // request is always available. The open-loop rates are multiples of
+    // this measured rate, so "2.00x" means the same on any host.
+    let probe_engine = Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() });
+    let mut probe = probe_engine.tenant(tenant_cfg(None));
+    let _ = probe.serve_batch(repeated_gemm_workload(2, heavy_n, 2));
+    let t0 = Instant::now();
+    let served = probe.serve_batch(repeated_gemm_workload(probe_reqs, heavy_n, 2)).len();
+    let cap_rps = served as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    println!("{:<44} {:>10.1} req/s", "  closed-loop DGEMM capacity", cap_rps);
+
+    let duration_ns = duration_ms * 1_000_000;
+    for (tag, sched) in [("slots", SchedPolicy::Slots), ("cycles", SchedPolicy::Cycles)] {
+        for &load in loads {
+            let engine =
+                Engine::new(EngineConfig { workers: 2, sched, ..EngineConfig::default() });
+            // Bounded heavy queue: past 2x capacity the backlog must shed
+            // explicitly, never grow (or drop) silently.
+            let heavy = engine.tenant(tenant_cfg(Some(64)));
+            let light = engine.tenant_weighted(tenant_cfg(None), 3);
+            let heavy_arrivals: Vec<Arrival> = traffic::arrival_times(&TrafficConfig {
+                rate_rps: (cap_rps * load).max(50.0),
+                duration_ns,
+                seed: 7,
+                ..TrafficConfig::default()
+            })
+            .into_iter()
+            .enumerate()
+            .map(|(i, at_ns)| {
+                let req = Request::RandomDgemm { n: heavy_n, seed: 50 + i as u64 };
+                Arrival { seq: i, at_ns, req }
+            })
+            .collect();
+            let light_arrivals: Vec<Arrival> = traffic::arrival_times(&TrafficConfig {
+                rate_rps: (cap_rps * 0.25).max(50.0),
+                duration_ns,
+                seed: 11,
+                ..TrafficConfig::default()
+            })
+            .into_iter()
+            .enumerate()
+            .map(|(i, at_ns)| {
+                // Cycled distinct sizes: the light lane exercises real
+                // kernels instead of memo-sharing one shape with itself.
+                let n = 16 + 4 * (i % 64);
+                let req = Request::Ddot { x: vec![1.0; n], y: vec![0.5; n] };
+                Arrival { seq: i, at_ns, req }
+            })
+            .collect();
+            // Pre-emit every kernel into the shared cache so the timed
+            // window measures contended serving, not codegen.
+            for i in 0..64usize {
+                let _ = light.cache().level1(Routine::Ddot, 16 + 4 * i, 1.5, ae);
+            }
+            let np = round_up(heavy_n, 4 * 2);
+            let _ = heavy.cache().gemm_rect(np / 2, np / 2, np, ae);
+
+            let (heavy_offered, light_offered) = (heavy_arrivals.len(), light_arrivals.len());
+            let opts = OpenLoopOptions::default();
+            let (hr, lr) = std::thread::scope(|s| {
+                let hh = s.spawn(move || {
+                    let mut heavy = heavy;
+                    heavy.serve_open_loop(heavy_arrivals, &opts)
+                });
+                let lh = s.spawn(move || {
+                    let mut light = light;
+                    light.serve_open_loop(light_arrivals, &opts)
+                });
+                (hh.join().expect("heavy tenant"), lh.join().expect("light tenant"))
+            });
+            // Zero silent drops: every offered request resolves to exactly
+            // one Served or Rejected outcome.
+            assert_eq!(hr.outcomes.len(), heavy_offered, "heavy lane lost outcomes");
+            assert_eq!(lr.outcomes.len(), light_offered, "light lane lost outcomes");
+            assert_eq!(lr.stats.served, light_offered, "uncapped light lane must not shed");
+            assert_eq!(hr.stats.served + hr.stats.shed, heavy_offered, "heavy lane accounting");
+
+            let p99_ms = lr.stats.total.p99 as f64 / 1e6;
+            let xload = (load * 100.0).round() as u64;
+            println!(
+                "{:<44} {:>10.3} ms light p99  (heavy shed {} of {heavy_offered})",
+                format!("  --sched {tag} @ {load:.2}x capacity"),
+                p99_ms,
+                hr.stats.shed
+            );
+            report.record(&format!("serve.open_loop.light_p99_ms_{tag}_x{xload:03}"), p99_ms);
+            report.record(
+                &format!("serve.open_loop.heavy_p99_ms_{tag}_x{xload:03}"),
+                hr.stats.total.p99 as f64 / 1e6,
+            );
+            report.record(
+                &format!("serve.open_loop.heavy_shed_frac_{tag}_x{xload:03}"),
+                hr.stats.shed as f64 / heavy_offered.max(1) as f64,
+            );
+        }
+    }
 }

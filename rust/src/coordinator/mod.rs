@@ -36,10 +36,12 @@
 //!   stub and every value comes from [`ValueSource::PeSim`].
 
 pub mod cache;
+pub mod open_loop;
 pub(crate) mod pool;
 pub mod request;
 
 pub use cache::{CacheStats, CacheTally, ProgramCache, ProgramKey};
+pub use open_loop::{OpenLoopOptions, OpenLoopOutcome, OpenLoopReport, OpenLoopStats, ShedReason};
 pub use pool::PoolJobCounts;
 pub use request::{BatchStats, Request, Response};
 
@@ -59,6 +61,24 @@ use std::sync::Arc;
 const SOLO_JOB_ID: u64 = u64::MAX;
 
 /// Coordinator configuration.
+///
+/// # Examples
+///
+/// Configs are plain data — nothing is spawned until
+/// [`Coordinator::new`] / [`crate::engine::Engine::tenant`]:
+///
+/// ```
+/// use redefine_blas::coordinator::CoordinatorConfig;
+///
+/// let cfg = CoordinatorConfig {
+///     admission_window: Some(4),
+///     admission_bytes: Some(256 * 1024),
+///     ..CoordinatorConfig::default()
+/// };
+/// assert!(cfg.verify, "the value cross-check defaults on");
+/// assert_eq!(cfg.b, 2, "2x2 tile array by default");
+/// assert!(cfg.queue_depth.is_none(), "open-loop shedding defaults off");
+/// ```
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
     /// PE enhancement level for every kernel.
@@ -124,6 +144,22 @@ pub struct CoordinatorConfig {
     /// Values, cycles and energy are identical either way (pinned by
     /// tests); only host-side serving throughput changes.
     pub replay_batch: Option<usize>,
+    /// Open-loop backpressure, by depth: an arrival finding this many
+    /// requests already pending (arrived, not yet admitted) is shed with an
+    /// explicit `Rejected` outcome instead of queueing without bound
+    /// ([`Coordinator::serve_open_loop`]). Must be ≥ 1 to ever serve;
+    /// `None` (default) never depth-sheds. Ignored by the closed-loop
+    /// `serve_batch`, which offers the next request only after admission.
+    pub queue_depth: Option<usize>,
+    /// Open-loop backpressure, by bytes: an arrival that would push the
+    /// pending queue's packed-GM footprint (priced by
+    /// [`CoordinatorConfig::staged_bytes`], same currency as
+    /// [`CoordinatorConfig::admission_bytes`]) past this budget is shed —
+    /// except that an arrival finding the pending queue empty is always
+    /// accepted, so one oversized request degrades to queueing rather than
+    /// permanent rejection. `None` (default) never byte-sheds. Ignored by
+    /// the closed-loop `serve_batch`.
+    pub shed_after_bytes: Option<u64>,
 }
 
 impl Default for CoordinatorConfig {
@@ -141,6 +177,8 @@ impl Default for CoordinatorConfig {
             exec: ExecMode::Replay,
             residual: false,
             replay_batch: None,
+            queue_depth: None,
+            shed_after_bytes: None,
         }
     }
 }
@@ -545,6 +583,12 @@ impl Coordinator {
     /// Receive the next finished pool job (any request of this tenant).
     pub(crate) fn recv_done(&self) -> Done {
         self.pool.recv()
+    }
+
+    /// Non-blocking [`Coordinator::recv_done`]: `None` when nothing has
+    /// finished yet (the open-loop poll step).
+    pub(crate) fn try_recv_done(&self) -> Option<Done> {
+        self.pool.try_recv()
     }
 
     /// Collect exactly this job's tiles (single-request path).

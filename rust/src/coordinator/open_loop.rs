@@ -1,0 +1,311 @@
+//! Open-loop serving driver — timed arrivals, event-driven completions,
+//! explicit load shedding, and per-request latency decomposition.
+//!
+//! [`Coordinator::serve_batch`] is closed-loop: the next request is offered
+//! only when the admission window frees, so the engine is never overloaded
+//! and latency is not a meaningful output. [`Coordinator::serve_open_loop`]
+//! drives the same admission + completion state machine
+//! ([`super::request::Pipeline`]) from a pre-generated arrival schedule
+//! ([`crate::engine::traffic`]): requests become *due* at their virtual
+//! timestamp whether or not the engine has kept up, wait in a bounded
+//! pending queue, are admitted as the window/byte budget frees, and drain
+//! event-driven while the driver keeps watching the arrival clock.
+//!
+//! Every offered request gets exactly one [`OpenLoopOutcome`] — served with
+//! its latency split, or [`OpenLoopOutcome::Rejected`] with the shed reason.
+//! Nothing is ever dropped silently (pinned by the overload tests).
+//!
+//! Latency decomposition per served request, all in host nanoseconds
+//! measured from the run start:
+//! * **queue** — virtual arrival → admission into the pipeline (includes
+//!   open-loop *lateness*: if the host falls behind the arrival schedule,
+//!   the wait counts, exactly as a real client would experience it);
+//! * **service** — admission → response finalized (kernel execution plus
+//!   any wait behind earlier responses: completion is in admission order);
+//! * **total** — arrival → finalized (= queue + service up to rounding).
+
+use super::request::{Pipeline, Request, Response};
+use super::Coordinator;
+use crate::engine::latency::{Histogram, LatencySnapshot};
+use crate::engine::traffic::Arrival;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Knobs of one [`Coordinator::serve_open_loop`] run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpenLoopOptions {
+    /// Total-latency SLO in nanoseconds: every served request whose
+    /// arrival→finalized latency exceeds this counts into
+    /// [`OpenLoopStats::slo_violations`]. `None` tracks no SLO.
+    pub slo_total_ns: Option<u64>,
+}
+
+/// Why an arrival was shed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The pending queue already held
+    /// [`super::CoordinatorConfig::queue_depth`] requests.
+    QueueDepth,
+    /// Accepting would push pending bytes past
+    /// [`super::CoordinatorConfig::shed_after_bytes`].
+    QueueBytes,
+}
+
+/// Exactly one outcome per offered arrival.
+#[derive(Debug)]
+pub enum OpenLoopOutcome {
+    /// Served to completion.
+    Served {
+        /// The arrival's sequence index.
+        seq: usize,
+        /// Virtual arrival timestamp (ns from run start).
+        arrival_ns: u64,
+        /// Arrival → admission (ns).
+        queue_ns: u64,
+        /// Admission → finalized (ns).
+        service_ns: u64,
+        /// The response, identical to what `serve_batch` would return for
+        /// the same request (values, cycles, energy).
+        resp: Response,
+    },
+    /// Shed by backpressure — an explicit rejection, never a silent drop.
+    Rejected {
+        /// The arrival's sequence index.
+        seq: usize,
+        /// Virtual arrival timestamp (ns from run start).
+        arrival_ns: u64,
+        /// Routine name of the shed request.
+        op: &'static str,
+        /// Problem size of the shed request.
+        n: usize,
+        /// Which cap shed it.
+        reason: ShedReason,
+    },
+}
+
+impl OpenLoopOutcome {
+    /// The arrival's sequence index.
+    pub fn seq(&self) -> usize {
+        match self {
+            OpenLoopOutcome::Served { seq, .. } | OpenLoopOutcome::Rejected { seq, .. } => *seq,
+        }
+    }
+
+    /// The response, when served.
+    pub fn response(&self) -> Option<&Response> {
+        match self {
+            OpenLoopOutcome::Served { resp, .. } => Some(resp),
+            OpenLoopOutcome::Rejected { .. } => None,
+        }
+    }
+}
+
+/// Aggregate telemetry of one open-loop run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpenLoopStats {
+    /// Arrivals offered (served + shed).
+    pub offered: usize,
+    /// Requests served to completion.
+    pub served: usize,
+    /// Requests shed by backpressure.
+    pub shed: usize,
+    /// Peak depth of the pending (arrived, unadmitted) queue.
+    pub peak_pending: usize,
+    /// Peak packed-GM bytes priced against the pending queue.
+    pub peak_pending_bytes: u64,
+    /// Served requests whose total latency exceeded
+    /// [`OpenLoopOptions::slo_total_ns`].
+    pub slo_violations: usize,
+    /// Arrival → admission latency percentiles (ns).
+    pub queue: LatencySnapshot,
+    /// Admission → finalized latency percentiles (ns).
+    pub service: LatencySnapshot,
+    /// Arrival → finalized latency percentiles (ns).
+    pub total: LatencySnapshot,
+}
+
+/// Everything one open-loop run produced: per-arrival outcomes (in `seq`
+/// order) plus the aggregate stats.
+#[derive(Debug)]
+pub struct OpenLoopReport {
+    /// One outcome per offered arrival, sorted by sequence index.
+    pub outcomes: Vec<OpenLoopOutcome>,
+    /// Aggregate counters and latency percentiles.
+    pub stats: OpenLoopStats,
+}
+
+impl OpenLoopReport {
+    /// The served responses in arrival-sequence order (shed arrivals have
+    /// no response).
+    pub fn responses(&self) -> Vec<&Response> {
+        self.outcomes.iter().filter_map(|o| o.response()).collect()
+    }
+}
+
+/// An accepted arrival waiting for admission; the request stays
+/// unmaterialized (synthetic operands are not generated), so a shed-heavy
+/// overload run prices and rejects cheaply.
+struct Pending {
+    seq: usize,
+    at_ns: u64,
+    bytes: u64,
+    req: Request,
+}
+
+impl Coordinator {
+    /// Serve a timed arrival schedule open-loop. See the
+    /// [module docs](self) for the exact semantics; in short, per driver
+    /// iteration:
+    ///
+    /// 1. every arrival whose timestamp is due is accepted into the pending
+    ///    queue — or shed (depth cap first, then byte cap) with an explicit
+    ///    [`OpenLoopOutcome::Rejected`];
+    /// 2. pending requests are admitted FIFO while the admission window and
+    ///    byte budget have room (no reordering: head-of-line order is the
+    ///    response order, exactly as in `serve_batch`);
+    /// 3. finished requests are finalized from the front of the window and
+    ///    their queue/service/total latencies recorded;
+    /// 4. otherwise the driver polls the pool non-blocking, sleeping in
+    ///    ~20 µs slices bounded by the next arrival deadline.
+    ///
+    /// Arrivals may be passed in any order (they are sorted by timestamp);
+    /// `seq` indices should be distinct — outcomes are reported sorted by
+    /// `seq`. After the run, [`Coordinator::last_batch_stats`] holds the
+    /// pipeline telemetry with `requests` = served and `shed` filled in.
+    ///
+    /// # Examples
+    ///
+    /// ```no_run
+    /// use redefine_blas::coordinator::{Coordinator, CoordinatorConfig, OpenLoopOptions};
+    /// use redefine_blas::engine::traffic::{self, TrafficConfig};
+    ///
+    /// let cfg = CoordinatorConfig {
+    ///     admission_window: Some(4),
+    ///     queue_depth: Some(64),
+    ///     ..CoordinatorConfig::default()
+    /// };
+    /// let mut co = Coordinator::new(cfg);
+    /// let arrivals = traffic::generate(&TrafficConfig::default());
+    /// let report = co.serve_open_loop(arrivals, &OpenLoopOptions::default());
+    /// assert_eq!(report.stats.offered, report.stats.served + report.stats.shed);
+    /// println!("p99 total: {} ns", report.stats.total.p99);
+    /// ```
+    pub fn serve_open_loop(
+        &mut self,
+        mut arrivals: Vec<Arrival>,
+        opts: &OpenLoopOptions,
+    ) -> OpenLoopReport {
+        arrivals.sort_by_key(|a| (a.at_ns, a.seq));
+        let offered = arrivals.len();
+        let mut arr = arrivals.into_iter().peekable();
+        let mut pipe = Pipeline::new(&self.cfg);
+        let mut pending: VecDeque<Pending> = VecDeque::new();
+        let mut pending_bytes: u64 = 0;
+        let mut outcomes: Vec<OpenLoopOutcome> = Vec::with_capacity(offered);
+        let mut hist_queue = Histogram::new();
+        let mut hist_service = Histogram::new();
+        let mut hist_total = Histogram::new();
+        let mut stats = OpenLoopStats { offered, ..OpenLoopStats::default() };
+        let depth_cap = self.cfg.queue_depth;
+        let byte_cap = self.cfg.shed_after_bytes;
+        let t0 = Instant::now();
+
+        loop {
+            // 1) Accept or shed every due arrival. All arrivals sharing a
+            // due instant are resolved before any admission below, so a
+            // simultaneous burst sheds deterministically.
+            let now = t0.elapsed().as_nanos() as u64;
+            while arr.peek().is_some_and(|a| a.at_ns <= now) {
+                let a = arr.next().expect("peeked above");
+                let bytes = self.cfg.staged_bytes(&a.req);
+                let shed = if depth_cap.is_some_and(|cap| pending.len() >= cap) {
+                    Some(ShedReason::QueueDepth)
+                } else if byte_cap
+                    .is_some_and(|cap| !pending.is_empty() && pending_bytes + bytes > cap)
+                {
+                    Some(ShedReason::QueueBytes)
+                } else {
+                    None
+                };
+                match shed {
+                    Some(reason) => {
+                        stats.shed += 1;
+                        outcomes.push(OpenLoopOutcome::Rejected {
+                            seq: a.seq,
+                            arrival_ns: a.at_ns,
+                            op: a.req.name(),
+                            n: a.req.n(),
+                            reason,
+                        });
+                    }
+                    None => {
+                        pending_bytes += bytes;
+                        let p = Pending { seq: a.seq, at_ns: a.at_ns, bytes, req: a.req };
+                        pending.push_back(p);
+                        stats.peak_pending = stats.peak_pending.max(pending.len());
+                        stats.peak_pending_bytes = stats.peak_pending_bytes.max(pending_bytes);
+                    }
+                }
+            }
+
+            // 2) Admit FIFO from the pending queue while there is room.
+            while pending.front().is_some_and(|p| pipe.has_room(p.bytes)) {
+                let p = pending.pop_front().expect("front checked above");
+                pending_bytes -= p.bytes;
+                let admitted_ns = t0.elapsed().as_nanos() as u64;
+                self.admit(&mut pipe, p.req, p.bytes, p.seq, p.at_ns, admitted_ns);
+            }
+
+            // 3) Finalize everything finished at the front of the window.
+            while let Some(fin) = self.pop_ready(&mut pipe) {
+                let done_ns = t0.elapsed().as_nanos() as u64;
+                let queue_ns = fin.admitted_ns.saturating_sub(fin.arrival_ns);
+                let service_ns = done_ns.saturating_sub(fin.admitted_ns);
+                let total_ns = done_ns.saturating_sub(fin.arrival_ns);
+                hist_queue.record(queue_ns);
+                hist_service.record(service_ns);
+                hist_total.record(total_ns);
+                stats.served += 1;
+                if opts.slo_total_ns.is_some_and(|slo| total_ns > slo) {
+                    stats.slo_violations += 1;
+                }
+                outcomes.push(OpenLoopOutcome::Served {
+                    seq: fin.seq,
+                    arrival_ns: fin.arrival_ns,
+                    queue_ns,
+                    service_ns,
+                    resp: fin.resp,
+                });
+            }
+
+            // 4) Every arrival accounted for?
+            if arr.peek().is_none() && pending.is_empty() && pipe.idle() {
+                break;
+            }
+
+            // 5) Wait for the next event. With work in flight, poll the
+            // pool (an idle window always admits the pending front, so a
+            // nonempty pending queue implies work in flight); otherwise
+            // sleep toward the next arrival deadline.
+            if !pipe.idle() {
+                if !self.try_drain(&mut pipe) {
+                    std::thread::sleep(Duration::from_micros(20));
+                }
+            } else if let Some(a) = arr.peek() {
+                let now = t0.elapsed().as_nanos() as u64;
+                if a.at_ns > now {
+                    std::thread::sleep(Duration::from_nanos((a.at_ns - now).min(1_000_000)));
+                }
+            }
+        }
+
+        outcomes.sort_by_key(|o| o.seq());
+        stats.queue = hist_queue.snapshot();
+        stats.service = hist_service.snapshot();
+        stats.total = hist_total.snapshot();
+        pipe.stats.requests = stats.served;
+        pipe.stats.shed = stats.shed;
+        self.set_last_batch_stats(pipe.stats);
+        OpenLoopReport { outcomes, stats }
+    }
+}

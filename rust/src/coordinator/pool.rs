@@ -340,6 +340,19 @@ impl PoolClient {
         }
     }
 
+    /// Non-blocking [`PoolClient::recv`]: `None` when no result is ready
+    /// yet. Lets the open-loop serving driver poll for completions between
+    /// arrival deadlines instead of parking on the reply channel. Worker
+    /// panics and a dead pool are re-raised exactly as in `recv`.
+    pub fn try_recv(&self) -> Option<Done> {
+        match self.reply_rx.try_recv() {
+            Ok(Msg::Done(d)) => Some(d),
+            Ok(Msg::Panicked(msg)) => panic!("pool worker panicked on {msg}"),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => panic!("pool workers gone"),
+        }
+    }
+
     /// Jobs executed for this tenant so far, by kind.
     pub fn counts(&self) -> PoolJobCounts {
         self.counts.snapshot()

@@ -151,6 +151,12 @@ pub struct BatchStats {
     /// Requests that attached to an identical in-flight measurement kernel
     /// instead of submitting a duplicate.
     pub shared_measurements: usize,
+    /// Requests shed by open-loop backpressure
+    /// ([`Coordinator::serve_open_loop`] under
+    /// [`CoordinatorConfig::queue_depth`] /
+    /// [`CoordinatorConfig::shed_after_bytes`]); always 0 on the
+    /// closed-loop `serve_batch` path, which never sheds.
+    pub shed: usize,
 }
 
 /// The one place a [`DgemmResult`] becomes a [`Response`] — shared by the
@@ -300,11 +306,81 @@ impl Slot {
 }
 
 /// An admitted, unfinalized request: its id, the packed bytes it pins
-/// (admission accounting), and its completion slot.
+/// (admission accounting), its completion slot, and — for the open-loop
+/// path — latency bookkeeping (all zero on the closed-loop path, where
+/// arrival time is meaningless).
 struct Staged {
     id: u64,
     bytes: u64,
+    /// Caller-visible arrival index (equals `id` on the closed-loop path;
+    /// skips shed arrivals on the open-loop path).
+    seq: usize,
+    /// Virtual arrival timestamp (ns from run start; 0 closed-loop).
+    arrival_ns: u64,
+    /// Host time the request was admitted (ns from run start; 0 closed-loop).
+    admitted_ns: u64,
     slot: Slot,
+}
+
+/// The admission + completion state machine behind both serving modes: the
+/// bounded window of in-flight requests plus the kernel-sharing and
+/// tile-coalescing side tables. [`Coordinator::serve_batch`] drives it
+/// closed-loop (admit from a list, block for completions);
+/// [`Coordinator::serve_open_loop`] drives it from a timed arrival process,
+/// polling completions between arrival deadlines. Both paths run the exact
+/// same stage/absorb/finalize code, which is what keeps their responses
+/// value-, cycle- and energy-identical (pinned by the open-loop tests).
+pub(crate) struct Pipeline {
+    window: usize,
+    budget: Option<u64>,
+    /// Admitted, unfinalized requests in submission order.
+    inflight: VecDeque<Staged>,
+    staged_bytes: u64,
+    /// Key → ids waiting on an in-flight measurement; id → its key.
+    waiting: HashMap<ProgramKey, Vec<u64>>,
+    submitted: HashMap<u64, ProgramKey>,
+    /// Same-kernel tile coalescer (inert unless `replay_batch` is set).
+    batcher: TileBatcher,
+    next_id: u64,
+    pub(crate) stats: BatchStats,
+}
+
+impl Pipeline {
+    pub(crate) fn new(cfg: &CoordinatorConfig) -> Self {
+        Self {
+            window: cfg.admission_window.unwrap_or(usize::MAX).max(1),
+            budget: cfg.admission_bytes,
+            inflight: VecDeque::new(),
+            staged_bytes: 0,
+            waiting: HashMap::new(),
+            submitted: HashMap::new(),
+            batcher: TileBatcher::new(cfg.replay_batch),
+            next_id: 0,
+            stats: BatchStats::default(),
+        }
+    }
+
+    /// Whether a request pinning `bytes` may be admitted right now: the
+    /// window has a free slot and the byte budget accepts it (an empty
+    /// window always admits, so an oversized request cannot wedge).
+    pub(crate) fn has_room(&self, bytes: u64) -> bool {
+        self.window > self.inflight.len()
+            && admits_bytes(self.budget, self.inflight.is_empty(), self.staged_bytes, bytes)
+    }
+
+    /// No admitted request is outstanding.
+    pub(crate) fn idle(&self) -> bool {
+        self.inflight.is_empty()
+    }
+}
+
+/// A finalized request leaving the [`Pipeline`], with the timestamps its
+/// latency decomposition needs.
+pub(crate) struct Finished {
+    pub(crate) seq: usize,
+    pub(crate) arrival_ns: u64,
+    pub(crate) admitted_ns: u64,
+    pub(crate) resp: Response,
 }
 
 /// The in-flight slot of request `id` (ids are issued in submission order,
@@ -385,102 +461,165 @@ impl Coordinator {
     /// replay-batched pool jobs (the tier-2b fast path) before they ship.
     /// Responses match `serve_one`-in-a-loop exactly (values, cycles and
     /// energy — simulated timing is independent of host scheduling).
+    ///
+    /// # Examples
+    ///
+    /// ```no_run
+    /// use redefine_blas::coordinator::{request::Request, Coordinator, CoordinatorConfig};
+    ///
+    /// let cfg = CoordinatorConfig { admission_window: Some(4), ..CoordinatorConfig::default() };
+    /// let mut co = Coordinator::new(cfg);
+    /// let reqs = vec![
+    ///     Request::RandomDgemm { n: 16, seed: 1 },
+    ///     Request::Ddot { x: vec![1.0; 32], y: vec![2.0; 32] },
+    /// ];
+    /// let resps = co.serve_batch(reqs);
+    /// assert_eq!(resps.len(), 2);
+    /// let stats = co.last_batch_stats().unwrap();
+    /// assert!(stats.peak_staged <= 4);
+    /// ```
     pub fn serve_batch(&mut self, reqs: Vec<Request>) -> Vec<Response> {
-        let window = self.cfg.admission_window.unwrap_or(usize::MAX).max(1);
-        let budget = self.cfg.admission_bytes;
         let total = reqs.len();
+        let mut pipe = Pipeline::new(&self.cfg);
+        pipe.stats.requests = total;
         let mut queue = reqs.into_iter().peekable();
-        let mut next_id: u64 = 0;
-        // Admitted, unfinalized requests in submission order.
-        let mut inflight: VecDeque<Staged> = VecDeque::new();
-        let mut staged_bytes: u64 = 0;
-        // Key → ids waiting on an in-flight measurement; id → its key.
-        let mut waiting: HashMap<ProgramKey, Vec<u64>> = HashMap::new();
-        let mut submitted: HashMap<u64, ProgramKey> = HashMap::new();
-        // Same-kernel tile coalescer (inert unless `replay_batch` is set).
-        let mut batcher = TileBatcher::new(self.cfg.replay_batch);
-        let mut stats = BatchStats { requests: total, ..BatchStats::default() };
         let mut resps: Vec<Response> = Vec::with_capacity(total);
 
         while resps.len() < total {
             // Admit requests up to the window and the byte budget.
-            while inflight.len() < window {
-                let Some(next) = queue.peek() else { break };
+            while let Some(next) = queue.peek() {
                 let bytes = self.cfg.staged_bytes(next);
-                if !admits_bytes(budget, inflight.is_empty(), staged_bytes, bytes) {
+                if !pipe.has_room(bytes) {
                     break;
                 }
                 let req = queue.next().expect("peeked above");
-                let id = next_id;
-                next_id += 1;
-                let slot = self.stage(
-                    id,
-                    req.materialize(),
-                    &mut waiting,
-                    &mut submitted,
-                    &mut batcher,
-                    &mut stats,
-                );
-                inflight.push_back(Staged { id, bytes, slot });
-                staged_bytes += bytes;
-                stats.peak_staged = stats.peak_staged.max(inflight.len());
-                stats.peak_staged_bytes = stats.peak_staged_bytes.max(staged_bytes);
+                let seq = pipe.next_id as usize;
+                self.admit(&mut pipe, req, bytes, seq, 0, 0);
             }
 
             // Finalize completed requests from the front, in submission
             // order, freeing admission slots and budget.
-            while inflight.front().is_some_and(|s| s.slot.complete()) {
-                let staged = inflight.pop_front().expect("front checked above");
-                staged_bytes -= staged.bytes;
-                resps.push(self.finalize(staged.slot));
+            while let Some(fin) = self.pop_ready(&mut pipe) {
+                resps.push(fin.resp);
             }
             // Refill freed slots before blocking, so the pool stays busy —
             // but only if the next request actually fits the byte budget
             // (otherwise we must block for completions to free budget).
-            if inflight.len() < window {
-                if let Some(next) = queue.peek() {
-                    let bytes = self.cfg.staged_bytes(next);
-                    if admits_bytes(budget, inflight.is_empty(), staged_bytes, bytes) {
-                        continue;
-                    }
+            if let Some(next) = queue.peek() {
+                if pipe.has_room(self.cfg.staged_bytes(next)) {
+                    continue;
                 }
             }
-            if inflight.is_empty() {
+            if pipe.idle() {
                 continue; // batch drained (loop condition exits)
             }
 
-            // Ship every partially filled coalescer group before blocking:
-            // a tile waited on below must already be on the pool.
-            for job in batcher.drain() {
-                self.pool.submit(job);
-            }
-
             // Block for one pooled result and record it.
-            match self.recv_done() {
-                Done::GemmTile { job_id, tile_idx, out, stats: st } => {
-                    match slot_mut(&mut inflight, job_id) {
-                        Slot::Dgemm { tiles, got, .. } => {
-                            debug_assert!(tiles[tile_idx].is_none(), "duplicate tile");
-                            tiles[tile_idx] = Some((out, st));
-                            *got += 1;
-                        }
-                        Slot::Meas { .. } => unreachable!("tile for a non-DGEMM slot"),
+            self.drain_blocking(&mut pipe);
+        }
+        self.set_last_batch_stats(pipe.stats);
+        resps
+    }
+
+    /// Admit one request into the pipeline: stage its kernels, pin its
+    /// bytes, and append its completion slot in submission order.
+    pub(crate) fn admit(
+        &mut self,
+        pipe: &mut Pipeline,
+        req: Request,
+        bytes: u64,
+        seq: usize,
+        arrival_ns: u64,
+        admitted_ns: u64,
+    ) {
+        let id = pipe.next_id;
+        pipe.next_id += 1;
+        let slot = self.stage(
+            id,
+            req.materialize(),
+            &mut pipe.waiting,
+            &mut pipe.submitted,
+            &mut pipe.batcher,
+            &mut pipe.stats,
+        );
+        pipe.inflight.push_back(Staged { id, bytes, seq, arrival_ns, admitted_ns, slot });
+        pipe.staged_bytes += bytes;
+        pipe.stats.peak_staged = pipe.stats.peak_staged.max(pipe.inflight.len());
+        pipe.stats.peak_staged_bytes = pipe.stats.peak_staged_bytes.max(pipe.staged_bytes);
+    }
+
+    /// Finalize the oldest admitted request if it has completed, freeing
+    /// its admission slot and byte budget. Completion is strictly in
+    /// submission order (the order responses must be returned in), so a
+    /// finished request behind an unfinished one stays queued.
+    pub(crate) fn pop_ready(&mut self, pipe: &mut Pipeline) -> Option<Finished> {
+        if !pipe.inflight.front().is_some_and(|s| s.slot.complete()) {
+            return None;
+        }
+        let staged = pipe.inflight.pop_front().expect("front checked above");
+        pipe.staged_bytes -= staged.bytes;
+        Some(Finished {
+            seq: staged.seq,
+            arrival_ns: staged.arrival_ns,
+            admitted_ns: staged.admitted_ns,
+            resp: self.finalize(staged.slot),
+        })
+    }
+
+    /// Ship every partially filled coalescer group: a tile about to be
+    /// waited on must already be on the pool.
+    fn flush_staged(&mut self, pipe: &mut Pipeline) {
+        for job in pipe.batcher.drain() {
+            self.pool.submit(job);
+        }
+    }
+
+    /// Record one pooled result into its in-flight slot.
+    fn absorb(&mut self, pipe: &mut Pipeline, done: Done) {
+        match done {
+            Done::GemmTile { job_id, tile_idx, out, stats } => {
+                match slot_mut(&mut pipe.inflight, job_id) {
+                    Slot::Dgemm { tiles, got, .. } => {
+                        debug_assert!(tiles[tile_idx].is_none(), "duplicate tile");
+                        tiles[tile_idx] = Some((out, stats));
+                        *got += 1;
                     }
+                    Slot::Meas { .. } => unreachable!("tile for a non-DGEMM slot"),
                 }
-                Done::Measured { job_id, meas } => {
-                    let key = submitted.remove(&job_id).expect("measurement without a key");
-                    self.cache().store_measurement(key, meas.clone());
-                    for id in waiting.remove(&key).unwrap_or_default() {
-                        match slot_mut(&mut inflight, id) {
-                            Slot::Meas { meas: m, .. } => *m = Some(Box::new(meas.clone())),
-                            Slot::Dgemm { .. } => unreachable!("measurement for a DGEMM slot"),
-                        }
+            }
+            Done::Measured { job_id, meas } => {
+                let key = pipe.submitted.remove(&job_id).expect("measurement without a key");
+                self.cache().store_measurement(key, meas.clone());
+                for id in pipe.waiting.remove(&key).unwrap_or_default() {
+                    match slot_mut(&mut pipe.inflight, id) {
+                        Slot::Meas { meas: m, .. } => *m = Some(Box::new(meas.clone())),
+                        Slot::Dgemm { .. } => unreachable!("measurement for a DGEMM slot"),
                     }
                 }
             }
         }
-        self.set_last_batch_stats(stats);
-        resps
+    }
+
+    /// Flush the coalescer, then block for one pooled result and record
+    /// it — the closed-loop wait step.
+    pub(crate) fn drain_blocking(&mut self, pipe: &mut Pipeline) {
+        self.flush_staged(pipe);
+        let done = self.recv_done();
+        self.absorb(pipe, done);
+    }
+
+    /// Flush the coalescer, then absorb one pooled result if one is ready.
+    /// Returns whether progress was made — the open-loop wait step, which
+    /// must keep watching the arrival clock instead of parking.
+    pub(crate) fn try_drain(&mut self, pipe: &mut Pipeline) -> bool {
+        self.flush_staged(pipe);
+        match self.try_recv_done() {
+            Some(done) => {
+                self.absorb(pipe, done);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Stage one materialized request: a DGEMM enqueues its tile kernels; a

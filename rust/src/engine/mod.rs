@@ -41,9 +41,13 @@
 //! under the hood, so its behavior (dispatch order, stats, values, cycles,
 //! energy) is unchanged — pinned by the serving tests.
 
+pub mod latency;
 pub(crate) mod queue;
+pub mod traffic;
 
+pub use latency::{Histogram, LatencySnapshot};
 pub use queue::SchedPolicy;
+pub use traffic::{Arrival, ArrivalKind, TrafficConfig};
 
 use crate::coordinator::cache::ProgramCache;
 use crate::coordinator::pool::PoolCore;
@@ -52,6 +56,18 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// Engine configuration.
+///
+/// # Examples
+///
+/// Configs are plain data — building one spawns nothing:
+///
+/// ```
+/// use redefine_blas::engine::{EngineConfig, SchedPolicy};
+///
+/// let cfg = EngineConfig { workers: 2, sched: SchedPolicy::Slots, ..EngineConfig::default() };
+/// assert_eq!(cfg.workers, 2);
+/// assert_eq!(EngineConfig::default().sched, SchedPolicy::Cycles);
+/// ```
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     /// Number of persistent PE workers in the shared pool.
@@ -133,6 +149,18 @@ impl Engine {
     /// [`Coordinator`] exposes the full per-tenant API (serve loops,
     /// BLAS entry points, stats) but executes on the shared pool and
     /// shares the engine's program cache.
+    ///
+    /// # Examples
+    ///
+    /// ```no_run
+    /// use redefine_blas::coordinator::CoordinatorConfig;
+    /// use redefine_blas::engine::{Engine, EngineConfig};
+    ///
+    /// let engine = Engine::new(EngineConfig::default());
+    /// let mut tenant = engine.tenant(CoordinatorConfig::default());
+    /// let (dot, _meas, _src) = tenant.ddot(&[1.0, 2.0], &[3.0, 4.0]);
+    /// assert_eq!(dot, 11.0);
+    /// ```
     pub fn tenant(&self, cfg: CoordinatorConfig) -> Coordinator {
         self.tenant_weighted(cfg, 1)
     }
@@ -183,6 +211,19 @@ impl Engine {
     /// of continuously backlogged lanes track the weight ratio (the
     /// proportional-service property pinned by the queue tests and
     /// asserted end to end by the `hot_paths` bench).
+    ///
+    /// # Examples
+    ///
+    /// ```no_run
+    /// use redefine_blas::coordinator::CoordinatorConfig;
+    /// use redefine_blas::engine::{Engine, EngineConfig};
+    ///
+    /// let engine = Engine::new(EngineConfig::default());
+    /// let _a = engine.tenant(CoordinatorConfig::default());
+    /// let _b = engine.tenant_weighted(CoordinatorConfig::default(), 3);
+    /// let lanes = engine.lane_service(); // attach order: [a, b]
+    /// assert_eq!((lanes[0].weight, lanes[1].weight), (1, 3));
+    /// ```
     pub fn lane_service(&self) -> Vec<LaneService> {
         self.shared
             .pool

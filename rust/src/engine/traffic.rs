@@ -1,0 +1,282 @@
+//! Open-loop workload generator — seeded, deterministic arrival processes
+//! for the always-on serving mode.
+//!
+//! Closed-loop driving (`serve_batch` over a fixed request list) measures
+//! throughput but hides queueing: the next request is only offered once the
+//! previous one finishes, so the engine is never overloaded and tail latency
+//! is meaningless. Open-loop driving offers requests on a schedule that does
+//! **not** react to completions — exactly how "millions of users" hit a BLAS
+//! service — and is what makes the DRR scheduler, cache quotas and admission
+//! budgets measurable under load.
+//!
+//! Everything here is deterministic given [`TrafficConfig::seed`]: the same
+//! config yields bit-identical arrival times and request payloads, which is
+//! what lets CI smoke runs and the overload tests pin their expectations.
+//!
+//! # Examples
+//!
+//! ```
+//! use redefine_blas::engine::traffic::{self, TrafficConfig};
+//!
+//! let cfg = TrafficConfig {
+//!     rate_rps: 5_000.0,
+//!     duration_ns: 10_000_000, // 10 ms => ~50 arrivals
+//!     seed: 7,
+//!     ..TrafficConfig::default()
+//! };
+//! let a = traffic::generate(&cfg);
+//! let b = traffic::generate(&cfg);
+//! assert_eq!(a.len(), b.len());
+//! assert!(a.iter().zip(&b).all(|(x, y)| x.at_ns == y.at_ns));
+//! ```
+
+use crate::coordinator::request::Request;
+use crate::util::{Mat, XorShift64};
+
+/// Shape of the arrival process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArrivalKind {
+    /// Poisson process: independent exponential inter-arrival gaps with mean
+    /// `1 / rate_rps`.
+    Poisson,
+    /// Bursty process: burst epochs arrive as a Poisson process at
+    /// `rate_rps / size`, and each epoch delivers `size` requests with the
+    /// same timestamp — the mean request rate stays `rate_rps`, but the
+    /// instantaneous load hammers the admission window.
+    Burst {
+        /// Requests per burst epoch (clamped to >= 1).
+        size: usize,
+    },
+}
+
+/// Parameters of one tenant's open-loop workload.
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    /// Arrival process shape.
+    pub kind: ArrivalKind,
+    /// Mean offered load in requests per second.
+    pub rate_rps: f64,
+    /// Length of the arrival window in nanoseconds; arrivals are generated
+    /// in `[start_ns, start_ns + duration_ns)`.
+    pub duration_ns: u64,
+    /// Virtual start of this tenant's window — lets tenants churn (join the
+    /// service mid-run) instead of all arriving at t = 0.
+    pub start_ns: u64,
+    /// PRNG seed; same seed ⇒ identical arrival sequence.
+    pub seed: u64,
+    /// Upper bound for drawn problem sizes (same convention as
+    /// `random_workload`: sizes are `8 + below(max_n - 8)`).
+    pub max_n: usize,
+    /// Probability in [0, 1] that a request uses the hot shape `hot_n`
+    /// instead of a fresh random size — models the skewed shape popularity
+    /// the program cache exists for.
+    pub hot_fraction: f64,
+    /// The hot problem size.
+    pub hot_n: usize,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        Self {
+            kind: ArrivalKind::Poisson,
+            rate_rps: 500.0,
+            duration_ns: 100_000_000, // 100 ms
+            start_ns: 0,
+            seed: 42,
+            max_n: 32,
+            hot_fraction: 0.5,
+            hot_n: 16,
+        }
+    }
+}
+
+impl TrafficConfig {
+    /// Derive tenant `i` of `tenants` from this base config: a distinct seed
+    /// (so payloads and gaps differ) and a staggered `start_ns` (tenant 0
+    /// starts at the base offset, the last tenant roughly half a window
+    /// later) — cheap tenant churn without a separate lifecycle model.
+    pub fn for_tenant(&self, i: usize, tenants: usize) -> TrafficConfig {
+        let stagger = self.duration_ns / (2 * tenants.max(1) as u64);
+        TrafficConfig {
+            seed: self.seed.wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(i as u64 + 1)),
+            start_ns: self.start_ns + stagger * i as u64,
+            ..self.clone()
+        }
+    }
+}
+
+/// One request with its virtual arrival timestamp (nanoseconds from the
+/// start of the serving run).
+#[derive(Debug)]
+pub struct Arrival {
+    /// Dense arrival index within the tenant's sequence (0-based); outcomes
+    /// are reported back in `seq` order.
+    pub seq: usize,
+    /// Virtual arrival time in nanoseconds.
+    pub at_ns: u64,
+    /// The BLAS request offered at that instant.
+    pub req: Request,
+}
+
+/// Arrival timestamps only — the renewal process without request payloads.
+/// Split out so property tests can check rate/determinism over tens of
+/// thousands of arrivals without materializing operand data.
+pub fn arrival_times(cfg: &TrafficConfig) -> Vec<u64> {
+    assert!(cfg.rate_rps > 0.0, "rate_rps must be positive");
+    let mut rng = XorShift64::new(cfg.seed);
+    let mut times = Vec::new();
+    let end = cfg.start_ns.saturating_add(cfg.duration_ns);
+    match cfg.kind {
+        ArrivalKind::Poisson => {
+            let mean_gap_ns = 1e9 / cfg.rate_rps;
+            let mut t = cfg.start_ns as f64;
+            loop {
+                t += exp_gap(&mut rng, mean_gap_ns);
+                if t >= end as f64 {
+                    break;
+                }
+                times.push(t as u64);
+            }
+        }
+        ArrivalKind::Burst { size } => {
+            let size = size.max(1);
+            // Burst epochs at rate / size keep the mean request rate.
+            let mean_gap_ns = 1e9 * size as f64 / cfg.rate_rps;
+            let mut t = cfg.start_ns as f64;
+            loop {
+                t += exp_gap(&mut rng, mean_gap_ns);
+                if t >= end as f64 {
+                    break;
+                }
+                for _ in 0..size {
+                    times.push(t as u64);
+                }
+            }
+        }
+    }
+    times
+}
+
+/// Exponential gap with the given mean; `u` in [0, 1) keeps `1 - u` in
+/// (0, 1], so the log is finite and the gap non-negative.
+fn exp_gap(rng: &mut XorShift64, mean_ns: f64) -> f64 {
+    -(1.0 - rng.next_f64()).ln() * mean_ns
+}
+
+/// Generate the full arrival sequence: timestamps from [`arrival_times`]
+/// plus per-request payloads drawn with the same five-way op mix as
+/// `random_workload`, skewed towards the hot shape by
+/// [`TrafficConfig::hot_fraction`]. Payload draws use an independent PRNG
+/// stream, so `generate(cfg)` agrees with `arrival_times(cfg)` timestamp
+/// for timestamp.
+pub fn generate(cfg: &TrafficConfig) -> Vec<Arrival> {
+    let times = arrival_times(cfg);
+    let mut rng = XorShift64::new(cfg.seed ^ 0x5DEECE66D);
+    let hot_n = cfg.hot_n.max(4);
+    times
+        .into_iter()
+        .enumerate()
+        .map(|(seq, at_ns)| {
+            let n = if rng.next_f64() < cfg.hot_fraction {
+                hot_n
+            } else {
+                8 + rng.below(cfg.max_n.saturating_sub(8).max(1))
+            };
+            let op_seed = cfg.seed.wrapping_add(seq as u64);
+            let req = match rng.below(5) {
+                0 => Request::RandomDgemm { n, seed: op_seed },
+                1 => {
+                    let a = Mat::random(n, n, op_seed);
+                    Request::Dgemv { a, x: rng.vec(n), y: rng.vec(n) }
+                }
+                2 => Request::Ddot { x: rng.vec(n), y: rng.vec(n) },
+                3 => {
+                    let alpha = [0.5, 1.0, 1.5][rng.below(3)];
+                    Request::Daxpy { alpha, x: rng.vec(n), y: rng.vec(n) }
+                }
+                _ => Request::Dnrm2 { x: rng.vec(n) },
+            };
+            Arrival { seq, at_ns, req }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_are_sorted_and_inside_window() {
+        let cfg = TrafficConfig {
+            rate_rps: 10_000.0,
+            duration_ns: 50_000_000,
+            start_ns: 5_000_000,
+            seed: 11,
+            ..TrafficConfig::default()
+        };
+        let times = arrival_times(&cfg);
+        assert!(!times.is_empty());
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+        assert!(times.iter().all(|&t| t >= cfg.start_ns && t < cfg.start_ns + cfg.duration_ns));
+    }
+
+    #[test]
+    fn burst_emits_whole_groups() {
+        let cfg = TrafficConfig {
+            kind: ArrivalKind::Burst { size: 4 },
+            rate_rps: 8_000.0,
+            duration_ns: 50_000_000,
+            seed: 3,
+            ..TrafficConfig::default()
+        };
+        let times = arrival_times(&cfg);
+        assert!(!times.is_empty());
+        assert_eq!(times.len() % 4, 0);
+        for group in times.chunks(4) {
+            assert!(group.iter().all(|&t| t == group[0]), "burst members share a timestamp");
+        }
+    }
+
+    #[test]
+    fn generate_matches_arrival_times() {
+        let cfg = TrafficConfig {
+            rate_rps: 5_000.0,
+            duration_ns: 20_000_000,
+            seed: 9,
+            ..TrafficConfig::default()
+        };
+        let times = arrival_times(&cfg);
+        let arrivals = generate(&cfg);
+        assert_eq!(times.len(), arrivals.len());
+        for (i, (t, a)) in times.iter().zip(&arrivals).enumerate() {
+            assert_eq!(a.seq, i);
+            assert_eq!(a.at_ns, *t);
+        }
+    }
+
+    #[test]
+    fn hot_fraction_one_pins_every_shape() {
+        let cfg = TrafficConfig {
+            rate_rps: 5_000.0,
+            duration_ns: 20_000_000,
+            seed: 21,
+            hot_fraction: 1.0,
+            hot_n: 12,
+            ..TrafficConfig::default()
+        };
+        let arrivals = generate(&cfg);
+        assert!(!arrivals.is_empty());
+        assert!(arrivals.iter().all(|a| a.req.n() == 12));
+    }
+
+    #[test]
+    fn tenant_derivation_staggers_and_reseeds() {
+        let base = TrafficConfig { seed: 100, duration_ns: 80_000_000, ..TrafficConfig::default() };
+        let t0 = base.for_tenant(0, 4);
+        let t3 = base.for_tenant(3, 4);
+        assert_eq!(t0.start_ns, base.start_ns);
+        assert_eq!(t3.start_ns, base.start_ns + 3 * (base.duration_ns / 8));
+        assert_ne!(t0.seed, t3.seed);
+        assert_ne!(arrival_times(&t0), arrival_times(&t3));
+    }
+}

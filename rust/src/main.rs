@@ -12,6 +12,8 @@
 //!                [--cache-quota N] [--sched slots|cycles]
 //!                [--exec replay|combined] [--residual] [--replay-batch N]
 //!                [--tenants N [--weights w1,w2,...]]
+//!                [--arrivals poisson|burst --rate R --duration-ms D]
+//!                [--queue-depth N] [--shed-after-bytes BYTES] [--slo-ms MS]
 //! redefine sweep                       # Tables 4-9 summary
 //! redefine artifacts [--artifacts DIR] # list loadable artifacts
 //! ```
@@ -39,22 +41,41 @@
 //! PR 4 slot-WRR baseline. `--cache-quota N` bounds each tenant to N
 //! resident kernels in the shared cache, so a shape-churning tenant
 //! evicts its own warm kernels, never a sibling's.
+//!
+//! `serve --arrivals poisson|burst` switches to **open-loop** serving:
+//! instead of replaying a fixed list as fast as completions allow, a
+//! seeded arrival process offers `--rate R` requests/s for
+//! `--duration-ms D` (`--requests` is ignored), and the report is
+//! per-tenant p50/p95/p99 queue/service/total latency plus shed counts.
+//! `--queue-depth N` / `--shed-after-bytes B` bound the pending queue,
+//! shedding overflow arrivals with explicit rejections (never silent
+//! drops); `--slo-ms MS` counts served requests whose total latency blew
+//! the SLO. Composes with `--tenants N` (staggered per-tenant start
+//! times — tenant churn) and with every closed-loop serving flag. See
+//! `docs/CLI.md` for the full flag reference.
 
-use redefine_blas::coordinator::{request::random_workload, Coordinator, CoordinatorConfig};
+use redefine_blas::coordinator::{
+    request::random_workload, Coordinator, CoordinatorConfig, OpenLoopOptions, OpenLoopReport,
+};
+use redefine_blas::engine::traffic::{self, ArrivalKind, TrafficConfig};
 use redefine_blas::engine::{Engine, EngineConfig, SchedPolicy};
 use redefine_blas::metrics::{gemm_sweep, PAPER_SIZES};
 use redefine_blas::pe::{AeLevel, ExecMode, PeConfig};
 use redefine_blas::util::{Mat, XorShift64};
 use std::process::exit;
 
+/// The usage string; `docs/CLI.md` documents every flag listed here, and a
+/// unit test below asserts the two cannot drift apart.
+const USAGE: &str = "usage: redefine <gemm|gemv|ddot|serve|sweep|artifacts> [--n N] [--b B] \
+     [--ae 0..5] [--requests K] [--max-n N] [--artifacts DIR] [--seq] \
+     [--window W] [--window-bytes BYTES] [--cache-cap N] [--cache-quota N] \
+     [--sched slots|cycles] [--exec replay|combined] [--residual] \
+     [--replay-batch N] [--tenants N] [--weights w1,w2,...] \
+     [--arrivals poisson|burst] [--rate R] [--duration-ms D] \
+     [--queue-depth N] [--shed-after-bytes BYTES] [--slo-ms MS]";
+
 fn usage() -> ! {
-    eprintln!(
-        "usage: redefine <gemm|gemv|ddot|serve|sweep|artifacts> [--n N] [--b B] \
-         [--ae 0..5] [--requests K] [--max-n N] [--artifacts DIR] [--seq] \
-         [--window W] [--window-bytes BYTES] [--cache-cap N] [--cache-quota N] \
-         [--sched slots|cycles] [--exec replay|combined] [--residual] \
-         [--replay-batch N] [--tenants N] [--weights w1,w2,...]"
-    );
+    eprintln!("{USAGE}");
     exit(2)
 }
 
@@ -78,6 +99,12 @@ struct Args {
     replay_batch: Option<usize>,
     tenants: usize,
     weights: Option<String>,
+    arrivals: Option<ArrivalKind>,
+    rate: f64,
+    duration_ms: u64,
+    queue_depth: Option<usize>,
+    shed_after_bytes: Option<u64>,
+    slo_ms: Option<u64>,
 }
 
 fn parse_args() -> Args {
@@ -102,6 +129,12 @@ fn parse_args() -> Args {
         replay_batch: None,
         tenants: 1,
         weights: None,
+        arrivals: None,
+        rate: 400.0,
+        duration_ms: 500,
+        queue_depth: None,
+        shed_after_bytes: None,
+        slo_ms: None,
     };
     while let Some(flag) = it.next() {
         let mut val = || it.next().unwrap_or_else(|| usage());
@@ -143,6 +176,28 @@ fn parse_args() -> Args {
                 a.tenants = val().parse().ok().filter(|t| *t >= 1).unwrap_or_else(|| usage())
             }
             "--weights" => a.weights = Some(val()),
+            "--arrivals" => {
+                a.arrivals = Some(match val().as_str() {
+                    "poisson" => ArrivalKind::Poisson,
+                    "burst" => ArrivalKind::Burst { size: 8 },
+                    _ => usage(),
+                })
+            }
+            "--rate" => {
+                a.rate = val().parse().ok().filter(|r| *r > 0.0).unwrap_or_else(|| usage())
+            }
+            "--duration-ms" => {
+                a.duration_ms = val().parse().ok().filter(|d| *d >= 1).unwrap_or_else(|| usage())
+            }
+            "--queue-depth" => {
+                a.queue_depth =
+                    Some(val().parse().ok().filter(|q| *q >= 1).unwrap_or_else(|| usage()))
+            }
+            "--shed-after-bytes" => {
+                a.shed_after_bytes =
+                    Some(val().parse().ok().filter(|b| *b >= 1).unwrap_or_else(|| usage()))
+            }
+            "--slo-ms" => a.slo_ms = Some(val().parse().unwrap_or_else(|_| usage())),
             "--exec" => {
                 a.exec = match val().as_str() {
                     "replay" => ExecMode::Replay,
@@ -175,6 +230,8 @@ fn main() {
         exec: args.exec,
         residual: args.residual,
         replay_batch: args.replay_batch,
+        queue_depth: args.queue_depth,
+        shed_after_bytes: args.shed_after_bytes,
     };
 
     match args.cmd.as_str() {
@@ -235,6 +292,7 @@ fn main() {
                 meas.pct_peak_fpc()
             );
         }
+        "serve" if args.arrivals.is_some() => serve_open_loop_cmd(&args, &cfg),
         "serve" if args.tenants > 1 => serve_multi_tenant(&args, &cfg),
         "serve" => {
             let mut co = Coordinator::new(cfg);
@@ -313,11 +371,9 @@ fn main() {
     }
 }
 
-/// Multi-tenant serve: one shared engine (worker pool + program cache)
-/// hosts `--tenants` coordinators at cycling AE0–AE5 enhancement levels,
-/// each replaying its own mixed workload concurrently under the weighted
-/// fair scheduler. Reports per-tenant slices and the shared aggregates.
-fn serve_multi_tenant(args: &Args, base: &CoordinatorConfig) {
+/// Parse `--weights w1,w2,...` (default: all 1s), enforcing one weight >= 1
+/// per tenant.
+fn parse_weights(args: &Args) -> Vec<u64> {
     let weights: Vec<u64> = match &args.weights {
         Some(spec) => spec
             .split(',')
@@ -329,6 +385,123 @@ fn serve_multi_tenant(args: &Args, base: &CoordinatorConfig) {
         eprintln!("--weights needs exactly {} comma-separated values >= 1", args.tenants);
         exit(2);
     }
+    weights
+}
+
+/// Milliseconds from nanoseconds, for report lines.
+fn ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+/// Per-tenant open-loop report block: offered/served/shed accounting plus
+/// the queue/service/total latency percentiles.
+fn print_open_loop(label: &str, r: &OpenLoopReport) {
+    let s = &r.stats;
+    println!(
+        "  {label}: offered {} -> served {} / shed {} (peak pending {} reqs / {} B); \
+         slo violations {}",
+        s.offered, s.served, s.shed, s.peak_pending, s.peak_pending_bytes, s.slo_violations
+    );
+    for (name, l) in [("queue", &s.queue), ("service", &s.service), ("total", &s.total)] {
+        println!(
+            "    {name:<8} p50/p95/p99/max = {:.3} / {:.3} / {:.3} / {:.3} ms",
+            ms(l.p50),
+            ms(l.p95),
+            ms(l.p99),
+            ms(l.max)
+        );
+    }
+}
+
+/// Open-loop serve: a seeded arrival process (`--arrivals poisson|burst`)
+/// offers `--rate` requests/s for `--duration-ms`, independent of
+/// completions; the engine admits under the window/byte budget, sheds past
+/// the pending-queue caps, and reports per-tenant latency percentiles.
+/// With `--tenants N`, tenants run concurrently on one shared engine with
+/// staggered start times (tenant churn).
+fn serve_open_loop_cmd(args: &Args, base: &CoordinatorConfig) {
+    let kind = args.arrivals.expect("open-loop dispatch requires --arrivals");
+    let base_traffic = TrafficConfig {
+        kind,
+        rate_rps: args.rate,
+        duration_ns: args.duration_ms.saturating_mul(1_000_000),
+        start_ns: 0,
+        seed: 42,
+        max_n: args.max_n,
+        ..TrafficConfig::default()
+    };
+    let opts = OpenLoopOptions { slo_total_ns: args.slo_ms.map(|ms| ms.saturating_mul(1_000_000)) };
+    println!(
+        "open-loop serve: {kind:?} arrivals, {} req/s for {} ms, seed {} [{:?} scheduler]",
+        args.rate, args.duration_ms, base_traffic.seed, args.sched
+    );
+
+    if args.tenants == 1 {
+        let mut co = Coordinator::new(base.clone());
+        let t0 = std::time::Instant::now();
+        let report = co.serve_open_loop(traffic::generate(&base_traffic), &opts);
+        let wall = t0.elapsed();
+        print_open_loop("tenant 0", &report);
+        println!("drained in {:.1} ms wall", wall.as_secs_f64() * 1e3);
+        return;
+    }
+
+    let weights = parse_weights(args);
+    let engine = Engine::new(EngineConfig {
+        workers: args.b * args.b,
+        cache_capacity: args.cache_cap,
+        cache_quota: args.cache_quota,
+        sched: args.sched,
+    });
+    let tenants: Vec<(usize, AeLevel, u64, Coordinator)> = weights
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| {
+            let ae = AeLevel::ALL[i % AeLevel::ALL.len()];
+            let cfg = CoordinatorConfig { ae, ..base.clone() };
+            (i, ae, w, engine.tenant_weighted(cfg, w))
+        })
+        .collect();
+    let total = args.tenants;
+    let t0 = std::time::Instant::now();
+    let mut reports: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = tenants
+            .into_iter()
+            .map(|(i, ae, w, mut co)| {
+                let tcfg = base_traffic.for_tenant(i, total);
+                s.spawn(move || (i, ae, w, co.serve_open_loop(traffic::generate(&tcfg), &opts)))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("tenant thread panicked")).collect()
+    });
+    let wall = t0.elapsed();
+    reports.sort_by_key(|r| r.0);
+    println!(
+        "{} tenants drained in {:.1} ms wall on {} shared workers",
+        reports.len(),
+        wall.as_secs_f64() * 1e3,
+        engine.worker_count()
+    );
+    let service = engine.lane_service();
+    for (i, ae, w, report) in &reports {
+        print_open_loop(
+            &format!("tenant {i} [{ae}, weight {w}, {} est. cycles]", service[*i].served_cost),
+            report,
+        );
+    }
+    let cs = engine.cache_stats();
+    println!(
+        "shared cache: {} kernels resident, {} hits / {} misses / {} evictions",
+        cs.entries, cs.hits, cs.misses, cs.evictions
+    );
+}
+
+/// Multi-tenant serve: one shared engine (worker pool + program cache)
+/// hosts `--tenants` coordinators at cycling AE0–AE5 enhancement levels,
+/// each replaying its own mixed workload concurrently under the weighted
+/// fair scheduler. Reports per-tenant slices and the shared aggregates.
+fn serve_multi_tenant(args: &Args, base: &CoordinatorConfig) {
+    let weights = parse_weights(args);
     let engine = Engine::new(EngineConfig {
         workers: args.b * args.b,
         cache_capacity: args.cache_cap,
@@ -397,4 +570,52 @@ fn serve_multi_tenant(args: &Args, base: &CoordinatorConfig) {
          ({} value-replayed / {} combined timing passes, {} coalesced replay batches)",
         jc.gemm_tiles, jc.gemv, jc.level1, jc.replays, jc.combined_runs, jc.batched_replays
     );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::USAGE;
+
+    /// Every flag documented in `docs/CLI.md` must appear in the usage
+    /// string (and the parser); this is the doc's anti-rot tripwire. When
+    /// adding a flag, extend all three of: `parse_args`, `USAGE`, and the
+    /// CLI.md table.
+    #[test]
+    fn usage_mentions_every_documented_flag() {
+        let documented = [
+            "--n",
+            "--b",
+            "--ae",
+            "--requests",
+            "--max-n",
+            "--artifacts",
+            "--seq",
+            "--window",
+            "--window-bytes",
+            "--cache-cap",
+            "--cache-quota",
+            "--sched",
+            "--exec",
+            "--residual",
+            "--replay-batch",
+            "--tenants",
+            "--weights",
+            "--arrivals",
+            "--rate",
+            "--duration-ms",
+            "--queue-depth",
+            "--shed-after-bytes",
+            "--slo-ms",
+        ];
+        for flag in documented {
+            assert!(USAGE.contains(flag), "usage string is missing `{flag}`");
+        }
+    }
+
+    #[test]
+    fn usage_mentions_every_subcommand() {
+        for cmd in ["gemm", "gemv", "ddot", "serve", "sweep", "artifacts"] {
+            assert!(USAGE.contains(cmd), "usage string is missing the `{cmd}` subcommand");
+        }
+    }
 }

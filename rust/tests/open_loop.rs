@@ -1,0 +1,293 @@
+//! Open-loop serving tests: traffic-generator determinism and rate
+//! properties, closed-loop equivalence of the admission/completion state
+//! machine (zero-time arrivals ≡ `serve_batch`), deterministic and
+//! sustained overload shedding (explicit rejections, never silent drops),
+//! and SLO accounting.
+
+use redefine_blas::coordinator::{
+    request::{random_workload, Request},
+    Coordinator, CoordinatorConfig, OpenLoopOptions, OpenLoopOutcome, Response, ShedReason,
+};
+use redefine_blas::engine::traffic::{self, Arrival, ArrivalKind, TrafficConfig};
+use redefine_blas::pe::AeLevel;
+
+fn cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 2,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+        ..CoordinatorConfig::default()
+    }
+}
+
+/// Field-by-field response equality (same as the serving tests).
+fn assert_same_responses(lhs: &[&Response], rhs: &[Response]) {
+    assert_eq!(lhs.len(), rhs.len());
+    for (i, (a, b)) in lhs.iter().zip(rhs.iter()).enumerate() {
+        assert_eq!(a.op, b.op, "request {i}");
+        assert_eq!(a.n, b.n, "request {i}");
+        assert_eq!(a.source, b.source, "request {i}");
+        assert_eq!(a.cycles, b.cycles, "request {i}: simulated cycles must be identical");
+        assert_eq!(a.energy_j, b.energy_j, "request {i}");
+        assert_eq!(a.matrix, b.matrix, "request {i}: matrix payload");
+        assert_eq!(a.vector, b.vector, "request {i}: vector payload");
+        assert_eq!(a.scalar, b.scalar, "request {i}: scalar payload");
+    }
+}
+
+/// `count` same-shape DGEMMs all due at t = 0 — the deterministic
+/// simultaneous burst the shedding tests are built on: the driver resolves
+/// every due arrival before admitting anything, so shed counts cannot
+/// depend on host timing.
+fn burst_at_zero(count: usize, n: usize) -> Vec<Arrival> {
+    let mut arrivals = Vec::new();
+    for i in 0..count {
+        let req = Request::RandomDgemm { n, seed: i as u64 };
+        arrivals.push(Arrival { seq: i, at_ns: 0, req });
+    }
+    arrivals
+}
+
+// ---------------------------------------------------------------------
+// Traffic generator properties.
+// ---------------------------------------------------------------------
+
+#[test]
+fn same_seed_reproduces_the_exact_arrival_sequence() {
+    let cfg = TrafficConfig {
+        rate_rps: 5_000.0,
+        duration_ns: 20_000_000, // ~100 arrivals
+        seed: 7,
+        max_n: 24,
+        ..TrafficConfig::default()
+    };
+    let a = traffic::generate(&cfg);
+    let b = traffic::generate(&cfg);
+    assert!(!a.is_empty());
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.seq, y.seq);
+        assert_eq!(x.at_ns, y.at_ns);
+        // Request has no PartialEq (it carries matrices); its Debug form
+        // prints every operand value, which pins payload determinism.
+        assert_eq!(format!("{:?}", x.req), format!("{:?}", y.req));
+    }
+    let other = traffic::generate(&TrafficConfig { seed: 8, ..cfg });
+    let same_times =
+        a.len() == other.len() && a.iter().zip(&other).all(|(x, y)| x.at_ns == y.at_ns);
+    assert!(!same_times, "a different seed must produce a different schedule");
+}
+
+#[test]
+fn poisson_mean_inter_arrival_tracks_the_configured_rate() {
+    let rate = 20_000.0;
+    let cfg = TrafficConfig {
+        rate_rps: rate,
+        duration_ns: 2_000_000_000, // 2 s => ~40k arrivals
+        seed: 99,
+        ..TrafficConfig::default()
+    };
+    let times = traffic::arrival_times(&cfg);
+    let expected = rate * cfg.duration_ns as f64 / 1e9;
+    assert!(
+        (times.len() as f64 - expected).abs() < 0.05 * expected,
+        "arrival count {} should be within 5% of {expected}",
+        times.len()
+    );
+    // Empirical mean gap over the observed span vs 1/rate.
+    let span = (times[times.len() - 1] - times[0]) as f64;
+    let mean_gap = span / (times.len() - 1) as f64;
+    let want = 1e9 / rate;
+    assert!(
+        (mean_gap - want).abs() < 0.05 * want,
+        "mean inter-arrival {mean_gap} ns should be within 5% of {want} ns"
+    );
+}
+
+#[test]
+fn burst_process_keeps_the_mean_rate() {
+    let rate = 16_000.0;
+    let cfg = TrafficConfig {
+        kind: ArrivalKind::Burst { size: 8 },
+        rate_rps: rate,
+        duration_ns: 2_000_000_000,
+        seed: 17,
+        ..TrafficConfig::default()
+    };
+    let times = traffic::arrival_times(&cfg);
+    assert_eq!(times.len() % 8, 0, "whole bursts only");
+    for group in times.chunks(8) {
+        assert!(group.iter().all(|&t| t == group[0]), "burst members share one timestamp");
+    }
+    let expected = rate * cfg.duration_ns as f64 / 1e9;
+    // Burst epochs are Poisson at rate/size, so the request count is
+    // noisier than the plain process — 10% is ~7 sigma here.
+    assert!(
+        (times.len() as f64 - expected).abs() < 0.10 * expected,
+        "burst arrival count {} should be within 10% of {expected}",
+        times.len()
+    );
+}
+
+// ---------------------------------------------------------------------
+// Closed-loop equivalence: the refactored state machine, driven by
+// zero-time arrivals with shedding off, must reproduce serve_batch
+// exactly — values, cycles, energy, and cache accounting.
+// ---------------------------------------------------------------------
+
+#[test]
+fn zero_time_arrivals_match_serve_batch_exactly() {
+    let reqs = random_workload(10, 28, 5);
+    let window = CoordinatorConfig { admission_window: Some(3), ..cfg() };
+
+    let mut closed = Coordinator::new(window.clone());
+    let want = closed.serve_batch(reqs.clone());
+
+    let arrivals: Vec<Arrival> =
+        reqs.into_iter().enumerate().map(|(i, req)| Arrival { seq: i, at_ns: 0, req }).collect();
+    let mut open = Coordinator::new(window);
+    let report = open.serve_open_loop(arrivals, &OpenLoopOptions::default());
+
+    assert_eq!(report.stats.offered, 10);
+    assert_eq!(report.stats.served, 10, "shedding is off: everything serves");
+    assert_eq!(report.stats.shed, 0);
+    assert_same_responses(&report.responses(), &want);
+    assert_eq!(
+        closed.cache_stats(),
+        open.cache_stats(),
+        "cache accounting must not depend on the serving mode"
+    );
+    let bs = open.last_batch_stats().expect("open-loop run records batch stats");
+    assert_eq!(bs.requests, 10);
+    assert_eq!(bs.shed, 0);
+    assert!(bs.peak_staged <= 3, "admission window still bounds the open-loop pipeline");
+}
+
+#[test]
+fn closed_loop_serve_batch_reports_zero_shed() {
+    let mut co = Coordinator::new(cfg());
+    co.serve_batch(random_workload(4, 20, 9));
+    assert_eq!(co.last_batch_stats().expect("batch ran").shed, 0);
+}
+
+// ---------------------------------------------------------------------
+// Overload: sheds are explicit, bounded, and fully accounted.
+// ---------------------------------------------------------------------
+
+#[test]
+fn simultaneous_burst_sheds_deterministically() {
+    // 24 heavy requests all due at t=0 against a window of 1 and a pending
+    // cap of 2. The driver resolves every due arrival before admitting, so
+    // exactly 2 are accepted and 22 shed — deterministically, regardless
+    // of host timing.
+    let mut co = Coordinator::new(CoordinatorConfig {
+        admission_window: Some(1),
+        queue_depth: Some(2),
+        ..cfg()
+    });
+    let report = co.serve_open_loop(burst_at_zero(24, 16), &OpenLoopOptions::default());
+
+    assert_eq!(report.stats.offered, 24);
+    assert_eq!(report.outcomes.len(), 24, "zero silent drops: one outcome per arrival");
+    assert_eq!(report.stats.served, 2, "pending cap 2 admits exactly two of a t=0 burst");
+    assert_eq!(report.stats.shed, 22);
+    assert!(report.stats.peak_pending <= 2);
+    for (i, o) in report.outcomes.iter().enumerate() {
+        assert_eq!(o.seq(), i, "outcomes sorted by arrival sequence");
+        if let OpenLoopOutcome::Rejected { reason, op, n, .. } = o {
+            assert_eq!(*reason, ShedReason::QueueDepth);
+            assert_eq!((*op, *n), ("dgemm", 16), "rejections identify the shed request");
+        }
+    }
+    let bs = co.last_batch_stats().expect("open-loop run records batch stats");
+    assert_eq!((bs.requests, bs.shed), (2, 22));
+}
+
+#[test]
+fn sustained_overload_sheds_explicitly_and_tail_stays_bounded() {
+    // Offered load far beyond capacity: 300 DGEMMs 2 µs apart (~0.6 ms of
+    // arrivals) against a cold engine whose first kernel emission alone
+    // takes longer than the whole arrival window. The depth cap must shed
+    // most of them; every arrival still gets exactly one outcome, and the
+    // non-shed p99 is bounded by the run's wall clock (no wedged request).
+    let mut co = Coordinator::new(CoordinatorConfig {
+        admission_window: Some(2),
+        queue_depth: Some(4),
+        ..cfg()
+    });
+    let offered = 300;
+    let arrivals: Vec<Arrival> = (0..offered)
+        .map(|i| Arrival {
+            seq: i,
+            at_ns: 2_000 * i as u64,
+            req: Request::RandomDgemm { n: 24, seed: i as u64 },
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let report = co.serve_open_loop(arrivals, &OpenLoopOptions { slo_total_ns: Some(0) });
+    let wall_ns = t0.elapsed().as_nanos() as u64;
+    let s = &report.stats;
+
+    assert_eq!(report.outcomes.len(), offered, "zero silent drops");
+    assert_eq!(s.served + s.shed, offered);
+    assert!(s.served >= 1, "overload must degrade, not wedge");
+    assert!(s.shed > 0, "offered >> capacity must shed: {s:?}");
+    assert!(s.peak_pending <= 4, "pending queue bounded by the depth cap");
+    assert!(s.served < offered / 2, "most of a 2x+ overload must shed, not queue: {s:?}");
+    assert!(s.total.p99 <= wall_ns, "p99 cannot exceed the run itself");
+    assert!(s.total.p50 <= s.total.p95 && s.total.p95 <= s.total.p99);
+    assert_eq!(s.total.count, s.served as u64, "latency recorded for served requests only");
+    assert_eq!(s.slo_violations, s.served, "a 0 ns SLO flags every served request");
+}
+
+#[test]
+fn byte_cap_sheds_with_its_own_reason() {
+    // A byte budget of 1 sheds every arrival that finds the pending queue
+    // nonempty (any DGEMM's packed image is far bigger); the empty-queue
+    // escape still accepts, so the run serves some and rejects the rest
+    // with the QueueBytes reason.
+    let mut co = Coordinator::new(CoordinatorConfig {
+        admission_window: Some(1),
+        shed_after_bytes: Some(1),
+        ..cfg()
+    });
+    let report = co.serve_open_loop(burst_at_zero(12, 12), &OpenLoopOptions::default());
+    assert_eq!(report.stats.offered, 12);
+    assert_eq!(report.stats.served + report.stats.shed, 12);
+    assert!(report.stats.shed > 0, "the byte cap must shed a t=0 burst");
+    for o in &report.outcomes {
+        if let OpenLoopOutcome::Rejected { reason, .. } = o {
+            assert_eq!(*reason, ShedReason::QueueBytes);
+        }
+    }
+}
+
+#[test]
+fn unloaded_run_serves_everything_without_slo_violations() {
+    // Light load, generous SLO: every arrival serves, nothing sheds, and
+    // the SLO counter stays at zero.
+    let mut co = Coordinator::new(CoordinatorConfig {
+        admission_window: Some(4),
+        queue_depth: Some(64),
+        ..cfg()
+    });
+    let tcfg = TrafficConfig {
+        rate_rps: 200.0,
+        duration_ns: 50_000_000, // ~10 arrivals over 50 ms
+        seed: 4,
+        max_n: 16,
+        hot_fraction: 1.0,
+        hot_n: 12,
+        ..TrafficConfig::default()
+    };
+    let arrivals = traffic::generate(&tcfg);
+    let offered = arrivals.len();
+    let report =
+        co.serve_open_loop(arrivals, &OpenLoopOptions { slo_total_ns: Some(60_000_000_000) });
+    assert_eq!(report.stats.offered, offered);
+    assert_eq!(report.stats.served, offered);
+    assert_eq!(report.stats.shed, 0);
+    assert_eq!(report.stats.slo_violations, 0, "a 60 s SLO is never violated here");
+    assert_eq!(report.stats.total.count, offered as u64);
+}
