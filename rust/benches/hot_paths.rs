@@ -262,6 +262,14 @@ fn main() {
     //     slot-WRR lets the flood push it out.
     open_loop_bench(&mut report, quick, AeLevel::Ae5);
 
+    // 13) Fabric scaling: the same DGEMM workload served on NoC-modeled
+    //     fabrics of order b = 1..4 under both placement policies and
+    //     both schedulers — the serving-side analogue of the paper's
+    //     §5.5 scalability curve. Records makespan / speedup /
+    //     compute-comm ratio / max-link-busy per point and asserts the
+    //     makespan improves monotonically with fabric order.
+    fabric_scaling_bench(&mut report, quick, AeLevel::Ae5);
+
     if let Some(path) = json_path {
         std::fs::write(&path, report.to_json()).expect("write bench JSON");
         println!("\nwrote {} measurements to {path}", report.entries.len());
@@ -889,6 +897,69 @@ fn open_loop_bench(report: &mut Report, quick: bool, ae: AeLevel) {
                 &format!("serve.open_loop.heavy_shed_frac_{tag}_x{xload:03}"),
                 hr.stats.shed as f64 / heavy_offered.max(1) as f64,
             );
+        }
+    }
+}
+
+/// Fabric scaling curves: serve the repeated-shape DGEMM workload on
+/// NoC-modeled fabrics of order b ∈ {1, 2, 3, 4}, crossed with both
+/// placement policies and both schedulers. Each point records the routed
+/// makespan (absolute fabric cycles), its speedup over the 1×1 fabric
+/// under the same (place, sched), the compute-to-communication ratio, and
+/// the busiest link's occupancy — the `noc.fabric.*` keys BENCH.md
+/// tracks. Monotone improvement with fabric order is asserted, not just
+/// recorded: a placement or pricing regression that flattens the curve
+/// fails the bench.
+fn fabric_scaling_bench(report: &mut Report, quick: bool, ae: AeLevel) {
+    use redefine_blas::noc::{FabricConfig, PlacePolicy};
+    let (requests, n) = if quick { (16, 16) } else { (64, 32) };
+    println!("\nfabric scaling: {requests} DGEMM requests, n={n}, fabrics 1x1..4x4, {ae}");
+    let reqs = repeated_gemm_workload(requests, n, 4242);
+    for sched in [SchedPolicy::Cycles, SchedPolicy::Slots] {
+        let sched_name = match sched {
+            SchedPolicy::Cycles => "cycles",
+            SchedPolicy::Slots => "slots",
+        };
+        for place in [PlacePolicy::Locality, PlacePolicy::RoundRobin] {
+            let mut base = 0u64;
+            let mut prev = u64::MAX;
+            for b in [1usize, 2, 3, 4] {
+                let mut co = Coordinator::new(CoordinatorConfig {
+                    ae,
+                    b: 2,
+                    artifact_dir: "/nonexistent".into(),
+                    verify: false,
+                    sched,
+                    fabric: Some(FabricConfig { place, ..FabricConfig::new(b) }),
+                    ..CoordinatorConfig::default()
+                });
+                let _ = co.serve_batch(reqs.clone());
+                let fs = co.fabric_stats().expect("fabric telemetry");
+                if b == 1 {
+                    base = fs.makespan;
+                }
+                let speedup = base as f64 / fs.makespan.max(1) as f64;
+                let tag = format!("b{b}_{}_{sched_name}", place.name());
+                println!(
+                    "{:<44} {:>12} cyc  {:>5.2}x  C/C {:>6.1}  max-link {:>9}",
+                    format!("  {tag}"),
+                    fs.makespan,
+                    speedup,
+                    fs.compute_comm_ratio(),
+                    fs.max_link_busy
+                );
+                let ratio = fs.compute_comm_ratio();
+                report.record(&format!("noc.fabric.makespan_cycles_{tag}"), fs.makespan as f64);
+                report.record(&format!("noc.fabric.speedup_x_{tag}"), speedup);
+                report.record(&format!("noc.fabric.compute_comm_ratio_{tag}"), ratio);
+                report.record(&format!("noc.fabric.max_link_busy_{tag}"), fs.max_link_busy as f64);
+                assert!(
+                    fs.makespan < prev,
+                    "{tag}: fabric {b}x{b} must improve on the smaller fabric ({} vs {prev})",
+                    fs.makespan
+                );
+                prev = fs.makespan;
+            }
         }
     }
 }

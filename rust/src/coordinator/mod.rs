@@ -49,7 +49,7 @@ use crate::codegen::GemmLayout;
 use crate::energy::PowerModel;
 use crate::engine::{Engine, EngineConfig, EngineShared, SchedPolicy};
 use crate::metrics::{Measurement, Routine};
-use crate::noc::{Coord, LinkTraffic, RouterConfig, Topology};
+use crate::noc::{Coord, FabricConfig, FabricStats, LinkTraffic, RouterConfig, Topology};
 use crate::pe::{AeLevel, ExecMode, PeConfig, PeStats, ScheduledProgram};
 use crate::runtime::Runtime;
 use crate::util::{round_up, Mat};
@@ -160,6 +160,16 @@ pub struct CoordinatorConfig {
     /// permanent rejection. `None` (default) never byte-sheds. Ignored by
     /// the closed-loop `serve_batch`.
     pub shed_after_bytes: Option<u64>,
+    /// Serve on a modeled b×b REDEFINE fabric (`Some`): every finalized
+    /// job is placed on a compute tile and its operand/result movement is
+    /// priced on the mesh with real link contention, so reported cycles
+    /// become communication + compute (absolute fabric completion time)
+    /// instead of PE cycles alone. `None` (default, `--fabric 0`) keeps
+    /// the location-free pool — bit- and stats-identical to the
+    /// pre-fabric serving path. Only meaningful for a standalone
+    /// coordinator; engine tenants share the engine's fabric
+    /// ([`crate::engine::EngineConfig::fabric`]).
+    pub fabric: Option<FabricConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -179,6 +189,7 @@ impl Default for CoordinatorConfig {
             replay_batch: None,
             queue_depth: None,
             shed_after_bytes: None,
+            fabric: None,
         }
     }
 }
@@ -310,6 +321,10 @@ pub struct Coordinator {
     tally: CacheTally,
     /// Telemetry of the last [`Coordinator::serve_batch`] call.
     last_batch: Option<BatchStats>,
+    /// This tenant's home fabric row (attach order modulo fabric rows):
+    /// routed results consolidate in this row's memory tile, and the
+    /// locality placer prefers tiles near it. 0 when no fabric is modeled.
+    home_row: usize,
 }
 
 impl Coordinator {
@@ -325,6 +340,7 @@ impl Coordinator {
             cache_capacity: cfg.cache_capacity,
             cache_quota: cfg.cache_quota,
             sched: cfg.sched,
+            fabric: cfg.fabric.clone(),
         });
         engine.tenant(cfg)
     }
@@ -339,7 +355,33 @@ impl Coordinator {
             None
         };
         let pool = shared.pool.client(weight, cfg.exec);
-        Self { cfg, runtime, shared, pool, tally: CacheTally::default(), last_batch: None }
+        let home_row = match shared.fabric.as_ref() {
+            Some(f) => {
+                let rows = f.lock().expect("fabric lock").rows();
+                shared.fabric_tenants.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % rows
+            }
+            None => 0,
+        };
+        Self {
+            cfg,
+            runtime,
+            shared,
+            pool,
+            tally: CacheTally::default(),
+            last_batch: None,
+            home_row,
+        }
+    }
+
+    /// Fabric telemetry (per-link utilization, makespan, compute/comm
+    /// split) of this coordinator's engine, when it models a fabric.
+    pub fn fabric_stats(&self) -> Option<FabricStats> {
+        self.shared.fabric.as_ref().map(|f| f.lock().expect("fabric lock").stats())
+    }
+
+    /// This tenant's home fabric row (0 without a fabric).
+    pub fn home_row(&self) -> usize {
+        self.home_row
     }
 
     /// True if the XLA value path is live.
@@ -612,6 +654,15 @@ impl Coordinator {
     /// Merge collected tile results: assemble C, schedule write-backs in
     /// tile order (deterministic regardless of worker arrival order), fold
     /// stats/energy, and resolve the value source.
+    ///
+    /// Under a modeled fabric ([`CoordinatorConfig::fabric`] /
+    /// [`crate::engine::EngineConfig::fabric`]) each tile job is instead
+    /// placed on a shared fabric tile and its operand/result movement is
+    /// priced on the mesh; the reported makespan is then the **absolute
+    /// fabric cycle** the last result lands (it grows across requests as
+    /// the fabric fills). Finalization runs in strict submission order per
+    /// tenant, so routed schedules are deterministic regardless of which
+    /// host worker computed which tile.
     pub(crate) fn finish_dgemm(
         &mut self,
         mut pending: PendingDgemm,
@@ -628,24 +679,45 @@ impl Coordinator {
         let mut energy = 0.0;
         let power = PowerModel::paper();
         let pe_cfg = PeConfig::paper(self.cfg.ae);
+        let mut fabric = self.shared.fabric.as_ref().map(|f| f.lock().expect("fabric lock"));
         for (idx, (out, stats)) in outs.into_iter().enumerate() {
             let (bi, bj) = (idx / bb, idx % bb);
             pending.cpad.set_block(bi * m, bj * m, &out);
-            let coord = Coord::new(bi, bj);
-            let r = pending.ready[idx];
-            let (_, fin) = pending.links.transfer(
-                &pending.topo,
-                &pending.rcfg,
-                coord,
-                pending.topo.memory_for_row(bi),
-                (m * m) as u64,
-                r + stats.cycles,
-            );
+            let (coord, r, fin) = match fabric.as_deref_mut() {
+                Some(fab) => {
+                    // Per-tile operand footprint: the A row-panel (m×m·bb),
+                    // B column-panel (m·bb×m) and C block (m×m) — streamed
+                    // from the placed tile's row-local memory tile; the C
+                    // result streams back to this tenant's home region.
+                    let operand_words = (m * m * (2 * bb + 1)) as u64;
+                    let job = fab.route_job(
+                        self.home_row,
+                        operand_words,
+                        stats.cycles,
+                        (m * m) as u64,
+                    );
+                    (job.tile, job.ready, job.finish)
+                }
+                None => {
+                    let coord = Coord::new(bi, bj);
+                    let r = pending.ready[idx];
+                    let (_, fin) = pending.links.transfer(
+                        &pending.topo,
+                        &pending.rcfg,
+                        coord,
+                        pending.topo.memory_for_row(bi),
+                        (m * m) as u64,
+                        r + stats.cycles,
+                    );
+                    (coord, r, fin)
+                }
+            };
             makespan = makespan.max(fin);
             energy += power.energy_joules(self.cfg.ae, &pe_cfg, &stats);
             tiles.push((coord, r, stats.cycles, fin));
             fold_stats(&mut agg, &stats);
         }
+        drop(fabric);
         agg.cycles = makespan;
         let sim_c = pending.cpad.block(0, 0, n, n);
 

@@ -34,6 +34,14 @@
 //! Host-thread parallelism only: simulated timing comes from the
 //! per-kernel `PeStats` and the NoC transfer schedule, both independent of
 //! which worker ran a job and in which order.
+//!
+//! Fabric mode (`EngineConfig::fabric`) keeps that invariant by placing
+//! jobs on **virtual** tiles, not host workers: the coordinator routes
+//! each job on the shared [`crate::noc::Fabric`] at *finalize* time
+//! (strict submission order per tenant), pricing its operand/result
+//! movement on the modeled mesh. Host workers stay location-free
+//! value/timing executors — which worker ran a job still cannot affect any
+//! simulated observable.
 
 use crate::codegen::GemmLayout;
 use crate::engine::queue::{SchedPolicy, WrrQueue};

@@ -412,8 +412,26 @@ impl Coordinator {
     /// Build the response for a Level-1/2 request whose simulated cost is
     /// `meas` — the one place those request values are resolved, shared by
     /// `serve_one` and the batched path so they cannot drift apart.
+    ///
+    /// Under a modeled fabric the kernel is placed on a compute tile and
+    /// its operand stream + result write-back are priced on the mesh:
+    /// `cycles` becomes the absolute fabric cycle the result lands instead
+    /// of the kernel latency alone.
     fn measured_response(&mut self, req: Request, meas: Measurement) -> Response {
-        let cycles = meas.latency();
+        let operand_words = self.cfg.staged_bytes(&req) / 8;
+        let result_words = match &req {
+            Request::Dgemv { a, .. } => a.rows() as u64,
+            Request::Daxpy { x, .. } => x.len() as u64,
+            Request::Ddot { .. } | Request::Dnrm2 { .. } => 1,
+            Request::Dgemm { .. } | Request::RandomDgemm { .. } => 0,
+        };
+        let cycles = match self.shared.fabric.as_ref() {
+            Some(fabric) => {
+                let mut fab = fabric.lock().expect("fabric lock");
+                fab.route_job(self.home_row, operand_words, meas.latency(), result_words).finish
+            }
+            None => meas.latency(),
+        };
         let (op, n, source, vector, scalar) = match req {
             Request::Dgemv { a, x, y } => {
                 let n = a.rows();

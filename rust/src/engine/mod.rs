@@ -52,8 +52,9 @@ pub use traffic::{Arrival, ArrivalKind, TrafficConfig};
 use crate::coordinator::cache::ProgramCache;
 use crate::coordinator::pool::PoolCore;
 use crate::coordinator::{CacheStats, Coordinator, CoordinatorConfig, PoolJobCounts};
+use crate::noc::{Fabric, FabricConfig, FabricStats};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Engine configuration.
 ///
@@ -87,11 +88,24 @@ pub struct EngineConfig {
     /// deficit round-robin ([`SchedPolicy::Cycles`], the default) or the
     /// slot-based WRR baseline ([`SchedPolicy::Slots`]).
     pub sched: SchedPolicy,
+    /// Model the engine as a b×b REDEFINE fabric (`Some`): every pool job
+    /// is placed on a compute tile and its operand/result movement is
+    /// priced on the mesh, so job completion = communication + compute.
+    /// `None` (the default, `--fabric 0`) keeps the location-free pool —
+    /// free, instantaneous operand delivery, exactly the pre-fabric
+    /// behavior.
+    pub fabric: Option<FabricConfig>,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { workers: 4, cache_capacity: None, cache_quota: None, sched: SchedPolicy::Cycles }
+        Self {
+            workers: 4,
+            cache_capacity: None,
+            cache_quota: None,
+            sched: SchedPolicy::Cycles,
+            fabric: None,
+        }
     }
 }
 
@@ -102,6 +116,14 @@ impl Default for EngineConfig {
 pub(crate) struct EngineShared {
     pub(crate) pool: PoolCore,
     pub(crate) cache: ProgramCache,
+    /// The modeled fabric, when the engine runs location-aware
+    /// (`EngineConfig::fabric`). Locked once per finalized request by the
+    /// coordinators; finalization runs in strict submission order per
+    /// tenant, so routed schedules are deterministic.
+    pub(crate) fabric: Option<Mutex<Fabric>>,
+    /// Tenants attached so far — assigns each tenant a home fabric row
+    /// (attach order modulo rows) for region-aware placement.
+    pub(crate) fabric_tenants: AtomicUsize,
 }
 
 /// The multi-tenant serving engine: one shared PE worker pool + one shared
@@ -141,7 +163,13 @@ impl Engine {
     /// Spawn the shared worker pool and build the shared program cache.
     pub fn new(cfg: EngineConfig) -> Self {
         let cache = ProgramCache::with_limits(cfg.cache_capacity, cfg.cache_quota);
-        let shared = Arc::new(EngineShared { pool: PoolCore::new(cfg.workers, cfg.sched), cache });
+        let fabric = cfg.fabric.as_ref().map(|f| Mutex::new(Fabric::new(f)));
+        let shared = Arc::new(EngineShared {
+            pool: PoolCore::new(cfg.workers, cfg.sched),
+            cache,
+            fabric,
+            fabric_tenants: AtomicUsize::new(0),
+        });
         Self { shared, tenants: AtomicUsize::new(0) }
     }
 
@@ -198,6 +226,13 @@ impl Engine {
     /// Shared pool execution totals across every tenant.
     pub fn pool_job_counts(&self) -> PoolJobCounts {
         self.shared.pool.counts()
+    }
+
+    /// Fabric telemetry snapshot (per-link utilization, makespan,
+    /// compute/comm split) when the engine models a fabric; `None` under
+    /// the location-free pool.
+    pub fn fabric_stats(&self) -> Option<FabricStats> {
+        self.shared.fabric.as_ref().map(|f| f.lock().expect("fabric lock").stats())
     }
 
     /// The fairness currency the shared pool schedules under.

@@ -14,6 +14,7 @@
 //!                [--tenants N [--weights w1,w2,...]]
 //!                [--arrivals poisson|burst --rate R --duration-ms D]
 //!                [--queue-depth N] [--shed-after-bytes BYTES] [--slo-ms MS]
+//!                [--fabric B] [--place locality|round-robin]
 //! redefine sweep                       # Tables 4-9 summary
 //! redefine artifacts [--artifacts DIR] # list loadable artifacts
 //! ```
@@ -53,6 +54,13 @@
 //! the SLO. Composes with `--tenants N` (staggered per-tenant start
 //! times — tenant churn) and with every closed-loop serving flag. See
 //! `docs/CLI.md` for the full flag reference.
+//!
+//! `serve --fabric B` models the engine as a B×B REDEFINE fabric: every
+//! job is placed on a compute tile (`--place locality|round-robin`) and
+//! its operand/result movement is priced on the mesh with real link
+//! contention, so reported cycles become communication + compute.
+//! `--fabric 0` (the default) keeps the location-free pool — identical to
+//! the pre-fabric serving path.
 
 use redefine_blas::coordinator::{
     request::random_workload, Coordinator, CoordinatorConfig, OpenLoopOptions, OpenLoopReport,
@@ -60,6 +68,7 @@ use redefine_blas::coordinator::{
 use redefine_blas::engine::traffic::{self, ArrivalKind, TrafficConfig};
 use redefine_blas::engine::{Engine, EngineConfig, SchedPolicy};
 use redefine_blas::metrics::{gemm_sweep, PAPER_SIZES};
+use redefine_blas::noc::{FabricConfig, FabricStats, PlacePolicy};
 use redefine_blas::pe::{AeLevel, ExecMode, PeConfig};
 use redefine_blas::util::{Mat, XorShift64};
 use std::process::exit;
@@ -72,7 +81,8 @@ const USAGE: &str = "usage: redefine <gemm|gemv|ddot|serve|sweep|artifacts> [--n
      [--sched slots|cycles] [--exec replay|combined] [--residual] \
      [--replay-batch N] [--tenants N] [--weights w1,w2,...] \
      [--arrivals poisson|burst] [--rate R] [--duration-ms D] \
-     [--queue-depth N] [--shed-after-bytes BYTES] [--slo-ms MS]";
+     [--queue-depth N] [--shed-after-bytes BYTES] [--slo-ms MS] \
+     [--fabric B] [--place locality|round-robin]";
 
 fn usage() -> ! {
     eprintln!("{USAGE}");
@@ -105,6 +115,18 @@ struct Args {
     queue_depth: Option<usize>,
     shed_after_bytes: Option<u64>,
     slo_ms: Option<u64>,
+    fabric: usize,
+    place: PlacePolicy,
+}
+
+impl Args {
+    /// The modeled fabric, if any: `--fabric 0` (default) is the
+    /// location-free pool, `--fabric B >= 1` a B×B routed fabric under the
+    /// `--place` policy.
+    fn fabric_cfg(&self) -> Option<FabricConfig> {
+        (self.fabric >= 1)
+            .then(|| FabricConfig { place: self.place, ..FabricConfig::new(self.fabric) })
+    }
 }
 
 fn parse_args() -> Args {
@@ -135,6 +157,8 @@ fn parse_args() -> Args {
         queue_depth: None,
         shed_after_bytes: None,
         slo_ms: None,
+        fabric: 0,
+        place: PlacePolicy::Locality,
     };
     while let Some(flag) = it.next() {
         let mut val = || it.next().unwrap_or_else(|| usage());
@@ -198,6 +222,14 @@ fn parse_args() -> Args {
                     Some(val().parse().ok().filter(|b| *b >= 1).unwrap_or_else(|| usage()))
             }
             "--slo-ms" => a.slo_ms = Some(val().parse().unwrap_or_else(|_| usage())),
+            "--fabric" => a.fabric = val().parse().unwrap_or_else(|_| usage()),
+            "--place" => {
+                a.place = match val().as_str() {
+                    "locality" => PlacePolicy::Locality,
+                    "round-robin" => PlacePolicy::RoundRobin,
+                    _ => usage(),
+                }
+            }
             "--exec" => {
                 a.exec = match val().as_str() {
                     "replay" => ExecMode::Replay,
@@ -232,6 +264,7 @@ fn main() {
         replay_batch: args.replay_batch,
         queue_depth: args.queue_depth,
         shed_after_bytes: args.shed_after_bytes,
+        fabric: args.fabric_cfg(),
     };
 
     match args.cmd.as_str() {
@@ -335,6 +368,9 @@ fn main() {
                     bs.shared_measurements
                 );
             }
+            if let Some(fs) = co.fabric_stats() {
+                print_fabric(&fs);
+            }
             for r in &resps {
                 println!("  {:<6} n={:<4} cycles={:<9} source={:?}", r.op, r.n, r.cycles, r.source);
             }
@@ -391,6 +427,34 @@ fn parse_weights(args: &Args) -> Vec<u64> {
 /// Milliseconds from nanoseconds, for report lines.
 fn ms(ns: u64) -> f64 {
     ns as f64 / 1e6
+}
+
+/// Fabric telemetry block: routed-job totals, compute/comm split, and the
+/// per-link utilization listing.
+fn print_fabric(fs: &FabricStats) {
+    println!(
+        "fabric {}x{} [{} placement]: {} jobs routed, makespan {} cycles, \
+         compute/comm ratio {:.2} ({} compute / {} comm cycles)",
+        fs.b,
+        fs.b,
+        fs.place.name(),
+        fs.jobs_routed,
+        fs.makespan,
+        fs.compute_comm_ratio(),
+        fs.compute_cycles,
+        fs.comm_cycles
+    );
+    println!(
+        "  links: max busy {} cycles, total busy {} cycles over {} active links; \
+         jobs per tile {:?}",
+        fs.max_link_busy,
+        fs.total_link_busy,
+        fs.link_busy.len(),
+        fs.tile_jobs
+    );
+    for ((f, t), busy) in &fs.link_busy {
+        println!("    ({},{}) -> ({},{}): {busy} busy cycles", f.row, f.col, t.row, t.col);
+    }
 }
 
 /// Per-tenant open-loop report block: offered/served/shed accounting plus
@@ -452,6 +516,7 @@ fn serve_open_loop_cmd(args: &Args, base: &CoordinatorConfig) {
         cache_capacity: args.cache_cap,
         cache_quota: args.cache_quota,
         sched: args.sched,
+        fabric: args.fabric_cfg(),
     });
     let tenants: Vec<(usize, AeLevel, u64, Coordinator)> = weights
         .iter()
@@ -494,6 +559,9 @@ fn serve_open_loop_cmd(args: &Args, base: &CoordinatorConfig) {
         "shared cache: {} kernels resident, {} hits / {} misses / {} evictions",
         cs.entries, cs.hits, cs.misses, cs.evictions
     );
+    if let Some(fs) = engine.fabric_stats() {
+        print_fabric(&fs);
+    }
 }
 
 /// Multi-tenant serve: one shared engine (worker pool + program cache)
@@ -507,6 +575,7 @@ fn serve_multi_tenant(args: &Args, base: &CoordinatorConfig) {
         cache_capacity: args.cache_cap,
         cache_quota: args.cache_quota,
         sched: args.sched,
+        fabric: args.fabric_cfg(),
     });
     let tenants: Vec<(usize, AeLevel, u64, Coordinator)> = weights
         .iter()
@@ -570,6 +639,9 @@ fn serve_multi_tenant(args: &Args, base: &CoordinatorConfig) {
          ({} value-replayed / {} combined timing passes, {} coalesced replay batches)",
         jc.gemm_tiles, jc.gemv, jc.level1, jc.replays, jc.combined_runs, jc.batched_replays
     );
+    if let Some(fs) = engine.fabric_stats() {
+        print_fabric(&fs);
+    }
 }
 
 #[cfg(test)]
@@ -606,6 +678,8 @@ mod tests {
             "--queue-depth",
             "--shed-after-bytes",
             "--slo-ms",
+            "--fabric",
+            "--place",
         ];
         for flag in documented {
             assert!(USAGE.contains(flag), "usage string is missing `{flag}`");

@@ -8,10 +8,12 @@
 //! streams its A row-panel and B column-panel from the memory column,
 //! computes on its PE, and writes its C block back (Fig 12).
 
+pub mod placement;
 pub mod router;
 pub mod sim;
 pub mod topology;
 
+pub use placement::{Fabric, FabricConfig, FabricStats, PlacePolicy, RoutedJob};
 pub use router::{LinkTraffic, RouterConfig};
 pub use sim::{parallel_dgemm, parallel_dgemm_cfg, NocRunReport, TileReport};
 pub use topology::{Coord, Topology};

@@ -1,0 +1,343 @@
+//! Fabric placement: location-aware job routing for the serving engine.
+//!
+//! The standalone NoC simulator ([`super::sim`]) models one parallel DGEMM
+//! at a time; this module is the serving-side counterpart. A [`Fabric`] is
+//! a b×b REDEFINE compute array plus its memory column whose tiles are
+//! claimed one *job* at a time: every pool job the coordinator finalizes is
+//! **placed** on a compute tile, its operands **stream from the memory
+//! column over the modeled mesh** (contending on shared links via
+//! [`LinkTraffic::transfer`]), its result streams back, and its completion
+//! time becomes operand arrival + PE compute + write-back instead of PE
+//! cycles alone.
+//!
+//! Data-movement model (the striping the paper's memory column implies):
+//! a tenant's working set is striped across the memory column, so a job on
+//! tile `t` streams operands from the *same-row* memory tile
+//! `memory_for_row(t.row)` — operand bandwidth scales with b. Results
+//! consolidate in the tenant's **home region**: the write-back targets
+//! `memory_for_row(home_row)`, so a tenant placed far from home pays for
+//! the cross-region traffic honestly (the locality placer's job is to keep
+//! that cheap without starving load balance).
+//!
+//! Placement policy is a scheduling decision ([`PlacePolicy`]):
+//! * [`PlacePolicy::RoundRobin`] — a shared cursor walks the tiles
+//!   row-major, ignoring both load and location;
+//! * [`PlacePolicy::Locality`] — pick the tile minimizing
+//!   `free_at + hops(tile, home_memory) · router_cycle`: load balance is
+//!   the dominant term, and among near-idle tiles the placer prefers the
+//!   tenant's home region so its write-back traffic stays short.
+//!
+//! Everything here is deterministic given the sequence of
+//! [`Fabric::route_job`] calls: the coordinator calls it at *finalize*
+//! time, which runs in strict submission order, so schedules (and the
+//! per-link busy counts in [`FabricStats`]) are reproducible run to run
+//! regardless of host worker interleaving.
+
+use super::router::{LinkTraffic, RouterConfig};
+use super::topology::{Coord, Topology};
+
+/// Tile-placement policy for routed jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacePolicy {
+    /// Cursor walks compute tiles row-major; location-blind baseline.
+    RoundRobin,
+    /// Least-loaded tile with a home-region preference on near-ties.
+    Locality,
+}
+
+impl PlacePolicy {
+    /// Short name used in CLI parsing and bench keys.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacePolicy::RoundRobin => "round-robin",
+            PlacePolicy::Locality => "locality",
+        }
+    }
+}
+
+/// Fabric configuration: array order + placement policy (+ link timing).
+#[derive(Debug, Clone)]
+pub struct FabricConfig {
+    /// Compute-array order: b×b compute tiles plus a memory column.
+    pub b: usize,
+    /// Tile-placement policy.
+    pub place: PlacePolicy,
+    /// Router/link timing parameters.
+    pub router: RouterConfig,
+}
+
+impl FabricConfig {
+    /// A b×b fabric under the default locality placer and paper link
+    /// timing.
+    pub fn new(b: usize) -> Self {
+        Self { b, place: PlacePolicy::Locality, router: RouterConfig::default() }
+    }
+}
+
+/// One routed job's schedule on the fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoutedJob {
+    /// Compute tile the job was placed on.
+    pub tile: Coord,
+    /// Cycle the operand stream left its memory tile.
+    pub depart: u64,
+    /// Cycle all operands had arrived (compute starts at
+    /// `max(ready, tile free time)`).
+    pub ready: u64,
+    /// Cycle the result write-back completed.
+    pub finish: u64,
+}
+
+/// Snapshot of fabric telemetry (see [`Fabric::stats`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FabricStats {
+    /// Compute-array order.
+    pub b: usize,
+    /// Placement policy in force.
+    pub place: PlacePolicy,
+    /// Jobs routed so far.
+    pub jobs_routed: u64,
+    /// Completion cycle of the latest-finishing job (fabric makespan).
+    pub makespan: u64,
+    /// Total PE compute cycles across routed jobs.
+    pub compute_cycles: u64,
+    /// Total communication cycles (operand in-flight + write-back
+    /// in-flight) across routed jobs.
+    pub comm_cycles: u64,
+    /// Busy cycles of the most-loaded link.
+    pub max_link_busy: u64,
+    /// Busy cycles summed over all links.
+    pub total_link_busy: u64,
+    /// Jobs placed per compute tile (row-major).
+    pub tile_jobs: Vec<u64>,
+    /// Per-directed-link busy cycles, sorted by (from, to) coordinate.
+    pub link_busy: Vec<((Coord, Coord), u64)>,
+}
+
+impl FabricStats {
+    /// Computation-to-communication ratio over everything routed so far
+    /// (the Fig-12 regime indicator: below ~1 the fabric is comm-bound).
+    pub fn compute_comm_ratio(&self) -> f64 {
+        self.compute_cycles as f64 / (self.comm_cycles as f64).max(1.0)
+    }
+}
+
+/// Location-aware routing state for the serving engine: tile occupancy +
+/// link traffic of one modeled fabric, shared by every tenant attached to
+/// an engine.
+#[derive(Debug, Clone)]
+pub struct Fabric {
+    topo: Topology,
+    rcfg: RouterConfig,
+    policy: PlacePolicy,
+    links: LinkTraffic,
+    /// Per-compute-tile (row-major) cycle at which the tile's PE frees up.
+    tile_free: Vec<u64>,
+    /// Per-compute-tile routed-job count.
+    tile_jobs: Vec<u64>,
+    /// Round-robin cursor.
+    cursor: usize,
+    jobs_routed: u64,
+    compute_cycles: u64,
+    comm_cycles: u64,
+    makespan: u64,
+}
+
+impl Fabric {
+    pub fn new(cfg: &FabricConfig) -> Self {
+        let topo = Topology::new(cfg.b);
+        let tiles = topo.compute_tiles();
+        Self {
+            topo,
+            rcfg: cfg.router.clone(),
+            policy: cfg.place,
+            links: LinkTraffic::new(),
+            tile_free: vec![0; tiles],
+            tile_jobs: vec![0; tiles],
+            cursor: 0,
+            jobs_routed: 0,
+            compute_cycles: 0,
+            comm_cycles: 0,
+            makespan: 0,
+        }
+    }
+
+    /// Rows of the compute array (used to assign tenant home rows).
+    pub fn rows(&self) -> usize {
+        self.topo.rows()
+    }
+
+    /// Pick a compute tile for the next job under the configured policy.
+    fn place(&mut self, home_row: usize) -> usize {
+        let b = self.topo.rows();
+        match self.policy {
+            PlacePolicy::RoundRobin => {
+                let idx = self.cursor;
+                self.cursor = (self.cursor + 1) % self.tile_free.len();
+                idx
+            }
+            PlacePolicy::Locality => {
+                let home_mem = self.topo.memory_for_row(home_row.min(b - 1));
+                let mut best = 0usize;
+                let mut best_score = u64::MAX;
+                let mut best_hops = usize::MAX;
+                for (idx, &free) in self.tile_free.iter().enumerate() {
+                    let tile = Coord::new(idx / b, idx % b);
+                    let hops = self.topo.hops(tile, home_mem);
+                    let score = free.saturating_add(hops as u64 * self.rcfg.router_cycle);
+                    if score < best_score || (score == best_score && hops < best_hops) {
+                        best = idx;
+                        best_score = score;
+                        best_hops = hops;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Place one job and price its data movement on the mesh.
+    ///
+    /// Operands (`operand_words`) stream from the placed tile's same-row
+    /// memory tile; after `compute_cycles` on the tile's PE the result
+    /// (`result_words`) streams back to the memory tile of the tenant's
+    /// `home_row`. Returns the job's schedule; `finish` is the absolute
+    /// fabric cycle the result lands — the routed replacement for "PE
+    /// cycles alone".
+    pub fn route_job(
+        &mut self,
+        home_row: usize,
+        operand_words: u64,
+        compute_cycles: u64,
+        result_words: u64,
+    ) -> RoutedJob {
+        let b = self.topo.rows();
+        let idx = self.place(home_row);
+        let tile = Coord::new(idx / b, idx % b);
+        let src = self.topo.memory_for_row(tile.row);
+        let home_mem = self.topo.memory_for_row(home_row.min(b - 1));
+
+        // Operand stream: issue as soon as the tile is chosen; the link
+        // reservation itself serializes contending streams.
+        let (depart, arrive) =
+            self.links.transfer(&self.topo, &self.rcfg, src, tile, operand_words, 0);
+        // Compute waits for both the operands and the tile's PE.
+        let ready = arrive.max(self.tile_free[idx]);
+        let compute_end = ready + compute_cycles;
+        // Result write-back to the tenant's home region.
+        let (wb_depart, finish) = self.links.transfer(
+            &self.topo,
+            &self.rcfg,
+            tile,
+            home_mem,
+            result_words,
+            compute_end,
+        );
+        self.tile_free[idx] = compute_end;
+        self.tile_jobs[idx] += 1;
+        self.jobs_routed += 1;
+        self.compute_cycles += compute_cycles;
+        self.comm_cycles += (arrive - depart) + (finish - wb_depart);
+        self.makespan = self.makespan.max(finish);
+        RoutedJob { tile, depart, ready, finish }
+    }
+
+    /// Telemetry snapshot.
+    pub fn stats(&self) -> FabricStats {
+        FabricStats {
+            b: self.topo.rows(),
+            place: self.policy,
+            jobs_routed: self.jobs_routed,
+            makespan: self.makespan,
+            compute_cycles: self.compute_cycles,
+            comm_cycles: self.comm_cycles,
+            max_link_busy: self.links.max_link_busy(),
+            total_link_busy: self.links.total_busy(),
+            tile_jobs: self.tile_jobs.clone(),
+            link_busy: self.links.link_busy(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fabric(b: usize, place: PlacePolicy) -> Fabric {
+        Fabric::new(&FabricConfig { place, ..FabricConfig::new(b) })
+    }
+
+    #[test]
+    fn round_robin_cycles_all_tiles() {
+        let mut f = fabric(2, PlacePolicy::RoundRobin);
+        for _ in 0..8 {
+            f.route_job(0, 16, 100, 4);
+        }
+        assert_eq!(f.stats().tile_jobs, vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn locality_spreads_load_and_prefers_home_on_ties() {
+        let mut f = fabric(2, PlacePolicy::Locality);
+        // First placement: all tiles idle, home row 0 → nearest tile to
+        // mem(0) = (0,2) is (0,1).
+        let j = f.route_job(0, 16, 1000, 4);
+        assert_eq!(j.tile, Coord::new(0, 1));
+        // Three more jobs: load balance dominates, so all four tiles end
+        // up claimed once before any tile is reused.
+        for _ in 0..3 {
+            f.route_job(0, 16, 1000, 4);
+        }
+        assert_eq!(f.stats().tile_jobs, vec![1, 1, 1, 1]);
+    }
+
+    #[test]
+    fn routed_schedule_orders_phases() {
+        let mut f = fabric(2, PlacePolicy::Locality);
+        let j = f.route_job(1, 64, 500, 16);
+        assert!(j.ready >= j.depart);
+        assert!(j.finish > j.ready + 500, "finish must include write-back");
+        let s = f.stats();
+        assert_eq!(s.jobs_routed, 1);
+        assert_eq!(s.compute_cycles, 500);
+        assert!(s.comm_cycles > 0);
+        assert!(s.makespan >= j.finish);
+    }
+
+    #[test]
+    fn deterministic_given_call_sequence() {
+        let run = |place| {
+            let mut f = fabric(3, place);
+            for i in 0..32u64 {
+                f.route_job((i % 3) as usize, 64 + i, 200 + 7 * i, 16);
+            }
+            let s = f.stats();
+            (s.makespan, s.max_link_busy, s.link_busy, s.tile_jobs)
+        };
+        assert_eq!(run(PlacePolicy::Locality), run(PlacePolicy::Locality));
+        assert_eq!(run(PlacePolicy::RoundRobin), run(PlacePolicy::RoundRobin));
+    }
+
+    #[test]
+    fn bigger_fabric_shortens_makespan_under_load() {
+        let makespan = |b| {
+            let mut f = fabric(b, PlacePolicy::Locality);
+            for i in 0..64u64 {
+                f.route_job((i % 2) as usize, 256, 5_000, 64);
+            }
+            f.stats().makespan
+        };
+        let (m1, m2, m4) = (makespan(1), makespan(2), makespan(4));
+        assert!(m2 < m1, "2x2 must beat 1x1: {m2} vs {m1}");
+        assert!(m4 < m2, "4x4 must beat 2x2: {m4} vs {m2}");
+    }
+
+    #[test]
+    fn zero_word_route_is_compute_only_on_idle_fabric() {
+        let mut f = fabric(2, PlacePolicy::Locality);
+        let j = f.route_job(0, 0, 100, 0);
+        assert_eq!((j.depart, j.ready), (0, 0));
+        assert_eq!(j.finish, 100);
+        assert_eq!(f.stats().comm_cycles, 0);
+    }
+}

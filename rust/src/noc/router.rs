@@ -104,6 +104,14 @@ impl LinkTraffic {
     pub fn total_busy(&self) -> u64 {
         self.busy.values().sum()
     }
+
+    /// Per-directed-link busy cycles, sorted by (from, to) coordinate so
+    /// the listing is deterministic (utilization telemetry).
+    pub fn link_busy(&self) -> Vec<((Coord, Coord), u64)> {
+        let mut v: Vec<_> = self.busy.iter().map(|(&k, &b)| (k, b)).collect();
+        v.sort_unstable_by_key(|&(k, _)| k);
+        v
+    }
 }
 
 #[cfg(test)]
@@ -155,5 +163,59 @@ mod tests {
         let (d, a) = t.transfer(&topo, &cfg, Coord::new(0, 0), Coord::new(0, 0), 10, 5);
         assert_eq!(d, 5);
         assert_eq!(a, 15);
+    }
+
+    #[test]
+    fn zero_word_transfer_claims_nothing() {
+        let topo = Topology::new(2);
+        let cfg = RouterConfig::default();
+        let mut t = LinkTraffic::new();
+        let (d, a) = t.transfer(&topo, &cfg, Coord::new(0, 2), Coord::new(1, 0), 0, 7);
+        assert_eq!((d, a), (7, 7), "zero words is the fast path: no hops, no service");
+        assert_eq!(t.max_link_busy(), 0);
+        assert!(t.link_busy().is_empty());
+    }
+
+    #[test]
+    fn shared_link_occupancy_intervals_cannot_overlap() {
+        let topo = Topology::new(2);
+        let cfg = RouterConfig::default();
+        let mut t = LinkTraffic::new();
+        // Three transfers all crossing link (0,2)→(0,1); each occupies it
+        // for `words` cycles from its departure. Serialization means the
+        // [depart, depart+words) intervals are pairwise disjoint.
+        let words = [40u64, 25, 60];
+        let mut intervals: Vec<(u64, u64)> = Vec::new();
+        for (i, &w) in words.iter().enumerate() {
+            let dst = Coord::new(0, i % 2); // (0,0) or (0,1) — same first link
+            let (d, _) = t.transfer(&topo, &cfg, Coord::new(0, 2), dst, w, 0);
+            intervals.push((d, d + w));
+        }
+        intervals.sort_unstable();
+        for pair in intervals.windows(2) {
+            assert!(
+                pair[0].1 <= pair[1].0,
+                "occupancy intervals overlap: {:?} vs {:?}",
+                pair[0],
+                pair[1]
+            );
+        }
+        // Busy accounting matches the serialized occupancy exactly.
+        let busy: u64 = words.iter().sum();
+        let shared = (Coord::new(0, 2), Coord::new(0, 1));
+        let got = t.link_busy().iter().find(|(k, _)| *k == shared).map(|&(_, b)| b);
+        assert_eq!(got, Some(busy));
+    }
+
+    #[test]
+    fn link_busy_listing_is_sorted_and_complete() {
+        let topo = Topology::new(2);
+        let cfg = RouterConfig::default();
+        let mut t = LinkTraffic::new();
+        t.transfer(&topo, &cfg, Coord::new(0, 2), Coord::new(1, 0), 10, 0);
+        let listing = t.link_busy();
+        assert_eq!(listing.len(), 3, "3 hops → 3 directed links");
+        assert!(listing.windows(2).all(|w| w[0].0 < w[1].0), "sorted by link key");
+        assert_eq!(listing.iter().map(|&(_, b)| b).sum::<u64>(), t.total_busy());
     }
 }

@@ -48,6 +48,10 @@ pub struct NocRunReport {
     pub single_pe_cycles: u64,
     /// Busiest-link cycles (NoC hot-spot diagnostic).
     pub max_link_busy: u64,
+    /// The assembled C ← A·B + C result (already verified against the
+    /// host reference inside the run; exposed so conformance tests can
+    /// cross-check it against other execution paths too).
+    pub result: Mat,
 }
 
 impl NocRunReport {
@@ -162,6 +166,7 @@ pub fn parallel_dgemm_cfg(
         makespan,
         single_pe_cycles: single,
         max_link_busy: links.max_link_busy(),
+        result,
     }
 }
 

@@ -108,6 +108,37 @@ mod tests {
     }
 
     #[test]
+    fn xy_path_length_is_manhattan_plus_one() {
+        // Every pair: the XY path visits exactly Manhattan-distance + 1
+        // tiles, each consecutive pair differing by one step in exactly
+        // one dimension (the path is a lattice walk, column leg first).
+        let t = Topology::new(3);
+        for fr in 0..t.rows() {
+            for fc in 0..t.cols() {
+                for tr in 0..t.rows() {
+                    for tc in 0..t.cols() {
+                        let (from, to) = (Coord::new(fr, fc), Coord::new(tr, tc));
+                        let p = t.xy_path(from, to);
+                        let manhattan = fr.abs_diff(tr) + fc.abs_diff(tc);
+                        assert_eq!(p.len(), manhattan + 1);
+                        assert_eq!(t.hops(from, to), manhattan);
+                        for w in p.windows(2) {
+                            let dr = w[0].row.abs_diff(w[1].row);
+                            let dc = w[0].col.abs_diff(w[1].col);
+                            assert_eq!(dr + dc, 1, "non-unit step {w:?}");
+                            // Column leg first: once the row changes the
+                            // column must already match the destination.
+                            if dr == 1 {
+                                assert_eq!(w[0].col, to.col);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn zero_hop_path() {
         let t = Topology::new(2);
         let c = Coord::new(1, 1);

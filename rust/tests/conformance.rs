@@ -209,6 +209,36 @@ fn level1_shape_sweep() {
 }
 
 #[test]
+fn noc_parallel_dgemm_matches_host_and_serving() {
+    // Value-level tie between the standalone NoC simulator, the host
+    // reference BLAS, and the serving path: all three must agree at 1e-12
+    // on the same operands (n % b == 0, as parallel_dgemm requires).
+    use redefine_blas::coordinator::{Coordinator, CoordinatorConfig};
+    use redefine_blas::noc::parallel_dgemm;
+    for (n, b) in [(24usize, 2usize), (24, 3)] {
+        let a = Mat::random(n, n, 910 + b as u64);
+        let bm = Mat::random(n, n, 920 + b as u64);
+        let c = Mat::random(n, n, 930 + b as u64);
+        let want = blas::level3::dgemm_ref(&a, &bm, &c);
+
+        let noc = parallel_dgemm(n, b, AeLevel::Ae5, &a, &bm, &c);
+        let err = rel_fro_error(noc.result.as_slice(), want.as_slice());
+        assert!(err < 1e-12, "NoC sim DGEMM n={n} b={b}: rel err {err}");
+
+        let mut co = Coordinator::new(CoordinatorConfig {
+            ae: AeLevel::Ae5,
+            b,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+            ..CoordinatorConfig::default()
+        });
+        let served = co.dgemm(&a, &bm, &c);
+        let err = rel_fro_error(served.c.as_slice(), noc.result.as_slice());
+        assert!(err < 1e-12, "serving vs NoC sim DGEMM n={n} b={b}: rel err {err}");
+    }
+}
+
+#[test]
 fn coordinator_serves_unaligned_shapes() {
     // The full request path (pad → cache → pool → merge) at an
     // awkward size on every tiled level.

@@ -1,0 +1,237 @@
+//! Fabric serving integration tests: the location-aware engine
+//! (`--fabric b`) must keep serving values pinned to the host reference,
+//! stay bit-deterministic run to run (same seed + placement ⇒ identical
+//! link-busy counts and makespan, including under replay batching), improve
+//! makespan monotonically with fabric order on a contended workload, and
+//! leave the `--fabric 0` (location-free) path untouched.
+
+use redefine_blas::blas;
+use redefine_blas::coordinator::request::{random_workload, repeated_gemm_workload, Request};
+use redefine_blas::coordinator::{Coordinator, CoordinatorConfig, OpenLoopOptions, Response};
+use redefine_blas::engine::traffic::{self, ArrivalKind, TrafficConfig};
+use redefine_blas::engine::{Engine, EngineConfig};
+use redefine_blas::noc::{FabricConfig, FabricStats, PlacePolicy};
+use redefine_blas::pe::AeLevel;
+use redefine_blas::util::{rel_fro_error, Mat};
+
+fn cfg(fabric: Option<FabricConfig>) -> CoordinatorConfig {
+    CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 2,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+        fabric,
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn fab(b: usize, place: PlacePolicy) -> Option<FabricConfig> {
+    Some(FabricConfig { place, ..FabricConfig::new(b) })
+}
+
+/// Exact (bit-level) equality of two response streams, values and costs.
+fn assert_identical(a: &[Response], b: &[Response]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.op, y.op);
+        assert_eq!(x.n, y.n);
+        assert_eq!(x.cycles, y.cycles, "{} n={}: cycles drifted", x.op, x.n);
+        assert_eq!(x.energy_j, y.energy_j);
+        assert_eq!(x.matrix, y.matrix);
+        assert_eq!(x.vector, y.vector);
+        assert_eq!(x.scalar, y.scalar);
+    }
+}
+
+/// Value-only equality: same results, costs free to differ (used to pin
+/// that placement policy is a *scheduling* decision, never a value one).
+fn assert_same_values(a: &[Response], b: &[Response]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.op, y.op);
+        assert_eq!(x.n, y.n);
+        assert_eq!(x.matrix, y.matrix);
+        assert_eq!(x.vector, y.vector);
+        assert_eq!(x.scalar, y.scalar);
+    }
+}
+
+#[test]
+fn fabric_off_matches_default_serving() {
+    // `--fabric 0` maps to `fabric: None`; pin that this is bit- and
+    // stat-identical to the pre-fabric coordinator (same code path, but
+    // the contract is now load-bearing for the CLI parity smoke).
+    let reqs = random_workload(10, 24, 5);
+    let mut base = Coordinator::new(cfg(None));
+    let mut off = Coordinator::new(CoordinatorConfig { fabric: None, ..cfg(None) });
+    let ra = base.serve_batch(reqs.clone());
+    let rb = off.serve_batch(reqs);
+    assert_identical(&ra, &rb);
+    assert!(off.fabric_stats().is_none(), "fabric off must report no fabric telemetry");
+    assert_eq!(
+        format!("{:?}", base.cache_stats()),
+        format!("{:?}", off.cache_stats()),
+        "cache stats drifted with fabric off"
+    );
+}
+
+#[test]
+fn fabric_serving_matches_host_reference() {
+    // Routed delivery reprices time, never values: every response on a
+    // fabric must still match the host reference BLAS at 1e-12, and the
+    // absolute fabric clock must advance across same-shape requests.
+    let n = 16;
+    let mut reqs: Vec<Request> = Vec::new();
+    let mut want: Vec<Mat> = Vec::new();
+    for s in 0..3u64 {
+        let a = Mat::random(n, n, 500 + s);
+        let b = Mat::random(n, n, 600 + s);
+        let c = Mat::random(n, n, 700 + s);
+        want.push(blas::level3::dgemm_ref(&a, &b, &c));
+        reqs.push(Request::Dgemm { a, b, c });
+    }
+    let x: Vec<f64> = (0..32).map(|i| 0.25 * i as f64).collect();
+    let y: Vec<f64> = (0..32).map(|i| 1.5 - 0.125 * i as f64).collect();
+    let dot = blas::level1::ddot(&x, &y);
+    reqs.push(Request::Ddot { x, y });
+
+    let mut co = Coordinator::new(cfg(fab(2, PlacePolicy::Locality)));
+    let resps = co.serve_batch(reqs);
+    assert_eq!(resps.len(), 4);
+    for (i, w) in want.iter().enumerate() {
+        let got = resps[i].matrix.as_ref().expect("dgemm matrix");
+        let err = rel_fro_error(got.as_slice(), w.as_slice());
+        assert!(err < 1e-12, "fabric DGEMM {i}: rel err {err}");
+        assert!(resps[i].cycles > 0);
+        if i > 0 {
+            assert!(
+                resps[i].cycles > resps[i - 1].cycles,
+                "fabric clock must advance across contended requests"
+            );
+        }
+    }
+    let got = resps[3].scalar.expect("ddot scalar");
+    assert!((got - dot).abs() <= 1e-12 * dot.abs().max(1.0), "fabric DDOT: {got} vs {dot}");
+
+    let fs = co.fabric_stats().expect("fabric telemetry");
+    assert_eq!(fs.b, 2);
+    assert_eq!(fs.place, PlacePolicy::Locality);
+    // 3 DGEMMs × 4 tiles + 1 DDOT measurement.
+    assert_eq!(fs.jobs_routed, 13);
+    assert!(fs.makespan > 0 && fs.max_link_busy > 0 && fs.comm_cycles > 0);
+}
+
+#[test]
+fn fabric_runs_are_deterministic() {
+    // Same seed + same placement ⇒ identical responses, per-link busy
+    // counts, tile occupancy, and makespan — run to run, regardless of
+    // host worker interleaving (routing happens at finalize time, which
+    // is strict submission order).
+    let run = |place: PlacePolicy| -> (Vec<Response>, FabricStats) {
+        let mut co = Coordinator::new(cfg(fab(3, place)));
+        let resps = co.serve_batch(random_workload(20, 28, 9));
+        let fs = co.fabric_stats().expect("fabric telemetry");
+        (resps, fs)
+    };
+    for place in [PlacePolicy::Locality, PlacePolicy::RoundRobin] {
+        let (ra, fa) = run(place);
+        let (rb, fb) = run(place);
+        assert_identical(&ra, &rb);
+        assert_eq!(fa, fb, "fabric stats drifted across identical runs ({place:?})");
+    }
+}
+
+#[test]
+fn fabric_determinism_holds_under_replay_batching() {
+    // The operand-batched replay fast path coalesces same-shape tiles
+    // across requests; it must leave routed schedules untouched (same
+    // cycles in ⇒ same schedule out).
+    let reqs = repeated_gemm_workload(12, 16, 7);
+    let mut plain = Coordinator::new(cfg(fab(2, PlacePolicy::Locality)));
+    let mut batched = Coordinator::new(CoordinatorConfig {
+        replay_batch: Some(8),
+        ..cfg(fab(2, PlacePolicy::Locality))
+    });
+    let ra = plain.serve_batch(reqs.clone());
+    let rb = batched.serve_batch(reqs);
+    assert_identical(&ra, &rb);
+    assert_eq!(
+        plain.fabric_stats().expect("plain fabric"),
+        batched.fabric_stats().expect("batched fabric"),
+        "replay batching changed the routed schedule"
+    );
+}
+
+#[test]
+fn bigger_fabric_improves_serving_makespan() {
+    // The scaling curve the bench records: same 64-tile-job workload, the
+    // only variable is fabric order — makespan must improve monotonically
+    // b = 1 → 2 → 3 → 4 while the job count stays fixed.
+    let mut spans = Vec::new();
+    for b in [1usize, 2, 3, 4] {
+        let mut co = Coordinator::new(cfg(fab(b, PlacePolicy::Locality)));
+        let _ = co.serve_batch(repeated_gemm_workload(16, 16, 3));
+        let fs = co.fabric_stats().expect("fabric telemetry");
+        assert_eq!(fs.jobs_routed, 64, "b={b}: workload must route 64 tile jobs");
+        assert!(fs.compute_comm_ratio() > 0.0);
+        spans.push((b, fs.makespan));
+    }
+    for w in spans.windows(2) {
+        let ((b0, m0), (b1, m1)) = (w[0], w[1]);
+        assert!(m1 < m0, "fabric {b1}x{b1} must beat {b0}x{b0}: {m1} vs {m0}");
+    }
+}
+
+#[test]
+fn placement_policy_never_changes_values() {
+    let reqs = random_workload(12, 24, 21);
+    let mut loc = Coordinator::new(cfg(fab(2, PlacePolicy::Locality)));
+    let mut rr = Coordinator::new(cfg(fab(2, PlacePolicy::RoundRobin)));
+    let ra = loc.serve_batch(reqs.clone());
+    let rb = rr.serve_batch(reqs);
+    assert_same_values(&ra, &rb);
+    assert_eq!(
+        loc.fabric_stats().expect("loc").jobs_routed,
+        rr.fabric_stats().expect("rr").jobs_routed
+    );
+}
+
+#[test]
+fn fabric_open_loop_accounting_holds() {
+    // Routed open-loop serving under bursty overload: every offered
+    // arrival is either served or explicitly shed, and the fabric routes
+    // at least one job per served request.
+    let mut co = Coordinator::new(CoordinatorConfig {
+        admission_window: Some(2),
+        queue_depth: Some(2),
+        ..cfg(fab(2, PlacePolicy::Locality))
+    });
+    let arrivals = traffic::generate(&TrafficConfig {
+        kind: ArrivalKind::Burst { size: 8 },
+        rate_rps: 4000.0,
+        duration_ns: 20_000_000,
+        max_n: 24,
+        ..TrafficConfig::default()
+    });
+    let report = co.serve_open_loop(arrivals, &OpenLoopOptions::default());
+    assert_eq!(report.stats.offered, report.stats.served + report.stats.shed);
+    assert!(report.stats.served > 0, "some arrivals must be served");
+    assert!(report.stats.shed > 0, "bursts of 8 into a depth-2 queue must shed");
+    let fs = co.fabric_stats().expect("fabric telemetry");
+    assert!(fs.jobs_routed >= report.stats.served as u64);
+}
+
+#[test]
+fn tenants_get_distinct_home_rows() {
+    // Home rows cycle through fabric rows in attach order, giving each
+    // tenant its own memory region for write-back consolidation.
+    let engine = Engine::new(EngineConfig {
+        fabric: fab(2, PlacePolicy::Locality),
+        ..EngineConfig::default()
+    });
+    let a = engine.tenant(cfg(None));
+    let b = engine.tenant(cfg(None));
+    let c = engine.tenant(cfg(None));
+    assert_eq!((a.home_row(), b.home_row(), c.home_row()), (0, 1, 0));
+    assert!(engine.fabric_stats().is_some());
+}
