@@ -20,8 +20,10 @@ use redefine_blas::coordinator::{
 use redefine_blas::engine::traffic::{self, Arrival, TrafficConfig};
 use redefine_blas::engine::{Engine, EngineConfig, SchedPolicy};
 use redefine_blas::metrics::{measure_gemm, Routine};
+use redefine_blas::obs::{BufferSink, NullSink, TraceSink};
 use redefine_blas::pe::{AeLevel, ExecMode, Pe, PeConfig, ScheduledProgram};
-use redefine_blas::util::{rel_fro_error, round_up, Mat};
+use redefine_blas::util::{json, rel_fro_error, round_up, Mat};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Collected (name, milliseconds-per-iteration) measurements, written out
@@ -41,29 +43,13 @@ impl Report {
         let mut s = String::from("{\n  \"bench\": \"hot_paths\",\n");
         s.push_str(&format!("  \"quick\": {},\n  \"results\": [\n", self.quick));
         for (i, (name, ms)) in self.entries.iter().enumerate() {
-            let esc = json_escape(name);
+            let esc = json::escape(name);
             let comma = if i + 1 < self.entries.len() { "," } else { "" };
             s.push_str(&format!("    {{\"name\": \"{esc}\", \"ms_per_iter\": {ms:.6}}}{comma}\n"));
         }
         s.push_str("  ]\n}\n");
         s
     }
-}
-
-/// JSON string escaping: `"` and `\` are escaped (not dropped, so entry
-/// names round-trip through the artifact), control characters become
-/// `\u00XX`.
-fn json_escape(s: &str) -> String {
-    let mut out = String::with_capacity(s.len());
-    for ch in s.chars() {
-        match ch {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out
 }
 
 fn timeit<F: FnMut()>(report: &mut Report, name: &str, iters: usize, mut f: F) -> f64 {
@@ -269,6 +255,18 @@ fn main() {
     //     compute-comm ratio / max-link-busy per point and asserts the
     //     makespan improves monotonically with fabric order.
     fabric_scaling_bench(&mut report, quick, AeLevel::Ae5);
+
+    // 14) Observability overhead: the warm repeated-shape DGEMM serve with
+    //     no trace sink (the default), with the event-dropping NullSink,
+    //     and with the buffering BufferSink. All three must produce
+    //     identical simulated observables; the sink-off run is asserted to
+    //     cost the same as the pre-obs serve path (loose band — host
+    //     timing), and the buffered capture's overhead is recorded.
+    if quick {
+        obs_overhead_bench(&mut report, 16, 16, 2, AeLevel::Ae5);
+    } else {
+        obs_overhead_bench(&mut report, 64, 32, 2, AeLevel::Ae5);
+    }
 
     if let Some(path) = json_path {
         std::fs::write(&path, report.to_json()).expect("write bench JSON");
@@ -899,6 +897,102 @@ fn open_loop_bench(report: &mut Report, quick: bool, ae: AeLevel) {
             );
         }
     }
+}
+
+/// Trace-sink overhead on the warm serve path (`obs.*`): the repeated-shape
+/// DGEMM workload served over warm caches by three coordinators — sink
+/// off (the shipping default), `NullSink` attached (events constructed
+/// then dropped), and `BufferSink` attached (events retained in memory).
+/// Tracing must be invisible in every simulated observable (values,
+/// cycles, energy); `obs.off_overhead_x` (NullSink vs sink-off wall-clock)
+/// is asserted to stay in a loose band around 1.0 — the sink-off path
+/// constructs no events at all, so attaching a dropping sink is the upper
+/// bound on what the default path could possibly pay — and
+/// `obs.overhead_x` records the full buffered-capture cost.
+fn obs_overhead_bench(report: &mut Report, requests: usize, n: usize, b: usize, ae: AeLevel) {
+    println!(
+        "\ntrace overhead: {requests} repeated-shape DGEMM requests, n={n}, {b}x{b} tiles, {ae}"
+    );
+    let mk = || {
+        Coordinator::new(CoordinatorConfig {
+            ae,
+            b,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+            ..CoordinatorConfig::default()
+        })
+    };
+    let reqs = repeated_gemm_workload(requests, n, 2025);
+
+    let mut off = mk();
+    let mut null = mk();
+    let mut buf = mk();
+    null.set_trace_sink(Arc::new(NullSink) as Arc<dyn TraceSink>);
+    let buffer = Arc::new(BufferSink::new());
+    buf.set_trace_sink(buffer.clone());
+    // Warm all three so the timed regions serve cache hits only, and drop
+    // the warm-up events so the capture below is just the timed batch.
+    let _ = off.serve_batch(repeated_gemm_workload(1, n, 1));
+    let _ = null.serve_batch(repeated_gemm_workload(1, n, 1));
+    let _ = buf.serve_batch(repeated_gemm_workload(1, n, 1));
+    let _ = buffer.take();
+
+    let t0 = Instant::now();
+    let r_off = off.serve_batch(reqs.clone());
+    let t_off = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let r_null = null.serve_batch(reqs.clone());
+    let t_null = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let r_buf = buf.serve_batch(reqs);
+    let t_buf = t0.elapsed().as_secs_f64();
+    let events = buffer.take().len();
+
+    assert_eq!(r_off.len(), r_null.len());
+    assert_eq!(r_off.len(), r_buf.len());
+    for (o, (nl, bf)) in r_off.iter().zip(r_null.iter().zip(&r_buf)) {
+        assert_eq!(o.cycles, nl.cycles, "NullSink changed simulated cycles");
+        assert_eq!(o.energy_j, nl.energy_j, "NullSink changed simulated energy");
+        assert_eq!(o.matrix, nl.matrix, "NullSink changed values");
+        assert_eq!(o.cycles, bf.cycles, "BufferSink changed simulated cycles");
+        assert_eq!(o.energy_j, bf.energy_j, "BufferSink changed simulated energy");
+        assert_eq!(o.matrix, bf.matrix, "BufferSink changed values");
+    }
+    assert!(events > 0, "BufferSink captured no events from a traced serve");
+
+    let off_x = t_null / t_off;
+    let buf_x = t_buf / t_off;
+    println!(
+        "{:<44} {:>10.3} ms total  ({:.1} req/s)",
+        "  sink off (default untraced path)",
+        t_off * 1e3,
+        requests as f64 / t_off
+    );
+    println!(
+        "{:<44} {:>10.3} ms total  ({:.2}x vs off)",
+        "  NullSink (emit + drop)",
+        t_null * 1e3,
+        off_x
+    );
+    println!(
+        "{:<44} {:>10.3} ms total  ({:.2}x vs off, {events} events)",
+        "  BufferSink (emit + retain)",
+        t_buf * 1e3,
+        buf_x
+    );
+    report.record("obs.no_sink_total_ms", t_off * 1e3);
+    report.record("obs.null_sink_total_ms", t_null * 1e3);
+    report.record("obs.buffer_sink_total_ms", t_buf * 1e3);
+    report.record("obs.off_overhead_x", off_x);
+    report.record("obs.overhead_x", buf_x);
+    report.record("obs.events_captured", events as f64);
+    // Event construction happens only behind an attached sink; even then it
+    // must stay noise-level. Loose band — these are host wall-clock ratios
+    // on a tens-of-ms batch, so allow generous scheduler jitter.
+    assert!(
+        (0.4..=2.5).contains(&off_x),
+        "NullSink serve diverged from the untraced path: {off_x:.3}x"
+    );
 }
 
 /// Fabric scaling curves: serve the repeated-shape DGEMM workload on

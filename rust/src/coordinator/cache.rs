@@ -160,6 +160,19 @@ impl CacheTally {
         self.evictions.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Raw `(hits, misses, evictions)` loads — the delta primitive the
+    /// tracing layer uses: the coordinator snapshots the tally around
+    /// staging one request and emits one typed cache event per increment
+    /// (the tally is tenant-private and staging runs on the dispatcher
+    /// thread, so the delta is exactly that request's cache traffic).
+    pub(crate) fn counts(&self) -> (u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.evictions.load(Ordering::Relaxed),
+        )
+    }
+
     /// Snapshot as [`CacheStats`]. `entries` is supplied by the caller
     /// (residency is a property of the shared cache, not of one tenant).
     pub fn snapshot(&self, entries: usize) -> CacheStats {

@@ -50,6 +50,7 @@ use crate::energy::PowerModel;
 use crate::engine::{Engine, EngineConfig, EngineShared, SchedPolicy};
 use crate::metrics::{Measurement, Routine};
 use crate::noc::{Coord, FabricConfig, FabricStats, LinkTraffic, RouterConfig, Topology};
+use crate::obs::{Event, EventKind, RollingLatency, TenantSnapshot, TraceSink};
 use crate::pe::{AeLevel, ExecMode, PeConfig, PeStats, ScheduledProgram};
 use crate::runtime::Runtime;
 use crate::util::{round_up, Mat};
@@ -321,6 +322,15 @@ pub struct Coordinator {
     tally: CacheTally,
     /// Telemetry of the last [`Coordinator::serve_batch`] call.
     last_batch: Option<BatchStats>,
+    /// Aggregate stats of the last [`Coordinator::serve_open_loop`] run.
+    pub(crate) last_open_loop: Option<OpenLoopStats>,
+    /// Rolling windowed latency histograms fed by open-loop serving (the
+    /// long-lived-daemon view; see [`crate::obs::WindowedHistogram`]).
+    pub(crate) rolling: RollingLatency,
+    /// Trace sink. `None` (the default) means no [`Event`] is ever
+    /// constructed — the untraced path is bit-identical to pre-tracing
+    /// serving (pinned by `tests/obs.rs`).
+    sink: Option<Arc<dyn TraceSink>>,
     /// This tenant's home fabric row (attach order modulo fabric rows):
     /// routed results consolidate in this row's memory tile, and the
     /// locality placer prefers tiles near it. 0 when no fabric is modeled.
@@ -369,7 +379,31 @@ impl Coordinator {
             pool,
             tally: CacheTally::default(),
             last_batch: None,
+            last_open_loop: None,
+            rolling: RollingLatency::daemon_default(),
+            sink: None,
             home_row,
+        }
+    }
+
+    /// Attach a trace sink: every subsequent serving call emits typed
+    /// [`Event`]s into it from the dispatcher thread, in deterministic
+    /// (simulated) order. Without a sink no event is ever constructed.
+    pub fn set_trace_sink(&mut self, sink: Arc<dyn TraceSink>) {
+        self.sink = Some(sink);
+    }
+
+    /// Whether a trace sink is attached.
+    pub(crate) fn traced(&self) -> bool {
+        self.sink.is_some()
+    }
+
+    /// Emit one trace event. The closure runs only when a sink is
+    /// attached, so the untraced path pays a single branch and never
+    /// builds the event.
+    pub(crate) fn trace(&self, f: impl FnOnce() -> Event) {
+        if let Some(sink) = self.sink.as_ref() {
+            sink.emit(f());
         }
     }
 
@@ -447,6 +481,31 @@ impl Coordinator {
         self.last_batch = Some(stats);
     }
 
+    /// Aggregate stats of the last [`Coordinator::serve_open_loop`] run,
+    /// if one ran.
+    pub fn last_open_loop_stats(&self) -> Option<OpenLoopStats> {
+        self.last_open_loop
+    }
+
+    /// Everything this tenant knows about itself, in one value: cache and
+    /// pool counters, the last batch / open-loop run's telemetry, the
+    /// rolling latency windows, and the engine's fabric view. Every
+    /// per-tenant number the CLI prints is derivable from this (the
+    /// engine-wide counterpart is [`crate::engine::Engine::snapshot`]).
+    pub fn snapshot(&self) -> TenantSnapshot {
+        TenantSnapshot {
+            home_row: self.home_row,
+            pool_size: self.pool_size(),
+            cache: self.cache_stats(),
+            shared_cache: self.shared_cache_stats(),
+            jobs: self.pool_job_counts(),
+            batch: self.last_batch,
+            open_loop: self.last_open_loop,
+            rolling: self.rolling.snapshot(),
+            fabric: self.fabric_stats(),
+        }
+    }
+
     /// Coordinated DGEMM: C ← A·B + C across the tile array.
     ///
     /// The problem is zero-padded to a multiple of 4b so each tile gets a
@@ -456,7 +515,7 @@ impl Coordinator {
     /// ([`CoordinatorConfig::residual`]), eligible non-4-aligned shapes
     /// run unpadded on one PE with the cached DOT2/3 kernel instead.
     pub fn dgemm(&mut self, a: &Mat, b: &Mat, c: &Mat) -> DgemmResult {
-        let pending = self.submit_dgemm(0, a, b, c);
+        let pending = self.submit_dgemm(SOLO_JOB_ID, a, b, c);
         let outs = self.collect_job(&pending);
         self.finish_dgemm(pending, outs, a, b, c)
     }
@@ -583,22 +642,23 @@ impl Coordinator {
         let ae = self.cfg.ae;
         let cache = &self.shared.cache;
         cache.record_miss(Some(&self.tally));
-        match spec.routine {
+        let job = match spec.routine {
             Routine::Dgemv => {
                 let sched = cache.gemv_quiet(spec.np, ae, Some(&self.tally));
-                self.pool.submit(Job::Gemv { job_id, n: spec.np, sched });
+                Job::Gemv { job_id, n: spec.np, sched }
             }
             routine => {
                 let sched = cache.level1_quiet(routine, spec.np, spec.alpha, ae, Some(&self.tally));
-                self.pool.submit(Job::Level1 {
-                    job_id,
-                    routine,
-                    n: spec.np,
-                    alpha: spec.alpha,
-                    sched,
-                });
+                Job::Level1 { job_id, routine, n: spec.np, alpha: spec.alpha, sched }
             }
-        }
+        };
+        self.trace(|| Event {
+            req: job_id,
+            sim: 0,
+            host_ns: None,
+            kind: EventKind::Dispatched { lane: self.pool.lane(), cost: job.cost_estimate() },
+        });
+        self.pool.submit(job);
     }
 
     /// Memoized measurement for `spec`, computed on a pool worker on first
@@ -610,7 +670,7 @@ impl Coordinator {
         }
         self.submit_measure(SOLO_JOB_ID, &spec);
         let meas = match self.pool.recv() {
-            Done::Measured { job_id, meas } => {
+            Done::Measured { job_id, meas, .. } => {
                 assert_eq!(job_id, SOLO_JOB_ID, "pool delivered a foreign measurement");
                 meas
             }
@@ -639,7 +699,7 @@ impl Coordinator {
         let mut slots: TileSlots = vec![None; count];
         for _ in 0..count {
             match self.recv_done() {
-                Done::GemmTile { job_id, tile_idx, out, stats } => {
+                Done::GemmTile { job_id, tile_idx, out, stats, .. } => {
                     assert_eq!(job_id, pending.job_id(), "pool delivered a foreign tile");
                     slots[tile_idx] = Some((out, stats));
                 }
@@ -696,6 +756,18 @@ impl Coordinator {
                         stats.cycles,
                         (m * m) as u64,
                     );
+                    self.trace(|| Event {
+                        req: pending.job_id,
+                        sim: job.depart,
+                        host_ns: None,
+                        kind: EventKind::FabricRouted {
+                            tile: job.tile,
+                            depart: job.depart,
+                            ready: job.ready,
+                            finish: job.finish,
+                            compute: job.compute,
+                        },
+                    });
                     (job.tile, job.ready, job.finish)
                 }
                 None => {

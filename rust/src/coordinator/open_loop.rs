@@ -28,6 +28,7 @@ use super::request::{Pipeline, Request, Response};
 use super::Coordinator;
 use crate::engine::latency::{Histogram, LatencySnapshot};
 use crate::engine::traffic::Arrival;
+use crate::obs::{Event, EventKind, NO_REQ};
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
@@ -208,6 +209,9 @@ impl Coordinator {
         let mut stats = OpenLoopStats { offered, ..OpenLoopStats::default() };
         let depth_cap = self.cfg.queue_depth;
         let byte_cap = self.cfg.shed_after_bytes;
+        // Each run restarts the rolling-window epoch: completion stamps
+        // below are ns from this run's start.
+        self.rolling.reset();
         let t0 = Instant::now();
 
         loop {
@@ -230,6 +234,14 @@ impl Coordinator {
                 match shed {
                     Some(reason) => {
                         stats.shed += 1;
+                        // Shed arrivals never got a request id — the event
+                        // carries the arrival's seq instead.
+                        self.trace(|| Event {
+                            req: NO_REQ,
+                            sim: 0,
+                            host_ns: None,
+                            kind: EventKind::Shed { seq: a.seq, reason },
+                        });
                         outcomes.push(OpenLoopOutcome::Rejected {
                             seq: a.seq,
                             arrival_ns: a.at_ns,
@@ -269,6 +281,17 @@ impl Coordinator {
                 if opts.slo_total_ns.is_some_and(|slo| total_ns > slo) {
                     stats.slo_violations += 1;
                 }
+                self.rolling.record(done_ns, queue_ns, service_ns, total_ns);
+                self.trace(|| Event {
+                    req: fin.id,
+                    sim: fin.resp.cycles,
+                    host_ns: None,
+                    kind: EventKind::Completed {
+                        queue_ns,
+                        service_ns,
+                        cycles: fin.resp.cycles,
+                    },
+                });
                 outcomes.push(OpenLoopOutcome::Served {
                     seq: fin.seq,
                     arrival_ns: fin.arrival_ns,
@@ -306,6 +329,7 @@ impl Coordinator {
         pipe.stats.requests = stats.served;
         pipe.stats.shed = stats.shed;
         self.set_last_batch_stats(pipe.stats);
+        self.last_open_loop = Some(stats);
         OpenLoopReport { outcomes, stats }
     }
 }

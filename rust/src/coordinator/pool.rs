@@ -46,6 +46,7 @@
 use crate::codegen::GemmLayout;
 use crate::engine::queue::{SchedPolicy, WrrQueue};
 use crate::metrics::{measure_gemv_sched_on, measure_level1_sched_on, Measurement, Routine};
+use crate::obs::Tier;
 use crate::pe::{AeLevel, ExecMode, ExecTier, Pe, PeConfig, PeStats, ReplayCtx, ScheduledProgram};
 use crate::util::Mat;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -143,12 +144,14 @@ impl Job {
     }
 }
 
-/// Result of one pooled job.
+/// Result of one pooled job. Carries the execution tier that really ran
+/// ([`Tier`], worker-side truth) so the tracing layer can re-emit it at
+/// finalize time in deterministic order.
 pub(crate) enum Done {
     /// A finished DGEMM tile.
-    GemmTile { job_id: u64, tile_idx: usize, out: Mat, stats: PeStats },
+    GemmTile { job_id: u64, tile_idx: usize, out: Mat, stats: PeStats, tier: Tier },
     /// A finished single-PE measurement (DGEMV or Level-1).
-    Measured { job_id: u64, meas: Measurement },
+    Measured { job_id: u64, meas: Measurement, tier: Tier },
 }
 
 /// Worker → client message: a finished job, or a caught worker panic
@@ -366,6 +369,12 @@ impl PoolClient {
         self.counts.snapshot()
     }
 
+    /// This tenant's scheduler lane index (attach order) — tagged onto
+    /// `Dispatched` trace events.
+    pub fn lane(&self) -> usize {
+        self.lane
+    }
+
     /// Workers in the shared pool this client submits to.
     pub fn worker_count(&self) -> usize {
         self.workers
@@ -440,6 +449,10 @@ fn run_job(
         ExecTier::Replayed => bump(|c| &c.replays),
         ExecTier::Combined => bump(|c| &c.combined_runs),
     };
+    let obs_tier = |tier: ExecTier| match tier {
+        ExecTier::Replayed => Tier::Replay,
+        ExecTier::Combined => Tier::Combined,
+    };
     match job {
         Job::GemmTile { job_id, tile_idx, sched, layout, gm } => {
             pe.reset(layout.gm_words());
@@ -448,20 +461,20 @@ fn run_job(
             let out = layout.unpack_c(&pe.gm, layout.m, layout.p);
             bump(|c| &c.gemm_tiles);
             tally_tier(tier);
-            vec![Done::GemmTile { job_id, tile_idx, out, stats }]
+            vec![Done::GemmTile { job_id, tile_idx, out, stats, tier: obs_tier(tier) }]
         }
         Job::Gemv { job_id, n, sched } => {
             let (meas, tier) = measure_gemv_sched_on(pe, n, sched.ae(), &sched, exec);
             bump(|c| &c.gemv);
             tally_tier(tier);
-            vec![Done::Measured { job_id, meas }]
+            vec![Done::Measured { job_id, meas, tier: obs_tier(tier) }]
         }
         Job::Level1 { job_id, routine, n, alpha, sched } => {
             let (meas, tier) =
                 measure_level1_sched_on(pe, routine, n, alpha, sched.ae(), &sched, exec);
             bump(|c| &c.level1);
             tally_tier(tier);
-            vec![Done::Measured { job_id, meas }]
+            vec![Done::Measured { job_id, meas, tier: obs_tier(tier) }]
         }
         Job::ReplayBatch { sched, layout, members } => {
             // Tier 2b: one fused value pass when the schedule is warm and
@@ -488,7 +501,13 @@ fn run_job(
                     let out = layout.unpack_c(&ctx.gm, layout.m, layout.p);
                     bump(|c| &c.gemm_tiles);
                     bump(|c| &c.replays);
-                    dones.push(Done::GemmTile { job_id, tile_idx, out, stats: stats.clone() });
+                    dones.push(Done::GemmTile {
+                        job_id,
+                        tile_idx,
+                        out,
+                        stats: stats.clone(),
+                        tier: Tier::Batched,
+                    });
                 }
             } else {
                 for (job_id, tile_idx, gm) in members {
@@ -498,7 +517,7 @@ fn run_job(
                     let out = layout.unpack_c(&pe.gm, layout.m, layout.p);
                     bump(|c| &c.gemm_tiles);
                     tally_tier(tier);
-                    dones.push(Done::GemmTile { job_id, tile_idx, out, stats });
+                    dones.push(Done::GemmTile { job_id, tile_idx, out, stats, tier: obs_tier(tier) });
                 }
             }
             dones
@@ -657,7 +676,7 @@ mod tests {
         let mut got = Vec::new();
         for _ in 0..2 {
             match client.recv() {
-                Done::Measured { job_id, meas } => got.push((job_id, meas)),
+                Done::Measured { job_id, meas, .. } => got.push((job_id, meas)),
                 Done::GemmTile { .. } => panic!("no tile submitted"),
             }
         }
@@ -948,7 +967,7 @@ mod tests {
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| bad.recv()));
         assert!(res.is_err(), "bad client must see its worker panic");
         match good.recv() {
-            Done::Measured { job_id, meas } => {
+            Done::Measured { job_id, meas, .. } => {
                 assert_eq!(job_id, 2);
                 assert_eq!(meas.latency(), want.latency(), "good client served after panic");
             }

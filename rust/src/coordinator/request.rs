@@ -28,6 +28,7 @@ use super::{
 use crate::codegen::layout::VecLayout;
 use crate::codegen::GemmLayout;
 use crate::metrics::{Measurement, Routine};
+use crate::obs::{Event, EventKind, Tier, NO_REQ};
 use crate::pe::{AeLevel, ScheduledProgram};
 use crate::util::{round_up, Mat, XorShift64};
 use std::collections::hash_map::Entry;
@@ -253,13 +254,16 @@ impl TileBatcher {
 
     /// Flush every accumulated group, full or not — called before blocking
     /// on pool results, so no staged tile is ever waited on while it still
-    /// sits unsubmitted in the coalescer.
+    /// sits unsubmitted in the coalescer. Groups ship ordered by their
+    /// oldest member's request id — the map is keyed by allocation
+    /// address, whose iteration order would otherwise vary run to run and
+    /// leak host nondeterminism into the dispatch order (and the trace
+    /// event log).
     fn drain(&mut self) -> Vec<Job> {
-        self.groups
-            .drain()
-            .filter(|(_, g)| !g.2.is_empty())
-            .map(|(_, (sched, layout, members))| seal_group(&sched, layout, members))
-            .collect()
+        let mut groups: Vec<_> =
+            self.groups.drain().map(|(_, g)| g).filter(|g| !g.2.is_empty()).collect();
+        groups.sort_unstable_by_key(|g| g.2.first().map(|m| m.0).unwrap_or(u64::MAX));
+        groups.into_iter().map(|(sched, layout, members)| seal_group(&sched, layout, members)).collect()
     }
 }
 
@@ -290,10 +294,15 @@ struct InFlight {
 /// Per-request slot of a batch, in submission order.
 enum Slot {
     /// DGEMM with tiles on the pool; complete when all tiles collected.
-    Dgemm { flight: Box<InFlight>, tiles: TileSlots, got: usize },
+    /// `tiers` stashes each collected tile's execution tier (with its tile
+    /// index, since workers race) for the `Executed` trace events emitted
+    /// at finalize.
+    Dgemm { flight: Box<InFlight>, tiles: TileSlots, got: usize, tiers: Vec<(usize, Tier)> },
     /// Level-1/2 request; complete when its measurement is available
-    /// (boxed: a `Measurement` carries full `PeStats` + `PeConfig`).
-    Meas { req: Request, meas: Option<Box<Measurement>> },
+    /// (boxed: a `Measurement` carries full `PeStats` + `PeConfig`). The
+    /// tier is set only for the request that paid the simulation — cache
+    /// hits and in-flight sharers executed nothing.
+    Meas { req: Request, meas: Option<Box<Measurement>>, tier: Option<Tier> },
 }
 
 impl Slot {
@@ -377,6 +386,9 @@ impl Pipeline {
 /// A finalized request leaving the [`Pipeline`], with the timestamps its
 /// latency decomposition needs.
 pub(crate) struct Finished {
+    /// Pipeline-issued request id — the [`crate::obs::ReqId`] its trace
+    /// events carry.
+    pub(crate) id: u64,
     pub(crate) seq: usize,
     pub(crate) arrival_ns: u64,
     pub(crate) admitted_ns: u64,
@@ -404,7 +416,7 @@ impl Coordinator {
             Request::RandomDgemm { .. } => unreachable!("materialize() resolved synthetics"),
             other => {
                 let meas = self.measure_blocking(meas_spec(&other, self.cfg.ae));
-                self.measured_response(other, meas)
+                self.measured_response(NO_REQ, other, meas)
             }
         }
     }
@@ -417,7 +429,7 @@ impl Coordinator {
     /// its operand stream + result write-back are priced on the mesh:
     /// `cycles` becomes the absolute fabric cycle the result lands instead
     /// of the kernel latency alone.
-    fn measured_response(&mut self, req: Request, meas: Measurement) -> Response {
+    fn measured_response(&mut self, id: u64, req: Request, meas: Measurement) -> Response {
         let operand_words = self.cfg.staged_bytes(&req) / 8;
         let result_words = match &req {
             Request::Dgemv { a, .. } => a.rows() as u64,
@@ -427,8 +439,23 @@ impl Coordinator {
         };
         let cycles = match self.shared.fabric.as_ref() {
             Some(fabric) => {
-                let mut fab = fabric.lock().expect("fabric lock");
-                fab.route_job(self.home_row, operand_words, meas.latency(), result_words).finish
+                let job = {
+                    let mut fab = fabric.lock().expect("fabric lock");
+                    fab.route_job(self.home_row, operand_words, meas.latency(), result_words)
+                };
+                self.trace(|| Event {
+                    req: id,
+                    sim: job.depart,
+                    host_ns: None,
+                    kind: EventKind::FabricRouted {
+                        tile: job.tile,
+                        depart: job.depart,
+                        ready: job.ready,
+                        finish: job.finish,
+                        compute: job.compute,
+                    },
+                });
+                job.finish
             }
             None => meas.latency(),
         };
@@ -518,6 +545,16 @@ impl Coordinator {
             // Finalize completed requests from the front, in submission
             // order, freeing admission slots and budget.
             while let Some(fin) = self.pop_ready(&mut pipe) {
+                self.trace(|| Event {
+                    req: fin.id,
+                    sim: fin.resp.cycles,
+                    host_ns: None,
+                    kind: EventKind::Completed {
+                        queue_ns: 0,
+                        service_ns: 0,
+                        cycles: fin.resp.cycles,
+                    },
+                });
                 resps.push(fin.resp);
             }
             // Refill freed slots before blocking, so the pool stays busy —
@@ -552,14 +589,27 @@ impl Coordinator {
     ) {
         let id = pipe.next_id;
         pipe.next_id += 1;
+        let req = req.materialize();
+        self.trace(|| Event {
+            req: id,
+            sim: 0,
+            host_ns: None,
+            kind: EventKind::Admitted { seq, op: req.name(), n: req.n(), bytes },
+        });
+        // Staging runs on the dispatcher thread, so the tenant tally's
+        // delta across it is exactly this request's cache traffic.
+        let cache_before = self.traced().then(|| self.tally.counts());
         let slot = self.stage(
             id,
-            req.materialize(),
+            req,
             &mut pipe.waiting,
             &mut pipe.submitted,
             &mut pipe.batcher,
             &mut pipe.stats,
         );
+        if let Some(before) = cache_before {
+            self.trace_cache_delta(id, before);
+        }
         pipe.inflight.push_back(Staged { id, bytes, seq, arrival_ns, admitted_ns, slot });
         pipe.staged_bytes += bytes;
         pipe.stats.peak_staged = pipe.stats.peak_staged.max(pipe.inflight.len());
@@ -577,40 +627,102 @@ impl Coordinator {
         let staged = pipe.inflight.pop_front().expect("front checked above");
         pipe.staged_bytes -= staged.bytes;
         Some(Finished {
+            id: staged.id,
             seq: staged.seq,
             arrival_ns: staged.arrival_ns,
             admitted_ns: staged.admitted_ns,
-            resp: self.finalize(staged.slot),
+            resp: self.finalize(staged.id, staged.slot),
         })
+    }
+
+    /// Emit one cache trace event per hit / miss / eviction this tenant's
+    /// tally gained since `before` (a [`super::cache::CacheTally::counts`]
+    /// snapshot taken on the dispatcher thread before staging).
+    fn trace_cache_delta(&self, id: u64, before: (u64, u64, u64)) {
+        let (h0, m0, e0) = before;
+        let (h1, m1, e1) = self.tally.counts();
+        for _ in h0..h1 {
+            self.trace(|| Event { req: id, sim: 0, host_ns: None, kind: EventKind::CacheHit });
+        }
+        for _ in m0..m1 {
+            self.trace(|| Event { req: id, sim: 0, host_ns: None, kind: EventKind::CacheMiss });
+        }
+        for _ in e0..e1 {
+            self.trace(|| Event { req: id, sim: 0, host_ns: None, kind: EventKind::CacheEvicted });
+        }
+    }
+
+    /// Submit one pool job, tracing a `Dispatched` event for every member
+    /// request it carries. A coalesced replay batch charges each member
+    /// its own share of the group's cost estimate.
+    fn submit_job(&mut self, job: Job) {
+        if self.traced() {
+            let lane = self.pool.lane();
+            let cost = job.cost_estimate();
+            match &job {
+                Job::ReplayBatch { members, .. } => {
+                    let each = cost / members.len().max(1) as u64;
+                    for (job_id, _, _) in members {
+                        let req = *job_id;
+                        self.trace(|| Event {
+                            req,
+                            sim: 0,
+                            host_ns: None,
+                            kind: EventKind::Dispatched { lane, cost: each },
+                        });
+                    }
+                }
+                Job::GemmTile { job_id, .. }
+                | Job::Gemv { job_id, .. }
+                | Job::Level1 { job_id, .. } => {
+                    let req = *job_id;
+                    self.trace(|| Event {
+                        req,
+                        sim: 0,
+                        host_ns: None,
+                        kind: EventKind::Dispatched { lane, cost },
+                    });
+                }
+            }
+        }
+        self.pool.submit(job);
     }
 
     /// Ship every partially filled coalescer group: a tile about to be
     /// waited on must already be on the pool.
     fn flush_staged(&mut self, pipe: &mut Pipeline) {
         for job in pipe.batcher.drain() {
-            self.pool.submit(job);
+            self.submit_job(job);
         }
     }
 
     /// Record one pooled result into its in-flight slot.
     fn absorb(&mut self, pipe: &mut Pipeline, done: Done) {
         match done {
-            Done::GemmTile { job_id, tile_idx, out, stats } => {
+            Done::GemmTile { job_id, tile_idx, out, stats, tier } => {
                 match slot_mut(&mut pipe.inflight, job_id) {
-                    Slot::Dgemm { tiles, got, .. } => {
+                    Slot::Dgemm { tiles, got, tiers, .. } => {
                         debug_assert!(tiles[tile_idx].is_none(), "duplicate tile");
                         tiles[tile_idx] = Some((out, stats));
+                        tiers.push((tile_idx, tier));
                         *got += 1;
                     }
                     Slot::Meas { .. } => unreachable!("tile for a non-DGEMM slot"),
                 }
             }
-            Done::Measured { job_id, meas } => {
+            Done::Measured { job_id, meas, tier } => {
                 let key = pipe.submitted.remove(&job_id).expect("measurement without a key");
                 self.cache().store_measurement(key, meas.clone());
                 for id in pipe.waiting.remove(&key).unwrap_or_default() {
                     match slot_mut(&mut pipe.inflight, id) {
-                        Slot::Meas { meas: m, .. } => *m = Some(Box::new(meas.clone())),
+                        // Only the submitter executed a kernel; sharers
+                        // attached to its result.
+                        Slot::Meas { meas: m, tier: t, .. } => {
+                            *m = Some(Box::new(meas.clone()));
+                            if id == job_id {
+                                *t = Some(tier);
+                            }
+                        }
                         Slot::Dgemm { .. } => unreachable!("measurement for a DGEMM slot"),
                     }
                 }
@@ -656,10 +768,15 @@ impl Coordinator {
             Request::Dgemm { a, b, c } => {
                 let (pending, staged) = self.prepare_dgemm(id, &a, &b, &c);
                 for job in batcher.add(staged) {
-                    self.pool.submit(job);
+                    self.submit_job(job);
                 }
                 let tiles = vec![None; pending.tile_count()];
-                Slot::Dgemm { flight: Box::new(InFlight { pending, a, b, c }), tiles, got: 0 }
+                Slot::Dgemm {
+                    flight: Box::new(InFlight { pending, a, b, c }),
+                    tiles,
+                    got: 0,
+                    tiers: Vec::new(),
+                }
             }
             Request::RandomDgemm { .. } => unreachable!("materialize() resolved synthetics"),
             other => {
@@ -685,7 +802,7 @@ impl Coordinator {
                         }
                     }
                 }
-                Slot::Meas { req: other, meas: meas.map(Box::new) }
+                Slot::Meas { req: other, meas: meas.map(Box::new), tier: None }
             }
         }
     }
@@ -701,18 +818,38 @@ impl Coordinator {
     }
 
     /// Merge one completed slot into its response.
-    fn finalize(&mut self, slot: Slot) -> Response {
+    fn finalize(&mut self, id: u64, slot: Slot) -> Response {
         match slot {
-            Slot::Dgemm { flight, tiles, .. } => {
+            Slot::Dgemm { flight, tiles, mut tiers, .. } => {
+                // Workers race, so tiles arrive in host order; report
+                // execution tiers in tile order to keep the event log's
+                // simulated view deterministic.
+                tiers.sort_unstable_by_key(|&(idx, _)| idx);
+                for (_, tier) in tiers {
+                    self.trace(|| Event {
+                        req: id,
+                        sim: 0,
+                        host_ns: None,
+                        kind: EventKind::Executed { tier },
+                    });
+                }
                 let InFlight { pending, a, b, c } = *flight;
                 let outs = seal_slots(tiles);
                 let n = a.rows();
                 let r = self.finish_dgemm(pending, outs, &a, &b, &c);
                 dgemm_response(n, r)
             }
-            Slot::Meas { req, meas } => {
+            Slot::Meas { req, meas, tier } => {
+                if let Some(tier) = tier {
+                    self.trace(|| Event {
+                        req: id,
+                        sim: 0,
+                        host_ns: None,
+                        kind: EventKind::Executed { tier },
+                    });
+                }
                 let meas = meas.expect("finalize() called on an incomplete slot");
-                self.measured_response(req, *meas)
+                self.measured_response(id, req, *meas)
             }
         }
     }

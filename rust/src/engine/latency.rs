@@ -94,6 +94,18 @@ impl Histogram {
         self.max
     }
 
+    /// Fold another histogram into this one. Merging is exact: because
+    /// buckets are fixed power-of-two ranges, merged quantiles equal the
+    /// quantiles of a single histogram fed both sample streams (the windowed
+    /// rollup in [`crate::obs`] depends on this).
+    pub fn merge(&mut self, other: &Histogram) {
+        for (dst, src) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *dst += src;
+        }
+        self.total += other.total;
+        self.max = self.max.max(other.max);
+    }
+
     /// Summarize into fixed percentiles.
     pub fn snapshot(&self) -> LatencySnapshot {
         LatencySnapshot {
@@ -179,6 +191,46 @@ mod tests {
         h.record(777);
         let s = h.snapshot();
         assert_eq!((s.p50, s.p95, s.p99, s.max), (777, 777, 777, 777));
+    }
+
+    #[test]
+    fn merged_quantiles_match_single_combined_histogram() {
+        // Two disjoint streams recorded separately then merged must report
+        // exactly the quantiles of one histogram fed both streams.
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut combined = Histogram::new();
+        let mut x = 17u64;
+        for i in 0..4000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = x >> 38;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            combined.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), combined.count());
+        assert_eq!(a.max_value(), combined.max_value());
+        for q in [0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(a.quantile(q), combined.quantile(q), "quantile {q} drifted");
+        }
+        assert_eq!(a.snapshot(), combined.snapshot());
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut h = Histogram::new();
+        h.record(10);
+        h.record(1000);
+        let before = h.snapshot();
+        h.merge(&Histogram::new());
+        assert_eq!(h.snapshot(), before);
+        let mut empty = Histogram::new();
+        empty.merge(&h);
+        assert_eq!(empty.snapshot(), before);
     }
 
     #[test]

@@ -53,6 +53,7 @@ use crate::coordinator::cache::ProgramCache;
 use crate::coordinator::pool::PoolCore;
 use crate::coordinator::{CacheStats, Coordinator, CoordinatorConfig, PoolJobCounts};
 use crate::noc::{Fabric, FabricConfig, FabricStats};
+use crate::obs::EngineSnapshot;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -266,6 +267,34 @@ impl Engine {
             .into_iter()
             .map(|(weight, served_cost)| LaneService { weight, served_cost })
             .collect()
+    }
+
+    /// Everything the engine knows about itself, in one value: worker and
+    /// tenant counts, the scheduling policy, shared cache and pool totals,
+    /// per-lane service, and the fabric view. Every engine-wide number the
+    /// CLI prints is derivable from this (the per-tenant counterpart is
+    /// [`Coordinator::snapshot`]).
+    ///
+    /// # Examples
+    ///
+    /// ```no_run
+    /// use redefine_blas::engine::{Engine, EngineConfig};
+    ///
+    /// let engine = Engine::new(EngineConfig::default());
+    /// let snap = engine.snapshot();
+    /// assert_eq!(snap.workers, 4);
+    /// assert!(snap.fabric.is_none(), "location-free pool by default");
+    /// ```
+    pub fn snapshot(&self) -> EngineSnapshot {
+        EngineSnapshot {
+            workers: self.worker_count(),
+            tenants: self.tenant_count(),
+            sched: self.sched(),
+            cache: self.cache_stats(),
+            jobs: self.pool_job_counts(),
+            lanes: self.lane_service(),
+            fabric: self.fabric_stats(),
+        }
     }
 }
 

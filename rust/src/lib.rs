@@ -25,7 +25,11 @@
 //! * [`engine`] — the process-wide multi-tenant serving engine: one shared
 //!   PE worker pool + one shared program cache behind per-tenant
 //!   coordinator handles, with weighted-fair scheduling across tenants;
-//! * [`metrics`] — CPF/FPC/Gflops-per-watt accounting and table printers.
+//! * [`metrics`] — CPF/FPC/Gflops-per-watt accounting and table printers;
+//! * [`obs`] — the observability layer: typed per-request event tracing
+//!   (`TraceSink`), per-request span reconstruction, unified
+//!   engine/tenant metric snapshots with rolling windowed latency
+//!   histograms, and JSONL / Chrome-trace exporters.
 
 pub mod blas;
 pub mod codegen;
@@ -36,6 +40,7 @@ pub mod engine;
 pub mod lapack;
 pub mod metrics;
 pub mod noc;
+pub mod obs;
 pub mod pe;
 pub mod platforms;
 pub mod runtime;

@@ -61,17 +61,26 @@
 //! contention, so reported cycles become communication + compute.
 //! `--fabric 0` (the default) keeps the location-free pool — identical to
 //! the pre-fabric serving path.
+//!
+//! `serve --trace-out FILE` attaches a per-tenant trace sink and writes
+//! the captured event log after the run: one JSON object per line by
+//! default (`--trace-format json`), or a Chrome trace-event file
+//! (`--trace-format chrome`) loadable in `chrome://tracing` / Perfetto.
+//! Without `--trace-out` no sink is attached and serving runs the exact
+//! untraced path. See `docs/OBSERVABILITY.md`.
 
 use redefine_blas::coordinator::{
-    request::random_workload, Coordinator, CoordinatorConfig, OpenLoopOptions, OpenLoopReport,
+    request::random_workload, Coordinator, CoordinatorConfig, OpenLoopOptions, OpenLoopStats,
 };
 use redefine_blas::engine::traffic::{self, ArrivalKind, TrafficConfig};
 use redefine_blas::engine::{Engine, EngineConfig, SchedPolicy};
 use redefine_blas::metrics::{gemm_sweep, PAPER_SIZES};
 use redefine_blas::noc::{FabricConfig, FabricStats, PlacePolicy};
+use redefine_blas::obs::{to_chrome, to_jsonl, BufferSink, Event};
 use redefine_blas::pe::{AeLevel, ExecMode, PeConfig};
 use redefine_blas::util::{Mat, XorShift64};
 use std::process::exit;
+use std::sync::Arc;
 
 /// The usage string; `docs/CLI.md` documents every flag listed here, and a
 /// unit test below asserts the two cannot drift apart.
@@ -82,11 +91,20 @@ const USAGE: &str = "usage: redefine <gemm|gemv|ddot|serve|sweep|artifacts> [--n
      [--replay-batch N] [--tenants N] [--weights w1,w2,...] \
      [--arrivals poisson|burst] [--rate R] [--duration-ms D] \
      [--queue-depth N] [--shed-after-bytes BYTES] [--slo-ms MS] \
-     [--fabric B] [--place locality|round-robin]";
+     [--fabric B] [--place locality|round-robin] \
+     [--trace-out PATH] [--trace-format json|chrome]";
 
 fn usage() -> ! {
     eprintln!("{USAGE}");
     exit(2)
+}
+
+/// On-disk layout for `--trace-out`: JSONL (one event object per line) or
+/// the Chrome trace-event array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum TraceFormat {
+    Json,
+    Chrome,
 }
 
 #[derive(Debug)]
@@ -117,6 +135,8 @@ struct Args {
     slo_ms: Option<u64>,
     fabric: usize,
     place: PlacePolicy,
+    trace_out: Option<String>,
+    trace_format: TraceFormat,
 }
 
 impl Args {
@@ -159,6 +179,8 @@ fn parse_args() -> Args {
         slo_ms: None,
         fabric: 0,
         place: PlacePolicy::Locality,
+        trace_out: None,
+        trace_format: TraceFormat::Json,
     };
     while let Some(flag) = it.next() {
         let mut val = || it.next().unwrap_or_else(|| usage());
@@ -223,6 +245,14 @@ fn parse_args() -> Args {
             }
             "--slo-ms" => a.slo_ms = Some(val().parse().unwrap_or_else(|_| usage())),
             "--fabric" => a.fabric = val().parse().unwrap_or_else(|_| usage()),
+            "--trace-out" => a.trace_out = Some(val()),
+            "--trace-format" => {
+                a.trace_format = match val().as_str() {
+                    "json" => TraceFormat::Json,
+                    "chrome" => TraceFormat::Chrome,
+                    _ => usage(),
+                }
+            }
             "--place" => {
                 a.place = match val().as_str() {
                     "locality" => PlacePolicy::Locality,
@@ -329,10 +359,15 @@ fn main() {
         "serve" if args.tenants > 1 => serve_multi_tenant(&args, &cfg),
         "serve" => {
             let mut co = Coordinator::new(cfg);
+            let sink = trace_sink(&args);
+            if let Some(s) = &sink {
+                co.set_trace_sink(s.clone());
+            }
             let reqs = random_workload(args.requests, args.max_n, 42);
             let t0 = std::time::Instant::now();
             let resps = if args.seq { co.serve(reqs) } else { co.serve_batch(reqs) };
             let wall = t0.elapsed();
+            let snap = co.snapshot();
             let total_cycles: u64 = resps.iter().map(|r| r.cycles).sum();
             let mode = if args.seq { "sequential" } else { "batched (pool + cache)" };
             println!(
@@ -341,7 +376,7 @@ fn main() {
                 wall.as_secs_f64() * 1e3,
                 total_cycles
             );
-            let cs = co.cache_stats();
+            let cs = snap.cache;
             println!(
                 "program cache: {} kernels resident, {} hits / {} misses / {} evictions; \
                  {} pool workers",
@@ -349,15 +384,15 @@ fn main() {
                 cs.hits,
                 cs.misses,
                 cs.evictions,
-                co.pool_size()
+                snap.pool_size
             );
-            let jc = co.pool_job_counts();
+            let jc = snap.jobs;
             println!(
                 "pool executed {} gemm tiles, {} gemv kernels, {} level-1 kernels \
                  ({} value-replayed / {} combined timing passes, {} coalesced replay batches)",
                 jc.gemm_tiles, jc.gemv, jc.level1, jc.replays, jc.combined_runs, jc.batched_replays
             );
-            if let Some(bs) = co.last_batch_stats() {
+            if let Some(bs) = snap.batch {
                 println!(
                     "admission: window {}, byte budget {}, peak {} staged / {} B packed, \
                      {} shared measurements",
@@ -368,11 +403,14 @@ fn main() {
                     bs.shared_measurements
                 );
             }
-            if let Some(fs) = co.fabric_stats() {
-                print_fabric(&fs);
+            if let Some(fs) = &snap.fabric {
+                print_fabric(fs);
             }
             for r in &resps {
                 println!("  {:<6} n={:<4} cycles={:<9} source={:?}", r.op, r.n, r.cycles, r.source);
+            }
+            if let Some(s) = &sink {
+                write_trace(&args, vec![(0, s.take())]);
             }
         }
         "sweep" => {
@@ -429,6 +467,35 @@ fn ms(ns: u64) -> f64 {
     ns as f64 / 1e6
 }
 
+/// One host-clock-stamping buffer sink when `--trace-out` is set; `None`
+/// otherwise, so the untraced serve path stays bit-identical.
+fn trace_sink(args: &Args) -> Option<Arc<BufferSink>> {
+    args.trace_out.as_ref().map(|_| Arc::new(BufferSink::with_host_clock()))
+}
+
+/// Serialize the per-tenant event groups in the requested `--trace-format`
+/// and write them to `--trace-out`.
+fn write_trace(args: &Args, groups: Vec<(usize, Vec<Event>)>) {
+    let Some(path) = &args.trace_out else { return };
+    let out = match args.trace_format {
+        TraceFormat::Json => to_jsonl(&groups),
+        TraceFormat::Chrome => to_chrome(&groups),
+    };
+    if let Err(e) = std::fs::write(path, out) {
+        eprintln!("failed to write trace to {path}: {e}");
+        exit(1);
+    }
+    let events: usize = groups.iter().map(|(_, evs)| evs.len()).sum();
+    println!(
+        "trace: {events} events from {} tenant(s) -> {path} [{}]",
+        groups.len(),
+        match args.trace_format {
+            TraceFormat::Json => "jsonl",
+            TraceFormat::Chrome => "chrome",
+        }
+    );
+}
+
 /// Fabric telemetry block: routed-job totals, compute/comm split, and the
 /// per-link utilization listing.
 fn print_fabric(fs: &FabricStats) {
@@ -458,9 +525,9 @@ fn print_fabric(fs: &FabricStats) {
 }
 
 /// Per-tenant open-loop report block: offered/served/shed accounting plus
-/// the queue/service/total latency percentiles.
-fn print_open_loop(label: &str, r: &OpenLoopReport) {
-    let s = &r.stats;
+/// the queue/service/total latency percentiles. Reads the stats slice of
+/// the tenant snapshot (`Coordinator::snapshot().open_loop`).
+fn print_open_loop(label: &str, s: &OpenLoopStats) {
     println!(
         "  {label}: offered {} -> served {} / shed {} (peak pending {} reqs / {} B); \
          slo violations {}",
@@ -502,11 +569,20 @@ fn serve_open_loop_cmd(args: &Args, base: &CoordinatorConfig) {
 
     if args.tenants == 1 {
         let mut co = Coordinator::new(base.clone());
+        let sink = trace_sink(args);
+        if let Some(s) = &sink {
+            co.set_trace_sink(s.clone());
+        }
         let t0 = std::time::Instant::now();
-        let report = co.serve_open_loop(traffic::generate(&base_traffic), &opts);
+        co.serve_open_loop(traffic::generate(&base_traffic), &opts);
         let wall = t0.elapsed();
-        print_open_loop("tenant 0", &report);
+        let snap = co.snapshot();
+        let stats = snap.open_loop.expect("open-loop run records its stats in the snapshot");
+        print_open_loop("tenant 0", &stats);
         println!("drained in {:.1} ms wall", wall.as_secs_f64() * 1e3);
+        if let Some(s) = &sink {
+            write_trace(args, vec![(0, s.take())]);
+        }
         return;
     }
 
@@ -518,13 +594,21 @@ fn serve_open_loop_cmd(args: &Args, base: &CoordinatorConfig) {
         sched: args.sched,
         fabric: args.fabric_cfg(),
     });
+    let sinks: Vec<Arc<BufferSink>> = match args.trace_out {
+        Some(_) => (0..args.tenants).map(|_| Arc::new(BufferSink::with_host_clock())).collect(),
+        None => Vec::new(),
+    };
     let tenants: Vec<(usize, AeLevel, u64, Coordinator)> = weights
         .iter()
         .enumerate()
         .map(|(i, &w)| {
             let ae = AeLevel::ALL[i % AeLevel::ALL.len()];
             let cfg = CoordinatorConfig { ae, ..base.clone() };
-            (i, ae, w, engine.tenant_weighted(cfg, w))
+            let mut co = engine.tenant_weighted(cfg, w);
+            if let Some(s) = sinks.get(i) {
+                co.set_trace_sink(s.clone());
+            }
+            (i, ae, w, co)
         })
         .collect();
     let total = args.tenants;
@@ -534,34 +618,39 @@ fn serve_open_loop_cmd(args: &Args, base: &CoordinatorConfig) {
             .into_iter()
             .map(|(i, ae, w, mut co)| {
                 let tcfg = base_traffic.for_tenant(i, total);
-                s.spawn(move || (i, ae, w, co.serve_open_loop(traffic::generate(&tcfg), &opts)))
+                s.spawn(move || {
+                    co.serve_open_loop(traffic::generate(&tcfg), &opts);
+                    (i, ae, w, co.snapshot())
+                })
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("tenant thread panicked")).collect()
     });
     let wall = t0.elapsed();
     reports.sort_by_key(|r| r.0);
+    let es = engine.snapshot();
     println!(
         "{} tenants drained in {:.1} ms wall on {} shared workers",
         reports.len(),
         wall.as_secs_f64() * 1e3,
-        engine.worker_count()
+        es.workers
     );
-    let service = engine.lane_service();
-    for (i, ae, w, report) in &reports {
+    for (i, ae, w, snap) in &reports {
+        let stats = snap.open_loop.expect("open-loop run records its stats in the snapshot");
         print_open_loop(
-            &format!("tenant {i} [{ae}, weight {w}, {} est. cycles]", service[*i].served_cost),
-            report,
+            &format!("tenant {i} [{ae}, weight {w}, {} est. cycles]", es.lanes[*i].served_cost),
+            &stats,
         );
     }
-    let cs = engine.cache_stats();
+    let cs = es.cache;
     println!(
         "shared cache: {} kernels resident, {} hits / {} misses / {} evictions",
         cs.entries, cs.hits, cs.misses, cs.evictions
     );
-    if let Some(fs) = engine.fabric_stats() {
-        print_fabric(&fs);
+    if let Some(fs) = &es.fabric {
+        print_fabric(fs);
     }
+    write_trace(args, sinks.iter().enumerate().map(|(i, s)| (i, s.take())).collect());
 }
 
 /// Multi-tenant serve: one shared engine (worker pool + program cache)
@@ -577,13 +666,21 @@ fn serve_multi_tenant(args: &Args, base: &CoordinatorConfig) {
         sched: args.sched,
         fabric: args.fabric_cfg(),
     });
+    let sinks: Vec<Arc<BufferSink>> = match args.trace_out {
+        Some(_) => (0..args.tenants).map(|_| Arc::new(BufferSink::with_host_clock())).collect(),
+        None => Vec::new(),
+    };
     let tenants: Vec<(usize, AeLevel, u64, Coordinator)> = weights
         .iter()
         .enumerate()
         .map(|(i, &w)| {
             let ae = AeLevel::ALL[i % AeLevel::ALL.len()];
             let cfg = CoordinatorConfig { ae, ..base.clone() };
-            (i, ae, w, engine.tenant_weighted(cfg, w))
+            let mut co = engine.tenant_weighted(cfg, w);
+            if let Some(s) = sinks.get(i) {
+                co.set_trace_sink(s.clone());
+            }
+            (i, ae, w, co)
         })
         .collect();
     let (requests, max_n, seq) = (args.requests, args.max_n, args.seq);
@@ -596,7 +693,7 @@ fn serve_multi_tenant(args: &Args, base: &CoordinatorConfig) {
                     let reqs = random_workload(requests, max_n, 42 + i as u64);
                     let resps = if seq { co.serve(reqs) } else { co.serve_batch(reqs) };
                     let cycles: u64 = resps.iter().map(|r| r.cycles).sum();
-                    (i, ae, w, resps.len(), cycles, co.cache_stats(), co.pool_job_counts())
+                    (i, ae, w, resps.len(), cycles, co.snapshot())
                 })
             })
             .collect();
@@ -604,32 +701,32 @@ fn serve_multi_tenant(args: &Args, base: &CoordinatorConfig) {
     });
     let wall = t0.elapsed();
     reports.sort_by_key(|r| r.0);
+    let es = engine.snapshot();
     println!(
         "served {} tenants x {requests} requests in {:.1} ms wall on {} shared workers \
          [{:?} scheduler]",
         reports.len(),
         wall.as_secs_f64() * 1e3,
-        engine.worker_count(),
-        engine.sched()
+        es.workers,
+        es.sched
     );
-    let service = engine.lane_service();
-    for (i, ae, w, served, cycles, cs, jc) in &reports {
+    for (i, ae, w, served, cycles, snap) in &reports {
         println!(
             "  tenant {i} [{ae}, weight {w}]: {served} served, {cycles} simulated cycles \
              ({} est. cycles dispatched); \
              cache {} hits / {} misses / {} evictions; \
              pool {} tiles / {} gemv / {} level-1",
-            service[*i].served_cost,
-            cs.hits,
-            cs.misses,
-            cs.evictions,
-            jc.gemm_tiles,
-            jc.gemv,
-            jc.level1
+            es.lanes[*i].served_cost,
+            snap.cache.hits,
+            snap.cache.misses,
+            snap.cache.evictions,
+            snap.jobs.gemm_tiles,
+            snap.jobs.gemv,
+            snap.jobs.level1
         );
     }
-    let cs = engine.cache_stats();
-    let jc = engine.pool_job_counts();
+    let cs = es.cache;
+    let jc = es.jobs;
     println!(
         "shared cache: {} kernels resident, {} hits / {} misses / {} evictions",
         cs.entries, cs.hits, cs.misses, cs.evictions
@@ -639,9 +736,10 @@ fn serve_multi_tenant(args: &Args, base: &CoordinatorConfig) {
          ({} value-replayed / {} combined timing passes, {} coalesced replay batches)",
         jc.gemm_tiles, jc.gemv, jc.level1, jc.replays, jc.combined_runs, jc.batched_replays
     );
-    if let Some(fs) = engine.fabric_stats() {
-        print_fabric(&fs);
+    if let Some(fs) = &es.fabric {
+        print_fabric(fs);
     }
+    write_trace(args, sinks.iter().enumerate().map(|(i, s)| (i, s.take())).collect());
 }
 
 #[cfg(test)]
@@ -680,6 +778,8 @@ mod tests {
             "--slo-ms",
             "--fabric",
             "--place",
+            "--trace-out",
+            "--trace-format",
         ];
         for flag in documented {
             assert!(USAGE.contains(flag), "usage string is missing `{flag}`");

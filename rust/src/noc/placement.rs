@@ -86,6 +86,10 @@ pub struct RoutedJob {
     pub ready: u64,
     /// Cycle the result write-back completed.
     pub finish: u64,
+    /// PE compute cycles the job burned on its tile — carried so the
+    /// schedule is self-contained (`finish - depart - compute` bounds the
+    /// job's communication + wait share).
+    pub compute: u64,
 }
 
 /// Snapshot of fabric telemetry (see [`Fabric::stats`]).
@@ -239,7 +243,7 @@ impl Fabric {
         self.compute_cycles += compute_cycles;
         self.comm_cycles += (arrive - depart) + (finish - wb_depart);
         self.makespan = self.makespan.max(finish);
-        RoutedJob { tile, depart, ready, finish }
+        RoutedJob { tile, depart, ready, finish, compute: compute_cycles }
     }
 
     /// Telemetry snapshot.

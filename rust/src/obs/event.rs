@@ -1,0 +1,413 @@
+//! Typed trace events and per-request span reconstruction.
+//!
+//! Every stage of the serving path emits one [`Event`] per observable
+//! transition — admission, shedding, cache traffic, dispatch, execution
+//! tier, fabric routing, completion — all tagged with the request's
+//! [`ReqId`] (the pipeline's dense job id) and carrying **dual
+//! timestamps**: a simulated-cycle anchor (`sim`, deterministic run to
+//! run) and an optional host-nanosecond stamp (`host_ns`, present only
+//! when the sink opted into the host clock, never deterministic).
+//!
+//! All events are emitted from the coordinator's dispatcher thread —
+//! admission, staging and finalization run there in strict submission
+//! order — so the emission order of a closed-loop (`serve_batch`) run is
+//! deterministic run to run. Worker-side truth (which execution tier ran
+//! a tile) travels back inside `Done` messages and is re-emitted at
+//! finalize time, sorted by tile index, to keep the log independent of
+//! host worker interleaving. [`Event::sim_signature`] renders exactly the
+//! run-deterministic fields; the `tests/obs.rs` suite pins two identically
+//! seeded runs to identical signature sequences.
+
+use crate::coordinator::ShedReason;
+use crate::noc::Coord;
+
+/// Per-request trace id: the serving pipeline's dense job id (`u64`),
+/// assigned at admission and threaded through `Job`/`Done`/`RoutedJob`.
+pub type ReqId = u64;
+
+/// The id of events that precede id assignment (a shed arrival never
+/// enters the pipeline) or of untraced solo work. Matches the pipeline's
+/// reserved solo job id, so solo blocking calls are naturally untagged.
+pub const NO_REQ: ReqId = u64::MAX;
+
+/// Which execution tier ran a kernel on a pool worker (see the PR 3/6
+/// two-tier split): value-only replay, operand-batched replay, or the
+/// full combined interpreter (cold kernels and `ExecMode::Combined`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Tier-2 value replay of a memoized schedule (`Pe::replay`).
+    Replay,
+    /// Tier-2b operand-batched replay (`pe::replay_batch` member).
+    Batched,
+    /// Combined functional+timing interpreter (first-touch or forced).
+    Combined,
+}
+
+impl Tier {
+    /// Stable lowercase name (used by the exporters).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Replay => "replay",
+            Tier::Batched => "batched",
+            Tier::Combined => "combined",
+        }
+    }
+}
+
+/// One typed trace event.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Event {
+    /// The request this event belongs to ([`NO_REQ`] for shed arrivals).
+    pub req: ReqId,
+    /// Simulated-cycle anchor: the fabric departure cycle for routed jobs,
+    /// the response's completion cycles for `Completed`, 0 where no
+    /// simulated clock applies. Deterministic run to run.
+    pub sim: u64,
+    /// Host wall-clock nanoseconds since the sink's epoch, when the sink
+    /// runs with the host clock enabled. Never deterministic; excluded
+    /// from [`Event::sim_signature`].
+    pub host_ns: Option<u64>,
+    /// What happened.
+    pub kind: EventKind,
+}
+
+/// Event payloads, one variant per observable serving transition.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// The request entered the pipeline (operands about to be staged).
+    Admitted {
+        /// Submission-order sequence number within the serve call.
+        seq: usize,
+        /// Routine name (`"dgemm"`, `"ddot"`, …).
+        op: &'static str,
+        /// Problem size.
+        n: usize,
+        /// Packed-GM admission price of the request, in bytes.
+        bytes: u64,
+    },
+    /// An open-loop arrival was rejected before admission.
+    Shed {
+        /// Arrival sequence number (the would-be outcome seq).
+        seq: usize,
+        /// Which backpressure rule rejected it.
+        reason: ShedReason,
+    },
+    /// Staging this request hit a warm program-cache entry.
+    CacheHit,
+    /// Staging this request missed the program cache (kernel emitted).
+    CacheMiss,
+    /// Staging this request evicted a resident kernel.
+    CacheEvicted,
+    /// A pool job for this request entered the shared worker queue.
+    Dispatched {
+        /// The tenant's scheduler lane.
+        lane: usize,
+        /// Estimated simulated-cycle cost at submission (repriced at
+        /// dispatch; excluded from the deterministic signature because a
+        /// cold kernel's estimate depends on the timing-pass race).
+        cost: u64,
+    },
+    /// A pool worker finished a kernel for this request.
+    Executed {
+        /// Which execution tier ran it.
+        tier: Tier,
+    },
+    /// A finalized job was placed and priced on the modeled fabric.
+    FabricRouted {
+        /// The compute tile the job ran on.
+        tile: Coord,
+        /// Absolute fabric cycle the operand stream departed.
+        depart: u64,
+        /// Cycle the operands finished arriving (compute starts).
+        ready: u64,
+        /// Cycle the result landed in the home memory region.
+        finish: u64,
+        /// Pure PE compute cycles within `[ready, finish]`.
+        compute: u64,
+    },
+    /// The response was finalized and handed back.
+    Completed {
+        /// Host nanoseconds spent queued (arrival → admission); 0 in
+        /// closed-loop serving, which admits on demand.
+        queue_ns: u64,
+        /// Host nanoseconds from admission to completion; 0 in
+        /// closed-loop serving.
+        service_ns: u64,
+        /// The response's simulated cost (fabric completion time under a
+        /// fabric, PE makespan otherwise).
+        cycles: u64,
+    },
+}
+
+impl EventKind {
+    /// Stable lowercase tag (the `ev` key of the JSONL schema).
+    pub fn tag(&self) -> &'static str {
+        match self {
+            EventKind::Admitted { .. } => "admitted",
+            EventKind::Shed { .. } => "shed",
+            EventKind::CacheHit => "cache_hit",
+            EventKind::CacheMiss => "cache_miss",
+            EventKind::CacheEvicted => "cache_evicted",
+            EventKind::Dispatched { .. } => "dispatched",
+            EventKind::Executed { .. } => "executed",
+            EventKind::FabricRouted { .. } => "fabric_routed",
+            EventKind::Completed { .. } => "completed",
+        }
+    }
+}
+
+impl Event {
+    /// Render exactly the run-deterministic fields of this event: request
+    /// id, simulated-cycle anchor, and the payload minus host-derived
+    /// values (`host_ns`, queue/service latencies) and minus the
+    /// dispatch-cost estimate (racy for cold kernels). Two identically
+    /// seeded closed-loop runs produce identical signature sequences —
+    /// pinned by `tests/obs.rs`.
+    pub fn sim_signature(&self) -> String {
+        let body = match &self.kind {
+            EventKind::Admitted { seq, op, n, bytes } => {
+                format!("admitted seq={seq} op={op} n={n} bytes={bytes}")
+            }
+            EventKind::Shed { seq, reason } => format!("shed seq={seq} reason={reason:?}"),
+            EventKind::CacheHit => "cache_hit".into(),
+            EventKind::CacheMiss => "cache_miss".into(),
+            EventKind::CacheEvicted => "cache_evicted".into(),
+            EventKind::Dispatched { lane, .. } => format!("dispatched lane={lane}"),
+            EventKind::Executed { tier } => format!("executed tier={}", tier.name()),
+            EventKind::FabricRouted { tile, depart, ready, finish, compute } => format!(
+                "fabric_routed tile={},{} depart={depart} ready={ready} finish={finish} \
+                 compute={compute}",
+                tile.row, tile.col
+            ),
+            EventKind::Completed { cycles, .. } => format!("completed cycles={cycles}"),
+        };
+        format!("req={} sim={} {}", self.req, self.sim, body)
+    }
+}
+
+/// One request's lifecycle, reconstructed from its events: queue/service
+/// wall time, simulated compute-vs-communication split, cache traffic and
+/// execution tiers. Built by [`response_traces`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseTrace {
+    /// The request id the events were grouped by.
+    pub req: ReqId,
+    /// Submission sequence number (from `Admitted`, when present).
+    pub seq: Option<usize>,
+    /// Routine name (from `Admitted`).
+    pub op: Option<&'static str>,
+    /// Problem size (from `Admitted`).
+    pub n: usize,
+    /// Packed-GM admission price, bytes (from `Admitted`).
+    pub bytes: u64,
+    /// Host ns queued before admission (0 in closed-loop serving).
+    pub queue_ns: u64,
+    /// Host ns from admission to completion (0 in closed-loop serving).
+    pub service_ns: u64,
+    /// `queue_ns + service_ns` — must equal the open-loop outcome's total
+    /// latency (pinned by `tests/obs.rs`).
+    pub total_ns: u64,
+    /// The response's simulated cost (from `Completed`).
+    pub cycles: u64,
+    /// Pure PE compute cycles: the sum over routed jobs on a fabric, the
+    /// response cycles themselves off-fabric (where delivery is free).
+    pub compute_cycles: u64,
+    /// Communication cycles: Σ over routed jobs of
+    /// `(finish − depart) − compute`. 0 off-fabric.
+    pub comm_cycles: u64,
+    /// Cache hits / misses / evictions charged to staging this request.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    /// Pool jobs dispatched / kernel executions observed.
+    pub dispatched: usize,
+    /// Execution tiers, in tile order.
+    pub tiers: Vec<Tier>,
+    /// Whether a `Completed` event was seen.
+    pub completed: bool,
+}
+
+impl ResponseTrace {
+    fn new(req: ReqId) -> Self {
+        Self {
+            req,
+            seq: None,
+            op: None,
+            n: 0,
+            bytes: 0,
+            queue_ns: 0,
+            service_ns: 0,
+            total_ns: 0,
+            cycles: 0,
+            compute_cycles: 0,
+            comm_cycles: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            cache_evictions: 0,
+            dispatched: 0,
+            tiers: Vec::new(),
+            completed: false,
+        }
+    }
+}
+
+/// Group a flat event log into per-request spans, in first-seen request
+/// order. Shed events ([`NO_REQ`]) are skipped — they never became
+/// requests; count them directly from the log instead.
+pub fn response_traces(events: &[Event]) -> Vec<ResponseTrace> {
+    let mut order: Vec<ReqId> = Vec::new();
+    let mut traces: std::collections::HashMap<ReqId, ResponseTrace> =
+        std::collections::HashMap::new();
+    let mut routed_compute: std::collections::HashMap<ReqId, u64> =
+        std::collections::HashMap::new();
+    for ev in events {
+        if ev.req == NO_REQ {
+            continue;
+        }
+        let t = traces.entry(ev.req).or_insert_with(|| {
+            order.push(ev.req);
+            ResponseTrace::new(ev.req)
+        });
+        match &ev.kind {
+            EventKind::Admitted { seq, op, n, bytes } => {
+                t.seq = Some(*seq);
+                t.op = Some(*op);
+                t.n = *n;
+                t.bytes = *bytes;
+            }
+            EventKind::Shed { .. } => {}
+            EventKind::CacheHit => t.cache_hits += 1,
+            EventKind::CacheMiss => t.cache_misses += 1,
+            EventKind::CacheEvicted => t.cache_evictions += 1,
+            EventKind::Dispatched { .. } => t.dispatched += 1,
+            EventKind::Executed { tier } => t.tiers.push(*tier),
+            EventKind::FabricRouted { depart, finish, compute, .. } => {
+                t.compute_cycles += compute;
+                t.comm_cycles += (finish - depart).saturating_sub(*compute);
+                *routed_compute.entry(ev.req).or_insert(0) += compute;
+            }
+            EventKind::Completed { queue_ns, service_ns, cycles } => {
+                t.queue_ns = *queue_ns;
+                t.service_ns = *service_ns;
+                t.total_ns = queue_ns + service_ns;
+                t.cycles = *cycles;
+                t.completed = true;
+            }
+        }
+    }
+    let mut out = Vec::with_capacity(order.len());
+    for req in order {
+        let mut t = traces.remove(&req).expect("trace grouped above");
+        // Off-fabric there are no routed jobs: operand delivery is free,
+        // so the whole simulated cost is compute.
+        if !routed_compute.contains_key(&req) {
+            t.compute_cycles = t.cycles;
+            t.comm_cycles = 0;
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(req: ReqId, kind: EventKind) -> Event {
+        Event { req, sim: 0, host_ns: None, kind }
+    }
+
+    #[test]
+    fn traces_group_by_request_in_first_seen_order() {
+        let log = vec![
+            ev(7, EventKind::Admitted { seq: 0, op: "dgemm", n: 16, bytes: 1024 }),
+            ev(9, EventKind::Admitted { seq: 1, op: "ddot", n: 32, bytes: 512 }),
+            ev(7, EventKind::CacheMiss),
+            ev(7, EventKind::Dispatched { lane: 0, cost: 10 }),
+            ev(9, EventKind::CacheHit),
+            ev(7, EventKind::Executed { tier: Tier::Combined }),
+            ev(7, EventKind::Completed { queue_ns: 0, service_ns: 0, cycles: 400 }),
+            ev(9, EventKind::Completed { queue_ns: 5, service_ns: 7, cycles: 90 }),
+        ];
+        let traces = response_traces(&log);
+        assert_eq!(traces.len(), 2);
+        assert_eq!(traces[0].req, 7);
+        assert_eq!(traces[0].op, Some("dgemm"));
+        assert_eq!(traces[0].cache_misses, 1);
+        assert_eq!(traces[0].dispatched, 1);
+        assert_eq!(traces[0].tiers, vec![Tier::Combined]);
+        assert!(traces[0].completed);
+        // Off-fabric: all simulated cost is compute.
+        assert_eq!((traces[0].compute_cycles, traces[0].comm_cycles), (400, 0));
+        assert_eq!(traces[1].req, 9);
+        assert_eq!(traces[1].total_ns, 12);
+        assert_eq!(traces[1].queue_ns + traces[1].service_ns, traces[1].total_ns);
+    }
+
+    #[test]
+    fn fabric_events_split_compute_from_comm() {
+        let log = vec![
+            ev(3, EventKind::Admitted { seq: 0, op: "dgemm", n: 16, bytes: 1024 }),
+            Event {
+                req: 3,
+                sim: 100,
+                host_ns: None,
+                kind: EventKind::FabricRouted {
+                    tile: Coord::new(0, 1),
+                    depart: 100,
+                    ready: 140,
+                    finish: 400,
+                    compute: 200,
+                },
+            },
+            Event {
+                req: 3,
+                sim: 500,
+                host_ns: None,
+                kind: EventKind::FabricRouted {
+                    tile: Coord::new(1, 0),
+                    depart: 500,
+                    ready: 520,
+                    finish: 800,
+                    compute: 250,
+                },
+            },
+            ev(3, EventKind::Completed { queue_ns: 0, service_ns: 0, cycles: 800 }),
+        ];
+        let t = &response_traces(&log)[0];
+        assert_eq!(t.compute_cycles, 450);
+        // (400-100-200) + (800-500-250) = 100 + 50.
+        assert_eq!(t.comm_cycles, 150);
+        assert_eq!(t.cycles, 800);
+    }
+
+    #[test]
+    fn shed_events_are_not_requests() {
+        let log = vec![Event {
+            req: NO_REQ,
+            sim: 0,
+            host_ns: None,
+            kind: EventKind::Shed { seq: 4, reason: ShedReason::QueueDepth },
+        }];
+        assert!(response_traces(&log).is_empty());
+    }
+
+    #[test]
+    fn sim_signature_excludes_host_and_racy_fields() {
+        let a = Event {
+            req: 1,
+            sim: 9,
+            host_ns: Some(123),
+            kind: EventKind::Dispatched { lane: 2, cost: 777 },
+        };
+        let b = Event {
+            req: 1,
+            sim: 9,
+            host_ns: Some(999_999),
+            kind: EventKind::Dispatched { lane: 2, cost: 1 },
+        };
+        assert_eq!(a.sim_signature(), b.sim_signature());
+        assert!(a.sim_signature().contains("lane=2"));
+        assert!(!a.sim_signature().contains("777"));
+    }
+}

@@ -1,0 +1,293 @@
+//! Event-log exporters: JSON Lines (one event per line, the
+//! `--trace-out` default) and Chrome trace-event JSON (`--trace-format
+//! chrome`, loadable in Perfetto / `chrome://tracing`).
+//!
+//! Both exporters are hand-rolled (the crate stays serde-free) and route
+//! every string through [`crate::util::json::escape`] — the same escaping
+//! the `hot_paths` bench writer uses.
+//!
+//! Chrome-trace layout: per tenant, one *requests* process (pid
+//! `100 + tenant`) whose complete (`"ph":"X"`) spans run on the **host
+//! clock** (µs since the sink epoch, one track per request sequence
+//! number), and one *fabric* process (pid `200 + tenant`) whose spans run
+//! on the **simulated fabric clock** rendered as 1 cycle = 1 µs, one
+//! track per fabric tile — a routed run renders as a per-tile timeline.
+//! Request spans need host timestamps, so they appear only for sinks
+//! built with the host clock; fabric spans are purely simulated and
+//! always export.
+
+use super::event::{Event, EventKind, NO_REQ};
+use crate::coordinator::ShedReason;
+use crate::util::json::escape;
+
+fn shed_reason_name(r: ShedReason) -> &'static str {
+    match r {
+        ShedReason::QueueDepth => "queue_depth",
+        ShedReason::QueueBytes => "queue_bytes",
+    }
+}
+
+/// Shared JSONL prefix: tag, tenant, request id (omitted for shed
+/// arrivals), simulated anchor, host stamp (omitted without a host clock).
+fn push_common(out: &mut String, ev: &Event, tenant: usize) {
+    out.push_str("{\"ev\":\"");
+    out.push_str(ev.kind.tag());
+    out.push_str(&format!("\",\"tenant\":{tenant}"));
+    if ev.req != NO_REQ {
+        out.push_str(&format!(",\"req\":{}", ev.req));
+    }
+    out.push_str(&format!(",\"sim\":{}", ev.sim));
+    if let Some(h) = ev.host_ns {
+        out.push_str(&format!(",\"host_ns\":{h}"));
+    }
+}
+
+/// Render per-tenant event logs as JSON Lines: one self-contained JSON
+/// object per event, in emission order, tenants concatenated in the given
+/// order. Every line carries `ev` (the event tag), `tenant`, `sim`, and
+/// the event's typed payload; `req` is present for every event of an
+/// admitted request.
+pub fn to_jsonl(groups: &[(usize, Vec<Event>)]) -> String {
+    let mut out = String::new();
+    for (tenant, events) in groups {
+        for ev in events {
+            push_common(&mut out, ev, *tenant);
+            match &ev.kind {
+                EventKind::Admitted { seq, op, n, bytes } => {
+                    out.push_str(&format!(
+                        ",\"seq\":{seq},\"op\":\"{}\",\"n\":{n},\"bytes\":{bytes}",
+                        escape(op)
+                    ));
+                }
+                EventKind::Shed { seq, reason } => {
+                    out.push_str(&format!(
+                        ",\"seq\":{seq},\"reason\":\"{}\"",
+                        shed_reason_name(*reason)
+                    ));
+                }
+                EventKind::CacheHit | EventKind::CacheMiss | EventKind::CacheEvicted => {}
+                EventKind::Dispatched { lane, cost } => {
+                    out.push_str(&format!(",\"lane\":{lane},\"cost\":{cost}"));
+                }
+                EventKind::Executed { tier } => {
+                    out.push_str(&format!(",\"tier\":\"{}\"", tier.name()));
+                }
+                EventKind::FabricRouted { tile, depart, ready, finish, compute } => {
+                    out.push_str(&format!(
+                        ",\"tile_row\":{},\"tile_col\":{},\"depart\":{depart},\"ready\":{ready},\
+                         \"finish\":{finish},\"compute\":{compute}",
+                        tile.row, tile.col
+                    ));
+                }
+                EventKind::Completed { queue_ns, service_ns, cycles } => {
+                    out.push_str(&format!(
+                        ",\"queue_ns\":{queue_ns},\"service_ns\":{service_ns},\"cycles\":{cycles}"
+                    ));
+                }
+            }
+            out.push_str("}\n");
+        }
+    }
+    out
+}
+
+/// One Chrome trace-event object (complete or metadata phase).
+fn chrome_event(
+    events: &mut Vec<String>,
+    name: &str,
+    cat: &str,
+    pid: usize,
+    tid: u64,
+    ts_us: f64,
+    dur_us: f64,
+    args: &str,
+) {
+    events.push(format!(
+        "{{\"name\":\"{}\",\"cat\":\"{cat}\",\"ph\":\"X\",\"pid\":{pid},\"tid\":{tid},\
+         \"ts\":{ts_us:.3},\"dur\":{dur_us:.3},\"args\":{{{args}}}}}",
+        escape(name)
+    ));
+}
+
+fn chrome_process_name(events: &mut Vec<String>, pid: usize, name: &str) {
+    events.push(format!(
+        "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+         \"args\":{{\"name\":\"{}\"}}}}",
+        escape(name)
+    ));
+}
+
+/// Render per-tenant event logs as Chrome trace-event JSON (the
+/// `{"traceEvents":[...]}` object form). See the module docs for the
+/// process/track layout. Every emitted phase is `"X"` (complete) or `"M"`
+/// (metadata) — no unmatched begin/end pairs, pinned by `tests/obs.rs`.
+pub fn to_chrome(groups: &[(usize, Vec<Event>)]) -> String {
+    let mut events: Vec<String> = Vec::new();
+    for (tenant, log) in groups {
+        // Request spans on the host clock: Admitted → Completed per req.
+        let mut admitted: std::collections::HashMap<u64, (usize, &'static str, usize, u64)> =
+            std::collections::HashMap::new();
+        let mut spans = 0usize;
+        let mut routed = 0usize;
+        for ev in log {
+            match &ev.kind {
+                EventKind::Admitted { seq, op, n, .. } => {
+                    if let Some(h) = ev.host_ns {
+                        admitted.insert(ev.req, (*seq, *op, *n, h));
+                    }
+                }
+                EventKind::Completed { .. } => {
+                    if let (Some(h), Some((seq, op, n, at))) =
+                        (ev.host_ns, admitted.remove(&ev.req))
+                    {
+                        if spans == 0 {
+                            chrome_process_name(
+                                &mut events,
+                                100 + tenant,
+                                &format!("tenant {tenant} requests (host clock)"),
+                            );
+                        }
+                        spans += 1;
+                        chrome_event(
+                            &mut events,
+                            &format!("{op} n={n} req={}", ev.req),
+                            "request",
+                            100 + tenant,
+                            seq as u64,
+                            at as f64 / 1000.0,
+                            h.saturating_sub(at) as f64 / 1000.0,
+                            &format!("\"req\":{},\"cycles_sim\":{}", ev.req, ev.sim),
+                        );
+                    }
+                }
+                EventKind::FabricRouted { tile, depart, ready, finish, compute } => {
+                    if routed == 0 {
+                        chrome_process_name(
+                            &mut events,
+                            200 + tenant,
+                            &format!("tenant {tenant} fabric (1 cycle = 1 µs)"),
+                        );
+                    }
+                    routed += 1;
+                    chrome_event(
+                        &mut events,
+                        &format!("req={} tile=({},{})", ev.req, tile.row, tile.col),
+                        "fabric",
+                        200 + tenant,
+                        (tile.row * 16 + tile.col) as u64,
+                        *depart as f64,
+                        (finish - depart) as f64,
+                        &format!("\"req\":{},\"ready\":{ready},\"compute\":{compute}", ev.req),
+                    );
+                }
+                _ => {}
+            }
+        }
+    }
+    format!("{{\"traceEvents\":[{}]}}\n", events.join(","))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::event::Tier;
+    use super::*;
+    use crate::noc::Coord;
+
+    fn log() -> Vec<Event> {
+        vec![
+            Event {
+                req: 0,
+                sim: 0,
+                host_ns: Some(100),
+                kind: EventKind::Admitted { seq: 0, op: "dgemm", n: 16, bytes: 4096 },
+            },
+            Event { req: 0, sim: 0, host_ns: Some(110), kind: EventKind::CacheMiss },
+            Event {
+                req: 0,
+                sim: 0,
+                host_ns: Some(120),
+                kind: EventKind::Dispatched { lane: 0, cost: 42 },
+            },
+            Event {
+                req: 0,
+                sim: 0,
+                host_ns: Some(400),
+                kind: EventKind::Executed { tier: Tier::Combined },
+            },
+            Event {
+                req: 0,
+                sim: 50,
+                host_ns: Some(420),
+                kind: EventKind::FabricRouted {
+                    tile: Coord::new(1, 0),
+                    depart: 50,
+                    ready: 80,
+                    finish: 300,
+                    compute: 180,
+                },
+            },
+            Event {
+                req: 0,
+                sim: 300,
+                host_ns: Some(500),
+                kind: EventKind::Completed { queue_ns: 10, service_ns: 390, cycles: 300 },
+            },
+            Event {
+                req: NO_REQ,
+                sim: 0,
+                host_ns: Some(600),
+                kind: EventKind::Shed { seq: 1, reason: ShedReason::QueueDepth },
+            },
+        ]
+    }
+
+    #[test]
+    fn jsonl_emits_one_line_per_event_with_typed_keys() {
+        let s = to_jsonl(&[(0, log())]);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 7);
+        assert!(lines[0].contains("\"ev\":\"admitted\""));
+        assert!(lines[0].contains("\"op\":\"dgemm\"") && lines[0].contains("\"bytes\":4096"));
+        assert!(lines[1].contains("\"ev\":\"cache_miss\"") && lines[1].contains("\"req\":0"));
+        assert!(lines[2].contains("\"lane\":0") && lines[2].contains("\"cost\":42"));
+        assert!(lines[3].contains("\"tier\":\"combined\""));
+        assert!(lines[4].contains("\"tile_row\":1") && lines[4].contains("\"finish\":300"));
+        assert!(lines[5].contains("\"queue_ns\":10") && lines[5].contains("\"cycles\":300"));
+        assert!(lines[6].contains("\"reason\":\"queue_depth\""));
+        assert!(!lines[6].contains("\"req\""), "shed arrivals have no request id");
+        assert!(lines.iter().all(|l| l.starts_with('{') && l.ends_with('}')));
+    }
+
+    #[test]
+    fn chrome_spans_are_complete_phases_only() {
+        let s = to_chrome(&[(0, log())]);
+        assert!(s.starts_with("{\"traceEvents\":["));
+        assert_eq!(s.matches("\"ph\":\"B\"").count(), 0);
+        assert_eq!(s.matches("\"ph\":\"E\"").count(), 0);
+        // One request span + one fabric span, plus two process names.
+        assert_eq!(s.matches("\"ph\":\"X\"").count(), 2);
+        assert_eq!(s.matches("\"ph\":\"M\"").count(), 2);
+        assert!(s.contains("\"cat\":\"request\"") && s.contains("\"cat\":\"fabric\""));
+        // Host span: 100 ns → 0.100 µs start, 400 ns → 0.400 µs duration.
+        assert!(s.contains("\"ts\":0.100,\"dur\":0.400"), "host span mis-scaled: {s}");
+        // Fabric span: simulated cycles verbatim as µs.
+        assert!(s.contains("\"ts\":50.000,\"dur\":250.000"), "fabric span mis-scaled: {s}");
+    }
+
+    #[test]
+    fn chrome_without_host_clock_still_exports_fabric() {
+        let mut l = log();
+        for e in l.iter_mut() {
+            e.host_ns = None;
+        }
+        let s = to_chrome(&[(0, l)]);
+        assert_eq!(s.matches("\"cat\":\"request\"").count(), 0, "no host clock, no spans");
+        assert_eq!(s.matches("\"cat\":\"fabric\"").count(), 1);
+    }
+
+    #[test]
+    fn empty_log_is_valid_chrome_json() {
+        assert_eq!(to_chrome(&[]).trim(), "{\"traceEvents\":[]}");
+        assert_eq!(to_jsonl(&[]), "");
+    }
+}

@@ -1,0 +1,43 @@
+//! Observability: typed per-request tracing, span reconstruction, unified
+//! metric snapshots, and trace export.
+//!
+//! The paper's co-design argument rests on *attribution* — knowing where
+//! cycles go (compute vs. communication vs. stalls) is what justified the
+//! PE enhancements and the fabric scaling claims. This module gives the
+//! serving stack the same property end to end:
+//!
+//! * [`event`] — the typed event vocabulary ([`Event`] / [`EventKind`]):
+//!   admission, shedding, cache traffic, dispatch, execution tier, fabric
+//!   routing, completion, each tagged with a per-request [`ReqId`] and
+//!   dual (simulated-cycle + optional host-ns) timestamps, plus
+//!   [`response_traces`] to fold a log into per-request
+//!   [`ResponseTrace`] spans (queue wait / service / compute vs. comm);
+//! * [`sink`] — where events go ([`TraceSink`]): with no sink configured
+//!   events are never constructed and serving is bit-identical to the
+//!   untraced path (pinned by `tests/obs.rs`); [`BufferSink`] collects
+//!   in memory for export;
+//! * [`registry`] — counters, gauges, rolling windowed latency histograms
+//!   ([`WindowedHistogram`], the long-lived-daemon prerequisite), and the
+//!   [`EngineSnapshot`] / [`TenantSnapshot`] structs behind
+//!   [`crate::engine::Engine::snapshot`] and
+//!   [`crate::coordinator::Coordinator::snapshot`];
+//! * [`export`] — [`to_jsonl`] (JSON Lines, `serve --trace-out`) and
+//!   [`to_chrome`] (Chrome trace-event JSON for Perfetto,
+//!   `--trace-format chrome`).
+//!
+//! Wiring: attach a sink with
+//! [`crate::coordinator::Coordinator::set_trace_sink`], serve, then drain
+//! the sink and export.
+
+pub mod event;
+pub mod export;
+pub mod registry;
+pub mod sink;
+
+pub use event::{response_traces, Event, EventKind, ReqId, ResponseTrace, Tier, NO_REQ};
+pub use export::{to_chrome, to_jsonl};
+pub use registry::{
+    Counter, EngineSnapshot, Gauge, RollingLatency, RollingSnapshot, TenantSnapshot,
+    WindowedHistogram,
+};
+pub use sink::{BufferSink, NullSink, TraceSink};

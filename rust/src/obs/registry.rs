@@ -1,0 +1,329 @@
+//! Unified metrics registry: counters, gauges, rolling windowed latency
+//! histograms, and the engine/tenant snapshot structs that subsume the
+//! scattered stat structs (`BatchStats`, `OpenLoopStats`, `CacheStats`,
+//! `PoolJobCounts`, `FabricStats`, lane service) behind one call.
+//!
+//! [`crate::engine::Engine::snapshot`] and
+//! [`crate::coordinator::Coordinator::snapshot`] return these; `main.rs`
+//! reporting is built entirely on them, so every number the CLI prints is
+//! reachable programmatically.
+//!
+//! The rolling histograms ([`WindowedHistogram`]) are the long-lived-
+//! daemon prerequisite from the ROADMAP: instead of one per-run snapshot,
+//! samples land in a ring of fixed-width time buckets and a snapshot
+//! merges only the buckets inside the trailing window — stale buckets age
+//! out as the clock advances. Merging is exact because the underlying
+//! [`Histogram`] buckets are fixed power-of-two ranges (see
+//! [`Histogram::merge`]).
+
+use crate::coordinator::{BatchStats, CacheStats, OpenLoopStats, PoolJobCounts};
+use crate::engine::latency::{Histogram, LatencySnapshot};
+use crate::engine::{LaneService, SchedPolicy};
+use crate::noc::FabricStats;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A monotonically increasing counter (thread-safe, relaxed ordering —
+/// telemetry, not synchronization).
+///
+/// # Examples
+///
+/// ```
+/// use redefine_blas::obs::Counter;
+///
+/// let c = Counter::default();
+/// c.inc();
+/// c.add(4);
+/// assert_eq!(c.get(), 5);
+/// ```
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value gauge with a high-water mark helper.
+///
+/// # Examples
+///
+/// ```
+/// use redefine_blas::obs::Gauge;
+///
+/// let g = Gauge::default();
+/// g.set(3);
+/// g.record_max(2);
+/// assert_eq!(g.get(), 3);
+/// g.record_max(9);
+/// assert_eq!(g.get(), 9);
+/// ```
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// Overwrite the value.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the value to `v` if larger (high-water mark).
+    pub fn record_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Sentinel for a ring slot that has never been written.
+const EMPTY_SLOT: u64 = u64::MAX;
+
+/// A rolling windowed log₂ histogram: a ring of fixed-width time buckets,
+/// each holding a [`Histogram`]. Recording into a bucket whose ring slot
+/// last held an older bucket resets that slot, so the structure is O(ring)
+/// memory forever; a snapshot merges only the buckets inside the trailing
+/// window ending at the newest sample.
+///
+/// # Examples
+///
+/// ```
+/// use redefine_blas::obs::WindowedHistogram;
+///
+/// // 4 buckets of 1000 ns → a 4 µs trailing window.
+/// let mut w = WindowedHistogram::new(1000, 4);
+/// w.record(0, 10);
+/// w.record(3_500, 20);
+/// assert_eq!(w.snapshot().count, 2);
+/// // Advance far enough and the first sample ages out.
+/// w.record(7_900, 30);
+/// assert_eq!(w.snapshot().count, 2); // 20 and 30 remain
+/// ```
+#[derive(Debug, Clone)]
+pub struct WindowedHistogram {
+    bucket_ns: u64,
+    /// (absolute bucket index, histogram) per ring slot.
+    slots: Vec<(u64, Histogram)>,
+    /// Largest `at_ns` seen — the window's notion of "now".
+    last_ns: u64,
+}
+
+impl WindowedHistogram {
+    /// A window of `buckets` buckets, each `bucket_ns` wide.
+    pub fn new(bucket_ns: u64, buckets: usize) -> Self {
+        assert!(bucket_ns >= 1 && buckets >= 1, "window needs at least one real bucket");
+        Self { bucket_ns, slots: vec![(EMPTY_SLOT, Histogram::new()); buckets], last_ns: 0 }
+    }
+
+    /// Total width of the trailing window, in ns.
+    pub fn window_ns(&self) -> u64 {
+        self.bucket_ns * self.slots.len() as u64
+    }
+
+    /// Record sample `v` taken at time `at_ns` (ns since the serving run's
+    /// epoch; must come from one monotonic clock per run).
+    pub fn record(&mut self, at_ns: u64, v: u64) {
+        let idx = at_ns / self.bucket_ns;
+        let slot = (idx % self.slots.len() as u64) as usize;
+        if self.slots[slot].0 != idx {
+            self.slots[slot] = (idx, Histogram::new());
+        }
+        self.slots[slot].1.record(v);
+        self.last_ns = self.last_ns.max(at_ns);
+    }
+
+    /// Forget everything (a new serving run restarts the epoch).
+    pub fn reset(&mut self) {
+        for s in self.slots.iter_mut() {
+            *s = (EMPTY_SLOT, Histogram::new());
+        }
+        self.last_ns = 0;
+    }
+
+    /// Merge the live buckets of the trailing window into one histogram.
+    pub fn merged(&self) -> Histogram {
+        let cur = self.last_ns / self.bucket_ns;
+        let len = self.slots.len() as u64;
+        let mut out = Histogram::new();
+        for (idx, h) in &self.slots {
+            if *idx != EMPTY_SLOT && idx + len > cur {
+                out.merge(h);
+            }
+        }
+        out
+    }
+
+    /// Percentile summary of the trailing window.
+    pub fn snapshot(&self) -> LatencySnapshot {
+        self.merged().snapshot()
+    }
+}
+
+/// The three rolling latency windows the open-loop driver feeds (queue /
+/// service / total, same decomposition as [`OpenLoopStats`]).
+#[derive(Debug, Clone)]
+pub struct RollingLatency {
+    pub queue: WindowedHistogram,
+    pub service: WindowedHistogram,
+    pub total: WindowedHistogram,
+}
+
+impl RollingLatency {
+    /// Default daemon window: 8 buckets × 250 ms = a 2 s trailing window.
+    pub fn daemon_default() -> Self {
+        Self::new(250_000_000, 8)
+    }
+
+    /// All three windows with the same geometry.
+    pub fn new(bucket_ns: u64, buckets: usize) -> Self {
+        Self {
+            queue: WindowedHistogram::new(bucket_ns, buckets),
+            service: WindowedHistogram::new(bucket_ns, buckets),
+            total: WindowedHistogram::new(bucket_ns, buckets),
+        }
+    }
+
+    /// Restart the epoch (called at the start of each open-loop run).
+    pub fn reset(&mut self) {
+        self.queue.reset();
+        self.service.reset();
+        self.total.reset();
+    }
+
+    /// Record one served request's decomposition at completion time.
+    pub fn record(&mut self, at_ns: u64, queue_ns: u64, service_ns: u64, total_ns: u64) {
+        self.queue.record(at_ns, queue_ns);
+        self.service.record(at_ns, service_ns);
+        self.total.record(at_ns, total_ns);
+    }
+
+    /// Percentile summary of the trailing window.
+    pub fn snapshot(&self) -> RollingSnapshot {
+        RollingSnapshot {
+            window_ns: self.total.window_ns(),
+            queue: self.queue.snapshot(),
+            service: self.service.snapshot(),
+            total: self.total.snapshot(),
+        }
+    }
+}
+
+/// Point-in-time summary of a [`RollingLatency`] trailing window.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RollingSnapshot {
+    /// Width of the trailing window, ns.
+    pub window_ns: u64,
+    /// Queue-latency percentiles over the window.
+    pub queue: LatencySnapshot,
+    /// Service-latency percentiles over the window.
+    pub service: LatencySnapshot,
+    /// Total-latency percentiles over the window.
+    pub total: LatencySnapshot,
+}
+
+/// Everything the engine knows about itself, in one value — the shared
+/// totals side of the telemetry split (see
+/// [`crate::engine::Engine::snapshot`]).
+#[derive(Debug, Clone)]
+pub struct EngineSnapshot {
+    /// Persistent PE workers in the shared pool.
+    pub workers: usize,
+    /// Tenant handles created so far.
+    pub tenants: usize,
+    /// The fairness currency the pool schedules under.
+    pub sched: SchedPolicy,
+    /// Shared program-cache totals across every tenant.
+    pub cache: CacheStats,
+    /// Shared pool execution totals across every tenant.
+    pub jobs: PoolJobCounts,
+    /// Per-tenant-lane service telemetry, in attach order.
+    pub lanes: Vec<LaneService>,
+    /// Fabric telemetry, when the engine models one.
+    pub fabric: Option<FabricStats>,
+}
+
+/// Everything one tenant knows about itself, in one value — the
+/// per-tenant slice of the telemetry split (see
+/// [`crate::coordinator::Coordinator::snapshot`]).
+#[derive(Debug, Clone)]
+pub struct TenantSnapshot {
+    /// This tenant's home fabric row (0 without a fabric).
+    pub home_row: usize,
+    /// Workers in the pool serving this tenant.
+    pub pool_size: usize,
+    /// This tenant's program-cache counters (shared resident count).
+    pub cache: CacheStats,
+    /// Shared cache totals across the tenant's engine.
+    pub shared_cache: CacheStats,
+    /// Pool jobs executed for this tenant, by kind.
+    pub jobs: PoolJobCounts,
+    /// Telemetry of the last `serve_batch` / open-loop run's pipeline.
+    pub batch: Option<BatchStats>,
+    /// Aggregate stats of the last open-loop run, if one ran.
+    pub open_loop: Option<OpenLoopStats>,
+    /// Rolling windowed latency percentiles (fed by open-loop serving).
+    pub rolling: RollingSnapshot,
+    /// Fabric telemetry of the tenant's engine, when it models one.
+    pub fabric: Option<FabricStats>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windowed_histogram_ages_out_stale_buckets() {
+        let mut w = WindowedHistogram::new(100, 4);
+        w.record(0, 1); // bucket 0
+        w.record(150, 2); // bucket 1
+        w.record(399, 3); // bucket 3 — window now [0, 3], all live
+        assert_eq!(w.snapshot().count, 3);
+        // Bucket 4 wraps onto slot 0 and evicts bucket 0's sample; the
+        // window becomes [1, 4].
+        w.record(420, 4);
+        assert_eq!(w.snapshot().count, 3);
+        // Jump far ahead: only the new bucket remains live.
+        w.record(5_000, 5);
+        let s = w.snapshot();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.max, 5);
+    }
+
+    #[test]
+    fn windowed_merge_matches_plain_histogram_within_one_bucket() {
+        // Samples confined to one bucket: the window must report exactly
+        // what a plain histogram would.
+        let mut w = WindowedHistogram::new(1_000_000, 8);
+        let mut h = Histogram::new();
+        let mut x = 5u64;
+        for _ in 0..500 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = x >> 45;
+            w.record(x % 1_000_000, v);
+            h.record(v);
+        }
+        assert_eq!(w.snapshot(), h.snapshot());
+    }
+
+    #[test]
+    fn rolling_latency_resets_between_runs() {
+        let mut r = RollingLatency::new(1000, 4);
+        r.record(10, 1, 2, 3);
+        assert_eq!(r.snapshot().total.count, 1);
+        r.reset();
+        assert_eq!(r.snapshot(), RollingSnapshot { window_ns: 4000, ..RollingSnapshot::default() });
+    }
+}

@@ -1,0 +1,54 @@
+//! Minimal JSON string escaping — the one implementation shared by the
+//! `hot_paths` bench writer and the [`crate::obs::export`] JSONL /
+//! Chrome-trace emitters.
+//!
+//! Only escaping lives here (the crate stays serde-free); emitters build
+//! their objects by hand and route every string value through [`escape`].
+
+/// Escape `s` for inclusion inside a JSON string literal (no surrounding
+/// quotes added). Handles the characters RFC 8259 requires: `"`  `\` and
+/// control characters below U+0020 (as `\uXXXX`).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_strings_pass_through() {
+        assert_eq!(escape("dgemm n=64"), "dgemm n=64");
+        assert_eq!(escape(""), "");
+    }
+
+    #[test]
+    fn quotes_and_backslashes_are_escaped() {
+        assert_eq!(escape("a\"b"), "a\\\"b");
+        assert_eq!(escape("a\\b"), "a\\\\b");
+        assert_eq!(escape("\\\""), "\\\\\\\"");
+    }
+
+    #[test]
+    fn control_characters_become_unicode_escapes() {
+        assert_eq!(escape("a\nb"), "a\\u000ab");
+        assert_eq!(escape("\t"), "\\u0009");
+        assert_eq!(escape("\u{0}"), "\\u0000");
+        assert_eq!(escape("\u{1f}"), "\\u001f");
+    }
+
+    #[test]
+    fn non_ascii_is_left_verbatim() {
+        // RFC 8259 allows raw UTF-8 above U+001F; keep bytes as-is.
+        assert_eq!(escape("µs → cycles"), "µs → cycles");
+    }
+}

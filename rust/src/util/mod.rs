@@ -4,6 +4,7 @@
 //! latency is data-independent, so any deterministic generator preserves the
 //! experiments; we use xorshift for reproducibility without external deps.
 
+pub mod json;
 pub mod mat;
 pub mod rng;
 

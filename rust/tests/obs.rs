@@ -1,0 +1,467 @@
+//! Observability integration tests: attaching a trace sink must be
+//! invisible in every simulated observable (sink-off bit-identity), the
+//! captured event log of a warmed closed-loop run must be deterministic
+//! run to run (including under replay batching and on a routed fabric),
+//! per-request spans must close the open-loop latency accounting, the
+//! snapshot structs must reproduce the scattered stat getters, and both
+//! exporters must emit well-formed output (validated here with a
+//! hand-rolled JSON parser — the crate stays dependency-free).
+
+use redefine_blas::coordinator::request::{random_workload, repeated_gemm_workload};
+use redefine_blas::coordinator::{
+    Coordinator, CoordinatorConfig, OpenLoopOptions, OpenLoopOutcome, Response,
+};
+use redefine_blas::engine::traffic::{self, ArrivalKind, TrafficConfig};
+use redefine_blas::engine::{Engine, EngineConfig};
+use redefine_blas::noc::FabricConfig;
+use redefine_blas::obs::{
+    response_traces, to_chrome, to_jsonl, BufferSink, EventKind, NullSink, TraceSink,
+};
+use redefine_blas::pe::AeLevel;
+use std::sync::Arc;
+
+fn cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 2,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+        ..CoordinatorConfig::default()
+    }
+}
+
+/// Exact (bit-level) equality of two response streams, values and costs.
+fn assert_identical(a: &[Response], b: &[Response]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.op, y.op);
+        assert_eq!(x.n, y.n);
+        assert_eq!(x.cycles, y.cycles, "{} n={}: cycles drifted", x.op, x.n);
+        assert_eq!(x.energy_j, y.energy_j);
+        assert_eq!(x.matrix, y.matrix);
+        assert_eq!(x.vector, y.vector);
+        assert_eq!(x.scalar, y.scalar);
+    }
+}
+
+/// Serve `reqs` twice on a fresh traced coordinator — once to warm every
+/// kernel (cold-kernel events are dropped), once measured — and return
+/// the warm run's deterministic signatures plus its responses.
+fn traced_run(config: CoordinatorConfig, reqs: Vec<redefine_blas::coordinator::Request>) -> (Vec<String>, Vec<Response>) {
+    let mut co = Coordinator::new(config);
+    let sink = Arc::new(BufferSink::new());
+    co.set_trace_sink(sink.clone());
+    let _ = co.serve_batch(reqs.clone());
+    let _ = sink.take();
+    let resps = co.serve_batch(reqs);
+    (sink.take().iter().map(|e| e.sim_signature()).collect(), resps)
+}
+
+#[test]
+fn sink_off_null_and_buffer_are_bit_identical() {
+    let reqs = random_workload(10, 24, 5);
+    let mut off = Coordinator::new(cfg());
+    let mut null = Coordinator::new(cfg());
+    null.set_trace_sink(Arc::new(NullSink) as Arc<dyn TraceSink>);
+    let mut buf = Coordinator::new(cfg());
+    let sink = Arc::new(BufferSink::new());
+    buf.set_trace_sink(sink.clone());
+
+    let r_off = off.serve_batch(reqs.clone());
+    let r_null = null.serve_batch(reqs.clone());
+    let r_buf = buf.serve_batch(reqs);
+    assert_identical(&r_off, &r_null);
+    assert_identical(&r_off, &r_buf);
+    assert_eq!(format!("{:?}", off.cache_stats()), format!("{:?}", null.cache_stats()));
+    assert_eq!(format!("{:?}", off.cache_stats()), format!("{:?}", buf.cache_stats()));
+    assert_eq!(
+        format!("{:?}", off.pool_job_counts()),
+        format!("{:?}", buf.pool_job_counts()),
+        "tracing changed pool job accounting"
+    );
+    assert!(!sink.take().is_empty(), "BufferSink captured nothing from a traced serve");
+}
+
+#[test]
+fn sink_off_identity_holds_on_a_fabric() {
+    let reqs = repeated_gemm_workload(6, 16, 42);
+    let fab = || CoordinatorConfig { fabric: Some(FabricConfig::new(2)), ..cfg() };
+    let mut off = Coordinator::new(fab());
+    let mut traced = Coordinator::new(fab());
+    let sink = Arc::new(BufferSink::with_host_clock());
+    traced.set_trace_sink(sink.clone());
+
+    let r_off = off.serve_batch(reqs.clone());
+    let r_traced = traced.serve_batch(reqs);
+    assert_identical(&r_off, &r_traced);
+    assert_eq!(off.fabric_stats(), traced.fabric_stats(), "tracing changed fabric telemetry");
+    assert!(
+        sink.take().iter().any(|e| matches!(e.kind, EventKind::FabricRouted { .. })),
+        "fabric serving emitted no FabricRouted events"
+    );
+}
+
+#[test]
+fn warmed_event_log_is_deterministic() {
+    let reqs = random_workload(10, 24, 5);
+    let (sa, ra) = traced_run(cfg(), reqs.clone());
+    let (sb, rb) = traced_run(cfg(), reqs);
+    assert!(!sa.is_empty());
+    assert_eq!(sa, sb, "two identically warmed runs diverged in their event logs");
+    assert_identical(&ra, &rb);
+}
+
+#[test]
+fn warmed_event_log_is_deterministic_under_replay_batching() {
+    let reqs = repeated_gemm_workload(8, 16, 77);
+    let config = CoordinatorConfig { replay_batch: Some(8), ..cfg() };
+    let (sa, ra) = traced_run(config.clone(), reqs.clone());
+    let (sb, rb) = traced_run(config, reqs);
+    assert_eq!(sa, sb, "replay batching broke event-log determinism");
+    assert_identical(&ra, &rb);
+    assert!(
+        sa.iter().any(|s| s.contains("tier=batched")),
+        "warm coalesced serve must execute on the batched tier"
+    );
+}
+
+#[test]
+fn warmed_event_log_is_deterministic_on_a_fabric() {
+    let reqs = repeated_gemm_workload(6, 16, 99);
+    let config = CoordinatorConfig { fabric: Some(FabricConfig::new(2)), ..cfg() };
+    let (sa, ra) = traced_run(config.clone(), reqs.clone());
+    let (sb, rb) = traced_run(config, reqs);
+    assert_eq!(sa, sb, "fabric routing broke event-log determinism");
+    assert_identical(&ra, &rb);
+    assert!(sa.iter().any(|s| s.contains("fabric_routed")));
+}
+
+#[test]
+fn open_loop_spans_close_the_latency_accounting() {
+    let mut co = Coordinator::new(CoordinatorConfig { queue_depth: Some(2), ..cfg() });
+    let sink = Arc::new(BufferSink::with_host_clock());
+    co.set_trace_sink(sink.clone());
+    let arrivals = traffic::generate(&TrafficConfig {
+        kind: ArrivalKind::Burst { size: 8 },
+        rate_rps: 4000.0,
+        duration_ns: 40_000_000,
+        seed: 42,
+        max_n: 20,
+        ..TrafficConfig::default()
+    });
+    let offered = arrivals.len();
+    let report = co.serve_open_loop(arrivals, &OpenLoopOptions::default());
+    assert_eq!(report.stats.offered, offered);
+    assert_eq!(report.stats.served + report.stats.shed, offered, "open-loop lost arrivals");
+    assert!(report.stats.shed > 0, "depth-2 queue under a burst flood must shed");
+
+    // The event log closes the same accounting: one Shed per rejection,
+    // one Completed per served request.
+    let events = sink.take();
+    let shed = events.iter().filter(|e| matches!(e.kind, EventKind::Shed { .. })).count();
+    let completed =
+        events.iter().filter(|e| matches!(e.kind, EventKind::Completed { .. })).count();
+    assert_eq!(shed, report.stats.shed);
+    assert_eq!(completed, report.stats.served);
+
+    // Per-request spans: queue + service must equal the outcome's split
+    // exactly, request by request (matched on the admission seq).
+    let traces = response_traces(&events);
+    assert_eq!(traces.len(), report.stats.served);
+    let mut by_seq = std::collections::HashMap::new();
+    for o in &report.outcomes {
+        if let OpenLoopOutcome::Served { seq, queue_ns, service_ns, .. } = o {
+            by_seq.insert(*seq, (*queue_ns, *service_ns));
+        }
+    }
+    for t in &traces {
+        assert!(t.completed, "admitted request never completed in the log");
+        let seq = t.seq.expect("served spans carry the admission seq");
+        let (queue_ns, service_ns) = by_seq[&seq];
+        assert_eq!(t.queue_ns, queue_ns);
+        assert_eq!(t.service_ns, service_ns);
+        assert_eq!(t.total_ns, queue_ns + service_ns);
+        assert!(t.dispatched > 0 || t.cache_hits > 0, "span shows no work for seq {seq}");
+    }
+}
+
+#[test]
+fn tenant_snapshot_reproduces_the_scattered_stats() {
+    let mut co = Coordinator::new(cfg());
+    let _ = co.serve_batch(random_workload(8, 24, 3));
+    let snap = co.snapshot();
+    assert_eq!(format!("{:?}", snap.cache), format!("{:?}", co.cache_stats()));
+    assert_eq!(format!("{:?}", snap.jobs), format!("{:?}", co.pool_job_counts()));
+    assert_eq!(snap.pool_size, co.pool_size());
+    assert_eq!(format!("{:?}", snap.batch), format!("{:?}", co.last_batch_stats()));
+    assert!(snap.open_loop.is_none(), "no open-loop run happened");
+    assert!(snap.fabric.is_none(), "no fabric configured");
+}
+
+#[test]
+fn engine_snapshot_reproduces_the_engine_getters() {
+    let engine = Engine::new(EngineConfig { workers: 2, ..EngineConfig::default() });
+    let mut tenant = engine.tenant(cfg());
+    let _ = tenant.serve_batch(repeated_gemm_workload(3, 16, 9));
+    let es = engine.snapshot();
+    assert_eq!(es.workers, engine.worker_count());
+    assert_eq!(es.tenants, engine.tenant_count());
+    assert_eq!(format!("{:?}", es.sched), format!("{:?}", engine.sched()));
+    assert_eq!(format!("{:?}", es.cache), format!("{:?}", engine.cache_stats()));
+    assert_eq!(format!("{:?}", es.jobs), format!("{:?}", engine.pool_job_counts()));
+    assert_eq!(format!("{:?}", es.lanes), format!("{:?}", engine.lane_service()));
+    assert!(es.fabric.is_none());
+}
+
+#[test]
+fn jsonl_export_lines_parse_and_pair_admission_with_completion() {
+    let mut co = Coordinator::new(cfg());
+    let sink = Arc::new(BufferSink::new());
+    co.set_trace_sink(sink.clone());
+    let _ = co.serve_batch(random_workload(8, 24, 3));
+    let groups = vec![(0usize, sink.take())];
+    let out = to_jsonl(&groups);
+    assert!(!out.is_empty());
+
+    let mut admitted = std::collections::HashSet::new();
+    let mut completed = 0usize;
+    for line in out.lines() {
+        let obj = Parser::parse(line);
+        let Some(Json::Str(ev)) = get(&obj, "ev") else {
+            panic!("JSONL line without an `ev` tag: {line}")
+        };
+        assert!(get(&obj, "tenant").is_some(), "line missing tenant: {line}");
+        match ev.as_str() {
+            "admitted" => {
+                for key in ["req", "seq", "op", "n", "bytes"] {
+                    assert!(get(&obj, key).is_some(), "admitted line missing `{key}`: {line}");
+                }
+                let Some(Json::Num(req)) = get(&obj, "req") else { panic!("req not numeric") };
+                admitted.insert(*req as u64);
+            }
+            "completed" => {
+                for key in ["req", "queue_ns", "service_ns", "cycles"] {
+                    assert!(get(&obj, key).is_some(), "completed line missing `{key}`: {line}");
+                }
+                let Some(Json::Num(req)) = get(&obj, "req") else { panic!("req not numeric") };
+                assert!(admitted.contains(&(*req as u64)), "completed an unadmitted request");
+                completed += 1;
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(admitted.len(), 8);
+    assert_eq!(completed, 8);
+}
+
+#[test]
+fn chrome_export_is_valid_json_with_x_and_m_phases_only() {
+    let mut co =
+        Coordinator::new(CoordinatorConfig { fabric: Some(FabricConfig::new(2)), ..cfg() });
+    let sink = Arc::new(BufferSink::with_host_clock());
+    co.set_trace_sink(sink.clone());
+    let _ = co.serve_batch(repeated_gemm_workload(4, 16, 11));
+    let groups = vec![(0usize, sink.take())];
+    let chrome = to_chrome(&groups);
+
+    let doc = Parser::parse(&chrome);
+    let Some(Json::Arr(entries)) = get(&doc, "traceEvents") else {
+        panic!("chrome trace must be an object with a traceEvents array")
+    };
+    assert!(!entries.is_empty());
+    let mut slices = 0usize;
+    for e in entries {
+        let Some(Json::Str(ph)) = get(e, "ph") else { panic!("trace entry without a phase") };
+        assert!(ph == "X" || ph == "M", "unexpected trace phase {ph:?}");
+        if ph == "X" {
+            slices += 1;
+            for key in ["name", "pid", "tid", "ts", "dur"] {
+                assert!(get(e, key).is_some(), "X slice missing `{key}`");
+            }
+        } else {
+            assert!(get(e, "name").is_some(), "metadata entry missing `name`");
+        }
+    }
+    assert!(slices > 0, "chrome trace has no duration slices");
+}
+
+// ---------------------------------------------------------------------------
+// Minimal recursive-descent JSON parser, just enough to validate the
+// exporters without pulling in a dependency. Panics (failing the test) on
+// any malformed input.
+
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+fn get<'a>(obj: &'a Json, key: &str) -> Option<&'a Json> {
+    match obj {
+        Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+        _ => None,
+    }
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn parse(text: &str) -> Json {
+        let mut p = Parser { s: text.as_bytes(), i: 0 };
+        let v = p.value();
+        p.ws();
+        assert_eq!(p.i, p.s.len(), "trailing bytes after the JSON value");
+        v
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> u8 {
+        *self.s.get(self.i).expect("unexpected end of JSON input")
+    }
+
+    fn expect(&mut self, lit: &str) {
+        assert!(
+            self.s[self.i..].starts_with(lit.as_bytes()),
+            "expected `{lit}` at byte {}",
+            self.i
+        );
+        self.i += lit.len();
+    }
+
+    fn value(&mut self) -> Json {
+        self.ws();
+        match self.peek() {
+            b'{' => self.obj(),
+            b'[' => self.arr(),
+            b'"' => Json::Str(self.string()),
+            b't' => {
+                self.expect("true");
+                Json::Bool(true)
+            }
+            b'f' => {
+                self.expect("false");
+                Json::Bool(false)
+            }
+            b'n' => {
+                self.expect("null");
+                Json::Null
+            }
+            _ => self.num(),
+        }
+    }
+
+    fn string(&mut self) -> String {
+        self.expect("\"");
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                b'"' => {
+                    self.i += 1;
+                    return out;
+                }
+                b'\\' => {
+                    self.i += 1;
+                    let esc = self.peek();
+                    self.i += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = std::str::from_utf8(&self.s[self.i..self.i + 4])
+                                .expect("\\u needs 4 hex digits");
+                            let cp = u32::from_str_radix(hex, 16).expect("bad \\u escape");
+                            self.i += 4;
+                            out.push(char::from_u32(cp).expect("surrogates unused here"));
+                        }
+                        other => panic!("bad escape \\{}", other as char),
+                    }
+                }
+                _ => {
+                    let rest = std::str::from_utf8(&self.s[self.i..]).expect("valid UTF-8");
+                    let ch = rest.chars().next().expect("unterminated string");
+                    assert!((ch as u32) >= 0x20, "unescaped control character in string");
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn num(&mut self) -> Json {
+        let start = self.i;
+        while self.i < self.s.len()
+            && matches!(self.s[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let txt = std::str::from_utf8(&self.s[start..self.i]).expect("ascii number");
+        Json::Num(txt.parse().unwrap_or_else(|_| panic!("bad JSON number `{txt}`")))
+    }
+
+    fn arr(&mut self) -> Json {
+        self.expect("[");
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == b']' {
+            self.i += 1;
+            return Json::Arr(out);
+        }
+        loop {
+            out.push(self.value());
+            self.ws();
+            match self.peek() {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Json::Arr(out);
+                }
+                other => panic!("expected `,` or `]` in array, got `{}`", other as char),
+            }
+        }
+    }
+
+    fn obj(&mut self) -> Json {
+        self.expect("{");
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == b'}' {
+            self.i += 1;
+            return Json::Obj(out);
+        }
+        loop {
+            self.ws();
+            let key = self.string();
+            self.ws();
+            self.expect(":");
+            let val = self.value();
+            out.push((key, val));
+            self.ws();
+            match self.peek() {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Json::Obj(out);
+                }
+                other => panic!("expected `,` or `}}` in object, got `{}`", other as char),
+            }
+        }
+    }
+}
