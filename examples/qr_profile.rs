@@ -5,6 +5,12 @@
 //! BLAS in the first place. This example reproduces the profile with the
 //! flop-attribution profiler over our LAPACK-lite.
 //!
+//! The same profile is no longer just a host-side motivation plot: every
+//! factorization served end to end (`redefine serve --lapack qr|lu|chol`)
+//! expands into a dependency DAG of cached BLAS kernels and carries this
+//! `FlopProfile` in its response (`FactorOutcome::profile`), so the Fig-1
+//! attribution is pinned on the serving path too (`tests/lapack_serve.rs`).
+//!
 //! Run: `cargo run --release --example qr_profile`
 
 use redefine_blas::lapack::{dgeqr2_profiled, dgeqrf_profiled, dgetrf, dpotrf};

@@ -14,13 +14,14 @@
 
 use redefine_blas::codegen::{gen_gemm, gen_gemm_rect, GemmLayout};
 use redefine_blas::coordinator::{
-    request::{random_workload, repeated_gemm_workload, Request},
+    request::{factor_workload, random_workload, repeated_gemm_workload, Request},
     Coordinator, CoordinatorConfig, OpenLoopOptions,
 };
 use redefine_blas::engine::traffic::{self, Arrival, TrafficConfig};
 use redefine_blas::engine::{Engine, EngineConfig, SchedPolicy};
+use redefine_blas::lapack::FactorKind;
 use redefine_blas::metrics::{measure_gemm, Routine};
-use redefine_blas::obs::{BufferSink, NullSink, TraceSink};
+use redefine_blas::obs::{BufferSink, EventKind, NullSink, TraceSink};
 use redefine_blas::pe::{AeLevel, ExecMode, Pe, PeConfig, ScheduledProgram};
 use redefine_blas::util::{json, rel_fro_error, round_up, Mat};
 use std::sync::Arc;
@@ -267,6 +268,15 @@ fn main() {
     } else {
         obs_overhead_bench(&mut report, 64, 32, 2, AeLevel::Ae5);
     }
+
+    // 15) LAPACK factorization DAG serving: QR / LU / Cholesky requests
+    //     expanded into dependent kernel DAGs through the same pool. Per
+    //     kind the `lapack.*` keys record the DAG critical path against
+    //     the serial sum of its node kernels (the dependency-overlap
+    //     headline) and the program-cache hit rate across repeated
+    //     factorizations (every node is a cache customer, so repeats must
+    //     be all-hit).
+    lapack_bench(&mut report, quick, AeLevel::Ae5);
 
     if let Some(path) = json_path {
         std::fs::write(&path, report.to_json()).expect("write bench JSON");
@@ -1055,5 +1065,79 @@ fn fabric_scaling_bench(report: &mut Report, quick: bool, ae: AeLevel) {
                 prev = fs.makespan;
             }
         }
+    }
+}
+
+/// LAPACK factorization DAG serving (`lapack.*`): per kind, one traced
+/// factorization yields the DAG critical path (the response's makespan)
+/// and — from its `node_completed` events — the serial sum of the node
+/// kernels, whose ratio is the dependency-overlap headline a flat
+/// pipeline cannot have. A repeated batch on the warm shared cache then
+/// pins the all-hit property (every node is a counted cache customer)
+/// and records the factorization serve throughput.
+fn lapack_bench(report: &mut Report, quick: bool, ae: AeLevel) {
+    let (repeats, n) = if quick { (3usize, 16usize) } else { (6, 32) };
+    println!("\nlapack DAG serving: {repeats}x qr/lu/chol factorizations, n={n}, {ae}");
+    for kind in [FactorKind::Qr, FactorKind::Lu, FactorKind::Chol] {
+        let tag = kind.tag();
+        let mut co = Coordinator::new(CoordinatorConfig {
+            ae,
+            b: 2,
+            artifact_dir: "/nonexistent".into(),
+            verify: false,
+            ..CoordinatorConfig::default()
+        });
+        let buffer = Arc::new(BufferSink::new());
+        co.set_trace_sink(buffer.clone());
+
+        // Warm factorization: emits every node kernel once and captures
+        // the DAG trace.
+        let warm = co.serve_batch(factor_workload(kind, 1, n, 1));
+        let f = warm[0].factor.as_deref().expect("factor outcome");
+        let serial: u64 = buffer
+            .take()
+            .iter()
+            .filter_map(|e| match e.kind {
+                EventKind::NodeCompleted { cycles, .. } => Some(cycles),
+                _ => None,
+            })
+            .sum();
+        assert!(
+            f.makespan <= serial,
+            "{tag}: DAG critical path {} exceeds the serial node sum {serial}",
+            f.makespan
+        );
+        let overlap = serial as f64 / f.makespan.max(1) as f64;
+        let warm_cs = co.cache_stats();
+
+        // Repeated factorizations on the warm shared cache: every node
+        // kernel must hit (no new misses) — the repeated-shape acceptance
+        // signal — and the batch is the recorded throughput point.
+        let t0 = Instant::now();
+        let resps = co.serve_batch(factor_workload(kind, repeats, n, 42));
+        let t = t0.elapsed().as_secs_f64();
+        assert_eq!(resps.len(), repeats);
+        let cs = co.cache_stats();
+        assert_eq!(
+            cs.misses, warm_cs.misses,
+            "{tag}: repeated factorizations must not miss the program cache"
+        );
+        let warm_accesses = cs.hits.saturating_sub(warm_cs.hits).max(1);
+        println!(
+            "{:<44} {:>10.3} ms batch  ({} nodes, makespan {} / serial {}: {:.2}x overlap)",
+            format!("  {tag}: {repeats} factorizations n={n}"),
+            t * 1e3,
+            f.nodes,
+            f.makespan,
+            serial,
+            overlap
+        );
+        report.record(&format!("lapack.{tag}.serve_total_ms"), t * 1e3);
+        report.record(&format!("lapack.{tag}.nodes"), f.nodes as f64);
+        report.record(&format!("lapack.{tag}.makespan_cycles"), f.makespan as f64);
+        report.record(&format!("lapack.{tag}.node_cycles_serial"), serial as f64);
+        report.record(&format!("lapack.{tag}.dag_overlap_x"), overlap);
+        let hits_per_repeat = warm_accesses as f64 / repeats as f64;
+        report.record(&format!("lapack.{tag}.warm_hits_per_repeat"), hits_per_repeat);
     }
 }

@@ -26,6 +26,16 @@
 //! optionally serve on cached single-PE DOT2/3 **residual kernels**
 //! instead of padding ([`CoordinatorConfig::residual`]).
 //!
+//! Beyond flat BLAS calls, the pipeline serves **LAPACK factorizations as
+//! dependency DAGs**: `Request::Dgeqrf/Dgetrf/Dpotrf` are expanded at
+//! admission ([`crate::lapack::expand`]) into graphs of cached kernel
+//! nodes ([`crate::dag::ExecGraph`]), dispatched dependency-aware — a
+//! node's pool job is submitted only once its predecessors complete, and
+//! each completion releases its successors (see `request::Pipeline`). The
+//! node kernels flow through the same program cache, replay tiers and
+//! fabric routing as flat requests; the factorization response reports
+//! the DAG makespan as its cycle cost plus the host-computed factors.
+//!
 //! Co-simulation split:
 //! * **timing/energy** — always from the PE + NoC simulators;
 //! * **values** — from the AOT-compiled XLA artifacts via [`crate::runtime`]
@@ -43,7 +53,7 @@ pub mod request;
 pub use cache::{CacheStats, CacheTally, ProgramCache, ProgramKey};
 pub use open_loop::{OpenLoopOptions, OpenLoopOutcome, OpenLoopReport, OpenLoopStats, ShedReason};
 pub use pool::PoolJobCounts;
-pub use request::{BatchStats, Request, Response};
+pub use request::{BatchStats, FactorOutcome, Request, Response};
 
 use crate::codegen::GemmLayout;
 use crate::energy::PowerModel;

@@ -35,6 +35,11 @@
 //! per-kernel `PeStats` and the NoC transfer schedule, both independent of
 //! which worker ran a job and in which order.
 //!
+//! The pool is dependency-oblivious by design: factorization DAG nodes
+//! arrive as ordinary `Job::GemmTile`/`Gemv`/`Level1` submissions, because
+//! the coordinator's pipeline withholds a node's job until its
+//! predecessors complete. Every job the pool sees is ready to run.
+//!
 //! Fabric mode (`EngineConfig::fabric`) keeps that invariant by placing
 //! jobs on **virtual** tiles, not host workers: the coordinator routes
 //! each job on the shared [`crate::noc::Fabric`] at *finalize* time

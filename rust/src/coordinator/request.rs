@@ -1,7 +1,19 @@
 //! Request/response types and the coordinator's serve loops — the
-//! "request path" of the system. Requests are BLAS calls; responses carry
-//! values plus the simulated cost report. Everything here is pure Rust over
-//! AOT artifacts: Python is never on this path.
+//! "request path" of the system. Requests are BLAS calls or LAPACK
+//! factorizations; responses carry values plus the simulated cost report.
+//! Everything here is pure Rust over AOT artifacts: Python is never on
+//! this path.
+//!
+//! Factorization requests ([`Request::Dgeqrf`] / [`Request::Dgetrf`] /
+//! [`Request::Dpotrf`]) are not flat kernels: admission expands them
+//! (`lapack::expand`) into a dependency DAG of cached BLAS kernel calls,
+//! and the pipeline dispatches that DAG **dependency-aware** — only the
+//! initial ready set is staged, and every later node reaches the shared
+//! worker queue exactly when its last predecessor's result is absorbed.
+//! Factor values come from the host reference computed at expansion time
+//! (the same convention as Level-1/2 serving: kernels model timing with
+//! fixed operand seeds, values resolve host-side), so a served
+//! factorization is bit-comparable to `lapack::{dgeqrf,dgetrf,dpotrf}`.
 //!
 //! Two serving modes:
 //! * [`Coordinator::serve`] — strictly sequential (one request fully
@@ -27,9 +39,12 @@ use super::{
 };
 use crate::codegen::layout::VecLayout;
 use crate::codegen::GemmLayout;
+use crate::dag::{ExecGraph, ExecState, KernelCall};
+use crate::energy::PowerModel;
+use crate::lapack::{expand, FactorKind, Factors, FlopProfile};
 use crate::metrics::{Measurement, Routine};
 use crate::obs::{Event, EventKind, Tier, NO_REQ};
-use crate::pe::{AeLevel, ScheduledProgram};
+use crate::pe::{AeLevel, PeConfig, PeStats, ScheduledProgram};
 use crate::util::{round_up, Mat, XorShift64};
 use std::collections::hash_map::Entry;
 use std::collections::{HashMap, VecDeque};
@@ -48,8 +63,17 @@ pub enum Request {
     Daxpy { alpha: f64, x: Vec<f64>, y: Vec<f64> },
     /// ‖x‖₂.
     Dnrm2 { x: Vec<f64> },
+    /// Blocked Householder QR of square `a`, served as a kernel DAG.
+    Dgeqrf { a: Mat },
+    /// Partial-pivot LU of square `a`, served as a kernel DAG.
+    Dgetrf { a: Mat },
+    /// Cholesky (lower) of SPD `a`, served as a kernel DAG.
+    Dpotrf { a: Mat },
     /// Synthetic request by shape only (workload generators).
     RandomDgemm { n: usize, seed: u64 },
+    /// Synthetic factorization by kind and shape only (Cholesky
+    /// materializes an SPD operand).
+    RandomFactor { kind: FactorKind, n: usize, seed: u64 },
 }
 
 impl Request {
@@ -61,6 +85,10 @@ impl Request {
             Request::Ddot { .. } => "ddot",
             Request::Daxpy { .. } => "daxpy",
             Request::Dnrm2 { .. } => "dnrm2",
+            Request::Dgeqrf { .. } => "dgeqrf",
+            Request::Dgetrf { .. } => "dgetrf",
+            Request::Dpotrf { .. } => "dpotrf",
+            Request::RandomFactor { kind, .. } => kind.op_name(),
         }
     }
 
@@ -72,7 +100,9 @@ impl Request {
             Request::Ddot { x, .. } => x.len(),
             Request::Daxpy { x, .. } => x.len(),
             Request::Dnrm2 { x } => x.len(),
+            Request::Dgeqrf { a } | Request::Dgetrf { a } | Request::Dpotrf { a } => a.rows(),
             Request::RandomDgemm { n, .. } => *n,
+            Request::RandomFactor { n, .. } => *n,
         }
     }
 
@@ -86,6 +116,17 @@ impl Request {
                 b: Mat::random(n, n, seed ^ 0xBEEF),
                 c: Mat::zeros(n, n),
             },
+            Request::RandomFactor { kind, n, seed } => {
+                let a = match kind {
+                    FactorKind::Chol => Mat::random_spd(n, seed),
+                    FactorKind::Qr | FactorKind::Lu => Mat::random(n, n, seed),
+                };
+                match kind {
+                    FactorKind::Qr => Request::Dgeqrf { a },
+                    FactorKind::Lu => Request::Dgetrf { a },
+                    FactorKind::Chol => Request::Dpotrf { a },
+                }
+            }
             other => other,
         }
     }
@@ -115,6 +156,12 @@ impl CoordinatorConfig {
             Request::Ddot { .. } | Request::Daxpy { .. } | Request::Dnrm2 { .. } => {
                 VecLayout::level1(round_up(n.max(4), 4)).gm_words()
             }
+            // A staged factorization pins its n×n operand; the node
+            // kernels' transient images come and go with the DAG.
+            Request::Dgeqrf { .. }
+            | Request::Dgetrf { .. }
+            | Request::Dpotrf { .. }
+            | Request::RandomFactor { .. } => n * n,
         };
         8 * words as u64
     }
@@ -134,6 +181,25 @@ pub struct Response {
     pub matrix: Option<Mat>,
     pub vector: Option<Vec<f64>>,
     pub scalar: Option<f64>,
+    /// Factorization payload (set for `Dgeqrf`/`Dgetrf`/`Dpotrf`).
+    pub factor: Option<Box<FactorOutcome>>,
+}
+
+/// Payload of a served factorization: the factors, the Fig-1 flop
+/// attribution, and the DAG execution summary.
+#[derive(Debug)]
+pub struct FactorOutcome {
+    /// Host-computed factors (bit-identical to the `lapack` reference —
+    /// values resolve host-side, kernels model timing).
+    pub factors: Factors,
+    /// Fig-1 flop attribution by BLAS routine — the serving-side view of
+    /// the paper's observation that factorizations live in DGEMM/DGEMV.
+    pub profile: FlopProfile,
+    /// Kernel DAG nodes executed on the pool.
+    pub nodes: usize,
+    /// Critical-path makespan over the node kernels, in PE cycles.
+    /// Equals `Response::cycles` off-fabric; a fabric adds NoC routing.
+    pub makespan: u64,
 }
 
 /// Telemetry of one [`Coordinator::serve_batch`] call.
@@ -172,6 +238,7 @@ fn dgemm_response(n: usize, r: DgemmResult) -> Response {
         matrix: Some(r.c),
         vector: None,
         scalar: None,
+        factor: None,
     }
 }
 
@@ -182,7 +249,12 @@ fn meas_spec(req: &Request, ae: AeLevel) -> MeasSpec {
         Request::Ddot { x, .. } => MeasSpec::level1(Routine::Ddot, x.len(), 1.5, ae),
         Request::Daxpy { alpha, x, .. } => MeasSpec::level1(Routine::Daxpy, x.len(), *alpha, ae),
         Request::Dnrm2 { x } => MeasSpec::level1(Routine::Dnrm2, x.len(), 1.5, ae),
-        Request::Dgemm { .. } | Request::RandomDgemm { .. } => {
+        Request::Dgemm { .. }
+        | Request::RandomDgemm { .. }
+        | Request::Dgeqrf { .. }
+        | Request::Dgetrf { .. }
+        | Request::Dpotrf { .. }
+        | Request::RandomFactor { .. } => {
             unreachable!("not a Level-1/2 request")
         }
     }
@@ -303,6 +375,24 @@ enum Slot {
     /// tier is set only for the request that paid the simulation — cache
     /// hits and in-flight sharers executed nothing.
     Meas { req: Request, meas: Option<Box<Measurement>>, tier: Option<Tier> },
+    /// A factorization expanded into a kernel DAG (host factors already
+    /// resolved at staging); complete when every node's pool result has
+    /// been absorbed. Successor nodes are dispatched from
+    /// [`Coordinator::absorb`] as completions release them — the
+    /// dependency-aware dispatch step.
+    Factor {
+        kind: FactorKind,
+        n: usize,
+        graph: ExecGraph,
+        /// Ready-set tracker: which nodes completed, what each completion
+        /// releases.
+        state: ExecState,
+        factors: Box<Factors>,
+        profile: FlopProfile,
+        /// Per-node kernel stats + execution tier (`None` = outstanding),
+        /// indexed by DAG node.
+        nodes: Vec<Option<(PeStats, Tier)>>,
+    },
 }
 
 impl Slot {
@@ -310,6 +400,7 @@ impl Slot {
         match self {
             Slot::Dgemm { flight, got, .. } => *got == flight.pending.tile_count(),
             Slot::Meas { meas, .. } => meas.is_some(),
+            Slot::Factor { state, .. } => state.is_done(),
         }
     }
 }
@@ -348,6 +439,10 @@ pub(crate) struct Pipeline {
     /// Key → ids waiting on an in-flight measurement; id → its key.
     waiting: HashMap<ProgramKey, Vec<u64>>,
     submitted: HashMap<u64, ProgramKey>,
+    /// Factorization node jobs on the pool: pool job id → (owning request
+    /// id, DAG node index). Node job ids are drawn from `next_id` like
+    /// request ids (so they never collide) but never enter `inflight`.
+    node_jobs: HashMap<u64, (u64, usize)>,
     /// Same-kernel tile coalescer (inert unless `replay_batch` is set).
     batcher: TileBatcher,
     next_id: u64,
@@ -363,6 +458,7 @@ impl Pipeline {
             staged_bytes: 0,
             waiting: HashMap::new(),
             submitted: HashMap::new(),
+            node_jobs: HashMap::new(),
             batcher: TileBatcher::new(cfg.replay_batch),
             next_id: 0,
             stats: BatchStats::default(),
@@ -413,11 +509,44 @@ impl Coordinator {
                 let r = self.dgemm(&a, &b, &c);
                 dgemm_response(n, r)
             }
-            Request::RandomDgemm { .. } => unreachable!("materialize() resolved synthetics"),
+            Request::RandomDgemm { .. } | Request::RandomFactor { .. } => {
+                unreachable!("materialize() resolved synthetics")
+            }
+            req @ (Request::Dgeqrf { .. } | Request::Dgetrf { .. } | Request::Dpotrf { .. }) => {
+                self.serve_factor_blocking(req)
+            }
             other => {
                 let meas = self.measure_blocking(meas_spec(&other, self.cfg.ae));
                 self.measured_response(NO_REQ, other, meas)
             }
+        }
+    }
+
+    /// Serve one factorization to completion through the graph-aware
+    /// pipeline — factorizations are inherently multi-kernel, so even the
+    /// sequential path drives a (single-request) DAG dispatch loop. The
+    /// batched path produces identical responses (same staged kernels,
+    /// same deterministic schedule).
+    fn serve_factor_blocking(&mut self, req: Request) -> Response {
+        let mut pipe = Pipeline::new(&self.cfg);
+        pipe.stats.requests = 1;
+        let bytes = self.cfg.staged_bytes(&req);
+        self.admit(&mut pipe, req, bytes, 0, 0, 0);
+        loop {
+            if let Some(fin) = self.pop_ready(&mut pipe) {
+                self.trace(|| Event {
+                    req: fin.id,
+                    sim: fin.resp.cycles,
+                    host_ns: None,
+                    kind: EventKind::Completed {
+                        queue_ns: 0,
+                        service_ns: 0,
+                        cycles: fin.resp.cycles,
+                    },
+                });
+                return fin.resp;
+            }
+            self.drain_blocking(&mut pipe);
         }
     }
 
@@ -435,7 +564,12 @@ impl Coordinator {
             Request::Dgemv { a, .. } => a.rows() as u64,
             Request::Daxpy { x, .. } => x.len() as u64,
             Request::Ddot { .. } | Request::Dnrm2 { .. } => 1,
-            Request::Dgemm { .. } | Request::RandomDgemm { .. } => 0,
+            Request::Dgemm { .. }
+            | Request::RandomDgemm { .. }
+            | Request::Dgeqrf { .. }
+            | Request::Dgetrf { .. }
+            | Request::Dpotrf { .. }
+            | Request::RandomFactor { .. } => 0,
         };
         let cycles = match self.shared.fabric.as_ref() {
             Some(fabric) => {
@@ -480,11 +614,26 @@ impl Coordinator {
                 let (s, source) = self.dnrm2_value(&x);
                 ("dnrm2", n, source, None, Some(s))
             }
-            Request::Dgemm { .. } | Request::RandomDgemm { .. } => {
+            Request::Dgemm { .. }
+            | Request::RandomDgemm { .. }
+            | Request::Dgeqrf { .. }
+            | Request::Dgetrf { .. }
+            | Request::Dpotrf { .. }
+            | Request::RandomFactor { .. } => {
                 unreachable!("measured_response() is for Level-1/2 requests")
             }
         };
-        Response { op, n, source, cycles, energy_j: None, matrix: None, vector, scalar }
+        Response {
+            op,
+            n,
+            source,
+            cycles,
+            energy_j: None,
+            matrix: None,
+            vector,
+            scalar,
+            factor: None,
+        }
     }
 
     /// Serve a batch of requests strictly in order, returning all
@@ -606,6 +755,8 @@ impl Coordinator {
             &mut pipe.submitted,
             &mut pipe.batcher,
             &mut pipe.stats,
+            &mut pipe.node_jobs,
+            &mut pipe.next_id,
         );
         if let Some(before) = cache_before {
             self.trace_cache_delta(id, before);
@@ -696,10 +847,72 @@ impl Coordinator {
         }
     }
 
-    /// Record one pooled result into its in-flight slot.
+    /// Submit one factorization DAG node's kernel to the pool: allocate a
+    /// pool job id from the pipeline counter, record its owner, fetch the
+    /// cached program (**counted** — every node is a first-class program
+    /// cache customer, so repeated same-shape factorizations read as warm
+    /// hits), pack fixed-seed operands and enqueue. Node kernels are
+    /// priced, queued and scheduled exactly like flat requests' jobs —
+    /// same WRR lanes, same lane-cycle currency.
+    ///
+    /// Deliberately traceless: successor submissions are driven by racy
+    /// worker completions, so the per-node `Dispatched` events are
+    /// re-emitted in node order at finalize (like DGEMM tile tiers),
+    /// keeping the simulated event log deterministic. Cache traffic is
+    /// tallied into the tenant's `CacheStats` counters either way; the
+    /// per-event cache log covers the admission-time staging window only.
+    fn submit_node(
+        &mut self,
+        owner: u64,
+        node: usize,
+        call: KernelCall,
+        node_jobs: &mut HashMap<u64, (u64, usize)>,
+        next_id: &mut u64,
+    ) {
+        let job_id = *next_id;
+        *next_id += 1;
+        node_jobs.insert(job_id, (owner, node));
+        let ae = self.cfg.ae;
+        let job = match call {
+            KernelCall::Gemm { m, p, k } => {
+                let (mp, pp, kp) = (round_up(m, 4), round_up(p, 4), round_up(k, 4));
+                let sched = self.cache().gemm_rect_for(mp, pp, kp, ae, Some(&self.tally));
+                let layout = GemmLayout::rect(mp, pp, kp);
+                // Fixed operand seeds: PE timing is data-independent, so
+                // the node's simulated cost depends only on its shape.
+                let gm = layout.pack(
+                    &Mat::random(mp, kp, 0xDA6),
+                    &Mat::random(kp, pp, 0xDA7),
+                    &Mat::zeros(mp, pp),
+                );
+                Job::GemmTile { job_id, tile_idx: node, sched, layout, gm }
+            }
+            KernelCall::Gemv { n } => {
+                let np = round_up(n, 4);
+                let sched = self.cache().gemv_for(np, ae, Some(&self.tally));
+                Job::Gemv { job_id, n: np, sched }
+            }
+            KernelCall::Level1 { routine, n, alpha } => {
+                let np = round_up(n.max(4), 4);
+                let sched = self.cache().level1_for(routine, np, alpha, ae, Some(&self.tally));
+                Job::Level1 { job_id, routine, n: np, alpha, sched }
+            }
+        };
+        self.pool.submit(job);
+    }
+
+    /// Record one pooled result into its in-flight slot. Factorization
+    /// node results are recognized by pool job id first: a node job is
+    /// owned by its factorization request, not by a slot of its own.
     fn absorb(&mut self, pipe: &mut Pipeline, done: Done) {
         match done {
             Done::GemmTile { job_id, tile_idx, out, stats, tier } => {
+                if let Some((owner, node)) = pipe.node_jobs.remove(&job_id) {
+                    debug_assert_eq!(tile_idx, node, "node index rides in tile_idx");
+                    drop(out); // node values resolve host-side
+                    self.absorb_node(pipe, owner, node, stats, tier);
+                    return;
+                }
                 match slot_mut(&mut pipe.inflight, job_id) {
                     Slot::Dgemm { tiles, got, tiers, .. } => {
                         debug_assert!(tiles[tile_idx].is_none(), "duplicate tile");
@@ -707,10 +920,17 @@ impl Coordinator {
                         tiers.push((tile_idx, tier));
                         *got += 1;
                     }
-                    Slot::Meas { .. } => unreachable!("tile for a non-DGEMM slot"),
+                    // Factor nodes were intercepted via `node_jobs` above.
+                    Slot::Meas { .. } | Slot::Factor { .. } => {
+                        unreachable!("tile for a non-DGEMM slot")
+                    }
                 }
             }
             Done::Measured { job_id, meas, tier } => {
+                if let Some((owner, node)) = pipe.node_jobs.remove(&job_id) {
+                    self.absorb_node(pipe, owner, node, meas.stats, tier);
+                    return;
+                }
                 let key = pipe.submitted.remove(&job_id).expect("measurement without a key");
                 self.cache().store_measurement(key, meas.clone());
                 for id in pipe.waiting.remove(&key).unwrap_or_default() {
@@ -723,10 +943,37 @@ impl Coordinator {
                                 *t = Some(tier);
                             }
                         }
-                        Slot::Dgemm { .. } => unreachable!("measurement for a DGEMM slot"),
+                        Slot::Dgemm { .. } | Slot::Factor { .. } => {
+                            unreachable!("measurement for a non-Level-1/2 slot")
+                        }
                     }
                 }
             }
+        }
+    }
+
+    /// Record one completed factorization node and dispatch whatever its
+    /// completion released — the dependency-aware step: a successor's
+    /// kernel reaches the shared worker queue only here, strictly after
+    /// its last predecessor's result came back.
+    fn absorb_node(
+        &mut self,
+        pipe: &mut Pipeline,
+        owner: u64,
+        node: usize,
+        stats: PeStats,
+        tier: Tier,
+    ) {
+        let released: Vec<(usize, KernelCall)> = match slot_mut(&mut pipe.inflight, owner) {
+            Slot::Factor { graph, state, nodes, .. } => {
+                debug_assert!(nodes[node].is_none(), "duplicate node result");
+                nodes[node] = Some((stats, tier));
+                state.complete(node).into_iter().map(|s| (s, graph.node(s).call)).collect()
+            }
+            _ => unreachable!("node result for a non-factorization slot"),
+        };
+        for (succ, call) in released {
+            self.submit_node(owner, succ, call, &mut pipe.node_jobs, &mut pipe.next_id);
         }
     }
 
@@ -754,7 +1001,10 @@ impl Coordinator {
 
     /// Stage one materialized request: a DGEMM enqueues its tile kernels; a
     /// Level-1/2 request resolves its measurement from the cache, attaches
-    /// to an identical in-flight kernel, or submits a new one to the pool.
+    /// to an identical in-flight kernel, or submits a new one to the pool;
+    /// a factorization expands into its kernel DAG and enqueues only the
+    /// DAG's initial ready set (successors follow from `absorb`).
+    #[allow(clippy::too_many_arguments)]
     fn stage(
         &mut self,
         id: u64,
@@ -763,6 +1013,8 @@ impl Coordinator {
         submitted: &mut HashMap<u64, ProgramKey>,
         batcher: &mut TileBatcher,
         stats: &mut BatchStats,
+        node_jobs: &mut HashMap<u64, (u64, usize)>,
+        next_id: &mut u64,
     ) -> Slot {
         match req {
             Request::Dgemm { a, b, c } => {
@@ -778,7 +1030,39 @@ impl Coordinator {
                     tiers: Vec::new(),
                 }
             }
-            Request::RandomDgemm { .. } => unreachable!("materialize() resolved synthetics"),
+            Request::RandomDgemm { .. } | Request::RandomFactor { .. } => {
+                unreachable!("materialize() resolved synthetics")
+            }
+            req @ (Request::Dgeqrf { .. } | Request::Dgetrf { .. } | Request::Dpotrf { .. }) => {
+                let (kind, a) = match req {
+                    Request::Dgeqrf { a } => (FactorKind::Qr, a),
+                    Request::Dgetrf { a } => (FactorKind::Lu, a),
+                    Request::Dpotrf { a } => (FactorKind::Chol, a),
+                    _ => unreachable!("matched above"),
+                };
+                // Host factors + flop profile resolve at expansion time;
+                // the DAG carries only timing kernels from here on.
+                let expand::Expansion { graph, factors, profile, .. } = expand::expand(kind, &a);
+                let state = ExecState::new(&graph);
+                let nodes = vec![None; graph.len()];
+                // Dependency-aware dispatch, step 1: only nodes with no
+                // predecessors reach the pool at staging. Every other
+                // node is submitted by `absorb` when its last
+                // predecessor's result lands.
+                for node in state.initial_ready() {
+                    let call = graph.node(node).call;
+                    self.submit_node(id, node, call, node_jobs, next_id);
+                }
+                Slot::Factor {
+                    kind,
+                    n: a.rows(),
+                    graph,
+                    state,
+                    factors: Box::new(factors),
+                    profile,
+                    nodes,
+                }
+            }
             other => {
                 let spec = meas_spec(&other, self.cfg.ae);
                 let meas = self.cached_measurement_tallied(&spec.key);
@@ -851,6 +1135,122 @@ impl Coordinator {
                 let meas = meas.expect("finalize() called on an incomplete slot");
                 self.measured_response(id, req, *meas)
             }
+            Slot::Factor { kind, n, graph, factors, profile, nodes, .. } => {
+                let per: Vec<(PeStats, Tier)> = nodes
+                    .into_iter()
+                    .map(|s| s.expect("finalize() called on an incomplete DAG"))
+                    .collect();
+                // Worker-side truth re-emitted in node order, like DGEMM
+                // tiles, so the log is independent of worker racing.
+                // Successor submissions happen on racy completion order,
+                // so their `Dispatched` events are also deferred to here.
+                let lane = self.pool.lane();
+                for (stats, _) in &per {
+                    let cost = stats.cycles;
+                    self.trace(|| Event {
+                        req: id,
+                        sim: 0,
+                        host_ns: None,
+                        kind: EventKind::Dispatched { lane, cost },
+                    });
+                }
+                for &(_, tier) in &per {
+                    self.trace(|| Event {
+                        req: id,
+                        sim: 0,
+                        host_ns: None,
+                        kind: EventKind::Executed { tier },
+                    });
+                }
+                // Deterministic topological schedule over the node
+                // kernel cycles (start = max predecessor finish): its
+                // anchors drive the DAG trace events — release never
+                // precedes the releasing completion — and its makespan
+                // is the off-fabric response cost (the critical path).
+                let node_cycles: Vec<u64> = per.iter().map(|(s, _)| s.cycles).collect();
+                let sched = graph.schedule(&node_cycles);
+                let makespan = sched.iter().map(|&(_, fin)| fin).max().unwrap_or(0);
+                for (i, &(start, _)) in sched.iter().enumerate() {
+                    let call = graph.node(i).call;
+                    self.trace(|| Event {
+                        req: id,
+                        sim: start,
+                        host_ns: None,
+                        kind: EventKind::NodeReleased { node: i, call: call.tag(), n: call.n() },
+                    });
+                }
+                for (i, &(_, finish)) in sched.iter().enumerate() {
+                    let cycles = node_cycles[i];
+                    self.trace(|| Event {
+                        req: id,
+                        sim: finish,
+                        host_ns: None,
+                        kind: EventKind::NodeCompleted { node: i, cycles },
+                    });
+                }
+                // Energy: Σ node kernel energies under the paper model.
+                let power = PowerModel::paper();
+                let pe_cfg = PeConfig::paper(self.cfg.ae);
+                let energy: f64 = per
+                    .iter()
+                    .map(|(s, _)| power.energy_joules(self.cfg.ae, &pe_cfg, s))
+                    .sum();
+                // Under a fabric, each node's operand stream and result
+                // write-back (its region of the factor matrix) is priced
+                // on the mesh in node order; the response cost is the
+                // last landing, floored by the compute critical path
+                // (link/tile contention is modeled, dependency stalls are
+                // already captured by the makespan). Off-fabric, delivery
+                // is free and the cost is the DAG critical path.
+                let cycles = match self.shared.fabric.as_ref() {
+                    Some(fabric) => {
+                        let routed: Vec<_> = {
+                            let mut fab = fabric.lock().expect("fabric lock");
+                            per.iter()
+                                .enumerate()
+                                .map(|(i, (s, _))| {
+                                    let words = graph.node(i).binding.words();
+                                    fab.route_job(self.home_row, words, s.cycles, words)
+                                })
+                                .collect()
+                        };
+                        let mut last = makespan;
+                        for job in routed {
+                            last = last.max(job.finish);
+                            self.trace(|| Event {
+                                req: id,
+                                sim: job.depart,
+                                host_ns: None,
+                                kind: EventKind::FabricRouted {
+                                    tile: job.tile,
+                                    depart: job.depart,
+                                    ready: job.ready,
+                                    finish: job.finish,
+                                    compute: job.compute,
+                                },
+                            });
+                        }
+                        last
+                    }
+                    None => makespan,
+                };
+                Response {
+                    op: kind.op_name(),
+                    n,
+                    source: ValueSource::PeSim,
+                    cycles,
+                    energy_j: Some(energy),
+                    matrix: None,
+                    vector: None,
+                    scalar: None,
+                    factor: Some(Box::new(FactorOutcome {
+                        factors: *factors,
+                        profile,
+                        nodes: per.len(),
+                        makespan,
+                    })),
+                }
+            }
         }
     }
 }
@@ -896,6 +1296,35 @@ pub fn repeated_gemm_workload(count: usize, n: usize, seed: u64) -> Vec<Request>
     (0..count).map(|i| Request::RandomDgemm { n, seed: seed + i as u64 }).collect()
 }
 
+/// Repeated-shape factorization workload: `count` same-kind, same-order
+/// factorizations with distinct operand seeds — the DAG-serving steady
+/// state, where every node kernel after the first factorization replays a
+/// warm cached program.
+pub fn factor_workload(kind: FactorKind, count: usize, n: usize, seed: u64) -> Vec<Request> {
+    (0..count).map(|i| Request::RandomFactor { kind, n, seed: seed + i as u64 }).collect()
+}
+
+/// Mixed workload: the flat random mix with every fourth request replaced
+/// by a factorization of order `lapack_n` (kinds rotating QR → LU →
+/// Cholesky), so factorization DAGs and flat BLAS share one pipeline.
+pub fn mixed_lapack_workload(
+    count: usize,
+    max_n: usize,
+    lapack_n: usize,
+    seed: u64,
+) -> Vec<Request> {
+    let kinds = [FactorKind::Qr, FactorKind::Lu, FactorKind::Chol];
+    let mut reqs = random_workload(count, max_n, seed);
+    for (slot, i) in (0..reqs.len()).step_by(4).enumerate() {
+        reqs[i] = Request::RandomFactor {
+            kind: kinds[slot % kinds.len()],
+            n: lapack_n,
+            seed: seed ^ (0xFAC0 + i as u64),
+        };
+    }
+    reqs
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -921,8 +1350,10 @@ mod tests {
         assert_eq!(resps.len(), 8);
         for r in &resps {
             assert!(r.cycles > 0, "{} has zero cycles", r.op);
-            let payloads =
-                r.matrix.is_some() as u8 + r.vector.is_some() as u8 + r.scalar.is_some() as u8;
+            let payloads = r.matrix.is_some() as u8
+                + r.vector.is_some() as u8
+                + r.scalar.is_some() as u8
+                + r.factor.is_some() as u8;
             assert_eq!(payloads, 1, "{} must carry exactly one payload", r.op);
         }
     }
@@ -957,6 +1388,57 @@ mod tests {
         let rcfg = CoordinatorConfig { residual: true, ..cfg };
         let odd = Request::RandomDgemm { n: 10, seed: 2 };
         assert_eq!(rcfg.staged_bytes(&odd), 3 * 100 * 8);
+    }
+
+    #[test]
+    fn factor_requests_have_metadata_and_prices() {
+        let r = Request::RandomFactor { kind: FactorKind::Qr, n: 24, seed: 3 };
+        assert_eq!(r.name(), "dgeqrf");
+        assert_eq!(r.n(), 24);
+        let cfg = CoordinatorConfig::default();
+        // A factorization pins its n×n operand: 8·n² bytes, shape-only.
+        assert_eq!(cfg.staged_bytes(&r), 8 * 24 * 24);
+        let conc = r.clone().materialize();
+        assert!(matches!(conc, Request::Dgeqrf { .. }));
+        assert_eq!(cfg.staged_bytes(&conc), 8 * 24 * 24);
+        let lu = Request::RandomFactor { kind: FactorKind::Lu, n: 10, seed: 1 };
+        assert_eq!(lu.name(), "dgetrf");
+        assert!(matches!(lu.materialize(), Request::Dgetrf { .. }));
+        let ch = Request::RandomFactor { kind: FactorKind::Chol, n: 10, seed: 1 };
+        assert_eq!(ch.name(), "dpotrf");
+        assert!(matches!(ch.materialize(), Request::Dpotrf { .. }));
+    }
+
+    #[test]
+    fn served_factorization_carries_the_factor_payload() {
+        let mut co = coord();
+        let resp =
+            co.serve_one(Request::RandomFactor { kind: FactorKind::Chol, n: 12, seed: 9 });
+        assert_eq!(resp.op, "dpotrf");
+        assert_eq!(resp.n, 12);
+        assert!(resp.matrix.is_none() && resp.vector.is_none() && resp.scalar.is_none());
+        let f = resp.factor.expect("factor payload");
+        // n = 12, nb = 4 → 3 panels + 3 updates: a genuine multi-node DAG.
+        assert_eq!(f.nodes, 6);
+        assert!(f.makespan > 0);
+        // Off-fabric the response cost is the DAG critical path.
+        assert_eq!(resp.cycles, f.makespan);
+        assert!(f.profile.total() > 0);
+        assert!(resp.energy_j.expect("modelled energy") > 0.0);
+    }
+
+    #[test]
+    fn factor_workloads_mix_and_repeat() {
+        let reqs = factor_workload(FactorKind::Qr, 3, 16, 7);
+        assert_eq!(reqs.len(), 3);
+        assert!(reqs.iter().all(|r| r.name() == "dgeqrf" && r.n() == 16));
+        let mixed = mixed_lapack_workload(9, 24, 16, 5);
+        let factors =
+            mixed.iter().filter(|r| matches!(r, Request::RandomFactor { .. })).count();
+        assert_eq!(factors, 3, "every fourth request is a factorization");
+        assert!(matches!(mixed[0], Request::RandomFactor { kind: FactorKind::Qr, .. }));
+        assert!(matches!(mixed[4], Request::RandomFactor { kind: FactorKind::Lu, .. }));
+        assert!(matches!(mixed[8], Request::RandomFactor { kind: FactorKind::Chol, .. }));
     }
 
     #[test]

@@ -124,6 +124,37 @@ impl Dag {
         self.total_ops() as f64 / self.critical_path().max(1) as f64
     }
 
+    /// Predecessors of a node.
+    pub fn preds(&self, id: NodeId) -> &[NodeId] {
+        &self.preds[id]
+    }
+
+    /// Successor adjacency — the inverse of the stored predecessor edges,
+    /// each list in ascending node order.
+    pub fn successors(&self) -> Vec<Vec<NodeId>> {
+        let mut succ = vec![Vec::new(); self.len()];
+        for (i, ps) in self.preds.iter().enumerate() {
+            for &p in ps {
+                succ[p].push(i);
+            }
+        }
+        for s in &mut succ {
+            s.sort_unstable();
+        }
+        succ
+    }
+
+    /// Deterministic topological ready-set iterator: yields successive
+    /// frontiers of nodes whose predecessors have all been yielded, each
+    /// frontier in ascending node order. Concatenating the frontiers gives
+    /// a canonical topological order (the executor's dispatch order for a
+    /// fixed completion order).
+    pub fn ready_sets(&self) -> ReadySets {
+        let indegree = self.preds.iter().map(Vec::len).collect::<Vec<_>>();
+        let ready = (0..self.len()).filter(|&i| indegree[i] == 0).collect();
+        ReadySets { succ: self.successors(), indegree, ready }
+    }
+
     /// The §4 summary: (ops, critical path, max width, average parallelism).
     pub fn profile(&self) -> DagProfile {
         let widths = self.level_widths();
@@ -133,6 +164,35 @@ impl Dag {
             max_width: widths.iter().copied().max().unwrap_or(0),
             avg_parallelism: self.avg_parallelism(),
         }
+    }
+}
+
+/// Iterator over topological ready frontiers — see [`Dag::ready_sets`].
+#[derive(Debug, Clone)]
+pub struct ReadySets {
+    succ: Vec<Vec<NodeId>>,
+    indegree: Vec<usize>,
+    ready: Vec<NodeId>,
+}
+
+impl Iterator for ReadySets {
+    type Item = Vec<NodeId>;
+
+    fn next(&mut self) -> Option<Vec<NodeId>> {
+        if self.ready.is_empty() {
+            return None;
+        }
+        let frontier = std::mem::take(&mut self.ready);
+        for &n in &frontier {
+            for &s in &self.succ[n] {
+                self.indegree[s] -= 1;
+                if self.indegree[s] == 0 {
+                    self.ready.push(s);
+                }
+            }
+        }
+        self.ready.sort_unstable();
+        Some(frontier)
     }
 }
 
@@ -182,6 +242,51 @@ mod tests {
         assert_eq!(p.critical_path, 2);
         assert_eq!(p.max_width, 1);
         assert!((p.avg_parallelism - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn successors_invert_preds() {
+        let mut d = Dag::new();
+        let a = d.input("a");
+        let b = d.input("b");
+        let m1 = d.op(OpKind::Mul, &[a, b], "m1");
+        let m2 = d.op(OpKind::Mul, &[a, b], "m2");
+        let s = d.op(OpKind::Add, &[m1, m2], "s");
+        assert_eq!(d.successors(), vec![vec![m1, m2], vec![m1, m2], vec![s], vec![s], vec![]]);
+        assert_eq!(d.preds(s), &[m1, m2]);
+        assert_eq!(d.preds(a), &[] as &[NodeId]);
+    }
+
+    #[test]
+    fn ready_sets_are_topological_and_ascending() {
+        let mut d = Dag::new();
+        let a = d.input("a");
+        let b = d.input("b");
+        let m1 = d.op(OpKind::Mul, &[a, b], "m1");
+        let m2 = d.op(OpKind::Mul, &[a, b], "m2");
+        let s = d.op(OpKind::Add, &[m1, m2], "s");
+        let frontiers: Vec<_> = d.ready_sets().collect();
+        assert_eq!(frontiers, vec![vec![a, b], vec![m1, m2], vec![s]]);
+        // Concatenation is a topological order covering every node once.
+        let order: Vec<_> = frontiers.into_iter().flatten().collect();
+        assert_eq!(order.len(), d.len());
+        let pos: Vec<_> = {
+            let mut p = vec![0; d.len()];
+            for (rank, &n) in order.iter().enumerate() {
+                p[n] = rank;
+            }
+            p
+        };
+        for n in 0..d.len() {
+            for &p in d.preds(n) {
+                assert!(pos[p] < pos[n], "pred {p} not before {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn ready_sets_empty_dag() {
+        assert_eq!(Dag::new().ready_sets().count(), 0);
     }
 
     #[test]

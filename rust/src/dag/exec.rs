@@ -1,0 +1,297 @@
+//! Executable kernel-granularity DAGs: the serving-side counterpart of the
+//! scalar analysis [`Dag`](crate::dag::Dag).
+//!
+//! Where `builder::Dag` models individual floating-point operations (the §4
+//! figures), an [`ExecGraph`] models whole cached kernels — DGEMM tiles,
+//! DGEMV panels, Level-1 sequences — with predecessor edges and operand
+//! buffer bindings. The coordinator expands a LAPACK factorization request
+//! into one of these graphs (see `lapack::expand`), then dispatches nodes to
+//! the worker pool *dependency-aware*: a node is only offered once every
+//! predecessor completed, and completions release successors through
+//! [`ExecState::complete`]. Ready sets are always reported in ascending node
+//! order, so dispatch order is deterministic for a fixed completion order.
+
+use crate::metrics::Routine;
+
+/// A kernel-granularity BLAS call — exactly the kernel classes the program
+/// cache already serves, so factorization nodes flow through the same
+/// `ScheduledProgram` entries, replay tiers, and fabric routing as flat
+/// requests.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KernelCall {
+    /// An m×p·p×k tile product (trailing-matrix update).
+    Gemm { m: usize, p: usize, k: usize },
+    /// An n×n matrix-vector product (panel / column update).
+    Gemv { n: usize },
+    /// A Level-1 sequence of length n (DDOT/DAXPY/DSCAL-equivalents).
+    Level1 { routine: Routine, n: usize, alpha: f64 },
+}
+
+impl KernelCall {
+    /// Stable lowercase tag for labels and obs events.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            KernelCall::Gemm { .. } => "gemm",
+            KernelCall::Gemv { .. } => "gemv",
+            KernelCall::Level1 { routine, .. } => match routine {
+                Routine::Ddot => "ddot",
+                Routine::Daxpy => "daxpy",
+                Routine::Dnrm2 => "dnrm2",
+                Routine::Dgemv => "gemv",
+                Routine::Dgemm => "gemm",
+            },
+        }
+    }
+
+    /// Representative problem size (largest dimension).
+    pub fn n(&self) -> usize {
+        match *self {
+            KernelCall::Gemm { m, p, k } => m.max(p).max(k),
+            KernelCall::Gemv { n } => n,
+            KernelCall::Level1 { n, .. } => n,
+        }
+    }
+}
+
+/// Rectangular region of the factorization buffer a node reads/writes —
+/// the operand binding used to price NoC traffic for the node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub row: usize,
+    pub col: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Region {
+    /// Operand footprint in 8-byte words.
+    pub fn words(&self) -> u64 {
+        (self.rows * self.cols) as u64
+    }
+}
+
+/// One executable node: a kernel call, its predecessor edges, a
+/// human-readable label (e.g. `P2` or `U1,3`), and its buffer binding.
+#[derive(Debug, Clone)]
+pub struct ExecNode {
+    pub call: KernelCall,
+    pub preds: Vec<usize>,
+    pub label: String,
+    pub binding: Region,
+}
+
+/// A dependency DAG of kernel calls, topologically ordered by construction
+/// (`push` rejects forward references, exactly like `builder::Dag`).
+#[derive(Debug, Clone, Default)]
+pub struct ExecGraph {
+    nodes: Vec<ExecNode>,
+}
+
+impl ExecGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a node depending on `preds` (each must already exist).
+    pub fn push(
+        &mut self,
+        call: KernelCall,
+        preds: &[usize],
+        label: impl Into<String>,
+        binding: Region,
+    ) -> usize {
+        for &p in preds {
+            assert!(p < self.nodes.len(), "forward reference in exec graph");
+        }
+        self.nodes.push(ExecNode {
+            call,
+            preds: preds.to_vec(),
+            label: label.into(),
+            binding,
+        });
+        self.nodes.len() - 1
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn node(&self, i: usize) -> &ExecNode {
+        &self.nodes[i]
+    }
+
+    pub fn nodes(&self) -> &[ExecNode] {
+        &self.nodes
+    }
+
+    /// Successor adjacency (inverse of the stored predecessor edges), each
+    /// list ascending.
+    pub fn successors(&self) -> Vec<Vec<usize>> {
+        let mut succ = vec![Vec::new(); self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            for &p in &node.preds {
+                succ[p].push(i);
+            }
+        }
+        // Pushed in ascending i order already; keep explicit for clarity.
+        for s in &mut succ {
+            s.sort_unstable();
+        }
+        succ
+    }
+
+    /// ASAP schedule under per-node costs: node start = max(pred finish),
+    /// finish = start + cycles. Returns `(start, finish)` per node; the
+    /// makespan (DAG critical path in cycles) is the max finish.
+    pub fn schedule(&self, cycles: &[u64]) -> Vec<(u64, u64)> {
+        assert_eq!(cycles.len(), self.nodes.len());
+        let mut out = vec![(0u64, 0u64); self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            let start = node.preds.iter().map(|&p| out[p].1).max().unwrap_or(0);
+            out[i] = (start, start + cycles[i]);
+        }
+        out
+    }
+
+    /// Critical path length in nodes (longest chain).
+    pub fn critical_len(&self) -> usize {
+        let mut depth = vec![0usize; self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            depth[i] = 1 + node.preds.iter().map(|&p| depth[p]).max().unwrap_or(0);
+        }
+        depth.into_iter().max().unwrap_or(0)
+    }
+}
+
+/// Mutable execution state over an [`ExecGraph`]: tracks indegrees and
+/// completions, releasing successors deterministically.
+#[derive(Debug, Clone)]
+pub struct ExecState {
+    indegree: Vec<usize>,
+    succ: Vec<Vec<usize>>,
+    done: Vec<bool>,
+    remaining: usize,
+}
+
+impl ExecState {
+    pub fn new(g: &ExecGraph) -> Self {
+        let indegree = g.nodes().iter().map(|n| n.preds.len()).collect::<Vec<_>>();
+        Self {
+            indegree,
+            succ: g.successors(),
+            done: vec![false; g.len()],
+            remaining: g.len(),
+        }
+    }
+
+    /// Nodes ready at the start (no predecessors), ascending.
+    pub fn initial_ready(&self) -> Vec<usize> {
+        (0..self.indegree.len()).filter(|&i| self.indegree[i] == 0).collect()
+    }
+
+    /// Mark node `i` complete; returns the successors this completion
+    /// released (all predecessors now done), in ascending order.
+    pub fn complete(&mut self, i: usize) -> Vec<usize> {
+        assert!(!self.done[i], "node {i} completed twice");
+        self.done[i] = true;
+        self.remaining -= 1;
+        let mut released = Vec::new();
+        for &s in &self.succ[i] {
+            self.indegree[s] -= 1;
+            if self.indegree[s] == 0 {
+                released.push(s);
+            }
+        }
+        released
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.remaining == 0
+    }
+
+    pub fn completed(&self, i: usize) -> bool {
+        self.done[i]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> Region {
+        Region { row: 0, col: 0, rows: 4, cols: 4 }
+    }
+
+    /// Diamond: 0 → {1, 2} → 3.
+    fn diamond() -> ExecGraph {
+        let mut g = ExecGraph::new();
+        let a = g.push(KernelCall::Gemv { n: 8 }, &[], "P0", reg());
+        let b = g.push(KernelCall::Gemm { m: 4, p: 4, k: 4 }, &[a], "U0,1", reg());
+        let c = g.push(KernelCall::Gemm { m: 4, p: 4, k: 4 }, &[a], "U0,2", reg());
+        g.push(KernelCall::Gemv { n: 4 }, &[b, c], "P1", reg());
+        g
+    }
+
+    #[test]
+    fn successors_invert_preds() {
+        let g = diamond();
+        assert_eq!(g.successors(), vec![vec![1, 2], vec![3], vec![3], vec![]]);
+        assert_eq!(g.critical_len(), 3);
+    }
+
+    #[test]
+    fn ready_release_order_is_deterministic() {
+        let g = diamond();
+        let mut st = ExecState::new(&g);
+        assert_eq!(st.initial_ready(), vec![0]);
+        assert_eq!(st.complete(0), vec![1, 2]);
+        // Node 3 only releases once BOTH predecessors finished.
+        assert_eq!(st.complete(2), Vec::<usize>::new());
+        assert!(!st.is_done());
+        assert_eq!(st.complete(1), vec![3]);
+        assert_eq!(st.complete(3), Vec::<usize>::new());
+        assert!(st.is_done());
+    }
+
+    #[test]
+    #[should_panic(expected = "completed twice")]
+    fn double_completion_rejected() {
+        let g = diamond();
+        let mut st = ExecState::new(&g);
+        st.complete(0);
+        st.complete(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "forward reference")]
+    fn forward_reference_rejected() {
+        let mut g = ExecGraph::new();
+        g.push(KernelCall::Gemv { n: 4 }, &[7], "bad", reg());
+    }
+
+    #[test]
+    fn schedule_respects_edges() {
+        let g = diamond();
+        // Costs: 10, 5, 7, 3.
+        let s = g.schedule(&[10, 5, 7, 3]);
+        assert_eq!(s[0], (0, 10));
+        assert_eq!(s[1], (10, 15));
+        assert_eq!(s[2], (10, 17));
+        // Node 3 starts at max(15, 17) = 17.
+        assert_eq!(s[3], (17, 20));
+    }
+
+    #[test]
+    fn call_tags_are_stable() {
+        assert_eq!(KernelCall::Gemm { m: 4, p: 4, k: 4 }.tag(), "gemm");
+        assert_eq!(KernelCall::Gemv { n: 8 }.tag(), "gemv");
+        let l1 = KernelCall::Level1 { routine: Routine::Daxpy, n: 16, alpha: 1.5 };
+        assert_eq!(l1.tag(), "daxpy");
+        assert_eq!(l1.n(), 16);
+        assert_eq!(reg().words(), 16);
+    }
+}

@@ -1,16 +1,25 @@
-//! DAG analysis of BLAS routines (§4, Figs 3–6, Tables 2–3).
+//! DAG analysis of BLAS routines (§4, Figs 3–6, Tables 2–3) and the
+//! executable kernel-graph layer the serving stack dispatches.
 //!
 //! The paper derives its PE design from directed-acyclic-graph structure:
 //! which operations can run in parallel (level width), how deep the
 //! dependency chains are (critical path), and what macro-operations repeat
-//! (the DOT4 pattern). This module builds those DAGs programmatically for
-//! ddot, dnrm2, daxpy, matrix-vector and the three matrix-multiplication
-//! algorithms, and computes the §4 statistics.
+//! (the DOT4 pattern). [`builder`] and [`routines`] build those scalar DAGs
+//! programmatically for ddot, dnrm2, daxpy, matrix-vector and the three
+//! matrix-multiplication algorithms, and compute the §4 statistics.
+//!
+//! [`exec`] lifts the same idea to kernel granularity: an [`ExecGraph`] of
+//! cached BLAS kernel calls with predecessor edges and operand bindings is
+//! what a LAPACK factorization request expands into (`lapack::expand`), and
+//! the coordinator's pipeline dispatches it dependency-aware — a node is
+//! offered to the pool only after its predecessors complete.
 
 pub mod builder;
+pub mod exec;
 pub mod routines;
 
-pub use builder::{Dag, NodeId, OpKind};
+pub use builder::{Dag, NodeId, OpKind, ReadySets};
+pub use exec::{ExecGraph, ExecNode, ExecState, KernelCall, Region};
 pub use routines::{
     daxpy_dag, ddot_dag, dgemv_dag, dnrm2_dag, gemm_block_dag, smm_block_dag, wmm_block_dag,
 };

@@ -40,6 +40,14 @@
 //! A standalone [`Coordinator::new`] builds a private single-tenant engine
 //! under the hood, so its behavior (dispatch order, stats, values, cycles,
 //! energy) is unchanged — pinned by the serving tests.
+//!
+//! Factorization DAG workloads need no engine-side support: dependency
+//! gating lives in the coordinator's pipeline, which submits a DAG node's
+//! job only once its predecessors complete — the shared lanes and the
+//! fair scheduler only ever see ready jobs, priced in the same
+//! estimated-cycle currency as flat BLAS kernels. A factorization tenant
+//! therefore receives proportional cycle service against a DGEMM-flooding
+//! tenant with no scheduler changes (pinned by the `lapack_serve` tests).
 
 pub mod latency;
 pub(crate) mod queue;

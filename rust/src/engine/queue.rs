@@ -31,6 +31,11 @@
 //! is tracked ([`WrrQueue::lane_served`]) so fairness is observable, not
 //! just implemented.
 //!
+//! The queue never sees a dependency: factorization DAG nodes are held
+//! back by the coordinator's pipeline until their predecessors complete,
+//! so every lane item is dispatchable — DRR accounting stays a pure
+//! cost-per-lane ledger with no notion of blocked work.
+//!
 //! Costs are **repriced at dispatch time** when the queue carries a
 //! repricer ([`WrrQueue::with_repricer`]): a job whose kernel memoized its
 //! real `PeStats.cycles` *while the job sat queued* is debited (and

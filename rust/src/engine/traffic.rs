@@ -7,7 +7,10 @@
 //! is meaningless. Open-loop driving offers requests on a schedule that does
 //! **not** react to completions — exactly how "millions of users" hit a BLAS
 //! service — and is what makes the DRR scheduler, cache quotas and admission
-//! budgets measurable under load.
+//! budgets measurable under load. With [`TrafficConfig::lapack_fraction`]
+//! set, a share of arrivals are LAPACK factorizations
+//! (`Request::RandomFactor`) that the pipeline expands into dependency DAGs
+//! of cached kernels, mixing graph workloads with flat BLAS in one queue.
 //!
 //! Everything here is deterministic given [`TrafficConfig::seed`]: the same
 //! config yields bit-identical arrival times and request payloads, which is
@@ -31,6 +34,7 @@
 //! ```
 
 use crate::coordinator::request::Request;
+use crate::lapack::FactorKind;
 use crate::util::{Mat, XorShift64};
 
 /// Shape of the arrival process.
@@ -73,6 +77,15 @@ pub struct TrafficConfig {
     pub hot_fraction: f64,
     /// The hot problem size.
     pub hot_n: usize,
+    /// Probability in [0, 1] that an arrival is a LAPACK factorization
+    /// (`Request::RandomFactor`, rotating QR → LU → Cholesky by sequence
+    /// index) instead of a flat BLAS call. At the default 0.0 the gate
+    /// draws nothing from the payload PRNG, so flat-BLAS sequences are
+    /// bit-identical to a config without factorizations.
+    pub lapack_fraction: f64,
+    /// Problem size of factorization arrivals (flat BLAS sizes still draw
+    /// from `max_n` / `hot_n`).
+    pub lapack_n: usize,
 }
 
 impl Default for TrafficConfig {
@@ -86,6 +99,8 @@ impl Default for TrafficConfig {
             max_n: 32,
             hot_fraction: 0.5,
             hot_n: 16,
+            lapack_fraction: 0.0,
+            lapack_n: 24,
         }
     }
 }
@@ -177,6 +192,17 @@ pub fn generate(cfg: &TrafficConfig) -> Vec<Arrival> {
         .into_iter()
         .enumerate()
         .map(|(seq, at_ns)| {
+            // Short-circuit keeps the gate from consuming a PRNG draw when
+            // factorizations are off, so flat-BLAS payloads stay stable.
+            if cfg.lapack_fraction > 0.0 && rng.next_f64() < cfg.lapack_fraction {
+                let kind = [FactorKind::Qr, FactorKind::Lu, FactorKind::Chol][seq % 3];
+                let req = Request::RandomFactor {
+                    kind,
+                    n: cfg.lapack_n.max(4),
+                    seed: cfg.seed.wrapping_add(seq as u64),
+                };
+                return Arrival { seq, at_ns, req };
+            }
             let n = if rng.next_f64() < cfg.hot_fraction {
                 hot_n
             } else {
@@ -267,6 +293,40 @@ mod tests {
         let arrivals = generate(&cfg);
         assert!(!arrivals.is_empty());
         assert!(arrivals.iter().all(|a| a.req.n() == 12));
+    }
+
+    #[test]
+    fn lapack_fraction_mixes_factorizations() {
+        let base = TrafficConfig {
+            rate_rps: 5_000.0,
+            duration_ns: 20_000_000,
+            seed: 13,
+            ..TrafficConfig::default()
+        };
+        // Fraction 1.0: every arrival is a factorization, kinds rotate by seq.
+        let all = generate(&TrafficConfig { lapack_fraction: 1.0, lapack_n: 16, ..base.clone() });
+        assert!(!all.is_empty());
+        assert!(all
+            .iter()
+            .all(|a| matches!(a.req, Request::RandomFactor { n: 16, .. })));
+        assert!(matches!(all[0].req, Request::RandomFactor { kind: FactorKind::Qr, .. }));
+        if all.len() > 2 {
+            assert!(matches!(all[1].req, Request::RandomFactor { kind: FactorKind::Lu, .. }));
+            assert!(matches!(all[2].req, Request::RandomFactor { kind: FactorKind::Chol, .. }));
+        }
+        // Fraction 0.0 (the default) emits no factorizations and is
+        // deterministic: two generations agree payload for payload.
+        let flat = generate(&base);
+        assert!(flat.iter().all(|a| !matches!(a.req, Request::RandomFactor { .. })));
+        let again = generate(&base);
+        for (a, b) in flat.iter().zip(&again) {
+            assert_eq!(a.req.name(), b.req.name());
+            assert_eq!(a.req.n(), b.req.n());
+        }
+        // A partial mix offers both populations.
+        let mixed = generate(&TrafficConfig { lapack_fraction: 0.3, ..base });
+        assert!(mixed.iter().any(|a| matches!(a.req, Request::RandomFactor { .. })));
+        assert!(mixed.iter().any(|a| !matches!(a.req, Request::RandomFactor { .. })));
     }
 
     #[test]

@@ -3,7 +3,16 @@
 //! (partial-pivot LU), DPOTRF (Cholesky) — plus an operation profiler that
 //! reproduces the Fig-1 observation: DGEQR2 spends ~99% of its work in
 //! DGEMV, DGEQRF ~99% in DGEMM.
+//!
+//! These are not just host references: [`expand`] decomposes each
+//! factorization into a dependency DAG of cached BLAS kernel calls
+//! (`dag::ExecGraph`), which is how the serving engine executes
+//! `Request::Dgeqrf/Dgetrf/Dpotrf` — panel and trailing-update nodes flow
+//! through the same program cache, replay tiers, and fabric routing as flat
+//! BLAS requests, and the Fig-1 [`FlopProfile`] rides along in the
+//! factorization `Response`.
 
+pub mod expand;
 pub mod profile;
 pub mod qr;
 
@@ -11,6 +20,7 @@ mod lu;
 mod cholesky;
 
 pub use cholesky::dpotrf;
-pub use lu::dgetrf;
+pub use expand::{default_nb, Expansion, FactorKind, Factors};
+pub use lu::{dgetrf, LuFactors};
 pub use profile::{FlopProfile, ProfiledOp};
 pub use qr::{dgeqr2, dgeqr2_profiled, dgeqrf, dgeqrf_profiled, form_q, QrFactors};

@@ -35,7 +35,7 @@ impl ProfiledOp {
 }
 
 /// Accumulated flops per BLAS routine.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct FlopProfile {
     counts: BTreeMap<ProfiledOp, u64>,
 }

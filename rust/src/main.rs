@@ -8,6 +8,7 @@
 //! redefine gemv  --n 64 [--ae 5]
 //! redefine ddot  --n 1024 [--ae 5]
 //! redefine serve --requests 16 --max-n 64 [--b 2] [--ae 5] [--seq]
+//!                [--lapack qr|lu|chol --n N]
 //!                [--window W] [--window-bytes BYTES] [--cache-cap N]
 //!                [--cache-quota N] [--sched slots|cycles]
 //!                [--exec replay|combined] [--residual] [--replay-batch N]
@@ -31,6 +32,18 @@
 //! instead of padding; `--replay-batch N` coalesces up to N same-kernel
 //! staged DGEMM tiles into one replay-batched pool job (the tier-2b fast
 //! path — identical results, fewer decode-stream walks).
+//!
+//! `serve --lapack qr|lu|chol` serves LAPACK factorizations as
+//! dependency-DAG workloads: each of the `--requests` requests is a
+//! `--n`-sized DGEQRF / DGETRF / DPOTRF that admission expands into a
+//! blocked kernel DAG (panels + trailing updates) dispatched
+//! dependency-aware through the same cache, tiers and fabric as flat
+//! BLAS. Closed-loop, the report adds per-response node counts, DAG
+//! makespans and the Fig-1 flop attribution. Under `--tenants N`,
+//! tenant 0 serves the factorization workload while the remaining
+//! tenants flood flat BLAS (the proportional-service scenario); under
+//! `--arrivals`, one arrival in four becomes a `--n`-sized
+//! factorization mixed into the flat open-loop stream.
 //!
 //! `serve --tenants N` runs the **multi-tenant engine**: one shared
 //! worker pool + one shared program cache serve N concurrent tenants
@@ -70,10 +83,12 @@
 //! untraced path. See `docs/OBSERVABILITY.md`.
 
 use redefine_blas::coordinator::{
-    request::random_workload, Coordinator, CoordinatorConfig, OpenLoopOptions, OpenLoopStats,
+    request::{factor_workload, random_workload},
+    Coordinator, CoordinatorConfig, OpenLoopOptions, OpenLoopStats,
 };
 use redefine_blas::engine::traffic::{self, ArrivalKind, TrafficConfig};
 use redefine_blas::engine::{Engine, EngineConfig, SchedPolicy};
+use redefine_blas::lapack::FactorKind;
 use redefine_blas::metrics::{gemm_sweep, PAPER_SIZES};
 use redefine_blas::noc::{FabricConfig, FabricStats, PlacePolicy};
 use redefine_blas::obs::{to_chrome, to_jsonl, BufferSink, Event};
@@ -91,7 +106,7 @@ const USAGE: &str = "usage: redefine <gemm|gemv|ddot|serve|sweep|artifacts> [--n
      [--replay-batch N] [--tenants N] [--weights w1,w2,...] \
      [--arrivals poisson|burst] [--rate R] [--duration-ms D] \
      [--queue-depth N] [--shed-after-bytes BYTES] [--slo-ms MS] \
-     [--fabric B] [--place locality|round-robin] \
+     [--fabric B] [--place locality|round-robin] [--lapack qr|lu|chol] \
      [--trace-out PATH] [--trace-format json|chrome]";
 
 fn usage() -> ! {
@@ -135,6 +150,7 @@ struct Args {
     slo_ms: Option<u64>,
     fabric: usize,
     place: PlacePolicy,
+    lapack: Option<FactorKind>,
     trace_out: Option<String>,
     trace_format: TraceFormat,
 }
@@ -179,6 +195,7 @@ fn parse_args() -> Args {
         slo_ms: None,
         fabric: 0,
         place: PlacePolicy::Locality,
+        lapack: None,
         trace_out: None,
         trace_format: TraceFormat::Json,
     };
@@ -245,6 +262,7 @@ fn parse_args() -> Args {
             }
             "--slo-ms" => a.slo_ms = Some(val().parse().unwrap_or_else(|_| usage())),
             "--fabric" => a.fabric = val().parse().unwrap_or_else(|_| usage()),
+            "--lapack" => a.lapack = Some(FactorKind::parse(&val()).unwrap_or_else(|| usage())),
             "--trace-out" => a.trace_out = Some(val()),
             "--trace-format" => {
                 a.trace_format = match val().as_str() {
@@ -363,7 +381,10 @@ fn main() {
             if let Some(s) = &sink {
                 co.set_trace_sink(s.clone());
             }
-            let reqs = random_workload(args.requests, args.max_n, 42);
+            let reqs = match args.lapack {
+                Some(kind) => factor_workload(kind, args.requests, args.n, 42),
+                None => random_workload(args.requests, args.max_n, 42),
+            };
             let t0 = std::time::Instant::now();
             let resps = if args.seq { co.serve(reqs) } else { co.serve_batch(reqs) };
             let wall = t0.elapsed();
@@ -407,7 +428,21 @@ fn main() {
                 print_fabric(fs);
             }
             for r in &resps {
-                println!("  {:<6} n={:<4} cycles={:<9} source={:?}", r.op, r.n, r.cycles, r.source);
+                match &r.factor {
+                    Some(f) => println!(
+                        "  {:<6} n={:<4} cycles={:<9} source={:?} [dag: {} nodes, makespan {}]",
+                        r.op, r.n, r.cycles, r.source, f.nodes, f.makespan
+                    ),
+                    None => println!(
+                        "  {:<6} n={:<4} cycles={:<9} source={:?}",
+                        r.op, r.n, r.cycles, r.source
+                    ),
+                }
+            }
+            // Fig-1 flop attribution of the served factorization kind —
+            // identical across same-shape responses, so print it once.
+            if let Some(f) = resps.iter().find_map(|r| r.factor.as_deref()) {
+                print!("{}", f.profile.report(&format!("{} flop profile", resps[0].op)));
             }
             if let Some(s) = &sink {
                 write_trace(&args, vec![(0, s.take())]);
@@ -559,6 +594,10 @@ fn serve_open_loop_cmd(args: &Args, base: &CoordinatorConfig) {
         start_ns: 0,
         seed: 42,
         max_n: args.max_n,
+        // With --lapack, one arrival in four is a --n-sized factorization
+        // DAG mixed into the flat BLAS stream.
+        lapack_fraction: if args.lapack.is_some() { 0.25 } else { 0.0 },
+        lapack_n: args.n,
         ..TrafficConfig::default()
     };
     let opts = OpenLoopOptions { slo_total_ns: args.slo_ms.map(|ms| ms.saturating_mul(1_000_000)) };
@@ -684,13 +723,22 @@ fn serve_multi_tenant(args: &Args, base: &CoordinatorConfig) {
         })
         .collect();
     let (requests, max_n, seq) = (args.requests, args.max_n, args.seq);
+    let (lapack, lapack_n) = (args.lapack, args.n);
     let t0 = std::time::Instant::now();
     let mut reports: Vec<_> = std::thread::scope(|s| {
         let handles: Vec<_> = tenants
             .into_iter()
             .map(|(i, ae, w, mut co)| {
                 s.spawn(move || {
-                    let reqs = random_workload(requests, max_n, 42 + i as u64);
+                    // With --lapack, tenant 0 is the factorization tenant
+                    // and the rest flood flat BLAS — the proportional-
+                    // service scenario for DAG vs flat workloads.
+                    let reqs = match lapack {
+                        Some(kind) if i == 0 => {
+                            factor_workload(kind, requests, lapack_n, 42)
+                        }
+                        _ => random_workload(requests, max_n, 42 + i as u64),
+                    };
                     let resps = if seq { co.serve(reqs) } else { co.serve_batch(reqs) };
                     let cycles: u64 = resps.iter().map(|r| r.cycles).sum();
                     (i, ae, w, resps.len(), cycles, co.snapshot())
@@ -780,6 +828,7 @@ mod tests {
             "--place",
             "--trace-out",
             "--trace-format",
+            "--lapack",
         ];
         for flag in documented {
             assert!(USAGE.contains(flag), "usage string is missing `{flag}`");

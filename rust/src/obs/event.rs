@@ -125,6 +125,27 @@ pub enum EventKind {
         /// Pure PE compute cycles within `[ready, finish]`.
         compute: u64,
     },
+    /// A factorization DAG node became ready: all its predecessors had
+    /// completed. Emitted at finalize time on the deterministic topological
+    /// schedule (`sim` = the node's earliest-start cycle), so the log shows
+    /// the DAG's dependency structure and critical path independent of
+    /// worker interleaving.
+    NodeReleased {
+        /// Node index within the factorization's kernel graph.
+        node: usize,
+        /// Kernel class tag (`"gemm"`, `"gemv"`, `"ddot"`, …).
+        call: &'static str,
+        /// Kernel problem size (largest dimension).
+        n: usize,
+    },
+    /// A factorization DAG node's kernel completed (`sim` = its finish
+    /// cycle on the topological schedule).
+    NodeCompleted {
+        /// Node index within the factorization's kernel graph.
+        node: usize,
+        /// The node kernel's simulated cycles.
+        cycles: u64,
+    },
     /// The response was finalized and handed back.
     Completed {
         /// Host nanoseconds spent queued (arrival → admission); 0 in
@@ -151,6 +172,8 @@ impl EventKind {
             EventKind::Dispatched { .. } => "dispatched",
             EventKind::Executed { .. } => "executed",
             EventKind::FabricRouted { .. } => "fabric_routed",
+            EventKind::NodeReleased { .. } => "node_released",
+            EventKind::NodeCompleted { .. } => "node_completed",
             EventKind::Completed { .. } => "completed",
         }
     }
@@ -179,6 +202,12 @@ impl Event {
                  compute={compute}",
                 tile.row, tile.col
             ),
+            EventKind::NodeReleased { node, call, n } => {
+                format!("node_released node={node} call={call} n={n}")
+            }
+            EventKind::NodeCompleted { node, cycles } => {
+                format!("node_completed node={node} cycles={cycles}")
+            }
             EventKind::Completed { cycles, .. } => format!("completed cycles={cycles}"),
         };
         format!("req={} sim={} {}", self.req, self.sim, body)
@@ -223,6 +252,8 @@ pub struct ResponseTrace {
     pub dispatched: usize,
     /// Execution tiers, in tile order.
     pub tiers: Vec<Tier>,
+    /// Factorization DAG nodes completed (0 for flat BLAS requests).
+    pub nodes: usize,
     /// Whether a `Completed` event was seen.
     pub completed: bool,
 }
@@ -246,6 +277,7 @@ impl ResponseTrace {
             cache_evictions: 0,
             dispatched: 0,
             tiers: Vec::new(),
+            nodes: 0,
             completed: false,
         }
     }
@@ -286,6 +318,8 @@ pub fn response_traces(events: &[Event]) -> Vec<ResponseTrace> {
                 t.comm_cycles += (finish - depart).saturating_sub(*compute);
                 *routed_compute.entry(ev.req).or_insert(0) += compute;
             }
+            EventKind::NodeReleased { .. } => {}
+            EventKind::NodeCompleted { .. } => t.nodes += 1,
             EventKind::Completed { queue_ns, service_ns, cycles } => {
                 t.queue_ns = *queue_ns;
                 t.service_ns = *service_ns;
@@ -390,6 +424,46 @@ mod tests {
             kind: EventKind::Shed { seq: 4, reason: ShedReason::QueueDepth },
         }];
         assert!(response_traces(&log).is_empty());
+    }
+
+    #[test]
+    fn node_events_count_into_traces() {
+        let log = vec![
+            ev(5, EventKind::Admitted { seq: 0, op: "dgeqrf", n: 12, bytes: 1152 }),
+            Event {
+                req: 5,
+                sim: 0,
+                host_ns: None,
+                kind: EventKind::NodeReleased { node: 0, call: "gemv", n: 12 },
+            },
+            Event {
+                req: 5,
+                sim: 40,
+                host_ns: None,
+                kind: EventKind::NodeCompleted { node: 0, cycles: 40 },
+            },
+            Event {
+                req: 5,
+                sim: 40,
+                host_ns: None,
+                kind: EventKind::NodeReleased { node: 1, call: "gemm", n: 12 },
+            },
+            Event {
+                req: 5,
+                sim: 90,
+                host_ns: None,
+                kind: EventKind::NodeCompleted { node: 1, cycles: 50 },
+            },
+            ev(5, EventKind::Completed { queue_ns: 0, service_ns: 0, cycles: 90 }),
+        ];
+        let t = &response_traces(&log)[0];
+        assert_eq!(t.nodes, 2);
+        assert_eq!(t.cycles, 90);
+        // The successor's release anchor never precedes its predecessor's
+        // completion anchor on the topological schedule.
+        assert!(log[3].sim >= log[2].sim);
+        assert!(log[1].sim_signature().contains("call=gemv"));
+        assert_eq!(log[4].kind.tag(), "node_completed");
     }
 
     #[test]

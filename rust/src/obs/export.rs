@@ -12,9 +12,13 @@
 //! number), and one *fabric* process (pid `200 + tenant`) whose spans run
 //! on the **simulated fabric clock** rendered as 1 cycle = 1 µs, one
 //! track per fabric tile — a routed run renders as a per-tile timeline.
+//! Factorization requests add a *dag* process (pid `300 + tenant`) on the
+//! simulated kernel clock, one track per DAG node: each span runs from the
+//! node's release (all predecessors done) to its completion, so the
+//! critical path of a served factorization reads directly off the trace.
 //! Request spans need host timestamps, so they appear only for sinks
-//! built with the host clock; fabric spans are purely simulated and
-//! always export.
+//! built with the host clock; fabric and dag spans are purely simulated
+//! and always export.
 
 use super::event::{Event, EventKind, NO_REQ};
 use crate::coordinator::ShedReason;
@@ -79,6 +83,15 @@ pub fn to_jsonl(groups: &[(usize, Vec<Event>)]) -> String {
                         tile.row, tile.col
                     ));
                 }
+                EventKind::NodeReleased { node, call, n } => {
+                    out.push_str(&format!(
+                        ",\"node\":{node},\"call\":\"{}\",\"n\":{n}",
+                        escape(call)
+                    ));
+                }
+                EventKind::NodeCompleted { node, cycles } => {
+                    out.push_str(&format!(",\"node\":{node},\"cycles\":{cycles}"));
+                }
                 EventKind::Completed { queue_ns, service_ns, cycles } => {
                     out.push_str(&format!(
                         ",\"queue_ns\":{queue_ns},\"service_ns\":{service_ns},\"cycles\":{cycles}"
@@ -129,6 +142,10 @@ pub fn to_chrome(groups: &[(usize, Vec<Event>)]) -> String {
             std::collections::HashMap::new();
         let mut spans = 0usize;
         let mut routed = 0usize;
+        let mut dag_spans = 0usize;
+        // DAG node release anchors: (req, node) → (call, n, release sim).
+        let mut released: std::collections::HashMap<(u64, usize), (&'static str, usize, u64)> =
+            std::collections::HashMap::new();
         for ev in log {
             match &ev.kind {
                 EventKind::Admitted { seq, op, n, .. } => {
@@ -179,6 +196,31 @@ pub fn to_chrome(groups: &[(usize, Vec<Event>)]) -> String {
                         (finish - depart) as f64,
                         &format!("\"req\":{},\"ready\":{ready},\"compute\":{compute}", ev.req),
                     );
+                }
+                EventKind::NodeReleased { node, call, n } => {
+                    released.insert((ev.req, *node), (*call, *n, ev.sim));
+                }
+                EventKind::NodeCompleted { node, .. } => {
+                    if let Some((call, n, at)) = released.remove(&(ev.req, *node)) {
+                        if dag_spans == 0 {
+                            chrome_process_name(
+                                &mut events,
+                                300 + tenant,
+                                &format!("tenant {tenant} dag nodes (1 cycle = 1 µs)"),
+                            );
+                        }
+                        dag_spans += 1;
+                        chrome_event(
+                            &mut events,
+                            &format!("{call} n={n} node={node} req={}", ev.req),
+                            "dag",
+                            300 + tenant,
+                            *node as u64,
+                            at as f64,
+                            ev.sim.saturating_sub(at) as f64,
+                            &format!("\"req\":{},\"node\":{node}", ev.req),
+                        );
+                    }
                 }
                 _ => {}
             }
@@ -283,6 +325,48 @@ mod tests {
         let s = to_chrome(&[(0, l)]);
         assert_eq!(s.matches("\"cat\":\"request\"").count(), 0, "no host clock, no spans");
         assert_eq!(s.matches("\"cat\":\"fabric\"").count(), 1);
+    }
+
+    #[test]
+    fn dag_node_events_export_as_lines_and_spans() {
+        let l = vec![
+            Event {
+                req: 2,
+                sim: 0,
+                host_ns: None,
+                kind: EventKind::NodeReleased { node: 0, call: "gemv", n: 12 },
+            },
+            Event {
+                req: 2,
+                sim: 40,
+                host_ns: None,
+                kind: EventKind::NodeCompleted { node: 0, cycles: 40 },
+            },
+            Event {
+                req: 2,
+                sim: 40,
+                host_ns: None,
+                kind: EventKind::NodeReleased { node: 1, call: "gemm", n: 12 },
+            },
+            Event {
+                req: 2,
+                sim: 90,
+                host_ns: None,
+                kind: EventKind::NodeCompleted { node: 1, cycles: 50 },
+            },
+        ];
+        let s = to_jsonl(&[(0, l.clone())]);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("\"ev\":\"node_released\""));
+        assert!(lines[0].contains("\"call\":\"gemv\""));
+        assert!(lines[3].contains("\"ev\":\"node_completed\""));
+        assert!(lines[3].contains("\"cycles\":50"));
+        let c = to_chrome(&[(0, l)]);
+        // Two dag node spans on the simulated clock, pid 300 + tenant.
+        assert_eq!(c.matches("\"cat\":\"dag\"").count(), 2);
+        assert!(c.contains("\"pid\":300"));
+        assert!(c.contains("\"ts\":40.000,\"dur\":50.000"), "node 1 span mis-scaled: {c}");
     }
 
     #[test]

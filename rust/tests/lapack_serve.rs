@@ -1,0 +1,372 @@
+//! LAPACK factorizations served as dependency-DAG workloads.
+//!
+//! The acceptance pins of the graph-aware dispatch engine:
+//! * served `Request::Dgeqrf/Dgetrf/Dpotrf` return factors matching the
+//!   host references at 1e-10 across shapes, including non-4-aligned;
+//! * a factorization executes as *many dependent pool jobs* — pinned by
+//!   pool job counts and by the obs node events: every successor's
+//!   release cycle is at or after its predecessors' completion cycles;
+//! * repeated same-shape factorizations ride the shared program cache;
+//! * responses and their event-log `sim_signature`s are deterministic
+//!   across runs, under replay-batch coalescing, and on a routed fabric;
+//! * a factorization tenant and a DGEMM-flooding tenant both complete
+//!   with isolated-coordinator results under the cycle-cost scheduler,
+//!   with live cycle service on both lanes;
+//! * the served DGEQRF response carries the Fig-1 flop attribution
+//!   (DGEMM-dominated at representative size).
+
+use redefine_blas::coordinator::{
+    request::{factor_workload, mixed_lapack_workload},
+    Coordinator, CoordinatorConfig, Request, Response,
+};
+use redefine_blas::engine::{Engine, EngineConfig, SchedPolicy};
+use redefine_blas::lapack::{
+    self, dgeqrf_profiled, dgetrf, dpotrf, expand::expand, default_nb, FactorKind, Factors,
+    ProfiledOp,
+};
+use redefine_blas::noc::FabricConfig;
+use redefine_blas::obs::{BufferSink, Event, EventKind};
+use redefine_blas::pe::AeLevel;
+use redefine_blas::util::{assert_allclose, Mat};
+use std::sync::Arc;
+
+fn cfg() -> CoordinatorConfig {
+    CoordinatorConfig {
+        ae: AeLevel::Ae5,
+        b: 2,
+        artifact_dir: "/nonexistent".into(),
+        verify: false,
+        ..CoordinatorConfig::default()
+    }
+}
+
+/// The operand each factorization kind is served on (SPD for Cholesky).
+fn operand(kind: FactorKind, n: usize, seed: u64) -> Mat {
+    match kind {
+        FactorKind::Chol => Mat::random_spd(n, seed),
+        FactorKind::Qr | FactorKind::Lu => Mat::random(n, n, seed),
+    }
+}
+
+fn factor_request(kind: FactorKind, a: Mat) -> Request {
+    match kind {
+        FactorKind::Qr => Request::Dgeqrf { a },
+        FactorKind::Lu => Request::Dgetrf { a },
+        FactorKind::Chol => Request::Dpotrf { a },
+    }
+}
+
+/// Served factors must match the host reference element-wise at `tol`.
+fn assert_factors_match_host(resp: &Response, kind: FactorKind, a: &Mat, tol: f64) {
+    let f = resp.factor.as_ref().expect("factorization response carries factors");
+    match (&f.factors, kind) {
+        (Factors::Qr(got), FactorKind::Qr) => {
+            let (want, _) = dgeqrf_profiled(a, default_nb(a.rows()));
+            assert_allclose(got.a.as_slice(), want.a.as_slice(), tol);
+            assert_allclose(&got.tau, &want.tau, tol);
+        }
+        (Factors::Lu(got), FactorKind::Lu) => {
+            let (want, _) = dgetrf(a);
+            assert_allclose(got.lu.as_slice(), want.lu.as_slice(), tol);
+            assert_eq!(got.piv, want.piv, "pivot sequences must be identical");
+        }
+        (Factors::Chol(got), FactorKind::Chol) => {
+            let (want, _) = dpotrf(a);
+            assert_allclose(got.as_slice(), want.as_slice(), tol);
+        }
+        (other, _) => panic!("wrong factor payload for {kind:?}: {other:?}"),
+    }
+}
+
+#[test]
+fn served_factorizations_match_host_references() {
+    // Conformance across kinds and shapes, including non-4-aligned orders
+    // (the kernel-side dims round up; the factor values are exact because
+    // they resolve host-side, exactly like the Level-1/2 serving path).
+    for kind in [FactorKind::Qr, FactorKind::Lu, FactorKind::Chol] {
+        for n in [12usize, 23, 24, 37] {
+            let a = operand(kind, n, 1_000 + n as u64);
+            let mut co = Coordinator::new(cfg());
+            let resps = co.serve_batch(vec![factor_request(kind, a.clone())]);
+            assert_eq!(resps.len(), 1);
+            let r = &resps[0];
+            assert_eq!(r.op, kind.op_name());
+            assert_eq!(r.n, n);
+            assert!(r.cycles > 0, "{kind:?} n={n}: DAG execution must cost cycles");
+            assert!(r.energy_j.unwrap_or(0.0) > 0.0, "{kind:?} n={n}: energy accounted");
+            assert_factors_match_host(r, kind, &a, 1e-10);
+        }
+    }
+}
+
+#[test]
+fn sequential_and_batched_factor_serving_agree() {
+    let a = Mat::random(24, 24, 7);
+    let mut seq = Coordinator::new(cfg());
+    let r_seq = seq.serve(vec![Request::Dgeqrf { a: a.clone() }]);
+    let mut bat = Coordinator::new(cfg());
+    let r_bat = bat.serve_batch(vec![Request::Dgeqrf { a: a.clone() }]);
+    let (s, b) = (&r_seq[0], &r_bat[0]);
+    assert_eq!(s.cycles, b.cycles, "sequential and batched DAG cost must agree");
+    assert_eq!(s.energy_j, b.energy_j);
+    let (fs, fb) = (s.factor.as_ref().unwrap(), b.factor.as_ref().unwrap());
+    assert_eq!(fs.nodes, fb.nodes);
+    assert_eq!(fs.makespan, fb.makespan);
+    assert_factors_match_host(b, FactorKind::Qr, &a, 1e-10);
+}
+
+#[test]
+fn factorization_executes_as_dependent_pool_jobs() {
+    // n = 24, nb = 4 → 6 block columns → 6 panels + 15 updates = 21 DAG
+    // nodes, every one a pool job.
+    let n = 24;
+    let a = Mat::random(n, n, 11);
+    let expansion = expand(FactorKind::Qr, &a);
+    let nodes = expansion.graph.len();
+    assert!(nodes > 1, "a blocked factorization must expand to many nodes");
+
+    let sink = Arc::new(BufferSink::new());
+    let mut co = Coordinator::new(cfg());
+    co.set_trace_sink(sink.clone());
+    let resps = co.serve_batch(vec![Request::Dgeqrf { a }]);
+    let f = resps[0].factor.as_ref().unwrap();
+    assert_eq!(f.nodes, nodes);
+
+    // Every DAG node ran as its own pool job of the matching kind.
+    let jc = co.pool_job_counts();
+    assert_eq!(
+        (jc.gemm_tiles + jc.gemv + jc.level1) as usize,
+        nodes,
+        "each node is one pool job: {jc:?}"
+    );
+    assert!(jc.gemm_tiles > 0, "trailing updates are DGEMM jobs: {jc:?}");
+    assert!(jc.gemv > 0, "QR panels are DGEMV jobs: {jc:?}");
+
+    // The obs node events pin the dependency order: a node's release
+    // cycle is the max of its predecessors' completion cycles, so every
+    // successor was dispatched only after its predecessors completed.
+    let events: Vec<Event> = sink.take();
+    let mut released = vec![None; nodes];
+    let mut completed = vec![None; nodes];
+    for ev in &events {
+        match ev.kind {
+            EventKind::NodeReleased { node, .. } => released[node] = Some(ev.sim),
+            EventKind::NodeCompleted { node, .. } => completed[node] = Some(ev.sim),
+            _ => {}
+        }
+    }
+    assert!(released.iter().all(Option::is_some), "every node must release");
+    assert!(completed.iter().all(Option::is_some), "every node must complete");
+    let mut gated = 0;
+    for v in 0..nodes {
+        for &u in &expansion.graph.node(v).preds {
+            assert!(
+                released[v].unwrap() >= completed[u].unwrap(),
+                "node {v} released at {:?} before predecessor {u} completed at {:?}",
+                released[v],
+                completed[u]
+            );
+            gated += 1;
+        }
+        assert!(completed[v].unwrap() > released[v].unwrap(), "node {v} must cost cycles");
+    }
+    assert!(gated > 0, "the DAG must actually gate successors on predecessors");
+    assert_eq!(resps[0].cycles, f.makespan, "off-fabric cost is the DAG makespan");
+    // Independent trailing updates overlap: the DAG makespan is strictly
+    // below the sum of per-node costs.
+    let serial: u64 = (0..nodes).map(|v| completed[v].unwrap() - released[v].unwrap()).sum();
+    assert!(
+        f.makespan < serial,
+        "independent updates must overlap: makespan {} vs serial sum {serial}",
+        f.makespan
+    );
+}
+
+#[test]
+fn repeated_factorizations_hit_the_shared_program_cache() {
+    // One factorization emits every kernel shape its DAG needs; the next
+    // two factorizations of the same shape must ride those warm kernels
+    // (distinct-seed operands — the kernels are keyed by shape, not data).
+    let mut once = Coordinator::new(cfg());
+    let _ = once.serve_batch(factor_workload(FactorKind::Qr, 1, 24, 50));
+    let misses_once = once.cache_stats().misses;
+    assert!(misses_once > 0);
+
+    let mut thrice = Coordinator::new(cfg());
+    let resps = thrice.serve_batch(factor_workload(FactorKind::Qr, 3, 24, 50));
+    assert_eq!(resps.len(), 3);
+    let cs = thrice.cache_stats();
+    assert_eq!(
+        cs.misses, misses_once,
+        "repeats must add no new kernel emissions: {cs:?}"
+    );
+    assert!(
+        cs.hits >= 2 * misses_once,
+        "every repeated node must hit the warm kernel: {cs:?}"
+    );
+    // Warm factorizations still execute their DAG on the pool (3× jobs).
+    let jc = thrice.pool_job_counts();
+    let per = resps[0].factor.as_ref().unwrap().nodes;
+    assert_eq!((jc.gemm_tiles + jc.gemv + jc.level1) as usize, 3 * per);
+}
+
+/// Serve `reqs` on a fresh coordinator with `cfg`, returning the responses
+/// and the event log's deterministic signature.
+fn run_traced(cfg: &CoordinatorConfig, reqs: Vec<Request>) -> (Vec<Response>, Vec<String>) {
+    let sink = Arc::new(BufferSink::new());
+    let mut co = Coordinator::new(cfg.clone());
+    co.set_trace_sink(sink.clone());
+    let resps = co.serve_batch(reqs);
+    let sig = sink.take().iter().map(|e| e.sim_signature()).collect();
+    (resps, sig)
+}
+
+#[test]
+fn factor_serving_is_deterministic_across_runs_and_configs() {
+    let mk = || mixed_lapack_workload(8, 24, 16, 99);
+    for (name, cfg) in [
+        ("plain", cfg()),
+        ("replay-batch", CoordinatorConfig { replay_batch: Some(4), ..cfg() }),
+        ("fabric-2", CoordinatorConfig { fabric: Some(FabricConfig::new(2)), ..cfg() }),
+    ] {
+        let (ra, sa) = run_traced(&cfg, mk());
+        let (rb, sb) = run_traced(&cfg, mk());
+        assert_eq!(ra.len(), rb.len(), "{name}");
+        for (i, (x, y)) in ra.iter().zip(&rb).enumerate() {
+            assert_eq!(x.op, y.op, "{name} request {i}");
+            assert_eq!(x.cycles, y.cycles, "{name} request {i}: cycles must be reproducible");
+            assert_eq!(x.energy_j, y.energy_j, "{name} request {i}");
+            match (&x.factor, &y.factor) {
+                (Some(fx), Some(fy)) => {
+                    assert_eq!(fx.nodes, fy.nodes, "{name} request {i}");
+                    assert_eq!(fx.makespan, fy.makespan, "{name} request {i}");
+                }
+                (None, None) => {}
+                _ => panic!("{name} request {i}: factor payload mismatch"),
+            }
+        }
+        assert_eq!(sa, sb, "{name}: the simulated event log must be bit-reproducible");
+        assert!(
+            sa.iter().any(|s| s.starts_with("node_released")),
+            "{name}: node events must appear in the signature stream"
+        );
+    }
+}
+
+#[test]
+fn fabric_routes_factor_nodes_and_prices_the_dag() {
+    let fcfg = CoordinatorConfig { fabric: Some(FabricConfig::new(2)), ..cfg() };
+    let a = Mat::random(24, 24, 33);
+    let (resps, sigs) = run_traced(&fcfg, vec![Request::Dgeqrf { a: a.clone() }]);
+    let r = &resps[0];
+    let f = r.factor.as_ref().unwrap();
+    assert_factors_match_host(r, FactorKind::Qr, &a, 1e-10);
+    // On the mesh the response cost includes operand/result movement: it
+    // can only be at or above the pure-compute DAG makespan.
+    assert!(
+        r.cycles >= f.makespan,
+        "routed cost {} must not undercut the compute makespan {}",
+        r.cycles,
+        f.makespan
+    );
+    let routed = sigs.iter().filter(|s| s.starts_with("fabric_routed")).count();
+    assert_eq!(routed, f.nodes, "every DAG node is routed on the fabric");
+}
+
+#[test]
+fn factor_tenant_completes_against_dgemm_flood_under_cycle_scheduler() {
+    // The proportional-service pin: a factorization tenant sharing the
+    // engine with a DGEMM-flooding tenant under the cycle-cost DRR
+    // scheduler must complete with exactly its isolated results, and both
+    // lanes must show live dispatched-cycle service.
+    let factor_work = factor_workload(FactorKind::Qr, 3, 24, 1);
+    let mut iso = Coordinator::new(cfg());
+    let iso_resps = iso.serve_batch(factor_work.clone());
+
+    let engine = Engine::new(EngineConfig {
+        workers: 2,
+        sched: SchedPolicy::Cycles,
+        ..EngineConfig::default()
+    });
+    let mut facs = engine.tenant(cfg());
+    let mut flood = engine.tenant(cfg());
+    let flood_work =
+        redefine_blas::coordinator::request::repeated_gemm_workload(12, 32, 2);
+    let (rf, rg) = std::thread::scope(|s| {
+        let hf = s.spawn(|| facs.serve_batch(factor_work));
+        let hg = s.spawn(|| flood.serve_batch(flood_work));
+        (hf.join().expect("factor tenant"), hg.join().expect("flood tenant"))
+    });
+    assert_eq!(rg.len(), 12, "the flood must complete too");
+    assert_eq!(rf.len(), iso_resps.len());
+    for (i, (got, want)) in rf.iter().zip(&iso_resps).enumerate() {
+        assert_eq!(got.cycles, want.cycles, "request {i}: contention must not change cost");
+        assert_eq!(got.energy_j, want.energy_j, "request {i}");
+        assert_eq!(
+            got.factor.as_ref().unwrap().makespan,
+            want.factor.as_ref().unwrap().makespan,
+            "request {i}"
+        );
+    }
+    // Both lanes were priced and served in the cycle currency.
+    let service = engine.lane_service();
+    assert_eq!(service.len(), 2);
+    assert!(service.iter().all(|l| l.served_cost > 0), "both lanes must see service: {service:?}");
+}
+
+#[test]
+fn dgeqrf_profile_reproduces_fig1_attribution() {
+    // Fig 1 / §1: at representative size DGEQRF lives in DGEMM, with the
+    // remainder in the panel's Level-2 work — served straight through the
+    // factorization response.
+    let n = 96;
+    let mut co = Coordinator::new(cfg());
+    let resps = co.serve_batch(vec![Request::Dgeqrf { a: Mat::random(n, n, 5) }]);
+    let p = &resps[0].factor.as_ref().unwrap().profile;
+    assert!(p.total() > 0);
+    let dgemm = p.fraction(ProfiledOp::Dgemm);
+    assert!(dgemm > 0.85, "DGEQRF must be DGEMM-dominated at n={n}: {dgemm:.3}");
+    let level23 = dgemm + p.fraction(ProfiledOp::Dgemv) + p.fraction(ProfiledOp::Dger);
+    assert!(
+        level23 > 0.99,
+        "~all DGEQRF flops land in DGEMM/DGEMV-class work: {level23:.4}"
+    );
+    // And the host-side profiler agrees with what the response reports.
+    let host = lapack::dgeqrf_profiled(&Mat::random(n, n, 5), default_nb(n)).1;
+    assert_eq!(host.total(), p.total());
+}
+
+#[test]
+fn mixed_open_loop_arrivals_account_for_every_factorization() {
+    use redefine_blas::coordinator::OpenLoopOptions;
+    use redefine_blas::engine::traffic::{self, TrafficConfig};
+    // A lapack-mixed open-loop stream: offered = served + shed, and every
+    // served factorization carries its factor payload.
+    let tcfg = TrafficConfig {
+        rate_rps: 300.0,
+        duration_ns: 40_000_000,
+        seed: 6,
+        max_n: 24,
+        lapack_fraction: 0.4,
+        lapack_n: 16,
+        ..TrafficConfig::default()
+    };
+    let arrivals = traffic::generate(&tcfg);
+    assert!(arrivals.iter().any(|a| matches!(a.req, Request::RandomFactor { .. })));
+    let offered = arrivals.len();
+    let mut co = Coordinator::new(cfg());
+    let report = co.serve_open_loop(arrivals, &OpenLoopOptions::default());
+    assert_eq!(report.stats.offered, offered);
+    assert_eq!(report.stats.offered, report.stats.served + report.stats.shed);
+    let factor_resps: Vec<_> = report
+        .responses()
+        .into_iter()
+        .filter(|r| matches!(r.op, "dgeqrf" | "dgetrf" | "dpotrf"))
+        .collect();
+    assert!(!factor_resps.is_empty(), "some factorizations must be served");
+    for r in factor_resps {
+        let f = r.factor.as_ref().expect("served factorization carries factors");
+        assert!(f.nodes > 1 && f.makespan > 0);
+        assert!(r.cycles > 0);
+    }
+}
